@@ -1,0 +1,105 @@
+"""AOT lowering: JAX/Pallas DLRM → HLO **text** artifacts for the Rust
+runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto — jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md and gen_hlo.py).
+
+Outputs (under --out-dir, default ../artifacts):
+    dlrm_b{B}.hlo.txt     one module per batch size B
+    dlrm_params.bin       all parameters, f32 LE, concatenated in
+                          PARAM_NAMES order
+    dlrm_manifest.txt     the Rust-side contract: model dims, input
+                          order/shapes, per-param byte offsets
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_batch(batch: int, rows: int, lookups: int, use_pallas: bool) -> str:
+    shapes = model.param_shapes(rows)
+    dense = jax.ShapeDtypeStruct((batch, model.N_DENSE), np.float32)
+    idx = jax.ShapeDtypeStruct((batch, lookups), np.int32)
+    params = [
+        jax.ShapeDtypeStruct(shapes[n], np.float32) for n in model.PARAM_NAMES
+    ]
+    fn = model.make_forward(use_pallas)
+    lowered = jax.jit(fn).lower(dense, idx, *params)
+    return to_hlo_text(lowered)
+
+
+def write_params(out_dir: str, rows: int) -> dict:
+    params = model.init_params(rows)
+    offsets = {}
+    path = os.path.join(out_dir, "dlrm_params.bin")
+    off = 0
+    with open(path, "wb") as f:
+        for name in model.PARAM_NAMES:
+            arr = np.ascontiguousarray(params[name], dtype=np.float32)
+            offsets[name] = (off, arr.shape)
+            f.write(arr.tobytes())
+            off += arr.nbytes
+    return offsets
+
+
+def write_manifest(out_dir: str, rows: int, lookups: int, batches, offsets):
+    path = os.path.join(out_dir, "dlrm_manifest.txt")
+    with open(path, "w") as f:
+        f.write(f"n_dense {model.N_DENSE}\n")
+        f.write(f"dim {model.DIM}\n")
+        f.write(f"rows {rows}\n")
+        f.write(f"lookups {lookups}\n")
+        f.write(f"batches {' '.join(str(b) for b in batches)}\n")
+        for name in model.PARAM_NAMES:
+            off, shape = offsets[name]
+            dims = "x".join(str(d) for d in shape)
+            f.write(f"param {name} {dims} {off}\n")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--rows", type=int, default=20_000,
+                    help="embedding rows in the served artifact (default sized for a fast e2e demo)")
+    ap.add_argument("--lookups", type=int, default=32)
+    ap.add_argument("--batches", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead of the Pallas kernels (ablation)")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    for b in args.batches:
+        text = lower_batch(b, args.rows, args.lookups, use_pallas=not args.no_pallas)
+        path = os.path.join(out_dir, f"dlrm_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    offsets = write_params(out_dir, args.rows)
+    write_manifest(out_dir, args.rows, args.lookups, args.batches, offsets)
+    print(f"wrote params + manifest under {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

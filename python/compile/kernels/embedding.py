@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: embedding gather-reduce — the DLRM hot spot (§IV-C).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's APU
+keeps 64 memory requests in flight against host/HBM memory; on TPU the
+equivalent schedule is expressed with a grid over batch blocks whose
+BlockSpec stages the index block into VMEM while the accumulator stays
+VMEM-resident. Two implementations:
+
+* ``reduce_gather`` — scalar-indexed row loads accumulated in VMEM
+  (the direct analogue of the APU's gather engine);
+* ``reduce_onehot`` — one-hot × table matmul, which maps the reduction
+  onto the MXU systolic array (profitable when ``lookups`` is large and
+  the row block is resident).
+
+Both are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls; see /opt/xla-example/README.md) and validated against
+``ref.embedding_reduce``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch-block size: 8 queries per grid step keeps the VMEM
+# footprint at 8*(L*4 + dim*4) + 8*dim*4 bytes — ~18 KB at L=64, dim=64.
+DEFAULT_BLOCK_B = 8
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref, *, lookups: int):
+    """One grid step: reduce `lookups` rows for a block of queries."""
+    block_b = out_ref.shape[0]
+    dim = out_ref.shape[1]
+
+    def body(j, acc):
+        def row_for(i, acc):
+            idx = idx_ref[i, j]
+            row = table_ref[idx, :]
+            return acc.at[i].add(row)
+
+        return jax.lax.fori_loop(0, block_b, row_for, acc)
+
+    acc = jnp.zeros((block_b, dim), jnp.float32)
+    acc = jax.lax.fori_loop(0, lookups, body, acc)
+    out_ref[...] = acc
+
+
+def reduce_gather(table: jnp.ndarray, indices: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B):
+    """Gather-reduce via scalar row loads.
+
+    table:   (rows, dim) f32 — stays in ANY/HBM; rows are fetched on
+             demand (the HBM→VMEM stream the APU does over UPI/DDR).
+    indices: (batch, lookups) i32; batch must be a multiple of block_b
+             (callers pad).
+    """
+    batch, lookups = indices.shape
+    rows, dim = table.shape
+    assert batch % block_b == 0, f"batch {batch} % block_b {block_b} != 0"
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        partial(_gather_kernel, lookups=lookups),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, lookups), lambda b: (b, 0)),
+            pl.BlockSpec((rows, dim), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+        interpret=True,
+    )(indices, table)
+
+
+def _onehot_kernel(idx_ref, table_ref, out_ref, *, rows: int):
+    """One grid step: one-hot(indices) @ table on the MXU."""
+    idx = idx_ref[...]  # (block_b, L)
+    # (block_b, L, rows) one-hot contracted against (rows, dim).
+    oh = jax.nn.one_hot(idx, rows, dtype=jnp.float32)  # (block_b, L, rows)
+    counts = oh.sum(axis=1)  # (block_b, rows) — multiplicity per row
+    out_ref[...] = counts @ table_ref[...]
+
+
+def reduce_onehot(table: jnp.ndarray, indices: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B):
+    """Gather-reduce as a matmul (MXU mapping). O(rows) work per query —
+    only sensible for small tables / ablation purposes."""
+    batch, lookups = indices.shape
+    rows, dim = table.shape
+    assert batch % block_b == 0
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        partial(_onehot_kernel, rows=rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, lookups), lambda b: (b, 0)),
+            pl.BlockSpec((rows, dim), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dim), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+        interpret=True,
+    )(indices, table)
+
+
+def vmem_bytes(block_b: int, lookups: int, dim: int) -> int:
+    """Static VMEM footprint of one ``reduce_gather`` grid step (§Perf):
+    the staged index block, the accumulator, and one in-flight row."""
+    idx_block = block_b * lookups * 4
+    acc = block_b * dim * 4
+    row = dim * 4
+    return idx_block + acc + row

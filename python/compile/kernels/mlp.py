@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: fused dense layer (matmul + bias + ReLU).
+
+Tiled for the MXU: grid over (batch tiles × output tiles); each step
+keeps an (bm, K) activation stripe and a (K, bn) weight tile in VMEM and
+writes one (bm, bn) output tile. The DLRM MLPs are small (K ≤ 65), so a
+full-K stripe fits trivially; the tiling still exercises the BlockSpec
+schedule that matters at scale. ``interpret=True`` as everywhere.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def mlp_layer(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    relu: bool = True,
+    bm: int = 8,
+    bn: int = 128,
+):
+    """Fused x @ w + b (+ReLU). batch must divide by bm; out-dim tiles of
+    bn (clamped to the actual width)."""
+    batch, k = x.shape
+    k2, out = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert batch % bm == 0, f"batch {batch} % bm {bm} != 0"
+    bn = min(bn, out)
+    # Pad out-dim to a multiple of bn via a single tile when small.
+    assert out % bn == 0 or out == bn, f"out {out} % bn {bn} != 0"
+    grid = (batch // bm, max(out // bn, 1))
+    return pl.pallas_call(
+        partial(_mlp_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, out), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def mxu_utilization_estimate(bm: int, k: int, bn: int) -> float:
+    """Fraction of a 128×128 MXU pass doing useful work for one tile —
+    the §Perf proxy we report in DESIGN.md (interpret mode has no real
+    TPU timing). Rows feed the systolic array over bm cycles, the
+    contraction dim fills k of 128 PE columns; bn only lengthens the
+    pass, so it does not appear."""
+    return min(bm / 128.0, 1.0) * min(k / 128.0, 1.0)

@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here is straight-line jax.numpy with no Pallas, no custom
+calls — the ground truth that `test_kernel.py` checks the kernels
+against, and the numerical contract shared with the Rust functional
+layer (`rust/src/apps/dlrm/embedding.rs` uses the same `init_table`
+formula, asserted by the cross-check test vectors).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_table(rows: int, dim: int) -> np.ndarray:
+    """Deterministic table init shared with Rust.
+
+    value(r, d) = frac(sin(r*12.9898 + d*78.233) * 43758.5453) - 0.5
+    with frac(x) = x - floor(x).
+    """
+    r = np.arange(rows, dtype=np.float64)[:, None]
+    d = np.arange(dim, dtype=np.float64)[None, :]
+    x = r * 12.9898 + d * 78.233
+    v = np.sin(x) * 43758.5453
+    s = v - np.floor(v)
+    return (s - 0.5).astype(np.float32)
+
+
+def embedding_reduce(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """Sum-reduce embedding rows.
+
+    table:   (rows, dim) f32
+    indices: (batch, lookups) i32 — per-query feature ids
+    returns: (batch, dim) f32
+    """
+    gathered = table[indices]  # (batch, lookups, dim)
+    return gathered.sum(axis=1)
+
+
+def mlp_layer(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool = True) -> jnp.ndarray:
+    """One dense layer: x @ w + b, optional ReLU.
+
+    x: (batch, in), w: (in, out), b: (out,)
+    """
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def feature_interaction(dense: jnp.ndarray, reduced: jnp.ndarray) -> jnp.ndarray:
+    """DLRM dot-interaction between the bottom-MLP output and the reduced
+    embedding, concatenated with the dense features (the 2-source special
+    case of DLRM's pairwise interaction).
+
+    dense:   (batch, dim)
+    reduced: (batch, dim)
+    returns: (batch, dim + 1)
+    """
+    dot = jnp.sum(dense * reduced, axis=1, keepdims=True)
+    return jnp.concatenate([dense, dot], axis=1)
+
+
+def dlrm_forward(params, dense_in, indices):
+    """Full reference DLRM forward pass.
+
+    params: dict with keys
+        table (rows, dim),
+        w_bot0/b_bot0 (dense_in->dim), w_bot1/b_bot1 (dim->dim),
+        w_top0/b_top0 (dim+1->dim), w_top1/b_top1 (dim->1)
+    dense_in: (batch, n_dense) f32
+    indices:  (batch, lookups) i32
+    returns:  (batch,) click logits
+    """
+    x = mlp_layer(dense_in, params["w_bot0"], params["b_bot0"])
+    x = mlp_layer(x, params["w_bot1"], params["b_bot1"])
+    reduced = embedding_reduce(params["table"], indices)
+    z = feature_interaction(x, reduced)
+    z = mlp_layer(z, params["w_top0"], params["b_top0"])
+    z = mlp_layer(z, params["w_top1"], params["b_top1"], relu=False)
+    return z[:, 0]

@@ -1,0 +1,120 @@
+"""L2: the DLRM forward pass in JAX, calling the L1 Pallas kernels.
+
+Architecture (facebook DLRM [117], MERCI-scale config):
+
+    dense (batch, 13) ──bottom MLP (Pallas)──► (batch, 64)
+    indices (batch, L) ──embedding reduce (Pallas)──► (batch, 64)
+    dot-interaction + concat ──► (batch, 65)
+    top MLP (Pallas) ──► (batch, 1) click logit
+
+Parameters are *runtime inputs* (not baked constants) so the HLO text
+stays small and the Rust runtime feeds them from `dlrm_params.bin`.
+Row 0 of the embedding table is reserved as the all-zero padding row;
+queries shorter than L pad with index 0.
+"""
+
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import embedding, mlp, ref
+
+# Model hyperparameters (MERCI defaults: dim 64; DLRM: 13 dense features).
+N_DENSE = 13
+DIM = 64
+DEFAULT_ROWS = 100_000
+DEFAULT_LOOKUPS = 32
+
+PARAM_NAMES = [
+    "table",
+    "w_bot0",
+    "b_bot0",
+    "w_bot1",
+    "b_bot1",
+    "w_top0",
+    "b_top0",
+    "w_top1",
+    "b_top1",
+]
+
+
+def param_shapes(rows: int = DEFAULT_ROWS, dim: int = DIM, n_dense: int = N_DENSE):
+    """Shapes (in PARAM_NAMES order) — the contract with the Rust runtime."""
+    return {
+        "table": (rows, dim),
+        "w_bot0": (n_dense, dim),
+        "b_bot0": (dim,),
+        "w_bot1": (dim, dim),
+        "b_bot1": (dim,),
+        "w_top0": (dim + 1, dim),
+        "b_top0": (dim,),
+        "w_top1": (dim, 1),
+        "b_top1": (1,),
+    }
+
+
+def init_params(rows: int = DEFAULT_ROWS, dim: int = DIM, n_dense: int = N_DENSE, seed: int = 0):
+    """Deterministic init. The embedding table uses the shared shader-hash
+    formula (cross-checked against Rust); weights use a seeded RNG with
+    Xavier-ish scaling. Row 0 of the table is zeroed (padding row)."""
+    rng = np.random.RandomState(seed)
+    shapes = param_shapes(rows, dim, n_dense)
+    params = {}
+    table = ref.init_table(rows, dim)
+    table[0, :] = 0.0
+    params["table"] = table
+    for name, shape in shapes.items():
+        if name == "table":
+            continue
+        if name.startswith("w_"):
+            fan_in = shape[0]
+            params[name] = (rng.randn(*shape) / np.sqrt(fan_in)).astype(np.float32)
+        else:
+            params[name] = np.zeros(shape, np.float32)
+    return params
+
+
+def forward(params, dense_in, indices, *, use_pallas: bool = True):
+    """The served computation. `params` is a dict of arrays (traced as
+    inputs when jitted via `forward_flat`)."""
+    if use_pallas:
+        x = mlp.mlp_layer(dense_in, params["w_bot0"], params["b_bot0"], relu=True, bn=DIM)
+        x = mlp.mlp_layer(x, params["w_bot1"], params["b_bot1"], relu=True, bn=DIM)
+        reduced = embedding.reduce_gather(params["table"], indices)
+    else:
+        x = ref.mlp_layer(dense_in, params["w_bot0"], params["b_bot0"])
+        x = ref.mlp_layer(x, params["w_bot1"], params["b_bot1"])
+        reduced = ref.embedding_reduce(params["table"], indices)
+    z = ref.feature_interaction(x, reduced)  # small concat: plain jnp (L2)
+    if use_pallas:
+        z = mlp.mlp_layer(z, params["w_top0"], params["b_top0"], relu=True, bn=DIM)
+        z = mlp.mlp_layer(z, params["w_top1"], params["b_top1"], relu=False, bn=1)
+    else:
+        z = ref.mlp_layer(z, params["w_top0"], params["b_top0"])
+        z = ref.mlp_layer(z, params["w_top1"], params["b_top1"], relu=False)
+    return (z[:, 0],)
+
+
+def forward_flat(*args, use_pallas: bool = True):
+    """Flat-argument version for AOT lowering: args are
+    (dense, indices, *params-in-PARAM_NAMES-order). Returns a 1-tuple
+    (lowered with return_tuple=True; the Rust side unwraps to_tuple1)."""
+    dense_in, indices = args[0], args[1]
+    params = dict(zip(PARAM_NAMES, args[2:]))
+    return forward(params, dense_in, indices, use_pallas=use_pallas)
+
+
+def make_forward(use_pallas: bool = True):
+    return partial(forward_flat, use_pallas=use_pallas)
+
+
+def pad_indices(queries, lookups: int = DEFAULT_LOOKUPS):
+    """Pad/truncate variable-length queries to (batch, lookups) with the
+    zero padding row."""
+    batch = len(queries)
+    out = np.zeros((batch, lookups), np.int32)
+    for i, q in enumerate(queries):
+        q = list(q)[:lookups]
+        out[i, : len(q)] = q
+    return out

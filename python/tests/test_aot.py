@@ -1,0 +1,76 @@
+"""AOT path: HLO-text lowering, params.bin layout, manifest contract.
+
+The full `make artifacts` run is exercised end-to-end by the Rust
+integration test (`rust/tests/runtime_roundtrip.rs`); here we check the
+pieces cheaply with a tiny model.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from compile import aot, model
+
+
+def test_lower_produces_hlo_text(tmp_path):
+    text = aot.lower_batch(batch=8, rows=64, lookups=4, use_pallas=False)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Params are runtime inputs: 2 data inputs + 9 params.
+    assert text.count("parameter(") >= 11
+
+def test_pallas_lowering_also_produces_hlo_text():
+    text = aot.lower_batch(batch=8, rows=64, lookups=4, use_pallas=True)
+    assert "HloModule" in text
+    # interpret=True must leave no Mosaic custom-calls behind.
+    assert "mosaic" not in text.lower()
+
+
+def test_params_bin_layout(tmp_path):
+    out = str(tmp_path)
+    offsets = aot.write_params(out, rows=64)
+    path = os.path.join(out, "dlrm_params.bin")
+    blob = np.fromfile(path, dtype=np.float32)
+    params = model.init_params(rows=64)
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert blob.size == total
+    # Spot-check: the table occupies [0, rows*dim) and matches init.
+    rows_dim = 64 * model.DIM
+    np.testing.assert_array_equal(blob[:rows_dim], params["table"].ravel())
+    # Offsets are contiguous in PARAM_NAMES order.
+    expected_off = 0
+    for name in model.PARAM_NAMES:
+        off, shape = offsets[name]
+        assert off == expected_off
+        expected_off += int(np.prod(shape)) * 4
+
+
+def test_manifest_format(tmp_path):
+    out = str(tmp_path)
+    offsets = aot.write_params(out, rows=64)
+    aot.write_manifest(out, rows=64, lookups=8, batches=[8], offsets=offsets)
+    lines = open(os.path.join(out, "dlrm_manifest.txt")).read().splitlines()
+    kv = dict(l.split(None, 1) for l in lines if not l.startswith("param"))
+    assert kv["rows"] == "64"
+    assert kv["lookups"] == "8"
+    params = [l.split() for l in lines if l.startswith("param")]
+    assert len(params) == len(model.PARAM_NAMES)
+    # param table 64x64 0
+    assert params[0][1] == "table"
+    assert params[0][2] == f"64x{model.DIM}"
+    assert params[0][3] == "0"
+
+
+def test_cli_end_to_end_tiny(tmp_path):
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--rows", "64", "--lookups", "4", "--batches", "8"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    for f in ["dlrm_b8.hlo.txt", "dlrm_params.bin", "dlrm_manifest.txt"]:
+        assert os.path.exists(os.path.join(str(tmp_path), f)), f

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes/dtypes-adjacent parameters and asserts allclose against
+the reference on every draw.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import embedding, mlp, ref
+
+
+def make_table(rows, dim):
+    return jnp.asarray(ref.init_table(rows, dim))
+
+
+class TestEmbeddingReduceGather:
+    def test_matches_ref_basic(self):
+        table = make_table(512, 64)
+        idx = jnp.asarray(np.random.RandomState(0).randint(0, 512, size=(16, 24), dtype=np.int32))
+        got = embedding.reduce_gather(table, idx)
+        want = ref.embedding_reduce(table, idx)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(8, 300),
+        dim=st.sampled_from([4, 8, 16, 32, 64]),
+        batch_blocks=st.integers(1, 4),
+        lookups=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_swept(self, rows, dim, batch_blocks, lookups, seed):
+        block_b = embedding.DEFAULT_BLOCK_B
+        batch = batch_blocks * block_b
+        table = make_table(rows, dim)
+        idx = jnp.asarray(
+            np.random.RandomState(seed).randint(0, rows, size=(batch, lookups), dtype=np.int32)
+        )
+        got = embedding.reduce_gather(table, idx)
+        want = ref.embedding_reduce(table, idx)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_duplicate_indices(self):
+        table = make_table(32, 8)
+        idx = jnp.asarray(np.full((8, 6), 7, dtype=np.int32))
+        got = embedding.reduce_gather(table, idx)
+        want = 6.0 * table[7][None, :].repeat(8, axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_misaligned_batch(self):
+        table = make_table(32, 8)
+        idx = jnp.zeros((5, 4), jnp.int32)  # 5 % 8 != 0
+        with pytest.raises(AssertionError):
+            embedding.reduce_gather(table, idx)
+
+    def test_vmem_budget_within_design_target(self):
+        # DESIGN.md §Perf: ≤ 4 MB per grid step at (8, 64, dim 64).
+        assert embedding.vmem_bytes(8, 64, 64) <= 4 << 20
+
+
+class TestEmbeddingReduceOnehot:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        rows=st.integers(8, 128),
+        dim=st.sampled_from([4, 16, 64]),
+        lookups=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, rows, dim, lookups, seed):
+        table = make_table(rows, dim)
+        idx = jnp.asarray(
+            np.random.RandomState(seed).randint(0, rows, size=(8, lookups), dtype=np.int32)
+        )
+        got = embedding.reduce_onehot(table, idx)
+        want = ref.embedding_reduce(table, idx)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_variants_agree_with_each_other(self):
+        table = make_table(64, 16)
+        idx = jnp.asarray(np.random.RandomState(3).randint(0, 64, size=(8, 12), dtype=np.int32))
+        a = embedding.reduce_gather(table, idx)
+        b = embedding.reduce_onehot(table, idx)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestMlpKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch_blocks=st.integers(1, 4),
+        k=st.integers(1, 96),
+        out=st.sampled_from([1, 16, 64, 128]),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_swept(self, batch_blocks, k, out, relu, seed):
+        rng = np.random.RandomState(seed)
+        batch = batch_blocks * 8
+        x = jnp.asarray(rng.randn(batch, k).astype(np.float32))
+        w = jnp.asarray(rng.randn(k, out).astype(np.float32))
+        b = jnp.asarray(rng.randn(out).astype(np.float32))
+        got = mlp.mlp_layer(x, w, b, relu=relu, bm=8, bn=min(128, out))
+        want = ref.mlp_layer(x, w, b, relu=relu)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_relu_clamps_negatives(self):
+        x = jnp.asarray([[-1.0, 2.0]] * 8, jnp.float32)
+        w = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.zeros(2, jnp.float32)
+        got = mlp.mlp_layer(x, w, b, relu=True, bm=8, bn=2)
+        np.testing.assert_allclose(got, jnp.asarray([[0.0, 2.0]] * 8))
+
+    def test_no_relu_passes_negatives(self):
+        x = jnp.asarray([[-1.0, 2.0]] * 8, jnp.float32)
+        w = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.zeros(2, jnp.float32)
+        got = mlp.mlp_layer(x, w, b, relu=False, bm=8, bn=2)
+        np.testing.assert_allclose(got, x)
+
+    def test_mxu_estimate_monotone(self):
+        assert mlp.mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mlp.mxu_utilization_estimate(8, 64, 64) < 1.0
+
+
+class TestSharedInitFormula:
+    def test_rust_crosscheck_vector(self):
+        # Mirrors rust/src/apps/dlrm/embedding.rs::test_vector_for_python_crosscheck
+        table = ref.init_table(100, 8)
+        out = table[[0, 1, 2, 50, 99], 0].sum()
+        want = sum(
+            float(ref.init_table(100, 8)[r, 0]) for r in [0, 1, 2, 50, 99]
+        )
+        assert abs(out - want) < 1e-6
+
+    def test_values_centered_in_unit_interval(self):
+        t = ref.init_table(1000, 4)
+        assert t.min() >= -0.5 and t.max() <= 0.5
+        assert abs(float(t.mean())) < 0.02
+
+    def test_deterministic(self):
+        a = ref.init_table(50, 8)
+        b = ref.init_table(50, 8)
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,94 @@
+"""L2 correctness: DLRM forward shapes, Pallas-vs-reference equivalence,
+padding semantics, parameter contract."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+ROWS = 512
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in model.init_params(rows=ROWS).items()}
+
+
+def inputs(batch, lookups, seed=0):
+    rng = np.random.RandomState(seed)
+    dense = jnp.asarray(rng.randn(batch, model.N_DENSE).astype(np.float32))
+    idx = jnp.asarray(rng.randint(1, ROWS, size=(batch, lookups), dtype=np.int32))
+    return dense, idx
+
+
+class TestForward:
+    def test_output_shape_and_finite(self, params):
+        dense, idx = inputs(8, 16)
+        (logits,) = model.forward(params, dense, idx, use_pallas=True)
+        assert logits.shape == (8,)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_pallas_matches_reference_path(self, params):
+        dense, idx = inputs(16, 24, seed=1)
+        (a,) = model.forward(params, dense, idx, use_pallas=True)
+        (b,) = model.forward(params, dense, idx, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_reference_path_matches_ref_dlrm(self, params):
+        dense, idx = inputs(8, 8, seed=2)
+        (a,) = model.forward(params, dense, idx, use_pallas=False)
+        b = ref.dlrm_forward(params, dense, idx)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(batch_blocks=st.integers(1, 3), lookups=st.integers(1, 40), seed=st.integers(0, 1000))
+    def test_pallas_equivalence_swept(self, params, batch_blocks, lookups, seed):
+        dense, idx = inputs(batch_blocks * 8, lookups, seed=seed)
+        (a,) = model.forward(params, dense, idx, use_pallas=True)
+        (b,) = model.forward(params, dense, idx, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestPadding:
+    def test_pad_row_is_zero(self, params):
+        assert float(jnp.abs(params["table"][0]).max()) == 0.0
+
+    def test_padding_does_not_change_logits(self, params):
+        dense, idx = inputs(8, 8, seed=3)
+        # Same queries, padded out to 16 lookups with the zero row.
+        idx_padded = jnp.concatenate([idx, jnp.zeros((8, 8), jnp.int32)], axis=1)
+        (a,) = model.forward(params, dense, idx, use_pallas=False)
+        (b,) = model.forward(params, dense, idx_padded, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_pad_indices_helper(self):
+        out = model.pad_indices([[1, 2, 3], [4]], lookups=5)
+        np.testing.assert_array_equal(
+            out, np.asarray([[1, 2, 3, 0, 0], [4, 0, 0, 0, 0]], np.int32)
+        )
+        # Truncation.
+        out = model.pad_indices([list(range(10))], lookups=4)
+        np.testing.assert_array_equal(out, np.asarray([[0, 1, 2, 3]], np.int32))
+
+
+class TestParamContract:
+    def test_shapes_cover_all_names(self):
+        shapes = model.param_shapes(rows=ROWS)
+        assert set(shapes) == set(model.PARAM_NAMES)
+
+    def test_flat_forward_matches_dict_forward(self, params):
+        dense, idx = inputs(8, 8, seed=4)
+        flat = [params[n] for n in model.PARAM_NAMES]
+        (a,) = model.forward_flat(dense, idx, *flat, use_pallas=False)
+        (b,) = model.forward(params, dense, idx, use_pallas=False)
+        np.testing.assert_allclose(a, b)
+
+    def test_init_is_deterministic(self):
+        a = model.init_params(rows=64, seed=7)
+        b = model.init_params(rows=64, seed=7)
+        for n in model.PARAM_NAMES:
+            np.testing.assert_array_equal(a[n], b[n])

@@ -1,0 +1,157 @@
+//! `cargo bench` harness (hand-rolled; no criterion offline).
+//!
+//! Two kinds of benchmarks:
+//!
+//! 1. **Paper regeneration** — one bench per table/figure, printing the
+//!    paper-shape rows (same code paths as the `orca` CLI) with wall
+//!    times, so `cargo bench | tee bench_output.txt` captures the whole
+//!    evaluation.
+//! 2. **Hot-path microbenchmarks** — simulator throughput numbers the
+//!    §Perf pass tracks (ns/op over millions of iterations).
+
+use orca::cli;
+use orca::experiments::{self, Opts};
+use std::time::Instant;
+
+struct Bench {
+    runs: Vec<(String, f64)>,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Bench { runs: Vec::new() }
+    }
+
+    fn time(&mut self, name: &str, f: impl FnOnce()) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("\n[bench] {name}: {dt:.3}s\n");
+        self.runs.push((name.to_string(), dt));
+    }
+
+    /// ns/op microbench: warm up, then measure `iters` iterations.
+    fn ns_per_op(&mut self, name: &str, iters: u64, mut f: impl FnMut(u64)) {
+        for i in 0..(iters / 10).max(1) {
+            f(i);
+        }
+        let t0 = Instant::now();
+        for i in 0..iters {
+            f(i);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        println!("[bench] {name}: {ns:.1} ns/op ({iters} iters)");
+        self.runs.push((name.to_string(), ns / 1e9));
+    }
+
+    fn summary(&self) {
+        println!("\n== bench summary ==");
+        for (name, secs) in &self.runs {
+            println!("{name:<46} {secs:>10.4}s");
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let opts = Opts {
+        seed: 42,
+        keys: 500_000,
+        requests: 100_000,
+        ..Opts::default()
+    };
+
+    // ---- paper tables/figures -------------------------------------------
+    b.time("fig4_ddio_tph", || {
+        experiments::fig4::report(&opts).print();
+        experiments::fig4::report_nvm(&opts).print();
+    });
+    b.time("fig7_cpoll_cdf", || experiments::fig7::report(&opts).print());
+    b.time("fig8_kvs_throughput", || cli::fig8(&opts).print());
+    b.time("fig9_kvs_latency", || cli::fig9(&opts).print());
+    b.time("fig10_batch_sweep", || cli::fig10(&opts).print());
+    b.time("tab3_power", || experiments::tab3::report(&opts).print());
+    b.time("fig11_txn_latency", || experiments::fig11::report(&opts).print());
+    b.time("fig12_dlrm_throughput", || experiments::fig12::report(&opts).print());
+
+    // ---- ablations ---------------------------------------------------------
+    b.time("ablation_hard_ip_coherence_controller", || {
+        // §VI-A/§VII: what if the controller were a ~2GHz hard IP?
+        let mut fast = opts.clone();
+        fast.testbed.accel.freq_mhz = 2000.0;
+        fast.testbed.accel.coh_outstanding = 64;
+        experiments::fig7::report(&fast).print();
+    });
+    b.time("ablation_400g_network", || {
+        // §VII: ORCA scalability with faster networks.
+        let mut fat = opts.clone();
+        fat.testbed.net.line_gbps = 400.0;
+        cli::fig8(&fat).print();
+    });
+
+    // ---- simulator hot paths (§Perf) -------------------------------------
+    use orca::mem::{Access, MemTrace};
+    use orca::sim::{BandwidthLedger, Histogram, Rng};
+
+    let mut rng = Rng::new(1);
+    b.ns_per_op("rng_next_u64", 10_000_000, |_| {
+        std::hint::black_box(rng.next_u64());
+    });
+
+    let mut hist = Histogram::new();
+    b.ns_per_op("histogram_record", 10_000_000, |i| {
+        hist.record((i % 1_000_000) + 1);
+    });
+
+    let mut ledger = BandwidthLedger::new();
+    b.ns_per_op("bandwidth_ledger_acquire", 10_000_000, |i| {
+        std::hint::black_box(ledger.acquire(i * 100, 50));
+    });
+
+    let mut llc = orca::mem::Llc::new(orca::config::LlcParams::default());
+    let mut r2 = Rng::new(2);
+    b.ns_per_op("llc_access", 5_000_000, |_| {
+        std::hint::black_box(llc.access(r2.below(1 << 30), false));
+    });
+
+    let mut cache = orca::smartnic::BigCache::new(512 << 20, 64);
+    let mut r3 = Rng::new(3);
+    b.ns_per_op("bigcache_access", 5_000_000, |_| {
+        std::hint::black_box(cache.access(r3.below(7 << 30)));
+    });
+
+    let tb = orca::config::Testbed::paper();
+    let mut accel = orca::accel::CcAccelerator::new(&tb, orca::config::AccelMem::None);
+    let trace = {
+        let mut t = MemTrace::new();
+        t.push(Access::read(0x1000, 64));
+        t.push(Access::read(0x2000, 64));
+        t.push(Access::read(0x3000, 64));
+        t
+    };
+    let jobs: Vec<(u64, MemTrace)> = (0..100_000).map(|_| (0u64, trace.clone())).collect();
+    b.time("accel_serve_stream_100k_requests", || {
+        std::hint::black_box(accel.serve_stream(&jobs));
+    });
+
+    let zipf = orca::workload::Zipf::new(100_000_000, 0.9);
+    let mut r4 = Rng::new(4);
+    b.ns_per_op("zipf_sample_100m_keys", 10_000_000, |_| {
+        std::hint::black_box(zipf.sample(&mut r4));
+    });
+
+    let mut table = orca::apps::kvs::HashTable::new(orca::apps::kvs::KvConfig {
+        buckets: 1 << 18,
+        materialize: false,
+        ..orca::apps::kvs::KvConfig::default()
+    });
+    for k in 0..500_000u64 {
+        table.put(&k.to_le_bytes(), &[0xAB; 64]);
+    }
+    let mut r5 = Rng::new(5);
+    b.ns_per_op("kvs_get_traced", 2_000_000, |_| {
+        std::hint::black_box(table.get(&r5.below(500_000).to_le_bytes()));
+    });
+
+    b.summary();
+}

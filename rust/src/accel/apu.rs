@@ -1,0 +1,213 @@
+//! The APU's table-based finite state machine (§III-C).
+//!
+//! "To maximize the memory-level parallelism and hide the memory access
+//! latency, multiple outstanding requests and out-of-order execution
+//! should be supported. ... the outstanding request status is stored in a
+//! TCAM or cuckoo hash table for fast lookup. Upon the arrival of a new
+//! request or intermediate result, the corresponding entry is updated and
+//! then the next-step action is issued to a corresponding functional
+//! unit."
+//!
+//! This module is the *functional* half: a fixed-capacity outstanding
+//! table keyed by request id, with explicit FSM states and out-of-order
+//! completion. The timing half lives in [`super::CcAccelerator`].
+
+use std::collections::HashMap;
+
+/// FSM state of one in-flight request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    /// Parsed; waiting for a memory read to return.
+    WaitData { step: u8 },
+    /// All data present; ALU/compute step.
+    Compute,
+    /// Response assembled; waiting on the SQ handler.
+    Respond,
+}
+
+/// One entry in the outstanding-request table.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub req_id: u64,
+    pub state: ReqState,
+    /// Which client ring the response goes back to.
+    pub ring: usize,
+}
+
+/// Fixed-capacity outstanding table (the TCAM / cuckoo-hash surrogate:
+/// a HashMap with explicit capacity enforcement — lookup semantics are
+/// identical, capacity behaviour is what matters architecturally).
+#[derive(Debug)]
+pub struct OutstandingTable {
+    cap: usize,
+    entries: HashMap<u64, Entry>,
+    pub rejected: u64,
+}
+
+impl OutstandingTable {
+    pub fn new(cap: usize) -> Self {
+        OutstandingTable {
+            cap,
+            entries: HashMap::with_capacity(cap),
+            rejected: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.cap
+    }
+
+    /// Admit a new request; `false` if the table is full (back-pressure to
+    /// the scheduler).
+    pub fn admit(&mut self, req_id: u64, ring: usize) -> bool {
+        if self.is_full() {
+            self.rejected += 1;
+            return false;
+        }
+        self.entries.insert(
+            req_id,
+            Entry {
+                req_id,
+                state: ReqState::WaitData { step: 0 },
+                ring,
+            },
+        );
+        true
+    }
+
+    pub fn state(&self, req_id: u64) -> Option<ReqState> {
+        self.entries.get(&req_id).map(|e| e.state)
+    }
+
+    /// A memory completion arrives (possibly out of order across
+    /// requests): advance the FSM. `last_step` says how many dependent
+    /// steps the request has; once they're done it moves to `Compute`.
+    pub fn on_data(&mut self, req_id: u64, last_step: u8) -> Option<ReqState> {
+        let e = self.entries.get_mut(&req_id)?;
+        e.state = match e.state {
+            ReqState::WaitData { step } if step + 1 < last_step => {
+                ReqState::WaitData { step: step + 1 }
+            }
+            ReqState::WaitData { .. } => ReqState::Compute,
+            s => s, // spurious completion: no transition
+        };
+        Some(e.state)
+    }
+
+    /// Compute finished: ready to respond.
+    pub fn on_compute_done(&mut self, req_id: u64) -> Option<ReqState> {
+        let e = self.entries.get_mut(&req_id)?;
+        if e.state == ReqState::Compute {
+            e.state = ReqState::Respond;
+        }
+        Some(e.state)
+    }
+
+    /// Response handed to the SQ handler: retire the entry, freeing a slot.
+    pub fn retire(&mut self, req_id: u64) -> Option<Entry> {
+        self.entries.remove(&req_id)
+    }
+}
+
+/// A thin façade bundling the table with counters (what Fig 3 calls the
+/// APU, minus the app-specific walker which lives in `apps::*`).
+#[derive(Debug)]
+pub struct Apu {
+    pub table: OutstandingTable,
+    pub completed: u64,
+}
+
+impl Apu {
+    pub fn new(outstanding: usize) -> Self {
+        Apu {
+            table: OutstandingTable::new(outstanding),
+            completed: 0,
+        }
+    }
+
+    /// Drive one request through its full FSM (used by functional tests
+    /// and the coordinator's in-process path).
+    pub fn run_to_completion(&mut self, req_id: u64, ring: usize, steps: u8) -> bool {
+        if !self.table.admit(req_id, ring) {
+            return false;
+        }
+        for _ in 0..steps {
+            self.table.on_data(req_id, steps);
+        }
+        self.table.on_compute_done(req_id);
+        let e = self.table.retire(req_id).expect("admitted");
+        debug_assert_eq!(e.state, ReqState::Respond);
+        self.completed += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_walks_get_request() {
+        let mut t = OutstandingTable::new(4);
+        assert!(t.admit(1, 0));
+        assert_eq!(t.state(1), Some(ReqState::WaitData { step: 0 }));
+        // 3 dependent reads (KVS GET).
+        assert_eq!(t.on_data(1, 3), Some(ReqState::WaitData { step: 1 }));
+        assert_eq!(t.on_data(1, 3), Some(ReqState::WaitData { step: 2 }));
+        assert_eq!(t.on_data(1, 3), Some(ReqState::Compute));
+        assert_eq!(t.on_compute_done(1), Some(ReqState::Respond));
+        let e = t.retire(1).unwrap();
+        assert_eq!(e.ring, 0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let mut t = OutstandingTable::new(2);
+        assert!(t.admit(1, 0));
+        assert!(t.admit(2, 0));
+        assert!(!t.admit(3, 0));
+        assert_eq!(t.rejected, 1);
+        t.retire(1);
+        assert!(t.admit(3, 0));
+    }
+
+    #[test]
+    fn out_of_order_completion_across_requests() {
+        let mut t = OutstandingTable::new(8);
+        t.admit(10, 0);
+        t.admit(20, 1);
+        // Request 20's data returns first.
+        assert_eq!(t.on_data(20, 1), Some(ReqState::Compute));
+        assert_eq!(t.state(10), Some(ReqState::WaitData { step: 0 }));
+        t.on_compute_done(20);
+        assert!(t.retire(20).is_some());
+        // 10 still progresses normally.
+        assert_eq!(t.on_data(10, 1), Some(ReqState::Compute));
+    }
+
+    #[test]
+    fn unknown_request_ids_are_ignored() {
+        let mut t = OutstandingTable::new(2);
+        assert_eq!(t.on_data(99, 1), None);
+        assert_eq!(t.retire(99).map(|e| e.req_id), None);
+    }
+
+    #[test]
+    fn apu_facade_counts_completions() {
+        let mut apu = Apu::new(256);
+        for i in 0..1000 {
+            assert!(apu.run_to_completion(i, (i % 8) as usize, 3));
+        }
+        assert_eq!(apu.completed, 1000);
+        assert!(apu.table.is_empty());
+    }
+}

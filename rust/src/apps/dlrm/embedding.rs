@@ -1,0 +1,181 @@
+//! Embedding tables and the gather-reduce ("embedding reduction") step —
+//! "the most expensive part of serving an inference request ... bounded
+//! by memory bandwidth [with] poor data locality" (§IV-C).
+
+use crate::mem::{Access, MemTrace};
+
+#[derive(Clone, Debug)]
+pub struct EmbeddingConfig {
+    pub rows: usize,
+    /// Embedding dimension (the paper/MERCI default: 64).
+    pub dim: usize,
+    /// Base simulated address of the table.
+    pub base_addr: u64,
+}
+
+impl Default for EmbeddingConfig {
+    fn default() -> Self {
+        EmbeddingConfig {
+            rows: 100_000,
+            dim: 64,
+            base_addr: 0x2000_0000_0000,
+        }
+    }
+}
+
+/// One embedding table with real f32 contents.
+pub struct EmbeddingTable {
+    pub cfg: EmbeddingConfig,
+    data: Vec<f32>,
+}
+
+impl EmbeddingTable {
+    /// Deterministic pseudo-random initialization (matches
+    /// `python/compile/kernels/ref.py::init_table` so Rust and JAX paths
+    /// can be cross-checked on identical numbers).
+    pub fn new(cfg: EmbeddingConfig) -> Self {
+        let mut data = Vec::with_capacity(cfg.rows * cfg.dim);
+        for r in 0..cfg.rows {
+            for d in 0..cfg.dim {
+                data.push(Self::init_value(r, d));
+            }
+        }
+        EmbeddingTable { cfg, data }
+    }
+
+    /// value(r, d) = frac(sin(r*12.9898 + d*78.233) * 43758.5453) - 0.5,
+    /// with frac(x) = x - floor(x) ∈ [0,1) — the classic shader hash;
+    /// cheap, portable, identical in Python (`x - np.floor(x)`).
+    pub fn init_value(row: usize, d: usize) -> f32 {
+        let x = (row as f64) * 12.9898 + (d as f64) * 78.233;
+        let v = x.sin() * 43758.5453;
+        let s = v - v.floor();
+        (s - 0.5) as f32
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cfg.dim..(r + 1) * self.cfg.dim]
+    }
+
+    pub fn row_bytes(&self) -> u64 {
+        (self.cfg.dim * 4) as u64
+    }
+
+    pub fn row_addr(&self, r: usize) -> u64 {
+        self.cfg.base_addr + r as u64 * self.row_bytes()
+    }
+
+    /// Sum-reduce the rows at `indices` (the embedding-reduction op).
+    pub fn reduce(&self, indices: &[u32]) -> Vec<f32> {
+        let mut acc = vec![0f32; self.cfg.dim];
+        for &i in indices {
+            let row = self.row(i as usize);
+            for (a, v) in acc.iter_mut().zip(row) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    /// The memory trace of a reduction: one index-list read, then the
+    /// gathers — issued with the APU's memory-level parallelism window
+    /// (`mlp`): the first gather depends on the indices; within a window
+    /// of `mlp` gathers they overlap; windows serialize (§IV-C: "we issue
+    /// 64 memory requests for each query's iteration").
+    pub fn reduce_trace(&self, indices: &[u32], mlp: usize) -> MemTrace {
+        let mut t = MemTrace::new();
+        t.push(Access::read(self.cfg.base_addr - 4096, (indices.len() * 4) as u32));
+        for (i, &idx) in indices.iter().enumerate() {
+            let a = Access::read(self.row_addr(idx as usize), self.row_bytes() as u32);
+            if i % mlp == 0 {
+                t.push(a); // window boundary: depends on previous window
+            } else {
+                t.push(a.parallel());
+            }
+        }
+        t
+    }
+
+    pub fn table_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> EmbeddingTable {
+        EmbeddingTable::new(EmbeddingConfig {
+            rows: 100,
+            dim: 8,
+            base_addr: 0x1000,
+        })
+    }
+
+    #[test]
+    fn init_is_deterministic_and_centered() {
+        let a = EmbeddingTable::init_value(3, 5);
+        let b = EmbeddingTable::init_value(3, 5);
+        assert_eq!(a, b);
+        assert!((-0.5..=0.5).contains(&a));
+        // Mean over many cells ≈ 0.
+        let mean: f64 = (0..1000)
+            .map(|r| EmbeddingTable::init_value(r, 0) as f64)
+            .sum::<f64>()
+            / 1000.0;
+        assert!(mean.abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn reduce_sums_rows() {
+        let t = small();
+        let out = t.reduce(&[1, 2]);
+        for d in 0..8 {
+            let want = t.row(1)[d] + t.row(2)[d];
+            assert!((out[d] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn reduce_of_empty_is_zero() {
+        let t = small();
+        assert!(t.reduce(&[]).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn duplicate_indices_count_twice() {
+        let t = small();
+        let once = t.reduce(&[7]);
+        let twice = t.reduce(&[7, 7]);
+        for d in 0..8 {
+            assert!((twice[d] - 2.0 * once[d]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn trace_has_mlp_window_structure() {
+        let t = small();
+        let indices: Vec<u32> = (0..130).map(|i| i % 100).collect();
+        let trace = t.reduce_trace(&indices, 64);
+        // 1 index read + 130 gathers; dependency steps: 1 + ceil(130/64)=3.
+        assert_eq!(trace.len(), 131);
+        assert_eq!(trace.depth(), 1 + 3);
+        // Row addresses are dim*4 = 32B apart.
+        assert_eq!(trace.accesses[1].bytes, 32);
+    }
+
+    #[test]
+    fn test_vector_for_python_crosscheck() {
+        // Fixed vector asserted identically in python/tests/test_kernel.py
+        // (test_rust_crosscheck_vector): table(rows=100, dim=8),
+        // indices [0, 1, 2, 50, 99], component 0.
+        let t = small();
+        let out = t.reduce(&[0, 1, 2, 50, 99]);
+        let want: f32 = [0usize, 1, 2, 50, 99]
+            .iter()
+            .map(|&r| EmbeddingTable::init_value(r, 0))
+            .sum();
+        assert!((out[0] - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,253 @@
+//! MERCI [92]: memoization of sub-query grouped results.
+//!
+//! MERCI clusters correlated features; for each cluster it memoizes the
+//! summed embedding of frequently co-occurring feature combinations, so a
+//! query's reduction touches one memo row per cluster instead of one row
+//! per feature — trading memory (the paper uses memo tables 0.25× the
+//! embedding-table size) for bandwidth.
+//!
+//! This implementation follows the paper's evaluation configuration:
+//! pair-wise clusters (the smallest non-trivial grouping), a memo budget
+//! expressed as a size ratio, and fall-back to raw gathers for pairs that
+//! were not memoized. Functional output is identical to the raw reduction
+//! (the tests assert exact equality), only the *access trace* shrinks.
+
+use super::embedding::EmbeddingTable;
+use crate::mem::{Access, MemTrace};
+use std::collections::HashMap;
+
+pub struct Merci {
+    /// (a, b) sorted pair → memoized sum row.
+    memo: HashMap<(u32, u32), Vec<f32>>,
+    /// Simulated address base of the memo table.
+    memo_base: u64,
+    /// Stable slot ids for trace addresses.
+    slots: HashMap<(u32, u32), u32>,
+    dim: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Merci {
+    /// Build memo tables from a training sample of queries, under a
+    /// `ratio` × table-size memory budget (paper: 0.25).
+    pub fn build(
+        table: &EmbeddingTable,
+        training_queries: &[Vec<u32>],
+        ratio: f64,
+    ) -> Self {
+        // Count pair frequencies over adjacent features (MERCI's cluster
+        // of size 2 after feature reordering).
+        let mut freq: HashMap<(u32, u32), u64> = HashMap::new();
+        for q in training_queries {
+            for w in q.chunks(2) {
+                if let [a, b] = *w {
+                    *freq.entry(pair_key(a, b)).or_default() += 1;
+                }
+            }
+        }
+        let budget_rows = ((table.table_bytes() as f64 * ratio) / (table.cfg.dim as f64 * 4.0))
+            .floor() as usize;
+        let mut pairs: Vec<((u32, u32), u64)> = freq.into_iter().collect();
+        pairs.sort_by_key(|&(p, c)| (std::cmp::Reverse(c), p));
+        pairs.truncate(budget_rows);
+
+        let mut memo = HashMap::new();
+        let mut slots = HashMap::new();
+        for (i, (p, _)) in pairs.iter().enumerate() {
+            memo.insert(*p, table.reduce(&[p.0, p.1]));
+            slots.insert(*p, i as u32);
+        }
+        Merci {
+            memo,
+            memo_base: table.cfg.base_addr + table.table_bytes() + (1 << 30),
+            slots,
+            dim: table.cfg.dim,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn memo_rows(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Reduce a query using memoized pairs where available. Returns the
+    /// reduction and its memory trace (memo hits are one access per pair;
+    /// misses fall back to two raw gathers).
+    pub fn reduce(&mut self, table: &EmbeddingTable, query: &[u32], mlp: usize) -> (Vec<f32>, MemTrace) {
+        let mut acc = vec![0f32; self.dim];
+        let mut trace = MemTrace::new();
+        trace.push(Access::read(table.cfg.base_addr - 4096, (query.len() * 4) as u32));
+        let mut n_access = 0usize;
+        let push = |trace: &mut MemTrace, a: Access, n: &mut usize| {
+            if *n % mlp == 0 {
+                trace.push(a);
+            } else {
+                trace.push(a.parallel());
+            }
+            *n += 1;
+        };
+        for w in query.chunks(2) {
+            match *w {
+                [a, b] => {
+                    let key = pair_key(a, b);
+                    if let Some(row) = self.memo.get(&key) {
+                        self.hits += 1;
+                        for (x, v) in acc.iter_mut().zip(row) {
+                            *x += v;
+                        }
+                        let slot = self.slots[&key];
+                        push(
+                            &mut trace,
+                            Access::read(
+                                self.memo_base + slot as u64 * (self.dim * 4) as u64,
+                                (self.dim * 4) as u32,
+                            ),
+                            &mut n_access,
+                        );
+                    } else {
+                        self.misses += 1;
+                        for &i in &[a, b] {
+                            let row = table.row(i as usize);
+                            for (x, v) in acc.iter_mut().zip(row) {
+                                *x += v;
+                            }
+                            push(
+                                &mut trace,
+                                Access::read(table.row_addr(i as usize), (self.dim * 4) as u32),
+                                &mut n_access,
+                            );
+                        }
+                    }
+                }
+                [a] => {
+                    let row = table.row(a as usize);
+                    for (x, v) in acc.iter_mut().zip(row) {
+                        *x += v;
+                    }
+                    push(
+                        &mut trace,
+                        Access::read(table.row_addr(a as usize), (self.dim * 4) as u32),
+                        &mut n_access,
+                    );
+                }
+                _ => unreachable!(),
+            }
+        }
+        (acc, trace)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+fn pair_key(a: u32, b: u32) -> (u32, u32) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::dlrm::embedding::EmbeddingConfig;
+    use crate::sim::Rng;
+
+    fn table() -> EmbeddingTable {
+        EmbeddingTable::new(EmbeddingConfig {
+            rows: 1000,
+            dim: 16,
+            base_addr: 0x10_0000,
+        })
+    }
+
+    fn queries(n: usize, seed: u64) -> Vec<Vec<u32>> {
+        // Skewed co-occurrence: pairs (2k, 2k+1) for hot k.
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut q = Vec::new();
+                for _ in 0..4 {
+                    let k = (rng.below(50) * 2) as u32;
+                    q.push(k);
+                    q.push(k + 1);
+                }
+                q
+            })
+            .collect()
+    }
+
+    #[test]
+    fn memoized_result_equals_raw_reduction() {
+        let t = table();
+        let train = queries(500, 1);
+        let mut m = Merci::build(&t, &train, 0.25);
+        assert!(m.memo_rows() > 0);
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let q: Vec<u32> = (0..8).map(|_| rng.below(1000) as u32).collect();
+            let raw = t.reduce(&q);
+            let (memo, _) = m.reduce(&t, &q, 64);
+            for d in 0..16 {
+                assert!((raw[d] - memo[d]).abs() < 1e-4, "component {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn hot_pairs_hit_the_memo() {
+        let t = table();
+        let train = queries(500, 3);
+        let mut m = Merci::build(&t, &train, 0.25);
+        for q in queries(200, 4) {
+            m.reduce(&t, &q, 64);
+        }
+        assert!(m.hit_rate() > 0.8, "hit rate {}", m.hit_rate());
+    }
+
+    #[test]
+    fn memo_hits_halve_the_access_count() {
+        let t = table();
+        let train = queries(500, 5);
+        let mut m = Merci::build(&t, &train, 0.25);
+        let q = &queries(1, 6)[0]; // 8 features = 4 hot pairs
+        let (_, trace) = m.reduce(&t, q, 64);
+        let raw_trace = t.reduce_trace(q, 64);
+        assert!(
+            trace.len() < raw_trace.len(),
+            "memo {} !< raw {}",
+            trace.len(),
+            raw_trace.len()
+        );
+    }
+
+    #[test]
+    fn budget_caps_memo_size() {
+        let t = table();
+        let train = queries(2000, 7);
+        let m = Merci::build(&t, &train, 0.01);
+        let budget_rows = (t.table_bytes() as f64 * 0.01 / (16.0 * 4.0)) as usize;
+        assert!(m.memo_rows() <= budget_rows);
+    }
+
+    #[test]
+    fn odd_length_queries_handle_the_tail_feature() {
+        let t = table();
+        let mut m = Merci::build(&t, &queries(100, 8), 0.25);
+        let q = vec![1u32, 2, 3];
+        let raw = t.reduce(&q);
+        let (memo, _) = m.reduce(&t, &q, 64);
+        for d in 0..16 {
+            assert!((raw[d] - memo[d]).abs() < 1e-4);
+        }
+    }
+}

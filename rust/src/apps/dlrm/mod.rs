@@ -1,0 +1,13 @@
+//! DLRM inference (§IV-C): embedding tables with MERCI [92] sub-query
+//! memoization, plus the access-trace generation for the Fig-12
+//! throughput model. The MLP parts of the model run as AOT-compiled
+//! JAX/Pallas artifacts through [`crate::runtime`]; this module is the
+//! memory-bound embedding-reduction side, implemented functionally in f32
+//! (and numerically cross-checked against the Python reference by the
+//! test vectors under `python/tests/`).
+
+pub mod embedding;
+pub mod merci;
+
+pub use embedding::{EmbeddingConfig, EmbeddingTable};
+pub use merci::Merci;

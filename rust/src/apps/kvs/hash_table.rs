@@ -1,0 +1,549 @@
+//! The set-associative hash table with chaining (§IV-A).
+//!
+//! Layout mirrors the paper's description: a bucket array indexed by the
+//! hashed key; each bucket holds 8 entries of (tag, slot-pointer); full
+//! buckets chain to overflow buckets. Every operation returns the
+//! [`MemTrace`] of the walk it actually performed, with the §IV-A
+//! accounting: GET/UPDATE ≈ 3 accesses (bucket, entry confirm via key
+//! compare in the value slot, value), PUT ≈ 4 (bucket, empty-entry claim,
+//! slab write, bucket write-back).
+
+use super::slab::{Slab, SlotRef};
+use crate::mem::{Access, MemTrace};
+
+/// 64-bit FNV-1a over the key bytes — the "pipelined hash unit".
+pub fn hash_key(key: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // Final avalanche (splitmix) so sequential keys spread.
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+pub const ENTRIES_PER_BUCKET: usize = 8;
+/// Bucket footprint in the simulated memory map: 8 × (8B tag + 8B ptr).
+pub const BUCKET_BYTES: u64 = 128;
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    tag: u64, // full hash of the key
+    slot: SlotRef,
+    key_len: u16,
+    val_len: u16,
+    used: bool,
+}
+
+const EMPTY: Entry = Entry {
+    tag: 0,
+    slot: SlotRef { class: 0, index: 0 },
+    key_len: 0,
+    val_len: 0,
+    used: false,
+};
+
+#[derive(Clone, Debug)]
+struct Bucket {
+    entries: [Entry; ENTRIES_PER_BUCKET],
+    /// Index into the overflow-bucket pool.
+    next: Option<u32>,
+}
+
+impl Bucket {
+    fn new() -> Self {
+        Bucket {
+            entries: [EMPTY; ENTRIES_PER_BUCKET],
+            next: None,
+        }
+    }
+}
+
+/// KVS configuration.
+#[derive(Clone, Debug)]
+pub struct KvConfig {
+    /// Number of primary buckets (rounded up to a power of two).
+    pub buckets: usize,
+    /// Materialize values (see [`Slab`]).
+    pub materialize: bool,
+    /// Base simulated address of the bucket array.
+    pub table_base: u64,
+    /// Base simulated address of the overflow pool.
+    pub overflow_base: u64,
+    /// Base simulated address of the slab pool.
+    pub slab_base: u64,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            buckets: 1 << 16,
+            materialize: true,
+            table_base: 0x1000_0000,
+            overflow_base: 0x40_0000_0000,
+            slab_base: 0x100_0000_0000,
+        }
+    }
+}
+
+/// Result of an operation, with its memory trace.
+#[derive(Debug)]
+pub struct KvOp {
+    pub found: bool,
+    pub value: Option<Vec<u8>>,
+    pub trace: MemTrace,
+}
+
+pub struct HashTable {
+    cfg: KvConfig,
+    mask: u64,
+    buckets: Vec<Bucket>,
+    overflow: Vec<Bucket>,
+    pub slab: Slab,
+    pub items: u64,
+    pub chain_walks: u64,
+}
+
+impl HashTable {
+    pub fn new(cfg: KvConfig) -> Self {
+        let n = cfg.buckets.next_power_of_two();
+        HashTable {
+            mask: n as u64 - 1,
+            buckets: vec![Bucket::new(); n],
+            overflow: Vec::new(),
+            slab: Slab::new(cfg.slab_base, cfg.materialize),
+            items: 0,
+            chain_walks: 0,
+            cfg,
+        }
+    }
+
+    fn bucket_addr(&self, idx: u64) -> u64 {
+        self.cfg.table_base + idx * BUCKET_BYTES
+    }
+
+    fn overflow_addr(&self, idx: u32) -> u64 {
+        self.cfg.overflow_base + idx as u64 * BUCKET_BYTES
+    }
+
+    /// GET: walk bucket (+chain), then read the value from the slab.
+    pub fn get(&mut self, key: &[u8]) -> KvOp {
+        let h = hash_key(key);
+        let bidx = h & self.mask;
+        let mut trace = MemTrace::new();
+        trace.push(Access::read(self.bucket_addr(bidx), BUCKET_BYTES as u32));
+
+        let mut cur: &Bucket = &self.buckets[bidx as usize];
+        loop {
+            for e in &cur.entries {
+                if e.used && e.tag == h && e.key_len as usize == key.len() {
+                    // Value (and inline key) read from the slab.
+                    let addr = self.slab.addr(e.slot);
+                    trace.push(Access::read(addr, (e.key_len + e.val_len).max(64) as u32));
+                    // Confirm-and-copy: second dependent access models the
+                    // key comparison + payload fetch (§IV-A's 3rd access).
+                    trace.push(Access::read(addr + 64, e.val_len.max(1) as u32));
+                    let value = self
+                        .slab
+                        .get(e.slot, e.key_len as usize + e.val_len as usize)
+                        .map(|kv| kv[e.key_len as usize..].to_vec());
+                    return KvOp {
+                        found: true,
+                        value,
+                        trace,
+                    };
+                }
+            }
+            match cur.next {
+                Some(n) => {
+                    self.chain_walks += 1;
+                    trace.push(Access::read(self.overflow_addr(n), BUCKET_BYTES as u32));
+                    cur = &self.overflow[n as usize];
+                }
+                None => {
+                    return KvOp {
+                        found: false,
+                        value: None,
+                        trace,
+                    }
+                }
+            }
+        }
+    }
+
+    /// PUT (insert or update): find entry / claim empty slot, write value.
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> KvOp {
+        let h = hash_key(key);
+        let bidx = h & self.mask;
+        let mut trace = MemTrace::new();
+        trace.push(Access::read(self.bucket_addr(bidx), BUCKET_BYTES as u32));
+
+        // Phase 1 (immutable walk): find existing entry or a free slot.
+        enum Where {
+            Existing { chain: Option<u32>, e: usize },
+            Free { chain: Option<u32>, e: usize },
+            NeedChain { last: Option<u32> },
+        }
+        let mut place = Where::NeedChain { last: None };
+        let mut chain: Option<u32> = None;
+        'outer: loop {
+            let cur = match chain {
+                None => &self.buckets[bidx as usize],
+                Some(c) => &self.overflow[c as usize],
+            };
+            for (i, e) in cur.entries.iter().enumerate() {
+                if e.used && e.tag == h && e.key_len as usize == key.len() {
+                    place = Where::Existing { chain, e: i };
+                    break 'outer;
+                }
+            }
+            if let Where::NeedChain { .. } = place {
+                if let Some(i) = cur.entries.iter().position(|e| !e.used) {
+                    place = Where::Free { chain, e: i };
+                    break 'outer;
+                }
+            }
+            match cur.next {
+                Some(n) => {
+                    self.chain_walks += 1;
+                    trace.push(Access::read(self.overflow_addr(n), BUCKET_BYTES as u32));
+                    chain = Some(n);
+                }
+                None => {
+                    place = Where::NeedChain { last: chain };
+                    break 'outer;
+                }
+            }
+        }
+
+        // Phase 2: mutate. Store key‖value together in one slab slot.
+        let mut kv = Vec::with_capacity(key.len() + value.len());
+        kv.extend_from_slice(key);
+        kv.extend_from_slice(value);
+
+        match place {
+            Where::Existing { chain, e } => {
+                let entry = match chain {
+                    None => &mut self.buckets[bidx as usize].entries[e],
+                    Some(c) => &mut self.overflow[c as usize].entries[e],
+                };
+                let slot = entry.slot;
+                let old_total = entry.key_len as usize + entry.val_len as usize;
+                let _ = old_total;
+                let addr = self.slab.addr(slot);
+                if self.slab.update(slot, &kv) {
+                    let entry = match chain {
+                        None => &mut self.buckets[bidx as usize].entries[e],
+                        Some(c) => &mut self.overflow[c as usize].entries[e],
+                    };
+                    entry.val_len = value.len() as u16;
+                    trace.push(Access::write(addr, kv.len() as u32));
+                    // Entry metadata write-back (§IV-A's 4th access).
+                    trace.push(Access::write(self.bucket_addr(bidx), 16));
+                } else {
+                    // Size-class change: allocate new, free old.
+                    self.slab.free(slot);
+                    let new_slot = self.slab.put(&kv).expect("value too large");
+                    let entry = match chain {
+                        None => &mut self.buckets[bidx as usize].entries[e],
+                        Some(c) => &mut self.overflow[c as usize].entries[e],
+                    };
+                    entry.slot = new_slot;
+                    entry.val_len = value.len() as u16;
+                    trace.push(Access::write(self.slab.addr(new_slot), kv.len() as u32));
+                    trace.push(Access::write(self.bucket_addr(bidx), 16));
+                }
+                KvOp {
+                    found: true,
+                    value: None,
+                    trace,
+                }
+            }
+            Where::Free { chain, e } => {
+                let slot = self.slab.put(&kv).expect("value too large");
+                let entry = match chain {
+                    None => &mut self.buckets[bidx as usize].entries[e],
+                    Some(c) => &mut self.overflow[c as usize].entries[e],
+                };
+                *entry = Entry {
+                    tag: h,
+                    slot,
+                    key_len: key.len() as u16,
+                    val_len: value.len() as u16,
+                    used: true,
+                };
+                self.items += 1;
+                trace.push(Access::write(self.slab.addr(slot), kv.len() as u32));
+                let baddr = match chain {
+                    None => self.bucket_addr(bidx),
+                    Some(c) => self.overflow_addr(c),
+                };
+                trace.push(Access::write(baddr, 16));
+                // Claiming the slot also touched the bucket line again.
+                trace.push(Access::read(baddr, 64).parallel());
+                KvOp {
+                    found: false,
+                    value: None,
+                    trace,
+                }
+            }
+            Where::NeedChain { last } => {
+                // Allocate an overflow bucket, link it, insert there.
+                let nidx = self.overflow.len() as u32;
+                self.overflow.push(Bucket::new());
+                match last {
+                    None => self.buckets[bidx as usize].next = Some(nidx),
+                    Some(c) => self.overflow[c as usize].next = Some(nidx),
+                }
+                let slot = self.slab.put(&kv).expect("value too large");
+                self.overflow[nidx as usize].entries[0] = Entry {
+                    tag: h,
+                    slot,
+                    key_len: key.len() as u16,
+                    val_len: value.len() as u16,
+                    used: true,
+                };
+                self.items += 1;
+                trace.push(Access::write(self.overflow_addr(nidx), BUCKET_BYTES as u32));
+                trace.push(Access::write(self.slab.addr(slot), kv.len() as u32));
+                trace.push(Access::write(self.bucket_addr(bidx), 16));
+                KvOp {
+                    found: false,
+                    value: None,
+                    trace,
+                }
+            }
+        }
+    }
+
+    /// DELETE.
+    pub fn delete(&mut self, key: &[u8]) -> KvOp {
+        let h = hash_key(key);
+        let bidx = h & self.mask;
+        let mut trace = MemTrace::new();
+        trace.push(Access::read(self.bucket_addr(bidx), BUCKET_BYTES as u32));
+        let mut chain: Option<u32> = None;
+        loop {
+            let cur = match chain {
+                None => &self.buckets[bidx as usize],
+                Some(c) => &self.overflow[c as usize],
+            };
+            if let Some(i) = cur
+                .entries
+                .iter()
+                .position(|e| e.used && e.tag == h && e.key_len as usize == key.len())
+            {
+                let entry = match chain {
+                    None => &mut self.buckets[bidx as usize].entries[i],
+                    Some(c) => &mut self.overflow[c as usize].entries[i],
+                };
+                let slot = entry.slot;
+                entry.used = false;
+                self.slab.free(slot);
+                self.items -= 1;
+                let baddr = match chain {
+                    None => self.bucket_addr(bidx),
+                    Some(c) => self.overflow_addr(c),
+                };
+                trace.push(Access::write(baddr, 16));
+                return KvOp {
+                    found: true,
+                    value: None,
+                    trace,
+                };
+            }
+            match cur.next {
+                Some(n) => {
+                    trace.push(Access::read(self.overflow_addr(n), BUCKET_BYTES as u32));
+                    chain = Some(n);
+                }
+                None => {
+                    return KvOp {
+                        found: false,
+                        value: None,
+                        trace,
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.items
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+    use std::collections::HashMap;
+
+    fn small() -> HashTable {
+        HashTable::new(KvConfig {
+            buckets: 256,
+            ..KvConfig::default()
+        })
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut t = small();
+        t.put(b"key1", b"value1");
+        let op = t.get(b"key1");
+        assert!(op.found);
+        assert_eq!(op.value.unwrap(), b"value1");
+        assert!(!t.get(b"key2").found);
+    }
+
+    #[test]
+    fn update_replaces_value() {
+        let mut t = small();
+        t.put(b"k", b"v1");
+        let op = t.put(b"k", b"v2");
+        assert!(op.found, "second put is an update");
+        assert_eq!(t.get(b"k").value.unwrap(), b"v2");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn get_trace_is_three_accesses() {
+        // §IV-A / [94,99]: GETs average 3 memory accesses.
+        let mut t = small();
+        t.put(b"some-key", b"some-value");
+        let op = t.get(b"some-key");
+        assert_eq!(op.trace.len(), 3);
+        assert_eq!(op.trace.depth(), 3); // fully dependent chain
+    }
+
+    #[test]
+    fn put_trace_is_about_four_accesses() {
+        let mut t = small();
+        let op = t.put(b"new-key", b"new-value");
+        assert!((3..=5).contains(&op.trace.len()), "{}", op.trace.len());
+    }
+
+    #[test]
+    fn chaining_on_bucket_overflow() {
+        // Force >8 keys into one bucket by brute-force search.
+        let mut t = HashTable::new(KvConfig {
+            buckets: 2,
+            ..KvConfig::default()
+        });
+        let mut inserted = 0u32;
+        let mut i = 0u64;
+        while inserted < 20 {
+            let key = format!("key-{i}");
+            if hash_key(key.as_bytes()) & t.mask == 0 {
+                t.put(key.as_bytes(), b"v");
+                inserted += 1;
+            }
+            i += 1;
+        }
+        assert!(!t.overflow.is_empty(), "chaining must have kicked in");
+        // All 20 still retrievable.
+        let mut i = 0u64;
+        let mut found = 0;
+        while found < 20 && i < 1_000_000 {
+            let key = format!("key-{i}");
+            if hash_key(key.as_bytes()) & t.mask == 0 && t.get(key.as_bytes()).found {
+                found += 1;
+            }
+            i += 1;
+        }
+        assert_eq!(found, 20);
+        // Chain walks add accesses beyond 3.
+        assert!(t.chain_walks > 0);
+    }
+
+    #[test]
+    fn delete_then_get_misses() {
+        let mut t = small();
+        t.put(b"k", b"v");
+        assert!(t.delete(b"k").found);
+        assert!(!t.get(b"k").found);
+        assert!(!t.delete(b"k").found);
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn tagged_mode_still_detects_presence() {
+        let mut t = HashTable::new(KvConfig {
+            buckets: 256,
+            materialize: false,
+            ..KvConfig::default()
+        });
+        t.put(b"k", b"v");
+        let op = t.get(b"k");
+        assert!(op.found);
+        assert!(op.value.is_none()); // tagged mode returns no bytes
+        assert!(t.slab.verify(
+            {
+                // re-find the slot via another get's trace? simpler: put
+                // returns nothing, so just verify via public API
+                super::super::slab::SlotRef { class: 0, index: 0 }
+            },
+            b"kv"
+        ));
+    }
+
+    #[test]
+    fn model_matches_std_hashmap() {
+        // Property test: a random op sequence behaves like HashMap.
+        forall(
+            0xABCD,
+            50,
+            |g: &mut Gen| {
+                g.vec(1..200, |g| {
+                    let key = g.u64(0..40);
+                    let op = g.u32(0..3);
+                    let val = g.bytes(1..32);
+                    (op, key, val)
+                })
+            },
+            |ops| {
+                let mut t = small();
+                let mut m: HashMap<u64, Vec<u8>> = HashMap::new();
+                for (op, key, val) in ops {
+                    let k = key.to_le_bytes();
+                    match op {
+                        0 => {
+                            t.put(&k, val);
+                            m.insert(*key, val.clone());
+                        }
+                        1 => {
+                            let got = t.get(&k);
+                            let want = m.get(key);
+                            if got.found != want.is_some() {
+                                return Err(format!("presence mismatch for {key}"));
+                            }
+                            if let (Some(v), Some(w)) = (&got.value, want) {
+                                if v != w {
+                                    return Err(format!("value mismatch for {key}"));
+                                }
+                            }
+                        }
+                        _ => {
+                            let got = t.delete(&k);
+                            let want = m.remove(key);
+                            if got.found != want.is_some() {
+                                return Err(format!("delete mismatch for {key}"));
+                            }
+                        }
+                    }
+                    if t.len() != m.len() as u64 {
+                        return Err(format!("len {} != {}", t.len(), m.len()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! In-memory key-value store (§IV-A) — MICA-class [99]:
+//! a set-associative hash table whose entries point into a slab-allocated
+//! value pool, with bucket chaining on overflow. "On average, each GET
+//! request requires three memory accesses and each PUT request requires
+//! four" — the tests verify exactly that property on our structure.
+
+pub mod hash_table;
+pub mod slab;
+
+pub use hash_table::{HashTable, KvConfig, KvOp};
+pub use slab::Slab;

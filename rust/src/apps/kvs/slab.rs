@@ -1,0 +1,232 @@
+//! Slab allocator for key-value payloads (§IV-A: "the slab allocator will
+//! simply put it in the pre-defined memory pool").
+//!
+//! Size-class slabs with free lists. Two storage modes:
+//! * **materialized** — slots hold the actual bytes (used by functional
+//!   tests and the serving coordinator);
+//! * **tagged** — slots hold an 8-byte content tag (hash of the value);
+//!   used for the 10M–100M-key benchmark datasets where materializing
+//!   values would exceed host memory. GETs verify the tag, so functional
+//!   correctness is still exercised.
+
+/// A handle to an allocated slot: (class, index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotRef {
+    pub class: u8,
+    pub index: u32,
+}
+
+struct SizeClass {
+    slot_bytes: u32,
+    /// Materialized payloads or 8-byte tags.
+    data: Vec<u8>,
+    stride: usize,
+    free: Vec<u32>,
+    len: u32,
+    base_addr: u64,
+}
+
+pub struct Slab {
+    classes: Vec<SizeClass>,
+    materialize: bool,
+    pub allocated: u64,
+    pub freed: u64,
+}
+
+/// Size classes: 64B, 256B, 1KB, 4KB.
+const CLASS_SIZES: [u32; 4] = [64, 256, 1024, 4096];
+
+fn tag_of(bytes: &[u8]) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Slab {
+    /// `base_addr` is where the pool lives in the simulated address map.
+    pub fn new(base_addr: u64, materialize: bool) -> Self {
+        let mut addr = base_addr;
+        let classes = CLASS_SIZES
+            .iter()
+            .map(|&sz| {
+                let c = SizeClass {
+                    slot_bytes: sz,
+                    data: Vec::new(),
+                    stride: if materialize { sz as usize } else { 8 },
+                    free: Vec::new(),
+                    len: 0,
+                    base_addr: addr,
+                };
+                // Reserve a generous address range per class (16 GB).
+                addr += 16 << 30;
+                c
+            })
+            .collect();
+        Slab {
+            classes,
+            materialize,
+            allocated: 0,
+            freed: 0,
+        }
+    }
+
+    fn class_for(len: usize) -> Option<u8> {
+        CLASS_SIZES
+            .iter()
+            .position(|&s| len <= s as usize)
+            .map(|c| c as u8)
+    }
+
+    /// Allocate and store `value`. Returns the slot.
+    pub fn put(&mut self, value: &[u8]) -> Option<SlotRef> {
+        let class = Self::class_for(value.len())?;
+        let c = &mut self.classes[class as usize];
+        let index = match c.free.pop() {
+            Some(i) => i,
+            None => {
+                let i = c.len;
+                c.len += 1;
+                c.data.resize(c.len as usize * c.stride, 0);
+                i
+            }
+        };
+        let off = index as usize * c.stride;
+        if self.materialize {
+            c.data[off..off + value.len()].copy_from_slice(value);
+            // Zero-pad the remainder so reads are deterministic.
+            c.data[off + value.len()..off + c.stride].fill(0);
+        } else {
+            c.data[off..off + 8].copy_from_slice(&tag_of(value).to_le_bytes());
+        }
+        self.allocated += 1;
+        Some(SlotRef { class, index })
+    }
+
+    /// Read back a value of known length; in tagged mode, returns `None`
+    /// (use [`Slab::verify`]).
+    pub fn get(&self, slot: SlotRef, len: usize) -> Option<&[u8]> {
+        if !self.materialize {
+            return None;
+        }
+        let c = &self.classes[slot.class as usize];
+        let off = slot.index as usize * c.stride;
+        Some(&c.data[off..off + len])
+    }
+
+    /// Check that the stored content matches `value` (works in both modes).
+    pub fn verify(&self, slot: SlotRef, value: &[u8]) -> bool {
+        let c = &self.classes[slot.class as usize];
+        let off = slot.index as usize * c.stride;
+        if self.materialize {
+            &c.data[off..off + value.len()] == value
+        } else {
+            c.data[off..off + 8] == tag_of(value).to_le_bytes()
+        }
+    }
+
+    /// Overwrite in place (UPDATE with same size class).
+    pub fn update(&mut self, slot: SlotRef, value: &[u8]) -> bool {
+        if Self::class_for(value.len()) != Some(slot.class) {
+            return false;
+        }
+        let materialize = self.materialize;
+        let c = &mut self.classes[slot.class as usize];
+        let off = slot.index as usize * c.stride;
+        if materialize {
+            c.data[off..off + value.len()].copy_from_slice(value);
+            c.data[off + value.len()..off + c.stride].fill(0);
+        } else {
+            let t = tag_of(value).to_le_bytes();
+            c.data[off..off + 8].copy_from_slice(&t);
+        }
+        true
+    }
+
+    pub fn free(&mut self, slot: SlotRef) {
+        self.classes[slot.class as usize].free.push(slot.index);
+        self.freed += 1;
+    }
+
+    /// Simulated address of a slot (for MemTrace emission).
+    pub fn addr(&self, slot: SlotRef) -> u64 {
+        let c = &self.classes[slot.class as usize];
+        c.base_addr + slot.index as u64 * c.slot_bytes as u64
+    }
+
+    pub fn live(&self) -> u64 {
+        self.allocated - self.freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip_materialized() {
+        let mut s = Slab::new(0x1_0000_0000, true);
+        let v = b"hello world";
+        let slot = s.put(v).unwrap();
+        assert_eq!(s.get(slot, v.len()).unwrap(), v);
+        assert!(s.verify(slot, v));
+        assert!(!s.verify(slot, b"hello worlds"));
+    }
+
+    #[test]
+    fn tagged_mode_verifies_without_storing() {
+        let mut s = Slab::new(0, false);
+        let v = vec![7u8; 1024];
+        let slot = s.put(&v).unwrap();
+        assert_eq!(slot.class, 2); // 1KB class
+        assert!(s.get(slot, v.len()).is_none());
+        assert!(s.verify(slot, &v));
+        let mut w = v.clone();
+        w[512] = 8;
+        assert!(!s.verify(slot, &w));
+    }
+
+    #[test]
+    fn size_class_selection() {
+        assert_eq!(Slab::class_for(1), Some(0));
+        assert_eq!(Slab::class_for(64), Some(0));
+        assert_eq!(Slab::class_for(65), Some(1));
+        assert_eq!(Slab::class_for(4096), Some(3));
+        assert_eq!(Slab::class_for(4097), None);
+    }
+
+    #[test]
+    fn free_list_reuses_slots() {
+        let mut s = Slab::new(0, true);
+        let a = s.put(b"a").unwrap();
+        let addr_a = s.addr(a);
+        s.free(a);
+        let b = s.put(b"b").unwrap();
+        assert_eq!(s.addr(b), addr_a);
+        assert_eq!(s.live(), 1);
+    }
+
+    #[test]
+    fn distinct_classes_have_disjoint_address_ranges() {
+        let mut s = Slab::new(0x100, true);
+        let a = s.put(&[0u8; 64]).unwrap();
+        let b = s.put(&[0u8; 4096]).unwrap();
+        let (lo, hi) = (s.addr(a), s.addr(b));
+        assert!(hi - lo >= 16 << 30);
+    }
+
+    #[test]
+    fn update_in_place_keeps_address() {
+        let mut s = Slab::new(0, true);
+        let slot = s.put(b"old").unwrap();
+        let addr = s.addr(slot);
+        assert!(s.update(slot, b"new"));
+        assert_eq!(s.addr(slot), addr);
+        assert!(s.verify(slot, b"new"));
+        // Cross-class update is rejected.
+        assert!(!s.update(slot, &[0u8; 200]));
+    }
+}

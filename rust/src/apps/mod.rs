@@ -1,0 +1,11 @@
+//! The three µs-scale datacenter applications the paper evaluates
+//! (§IV): in-memory KVS, NVM-backed chain-replicated transactions, and
+//! DLRM inference. Each is implemented *functionally* (real bytes, real
+//! hash walks, real replication, real numerics) and emits [`crate::mem::MemTrace`]s
+//! that the per-design timing layers replay — so Fig 8's
+//! distribution-sensitivity and Fig 11/12's shapes emerge from real data
+//! structures, not hand-coded outcomes.
+
+pub mod dlrm;
+pub mod kvs;
+pub mod txn;

@@ -1,0 +1,300 @@
+//! Chain replication (§IV-B): replicas in a line; writes enter at the
+//! head, propagate to the tail, and ACKs flow back; reads may be served
+//! by head or tail directly (the protocol guarantees committed data
+//! there). This is the functional core driven by both the ORCA Tx and
+//! HyperLoop timing paths, plus the fault-injection tests (crash a
+//! replica, recover from its redo log, verify convergence).
+
+use super::concurrency::ConcurrencyControl;
+use super::log::{RedoLog, Tuple};
+use std::collections::HashMap;
+
+/// Operations inside a transaction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TxOp {
+    /// Read the value at `offset`.
+    Read { offset: u64 },
+    /// Write `data` at `offset`.
+    Write { offset: u64, data: Vec<u8> },
+}
+
+/// A multi-op transaction.
+#[derive(Clone, Debug)]
+pub struct Transaction {
+    pub id: u64,
+    pub ops: Vec<TxOp>,
+}
+
+/// One replica: NVM data space (offset → bytes) + redo log.
+pub struct Replica {
+    pub store: HashMap<u64, Vec<u8>>,
+    pub log: RedoLog,
+    pub committed: u64,
+    /// Crash flag for fault injection.
+    pub down: bool,
+}
+
+impl Replica {
+    fn new(log_base: u64) -> Self {
+        Replica {
+            store: HashMap::new(),
+            log: RedoLog::new(log_base, 64 << 20),
+            committed: 0,
+            down: false,
+        }
+    }
+
+    fn apply(&mut self, tuples: &[Tuple]) {
+        for t in tuples {
+            self.store.insert(t.offset, t.data.clone());
+        }
+        self.committed += 1;
+    }
+
+    /// Crash-recover: rebuild the store from the redo log.
+    fn recover(&mut self) {
+        self.store.clear();
+        self.committed = 0;
+        let records: Vec<Vec<Tuple>> = self.log.replay().map(|t| t.to_vec()).collect();
+        for tuples in records {
+            for t in &tuples {
+                self.store.insert(t.offset, t.data.clone());
+            }
+            self.committed += 1;
+        }
+        self.down = false;
+    }
+}
+
+/// The chain plus the head-side concurrency-control unit.
+pub struct Chain {
+    pub replicas: Vec<Replica>,
+    pub cc: ConcurrencyControl,
+    pub committed: u64,
+    pub aborted: u64,
+}
+
+impl Chain {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        Chain {
+            replicas: (0..n)
+                .map(|i| Replica::new(0x10_0000_0000 + ((i as u64) << 32)))
+                .collect(),
+            cc: ConcurrencyControl::new(),
+            committed: 0,
+            aborted: 0,
+        }
+    }
+
+    /// Execute a transaction end-to-end (functional): acquire locks,
+    /// log+apply down the chain, ack back, release locks. Returns the
+    /// read results (in op order) or `None` if it blocked on a conflict
+    /// (caller retries after the conflicting txn commits — the timing
+    /// layer models this as queueing delay).
+    pub fn execute(&mut self, txn: &Transaction) -> Option<Vec<Vec<u8>>> {
+        let keys: Vec<u64> = txn
+            .ops
+            .iter()
+            .map(|op| match op {
+                TxOp::Read { offset } | TxOp::Write { offset, .. } => *offset,
+            })
+            .collect();
+        if !self.cc.acquire(txn.id, &keys) {
+            self.aborted += 1;
+            return None;
+        }
+
+        // Reads are served at the head (committed data).
+        let mut reads = Vec::new();
+        let tuples: Vec<Tuple> = txn
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                TxOp::Read { offset } => {
+                    reads.push(
+                        self.replicas[0]
+                            .store
+                            .get(offset)
+                            .cloned()
+                            .unwrap_or_default(),
+                    );
+                    None
+                }
+                TxOp::Write { offset, data } => Some(Tuple {
+                    offset: *offset,
+                    data: data.clone(),
+                }),
+            })
+            .collect();
+
+        // Writes propagate head → tail; each replica logs then applies.
+        if !tuples.is_empty() {
+            for r in &mut self.replicas {
+                if r.down {
+                    continue; // skipped while down; recovery re-syncs
+                }
+                if r.log.append(&tuples).is_none() {
+                    r.log.trim(1024); // checkpoint old records
+                    r.log.append(&tuples).expect("log space after trim");
+                }
+                r.apply(&tuples);
+            }
+        }
+        self.committed += 1;
+        self.cc.release(txn.id);
+        Some(reads)
+    }
+
+    /// Fault injection: crash replica `i` (drops its volatile store).
+    pub fn crash(&mut self, i: usize) {
+        self.replicas[i].down = true;
+        self.replicas[i].store.clear();
+        self.replicas[i].committed = 0;
+    }
+
+    /// Recover replica `i` from its redo log, then catch up from the
+    /// head for anything it missed while down.
+    pub fn recover(&mut self, i: usize) {
+        self.replicas[i].recover();
+        if i > 0 {
+            // Catch-up sync from the head (chain repair).
+            let (head, rest) = self.replicas.split_at_mut(1);
+            rest[i - 1].store = head[0].store.clone();
+            rest[i - 1].committed = head[0].committed;
+        }
+    }
+
+    /// Invariant: all live replicas hold identical data.
+    pub fn converged(&self) -> bool {
+        let head = &self.replicas[0].store;
+        self.replicas
+            .iter()
+            .filter(|r| !r.down)
+            .all(|r| &r.store == head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    fn w(offset: u64, data: &[u8]) -> TxOp {
+        TxOp::Write {
+            offset,
+            data: data.to_vec(),
+        }
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut c = Chain::new(2);
+        c.execute(&Transaction { id: 1, ops: vec![w(0, b"hello")] })
+            .unwrap();
+        let r = c
+            .execute(&Transaction {
+                id: 2,
+                ops: vec![TxOp::Read { offset: 0 }],
+            })
+            .unwrap();
+        assert_eq!(r[0], b"hello");
+        assert!(c.converged());
+    }
+
+    #[test]
+    fn multi_op_transaction_is_atomic_across_replicas() {
+        let mut c = Chain::new(3);
+        c.execute(&Transaction {
+            id: 1,
+            ops: vec![w(0, b"a"), w(64, b"b"), TxOp::Read { offset: 0 }],
+        })
+        .unwrap();
+        for r in &c.replicas {
+            assert_eq!(r.store.get(&0).unwrap(), b"a");
+            assert_eq!(r.store.get(&64).unwrap(), b"b");
+            assert_eq!(r.committed, 1);
+        }
+    }
+
+    #[test]
+    fn conflicting_transactions_block() {
+        let mut c = Chain::new(2);
+        // Hold key 0 by not releasing: emulate via cc directly.
+        assert!(c.cc.acquire(99, &[0]));
+        let blocked = c.execute(&Transaction { id: 1, ops: vec![w(0, b"x")] });
+        assert!(blocked.is_none());
+        assert_eq!(c.aborted, 1);
+        c.cc.release(99);
+        assert!(c
+            .execute(&Transaction { id: 1, ops: vec![w(0, b"x")] })
+            .is_some());
+    }
+
+    #[test]
+    fn crash_recovery_from_redo_log() {
+        let mut c = Chain::new(2);
+        for i in 0..50u64 {
+            c.execute(&Transaction {
+                id: i,
+                ops: vec![w(i * 64, format!("v{i}").as_bytes())],
+            })
+            .unwrap();
+        }
+        // Tail crashes, loses volatile state, recovers from its log.
+        c.crash(1);
+        assert!(c.replicas[1].store.is_empty());
+        c.recover(1);
+        assert!(c.converged(), "recovered replica must match the head");
+        assert_eq!(c.replicas[1].store.len(), 50);
+    }
+
+    #[test]
+    fn writes_while_replica_down_are_caught_up_on_recovery() {
+        let mut c = Chain::new(2);
+        c.execute(&Transaction { id: 1, ops: vec![w(0, b"before")] })
+            .unwrap();
+        c.crash(1);
+        c.execute(&Transaction { id: 2, ops: vec![w(64, b"during")] })
+            .unwrap();
+        c.recover(1);
+        assert!(c.converged());
+        assert_eq!(c.replicas[1].store.get(&64).unwrap(), b"during");
+    }
+
+    #[test]
+    fn random_histories_always_converge() {
+        forall(
+            0x7777,
+            30,
+            |g: &mut Gen| {
+                g.vec(1..100, |g| {
+                    let n_ops = g.usize(1..6);
+                    (0..n_ops)
+                        .map(|_| (g.u64(0..32) * 64, g.bytes(1..16)))
+                        .collect::<Vec<_>>()
+                })
+            },
+            |txns| {
+                let mut c = Chain::new(3);
+                for (i, ops) in txns.iter().enumerate() {
+                    let t = Transaction {
+                        id: i as u64,
+                        ops: ops.iter().map(|(o, d)| w(*o, d)).collect(),
+                    };
+                    // Sequential issue: conflicts impossible, must commit.
+                    if c.execute(&t).is_none() {
+                        return Err("sequential txn blocked".into());
+                    }
+                }
+                if !c.converged() {
+                    return Err("replicas diverged".into());
+                }
+                if c.committed != txns.len() as u64 {
+                    return Err("commit count mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

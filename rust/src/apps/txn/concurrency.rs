@@ -1,0 +1,139 @@
+//! The APU's concurrency-control unit (§IV-B): "a small hash table
+//! [whose] entries are indexed by the key of the key-value pair. Any
+//! single key-value pair can only be accessed by one outstanding
+//! transaction, and the other related transactions will be buffered in
+//! the queue in the order of arrival."
+
+use std::collections::{HashMap, VecDeque};
+
+/// Per-key lock state with a FIFO of waiting transactions.
+#[derive(Debug, Default)]
+struct KeyState {
+    holder: Option<u64>,
+    waiters: VecDeque<u64>,
+}
+
+#[derive(Debug, Default)]
+pub struct ConcurrencyControl {
+    keys: HashMap<u64, KeyState>,
+    /// txn → keys it holds.
+    held: HashMap<u64, Vec<u64>>,
+    pub conflicts: u64,
+}
+
+impl ConcurrencyControl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Try to acquire all `keys` for `txn` (all-or-nothing, keys acquired
+    /// in sorted order — the fixed global order makes deadlock
+    /// impossible). Returns `true` if the transaction may proceed;
+    /// otherwise it is queued on the first conflicting key.
+    pub fn acquire(&mut self, txn: u64, keys: &[u64]) -> bool {
+        let mut sorted = keys.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        // Check first.
+        for k in &sorted {
+            if let Some(st) = self.keys.get(k) {
+                if st.holder.is_some() && st.holder != Some(txn) {
+                    self.conflicts += 1;
+                    self.keys.entry(*k).or_default().waiters.push_back(txn);
+                    return false;
+                }
+            }
+        }
+        for k in &sorted {
+            self.keys.entry(*k).or_default().holder = Some(txn);
+        }
+        self.held.insert(txn, sorted);
+        true
+    }
+
+    /// Release `txn`'s keys; returns transactions that were unblocked
+    /// (head-of-queue waiters on now-free keys, FIFO order preserved).
+    pub fn release(&mut self, txn: u64) -> Vec<u64> {
+        let mut unblocked = Vec::new();
+        if let Some(keys) = self.held.remove(&txn) {
+            for k in keys {
+                if let Some(st) = self.keys.get_mut(&k) {
+                    st.holder = None;
+                    if let Some(next) = st.waiters.pop_front() {
+                        unblocked.push(next);
+                    }
+                    if st.holder.is_none() && st.waiters.is_empty() {
+                        self.keys.remove(&k);
+                    }
+                }
+            }
+        }
+        unblocked
+    }
+
+    pub fn is_locked(&self, key: u64) -> bool {
+        self.keys
+            .get(&key)
+            .map(|s| s.holder.is_some())
+            .unwrap_or(false)
+    }
+
+    pub fn live_locks(&self) -> usize {
+        self.keys.values().filter(|s| s.holder.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusive_per_key() {
+        let mut cc = ConcurrencyControl::new();
+        assert!(cc.acquire(1, &[10, 20]));
+        assert!(!cc.acquire(2, &[20, 30]), "key 20 held by txn 1");
+        assert_eq!(cc.conflicts, 1);
+        assert!(cc.is_locked(10));
+    }
+
+    #[test]
+    fn release_unblocks_fifo_waiter() {
+        let mut cc = ConcurrencyControl::new();
+        assert!(cc.acquire(1, &[5]));
+        assert!(!cc.acquire(2, &[5]));
+        assert!(!cc.acquire(3, &[5]));
+        let unblocked = cc.release(1);
+        assert_eq!(unblocked, vec![2], "FIFO order of arrival");
+        assert!(cc.acquire(2, &[5]));
+        let unblocked = cc.release(2);
+        assert_eq!(unblocked, vec![3]);
+    }
+
+    #[test]
+    fn disjoint_key_sets_run_concurrently() {
+        let mut cc = ConcurrencyControl::new();
+        assert!(cc.acquire(1, &[1, 2]));
+        assert!(cc.acquire(2, &[3, 4]));
+        assert_eq!(cc.live_locks(), 4);
+        cc.release(1);
+        cc.release(2);
+        assert_eq!(cc.live_locks(), 0);
+    }
+
+    #[test]
+    fn duplicate_keys_in_one_txn_are_fine() {
+        let mut cc = ConcurrencyControl::new();
+        assert!(cc.acquire(1, &[7, 7, 7]));
+        cc.release(1);
+        assert!(!cc.is_locked(7));
+    }
+
+    #[test]
+    fn all_or_nothing_acquisition() {
+        let mut cc = ConcurrencyControl::new();
+        assert!(cc.acquire(1, &[1]));
+        // Txn 2 wants {1,2}: must not hold 2 while waiting on 1.
+        assert!(!cc.acquire(2, &[2, 1]));
+        assert!(!cc.is_locked(2), "partial acquisition leaked a lock");
+    }
+}

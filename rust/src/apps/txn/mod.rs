@@ -1,0 +1,18 @@
+//! Distributed transactions with NVM-based chain replication (§IV-B).
+//!
+//! Functional core: a [`chain::Chain`] of replicas, each holding a
+//! persistent redo log (a ring buffer living at NVM addresses, §III-A:
+//! "the ring buffers are allocated in the NVM as the redo-log for failure
+//! recovery") and a key-value store; plus the APU's
+//! [`concurrency::ConcurrencyControl`] unit — "any single key-value pair
+//! can only be accessed by one outstanding transaction, and the other
+//! related transactions will be buffered in the queue in the order of
+//! arrival".
+
+pub mod chain;
+pub mod concurrency;
+pub mod log;
+
+pub use chain::{Chain, Transaction, TxOp};
+pub use concurrency::ConcurrencyControl;
+pub use log::RedoLog;

@@ -1,0 +1,7 @@
+//! Baseline systems the paper compares against, beyond the CPU and
+//! SmartNIC serving pipelines (which live in [`crate::cpu`] /
+//! [`crate::smartnic`]): HyperLoop's group-based RDMA chain replication.
+
+pub mod hyperloop;
+
+pub use hyperloop::{HyperLoopChain, TxnShape};

@@ -1,0 +1,312 @@
+//! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
+//!
+//! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3, all,
+//! serve (coordinator demo), info.
+//!
+//! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
+//! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points).
+
+use crate::config::{Overrides, Testbed};
+use crate::experiments::{self, Opts};
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub command: String,
+    pub opts: Opts,
+    pub artifacts: std::path::PathBuf,
+    pub cdf: bool,
+}
+
+pub const USAGE: &str = "\
+ORCA reproduction harness
+
+USAGE: orca <COMMAND> [FLAGS]
+
+COMMANDS:
+  fig4    DMA-write memory bandwidth vs DDIO/TPH (+ NVM amplification)
+  fig7    cpoll vs polling notification latency
+  fig8    KVS peak throughput (designs x distributions x mixes)
+  fig9    KVS latency (avg / p50 / p99)
+  fig10   KVS batch-size sweep
+  tab3    power efficiency (Kop/W)
+  fig11   chain-replication transaction latency
+  fig12   DLRM inference throughput
+  all     run everything above
+  serve   run the DLRM serving coordinator on a synthetic stream
+  info    testbed parameters after overrides
+
+FLAGS:
+  --seed N          RNG seed (default 42)
+  --keys N          KVS dataset size (default 2000000; paper: 100000000)
+  --requests N      requests per measurement (default 200000)
+  --set K=V         override a testbed parameter (repeatable)
+  --config FILE     read overrides from FILE (key=value lines)
+  --artifacts DIR   artifact bundle for `serve` (default ./artifacts)
+  --cdf             with fig7: dump CDF points for plotting
+";
+
+pub fn parse(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        bail!("missing command\n\n{USAGE}");
+    }
+    let command = args[0].clone();
+    let mut opts = Opts::default();
+    let mut overrides = Overrides::new();
+    let mut artifacts = std::path::PathBuf::from("artifacts");
+    let mut cdf = false;
+    let mut i = 1;
+    while i < args.len() {
+        let take = |i: &mut usize| -> Result<String> {
+            *i += 1;
+            args.get(*i)
+                .cloned()
+                .with_context(|| format!("flag {} needs a value", args[*i - 1]))
+        };
+        match args[i].as_str() {
+            "--seed" => opts.seed = take(&mut i)?.parse()?,
+            "--keys" => opts.keys = take(&mut i)?.parse()?,
+            "--requests" => opts.requests = take(&mut i)?.parse()?,
+            "--set" => overrides.set(&take(&mut i)?)?,
+            "--config" => {
+                let path = take(&mut i)?;
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {path}"))?;
+                overrides.parse_file(&text)?;
+            }
+            "--artifacts" => artifacts = take(&mut i)?.into(),
+            "--cdf" => cdf = true,
+            "-h" | "--help" => bail!("{USAGE}"),
+            other => bail!("unknown flag `{other}`\n\n{USAGE}"),
+        }
+        i += 1;
+    }
+    let mut testbed = Testbed::paper();
+    overrides.apply(&mut testbed)?;
+    opts.testbed = testbed;
+    Ok(Cli {
+        command,
+        opts,
+        artifacts,
+        cdf,
+    })
+}
+
+pub fn run(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "fig4" => {
+            experiments::fig4::report(&cli.opts).print();
+            experiments::fig4::report_nvm(&cli.opts).print();
+        }
+        "fig7" => {
+            experiments::fig7::report(&cli.opts).print();
+            if cli.cdf {
+                for (label, pts) in experiments::fig7::cdf_dump(&cli.opts) {
+                    println!("# CDF {label}");
+                    for (ns, f) in pts {
+                        println!("{ns:.1} {f:.5}");
+                    }
+                }
+            }
+        }
+        "fig8" => fig8(&cli.opts).print(),
+        "fig9" => fig9(&cli.opts).print(),
+        "fig10" => fig10(&cli.opts).print(),
+        "tab3" => experiments::tab3::report(&cli.opts).print(),
+        "fig11" => experiments::fig11::report(&cli.opts).print(),
+        "fig12" => experiments::fig12::report(&cli.opts).print(),
+        "all" => {
+            experiments::fig4::report(&cli.opts).print();
+            experiments::fig4::report_nvm(&cli.opts).print();
+            experiments::fig7::report(&cli.opts).print();
+            fig8(&cli.opts).print();
+            fig9(&cli.opts).print();
+            fig10(&cli.opts).print();
+            experiments::tab3::report(&cli.opts).print();
+            experiments::fig11::report(&cli.opts).print();
+            experiments::fig12::report(&cli.opts).print();
+        }
+        "serve" => serve(cli)?,
+        "info" => info(&cli.opts),
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Fig 8: peak throughput across designs × distributions × mixes.
+pub fn fig8(opts: &Opts) -> experiments::Table {
+    use crate::workload::{KeyDist, KvMix};
+    use experiments::kvs::{self, KvDesign, RequestStream};
+    let mut tb = experiments::Table::new(
+        "Fig 8 — KVS peak throughput, Mops (batch 32)",
+        &["design", "workload", "uniform", "zipf-0.9"],
+    );
+    for mix in [KvMix::GetOnly, KvMix::HalfPut] {
+        let uni = RequestStream::generate(
+            opts.keys,
+            opts.requests,
+            &KeyDist::uniform(opts.keys),
+            mix,
+            64,
+            opts.seed,
+        );
+        let zipf = RequestStream::generate(
+            opts.keys,
+            opts.requests,
+            &KeyDist::zipf(opts.keys, 0.9),
+            mix,
+            64,
+            opts.seed,
+        );
+        for d in KvDesign::ALL {
+            let u = kvs::run(&opts.testbed, d, &uni, 32, kvs::Load::Saturation, opts.seed);
+            let z = kvs::run(&opts.testbed, d, &zipf, 32, kvs::Load::Saturation, opts.seed);
+            tb.row(&[
+                d.label().into(),
+                mix.label().into(),
+                format!("{:.1}", u.mops),
+                format!("{:.1}", z.mops),
+            ]);
+        }
+    }
+    tb
+}
+
+/// Fig 9: latency at 70% of each design's peak (100% GET).
+pub fn fig9(opts: &Opts) -> experiments::Table {
+    use crate::workload::{KeyDist, KvMix};
+    use experiments::kvs::{self, KvDesign, RequestStream};
+    let mut tb = experiments::Table::new(
+        "Fig 9 — KVS latency, 100% GET (µs; batch 32; 70% load)",
+        &["design", "distribution", "avg", "p50", "p99"],
+    );
+    for (dist, dl) in [
+        (KeyDist::uniform(opts.keys), "uniform"),
+        (KeyDist::zipf(opts.keys, 0.9), "zipf-0.9"),
+    ] {
+        let stream = RequestStream::generate(
+            opts.keys,
+            opts.requests,
+            &dist,
+            KvMix::GetOnly,
+            64,
+            opts.seed,
+        );
+        for d in KvDesign::ALL {
+            let r = kvs::peak_then_latency(&opts.testbed, d, &stream, 32, opts.seed);
+            // The paper's U280 emulation cannot measure LD/LH tails (§V).
+            let tail = match d {
+                KvDesign::Orca(m) if m != crate::config::AccelMem::None => "n/a".to_string(),
+                _ => format!("{:.1}", r.p99_us),
+            };
+            tb.row(&[
+                d.label().into(),
+                dl.into(),
+                format!("{:.1}", r.avg_us),
+                format!("{:.1}", r.p50_us),
+                tail,
+            ]);
+        }
+    }
+    tb
+}
+
+/// Fig 10: batch-size sweep (zipf-0.9, 100% GET).
+pub fn fig10(opts: &Opts) -> experiments::Table {
+    use crate::workload::{KeyDist, KvMix};
+    use experiments::kvs::{self, KvDesign, RequestStream};
+    let mut tb = experiments::Table::new(
+        "Fig 10 — batch-size sweep (zipf-0.9, 100% GET)",
+        &["design", "batch", "Mops", "avg µs", "p99 µs"],
+    );
+    let stream = RequestStream::generate(
+        opts.keys,
+        opts.requests,
+        &KeyDist::zipf(opts.keys, 0.9),
+        KvMix::GetOnly,
+        64,
+        opts.seed,
+    );
+    for d in [
+        KvDesign::Cpu,
+        KvDesign::SmartNic,
+        KvDesign::Orca(crate::config::AccelMem::None),
+    ] {
+        for batch in [1usize, 2, 4, 8, 16, 32] {
+            let r = kvs::peak_then_latency(&opts.testbed, d, &stream, batch, opts.seed);
+            tb.row(&[
+                d.label().into(),
+                batch.to_string(),
+                format!("{:.1}", r.mops),
+                format!("{:.1}", r.avg_us),
+                format!("{:.1}", r.p99_us),
+            ]);
+        }
+    }
+    tb
+}
+
+fn serve(cli: &Cli) -> Result<()> {
+    use crate::coordinator::{BatchPolicy, Coordinator};
+    use crate::sim::Rng;
+    println!("loading artifact bundle from {} ...", cli.artifacts.display());
+    let coord = Coordinator::start(cli.artifacts.clone(), BatchPolicy::default())?;
+    let mut rng = Rng::new(cli.opts.seed);
+    let n = cli.opts.requests.min(2_000);
+    println!("serving {n} synthetic DLRM queries ...");
+    let (tx, rx) = std::sync::mpsc::channel();
+    for _ in 0..n {
+        let dense: Vec<f32> = (0..13).map(|_| rng.f64() as f32).collect();
+        let query: Vec<u32> = (0..8).map(|_| rng.below(1000) as u32 + 1).collect();
+        coord.submit(dense, query, tx.clone());
+    }
+    drop(tx);
+    let mut got = 0u64;
+    while rx.recv().is_ok() {
+        got += 1;
+    }
+    let stats = coord.shutdown()?;
+    println!(
+        "served {got} requests in {:.2}s: {:.0} q/s, mean batch {:.1}, latency mean {:.0} µs p99 {:.0} µs",
+        stats.wall.as_secs_f64(),
+        stats.requests as f64 / stats.wall.as_secs_f64(),
+        stats.mean_batch,
+        stats.latency_us_mean,
+        stats.latency_us_p99,
+    );
+    Ok(())
+}
+
+fn info(opts: &Opts) {
+    println!("{:#?}", opts.testbed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let cli = parse(&s(&["fig8", "--seed", "7", "--keys", "1000", "--set", "net.line_gbps=100"]))
+            .unwrap();
+        assert_eq!(cli.command, "fig8");
+        assert_eq!(cli.opts.seed, 7);
+        assert_eq!(cli.opts.keys, 1000);
+        assert_eq!(cli.opts.testbed.net.line_gbps, 100.0);
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        assert!(parse(&s(&["fig8", "--bogus"])).is_err());
+        assert!(parse(&s(&[])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(parse(&s(&["fig8", "--seed"])).is_err());
+    }
+}

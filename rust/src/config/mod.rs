@@ -1,0 +1,9 @@
+//! Testbed configuration — the calibration constants of the simulated
+//! machine, with paper/Tab-II citations on every number, plus a tiny
+//! key=value config-file/CLI-override layer (no external deps offline).
+
+pub mod params;
+pub mod overrides;
+
+pub use params::*;
+pub use overrides::Overrides;

@@ -1,0 +1,160 @@
+//! Minimal `key=value` override layer for experiments.
+//!
+//! No TOML/serde offline, so configs are flat dotted keys, e.g.
+//! `net.line_gbps=100` or `accel.freq_mhz=800`, given on the CLI
+//! (`--set k=v`) or in a file (one per line, `#` comments). This is what
+//! the ablation benches use to sweep "what if the coherence controller
+//! were a hard IP" style questions (§VI-A, §VII).
+
+use crate::config::Testbed;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed overrides: dotted key → numeric value.
+#[derive(Clone, Debug, Default)]
+pub struct Overrides {
+    kv: BTreeMap<String, f64>,
+}
+
+impl Overrides {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kv.is_empty()
+    }
+
+    /// Parse one `key=value` pair.
+    pub fn set(&mut self, s: &str) -> Result<()> {
+        let (k, v) = s
+            .split_once('=')
+            .with_context(|| format!("override `{s}` is not key=value"))?;
+        let v: f64 = v
+            .trim()
+            .parse()
+            .with_context(|| format!("override `{s}`: value is not numeric"))?;
+        self.kv.insert(k.trim().to_string(), v);
+        Ok(())
+    }
+
+    /// Parse a config file: one `key=value` per line; `#` starts a comment.
+    pub fn parse_file(&mut self, text: &str) -> Result<()> {
+        for (i, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            self.set(line)
+                .with_context(|| format!("config line {}", i + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.kv.get(key).copied()
+    }
+
+    /// Apply all overrides to a testbed. Unknown keys are an error (typos
+    /// in sweeps should fail loudly, not silently no-op).
+    pub fn apply(&self, t: &mut Testbed) -> Result<()> {
+        for (k, &v) in &self.kv {
+            apply_one(t, k, v)?;
+        }
+        Ok(())
+    }
+}
+
+fn apply_one(t: &mut Testbed, key: &str, v: f64) -> Result<()> {
+    macro_rules! f {
+        ($field:expr) => {{
+            $field = v;
+            return Ok(());
+        }};
+    }
+    macro_rules! u {
+        ($field:expr, $ty:ty) => {{
+            $field = v as $ty;
+            return Ok(());
+        }};
+    }
+    match key {
+        "cpu.freq_mhz" => f!(t.cpu.freq_mhz),
+        "cpu.cores" => u!(t.cpu.cores, usize),
+        "cpu.rpc_cycles" => u!(t.cpu.rpc_cycles, u64),
+        "cpu.mmio_doorbell_cycles" => u!(t.cpu.mmio_doorbell_cycles, u64),
+        "cpu.power_w" => f!(t.cpu.power_w),
+        "dram.latency_ns" => f!(t.dram.latency_ns),
+        "dram.bandwidth_gbs" => f!(t.dram.bandwidth_gbs),
+        "dram.channels" => u!(t.dram.channels, usize),
+        "nvm.read_latency_ns" => f!(t.nvm.read_latency_ns),
+        "nvm.write_latency_ns" => f!(t.nvm.write_latency_ns),
+        "nvm.read_bandwidth_gbs" => f!(t.nvm.read_bandwidth_gbs),
+        "nvm.write_bandwidth_gbs" => f!(t.nvm.write_bandwidth_gbs),
+        "llc.size_bytes" => u!(t.llc.size_bytes, u64),
+        "llc.ddio_ways" => u!(t.llc.ddio_ways, usize),
+        "llc.hit_latency_ns" => f!(t.llc.hit_latency_ns),
+        "upi.bandwidth_gbs" => f!(t.upi.bandwidth_gbs),
+        "upi.hop_latency_ns" => f!(t.upi.hop_latency_ns),
+        "pcie.bandwidth_gbs" => f!(t.pcie.bandwidth_gbs),
+        "pcie.one_way_ns" => f!(t.pcie.one_way_ns),
+        "accel.freq_mhz" => f!(t.accel.freq_mhz),
+        "accel.cache_bytes" => u!(t.accel.cache_bytes, u64),
+        "accel.coh_ctrl_cycles" => u!(t.accel.coh_ctrl_cycles, u64),
+        "accel.outstanding" => u!(t.accel.outstanding, usize),
+        "accel.apu_cycles" => u!(t.accel.apu_cycles, u64),
+        "accel.power_w" => f!(t.accel.power_w),
+        "accel.mlp_per_query" => u!(t.accel.mlp_per_query, usize),
+        "smartnic.cores" => u!(t.smartnic.cores, usize),
+        "smartnic.freq_mhz" => f!(t.smartnic.freq_mhz),
+        "smartnic.cache_bytes" => u!(t.smartnic.cache_bytes, u64),
+        "smartnic.rpc_cycles" => u!(t.smartnic.rpc_cycles, u64),
+        "smartnic.power_w" => f!(t.smartnic.power_w),
+        "net.line_gbps" => f!(t.net.line_gbps),
+        "net.one_way_ns" => f!(t.net.one_way_ns),
+        "net.rnic_msg_ns" => f!(t.net.rnic_msg_ns),
+        _ => bail!("unknown testbed parameter `{key}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_apply() {
+        let mut o = Overrides::new();
+        o.set("net.line_gbps=100").unwrap();
+        o.set("accel.freq_mhz = 800").unwrap();
+        let mut t = Testbed::paper();
+        o.apply(&mut t).unwrap();
+        assert_eq!(t.net.line_gbps, 100.0);
+        assert_eq!(t.accel.freq_mhz, 800.0);
+    }
+
+    #[test]
+    fn unknown_key_fails_loudly() {
+        let mut o = Overrides::new();
+        o.set("accel.fequency=800").unwrap();
+        let mut t = Testbed::paper();
+        assert!(o.apply(&mut t).is_err());
+    }
+
+    #[test]
+    fn malformed_pairs_rejected() {
+        let mut o = Overrides::new();
+        assert!(o.set("no_equals_sign").is_err());
+        assert!(o.set("cpu.cores=ten").is_err());
+    }
+
+    #[test]
+    fn parse_file_with_comments() {
+        let mut o = Overrides::new();
+        o.parse_file("# faster network\nnet.line_gbps=400\n\ncpu.cores=32 # big box\n")
+            .unwrap();
+        let mut t = Testbed::paper();
+        o.apply(&mut t).unwrap();
+        assert_eq!(t.net.line_gbps, 400.0);
+        assert_eq!(t.cpu.cores, 32);
+    }
+}

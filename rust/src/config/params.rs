@@ -1,0 +1,366 @@
+//! The simulated testbed (paper Tab. II) expressed as typed parameter
+//! structs. Every constant cites its source: the paper section, the
+//! referenced measurement study, or a calibration note in DESIGN.md.
+
+/// Host CPU: Intel Xeon Gold 6138P (Tab. II).
+#[derive(Clone, Debug)]
+pub struct CpuParams {
+    /// Core frequency in MHz (2.0 GHz, Tab. II).
+    pub freq_mhz: f64,
+    /// Physical cores (20 Skylake cores, Tab. II); KVS baseline uses 10 (§VI-B).
+    pub cores: usize,
+    /// Cycles for one RPC's non-memory work in the HERD/MICA-style server
+    /// (parse + hash + respond). Calibrated so 10 cores saturate 25 Gbps
+    /// with batch 32 (§VI-B: "peak KVS throughput is bounded by network").
+    pub rpc_cycles: u64,
+    /// Cycles for an MMIO doorbell write + sfence (§VI-B: "relatively
+    /// expensive"; [77] measures ~100ns class).
+    pub mmio_doorbell_cycles: u64,
+    /// Fully-loaded package power in watts (§VI-B: ~90 W).
+    pub power_w: f64,
+}
+
+impl Default for CpuParams {
+    fn default() -> Self {
+        CpuParams {
+            freq_mhz: 2000.0,
+            cores: 20,
+            rpc_cycles: 600,
+            mmio_doorbell_cycles: 200,
+            power_w: 90.0,
+        }
+    }
+}
+
+/// Host DRAM: six DDR4-2666 channels, 192 GB (Tab. II).
+#[derive(Clone, Debug)]
+pub struct DramParams {
+    /// Idle load-to-use latency, ns (typical DDR4 ~90 ns).
+    pub latency_ns: f64,
+    /// Aggregate bandwidth, GB/s (§VI-D quotes ~120 GB/s on the testbed).
+    pub bandwidth_gbs: f64,
+    /// Channels (bank-level parallelism for the MultiServer model).
+    pub channels: usize,
+    /// Access granularity, bytes (64 B lines, §III-D).
+    pub access_bytes: u64,
+}
+
+impl Default for DramParams {
+    fn default() -> Self {
+        DramParams {
+            latency_ns: 90.0,
+            bandwidth_gbs: 120.0,
+            channels: 6,
+            access_bytes: 64,
+        }
+    }
+}
+
+/// NVM (Intel Optane DC PMM class), emulated exactly as the paper does
+/// (§VI-C: "adding latency and throttling memory bandwidth ... calibrated
+/// to [74, 172]").
+#[derive(Clone, Debug)]
+pub struct NvmParams {
+    /// Read latency, ns ([172]: ~300 ns random read).
+    pub read_latency_ns: f64,
+    /// Write latency to the controller buffer, ns ([172]: ~100 ns; persistence
+    /// is asynchronous behind the ADR domain).
+    pub write_latency_ns: f64,
+    /// Read bandwidth, GB/s ([172]: ~39 GB/s for 6 DIMMs; scaled to 2 DIMMs ≈ 13).
+    pub read_bandwidth_gbs: f64,
+    /// Write bandwidth, GB/s ([172]: ~13 GB/s for 6 DIMMs; 2 DIMMs ≈ 4.3).
+    pub write_bandwidth_gbs: f64,
+    /// Internal access granularity, bytes (256 B, §III-D / [172]).
+    pub access_bytes: u64,
+}
+
+impl Default for NvmParams {
+    fn default() -> Self {
+        NvmParams {
+            read_latency_ns: 300.0,
+            write_latency_ns: 100.0,
+            read_bandwidth_gbs: 13.0,
+            write_bandwidth_gbs: 4.3,
+            access_bytes: 256,
+        }
+    }
+}
+
+/// Shared LLC: 27.5 MB (Tab. II) with DDIO.
+#[derive(Clone, Debug)]
+pub struct LlcParams {
+    pub size_bytes: u64,
+    pub line_bytes: u64,
+    pub ways: usize,
+    /// Ways DDIO may allocate into (Intel default: 2 of 11).
+    pub ddio_ways: usize,
+    /// Hit latency, ns (Skylake LLC ~ 19–20 ns).
+    pub hit_latency_ns: f64,
+}
+
+impl Default for LlcParams {
+    fn default() -> Self {
+        LlcParams {
+            size_bytes: 27_500_000,
+            line_bytes: 64,
+            ways: 11,
+            ddio_ways: 2,
+            hit_latency_ns: 20.0,
+        }
+    }
+}
+
+/// UPI cc-interconnect: one link, 10.4 GT/s → 20.8 GB/s per direction (Tab. II).
+#[derive(Clone, Debug)]
+pub struct UpiParams {
+    /// Per-direction bandwidth, GB/s.
+    pub bandwidth_gbs: f64,
+    /// One-way hop latency, ns (§VI-A: "UPI link may only consume ~50 ns [1,151]").
+    pub hop_latency_ns: f64,
+}
+
+impl Default for UpiParams {
+    fn default() -> Self {
+        UpiParams {
+            bandwidth_gbs: 20.8,
+            hop_latency_ns: 50.0,
+        }
+    }
+}
+
+/// PCIe link (Gen3 x8 class for the NIC/FPGA).
+#[derive(Clone, Debug)]
+pub struct PcieParams {
+    /// Usable bandwidth per direction, GB/s (Gen3 x8 ≈ 7.9 GB/s raw, ~6.5 effective).
+    pub bandwidth_gbs: f64,
+    /// One-way latency for a TLP, ns (§I/§II-B: PCIe adds "at least 1 µs"
+    /// to a *round trip* request; one-way ≈ 450 ns incl. root complex).
+    pub one_way_ns: f64,
+    /// TLP header overhead, bytes (TLP hdr 12–16 + DLLP/framing ≈ 24).
+    pub tlp_overhead_bytes: u64,
+    /// Max TLP payload, bytes.
+    pub mps_bytes: u64,
+}
+
+impl Default for PcieParams {
+    fn default() -> Self {
+        PcieParams {
+            bandwidth_gbs: 6.5,
+            one_way_ns: 450.0,
+            tlp_overhead_bytes: 24,
+            mps_bytes: 256,
+        }
+    }
+}
+
+/// The cc-accelerator (in-package Arria-10 GX @ 400 MHz, Tab. II).
+#[derive(Clone, Debug)]
+pub struct AccelParams {
+    /// Fabric frequency, MHz.
+    pub freq_mhz: f64,
+    /// Local cache, bytes (64 KB, Tab. II).
+    pub cache_bytes: u64,
+    /// Coherence-controller cycles to process one coherence message
+    /// (soft controller; calibrated so Fig-7 ping-pong lands ~1 µs class —
+    /// §VI-A notes the absolute value is FPGA-frequency-limited).
+    pub coh_ctrl_cycles: u64,
+    /// APU outstanding-request capacity (§V: 256).
+    pub outstanding: usize,
+    /// Outstanding reads the soft coherence controller sustains over the
+    /// cc-interconnect. Calibration: chosen so ORCA KV stays network-bound
+    /// (§VI-B) while ORCA DLRM lands at 20–30% of one CPU core (Fig 12's
+    /// "requests issued serially from the FPGA's wimpy controller").
+    pub coh_outstanding: usize,
+    /// APU per-request pipeline cycles (hash unit + FSM bookkeeping;
+    /// deeply pipelined — occupancy, not latency).
+    pub apu_cycles: u64,
+    /// Power at peak throughput, watts (§VI-B: 24–27 W; midpoint).
+    pub power_w: f64,
+    /// Memory requests the APU keeps in flight per query (§IV-C: 64).
+    pub mlp_per_query: usize,
+}
+
+impl Default for AccelParams {
+    fn default() -> Self {
+        AccelParams {
+            freq_mhz: 400.0,
+            cache_bytes: 64 * 1024,
+            coh_ctrl_cycles: 40,
+            outstanding: 256,
+            coh_outstanding: 24,
+            apu_cycles: 8,
+            power_w: 25.5,
+            mlp_per_query: 64,
+        }
+    }
+}
+
+/// Accelerator-local memory variants used for ORCA-LD / ORCA-LH (§V, [162]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccelMem {
+    /// No local memory: all app data behind the UPI link (base ORCA).
+    None,
+    /// U280 DDR4: ~36 GB/s.
+    LocalDdr,
+    /// U280 HBM2: ~425 GB/s over 32 channels.
+    LocalHbm,
+}
+
+impl AccelMem {
+    pub fn bandwidth_gbs(self) -> Option<f64> {
+        match self {
+            AccelMem::None => None,
+            AccelMem::LocalDdr => Some(36.0),
+            AccelMem::LocalHbm => Some(425.0),
+        }
+    }
+    pub fn channels(self) -> usize {
+        match self {
+            AccelMem::None => 0,
+            AccelMem::LocalDdr => 2,
+            AccelMem::LocalHbm => 32,
+        }
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            AccelMem::None => "ORCA",
+            AccelMem::LocalDdr => "ORCA-LD",
+            AccelMem::LocalHbm => "ORCA-LH",
+        }
+    }
+}
+
+/// BlueField-2 DPU (Tab. II).
+#[derive(Clone, Debug)]
+pub struct SmartNicParams {
+    /// ARM A72 cores.
+    pub cores: usize,
+    /// Core frequency, MHz (2.5 GHz).
+    pub freq_mhz: f64,
+    /// On-board DRAM used as cache for host-resident data (§VI-B: 512 MB).
+    pub cache_bytes: u64,
+    /// On-board DRAM access latency, ns (DDR4-1600, single channel).
+    pub local_latency_ns: f64,
+    /// On-board DRAM bandwidth, GB/s (16 GB DDR4-1600 single channel ≈ 12.8).
+    pub local_bandwidth_gbs: f64,
+    /// Cycles per request of ARM processing. Calibrated to §VI-B: "eight ARM
+    /// cores' peak throughput is equivalent to six Intel CPU cores" when all
+    /// data is on-board.
+    pub rpc_cycles: u64,
+    /// Outstanding host-memory reads per ARM core (direct-verbs RDMA reads
+    /// to the host are effectively synchronous on the data path, §II-B:
+    /// latency/throughput degrade linearly with host-access percentage).
+    pub host_outstanding: usize,
+    /// SoC power fully loaded, watts (§VI-B: ~15 W).
+    pub power_w: f64,
+}
+
+impl Default for SmartNicParams {
+    fn default() -> Self {
+        // 8 ARM @2.5GHz ≡ 6 Xeon @2.0GHz on RPC work:
+        // 8 * 2500 / x = 6 * 2000 / 600  =>  x = 1000 cycles.
+        SmartNicParams {
+            cores: 8,
+            freq_mhz: 2500.0,
+            cache_bytes: 512 * 1024 * 1024,
+            local_latency_ns: 110.0,
+            local_bandwidth_gbs: 12.8,
+            rpc_cycles: 1000,
+            host_outstanding: 1,
+            power_w: 15.0,
+        }
+    }
+}
+
+/// RNIC + fabric (ConnectX-6 Dx, 25 Gbps ports, RoCEv2; Tab. II).
+#[derive(Clone, Debug)]
+pub struct NetParams {
+    /// Line rate per port, Gbps.
+    pub line_gbps: f64,
+    /// Base one-way fabric latency, ns (client↔server through ToR; §VI-C
+    /// treats 2–3 µs as a datacenter RTT, so one-way ≈ 1.2 µs).
+    pub one_way_ns: f64,
+    /// Per-message RNIC processing, ns (WQE fetch + DMA setup; [77] class).
+    pub rnic_msg_ns: f64,
+    /// RoCEv2 per-packet header overhead, bytes (Eth+IP+UDP+BTH ≈ 66 + RETH 16).
+    pub header_bytes: u64,
+    /// MTU payload bytes.
+    pub mtu_bytes: u64,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        NetParams {
+            line_gbps: 25.0,
+            one_way_ns: 1_200.0,
+            rnic_msg_ns: 70.0,
+            header_bytes: 82,
+            mtu_bytes: 4096,
+        }
+    }
+}
+
+/// The whole testbed.
+#[derive(Clone, Debug, Default)]
+pub struct Testbed {
+    pub cpu: CpuParams,
+    pub dram: DramParams,
+    pub nvm: NvmParams,
+    pub llc: LlcParams,
+    pub upi: UpiParams,
+    pub pcie: PcieParams,
+    pub accel: AccelParams,
+    pub smartnic: SmartNicParams,
+    pub net: NetParams,
+}
+
+impl Testbed {
+    pub fn paper() -> Self {
+        Testbed::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::{cycle_ps, transfer_ps};
+
+    #[test]
+    fn defaults_match_tab2() {
+        let t = Testbed::paper();
+        assert_eq!(t.cpu.cores, 20);
+        assert_eq!(t.llc.size_bytes, 27_500_000);
+        assert_eq!(t.accel.cache_bytes, 64 * 1024);
+        assert_eq!(t.smartnic.cores, 8);
+        assert!((t.upi.bandwidth_gbs - 20.8).abs() < 1e-9);
+        assert!((t.net.line_gbps - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smartnic_equivalence_calibration() {
+        // §VI-B: 8 ARM cores ≡ 6 Intel cores on all-local KVS work.
+        let t = Testbed::paper();
+        let arm_ops_per_s =
+            t.smartnic.cores as f64 * t.smartnic.freq_mhz * 1e6 / t.smartnic.rpc_cycles as f64;
+        let intel6_ops_per_s = 6.0 * t.cpu.freq_mhz * 1e6 / t.cpu.rpc_cycles as f64;
+        let ratio = arm_ops_per_s / intel6_ops_per_s;
+        assert!((ratio - 1.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn accel_mem_variants() {
+        assert_eq!(AccelMem::None.bandwidth_gbs(), None);
+        assert_eq!(AccelMem::LocalDdr.bandwidth_gbs(), Some(36.0));
+        assert_eq!(AccelMem::LocalHbm.channels(), 32);
+        assert_eq!(AccelMem::LocalHbm.label(), "ORCA-LH");
+    }
+
+    #[test]
+    fn derived_costs_are_sane() {
+        let t = Testbed::paper();
+        // A 64B line over UPI ~ 3ns of serialization on a 20.8GB/s link.
+        assert!(transfer_ps(64, t.upi.bandwidth_gbs) < 4_000);
+        // FPGA cycle is 2.5ns.
+        assert_eq!(cycle_ps(t.accel.freq_mhz), 2_500);
+    }
+}

@@ -1,0 +1,143 @@
+//! Dynamic batcher: collect requests until the target batch size or the
+//! deadline, whichever first — the standard serving trade-off the paper
+//! sweeps in Fig 10 (throughput ↑ with batch, latency grows with wait).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Target batch size (usually the compiled artifact's batch).
+    pub max_batch: usize,
+    /// Max time the first request in a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Accumulates items and decides when a batch is ready.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    items: Vec<T>,
+    oldest: Option<Instant>,
+    pub batches_emitted: u64,
+    pub items_seen: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            items: Vec::with_capacity(policy.max_batch),
+            oldest: None,
+            batches_emitted: 0,
+            items_seen: 0,
+        }
+    }
+
+    /// Add an item; returns a full batch if the size threshold was hit.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        if self.items.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.items.push(item);
+        self.items_seen += 1;
+        if self.items.len() >= self.policy.max_batch {
+            return Some(self.take());
+        }
+        None
+    }
+
+    /// Deadline check: emit a partial batch if the oldest item has waited
+    /// past `max_wait`.
+    pub fn poll_deadline(&mut self) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t0) if t0.elapsed() >= self.policy.max_wait && !self.items.is_empty() => {
+                Some(self.take())
+            }
+            _ => None,
+        }
+    }
+
+    /// How long the dispatcher may sleep before the next deadline.
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest
+            .map(|t0| self.policy.max_wait.saturating_sub(t0.elapsed()))
+    }
+
+    /// Force-drain whatever is staged.
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.take())
+        }
+    }
+
+    fn take(&mut self) -> Vec<T> {
+        self.batches_emitted += 1;
+        self.oldest = None;
+        std::mem::take(&mut self.items)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.items.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn emits_on_size_threshold() {
+        let mut b = Batcher::new(policy(3, 1000));
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        let batch = b.push(3).expect("full");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.batches_emitted, 1);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut b = Batcher::new(policy(100, 5));
+        b.push(42);
+        assert!(b.poll_deadline().is_none(), "too early");
+        std::thread::sleep(Duration::from_millis(7));
+        assert_eq!(b.poll_deadline().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn flush_drains_everything() {
+        let mut b = Batcher::new(policy(100, 1000));
+        assert!(b.flush().is_none());
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.flush().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn deadline_resets_after_emit() {
+        let mut b = Batcher::new(policy(2, 5));
+        b.push(1);
+        b.push(2); // emits
+        b.push(3);
+        assert!(b.time_to_deadline().unwrap() > Duration::from_millis(2));
+    }
+}

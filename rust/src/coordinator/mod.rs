@@ -1,0 +1,13 @@
+//! The serving coordinator — the L3 process that owns the request loop.
+//!
+//! Mirrors the ORCA serving shape in software: clients submit requests
+//! into per-connection [`crate::ringbuf::RingPair`]-style channels; a
+//! dynamic batcher groups DLRM queries up to the compiled batch size (or
+//! a deadline); the PJRT executor (the "APU") runs the batch; responses
+//! flow back per connection. Std threads + channels (no tokio offline).
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use server::{Coordinator, Request, Response, ServeStats};

@@ -1,0 +1,188 @@
+//! The coordinator proper: a dispatcher thread that owns the PJRT
+//! executor (XLA handles are not `Send`-shareable, so the executor lives
+//! on exactly one thread — matching the paper's single-APU serving
+//! model), fed by any number of client threads over an mpsc channel.
+
+use super::batcher::{BatchPolicy, Batcher};
+use crate::sim::{Histogram, Summary};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct Request {
+    pub dense: Vec<f32>,
+    pub query: Vec<u32>,
+    pub reply: mpsc::Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// The response back to the client.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logit: f32,
+    /// Coordinator-side latency (enqueue → batch executed).
+    pub latency: Duration,
+}
+
+enum Msg {
+    Req(Box<Request>),
+    Shutdown,
+}
+
+/// Serving statistics, retrievable after shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency_us_mean: f64,
+    pub latency_us_p99: f64,
+    pub wall: Duration,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<Result<ServeStats>>>,
+}
+
+impl Coordinator {
+    /// Start the dispatcher: loads the artifact bundle from `artifacts`
+    /// on the dispatcher thread, then serves until shutdown.
+    pub fn start(artifacts: PathBuf, policy: BatchPolicy) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        // Loading happens on the dispatcher thread; report readiness (or
+        // the load error) back before returning.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("orca-coordinator".into())
+            .spawn(move || dispatcher(rx, ready_tx, artifacts, policy))
+            .context("spawning coordinator thread")?;
+        ready_rx
+            .recv()
+            .context("coordinator thread died during load")??;
+        Ok(Coordinator {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Submit a request; the response arrives on `reply`.
+    pub fn submit(&self, dense: Vec<f32>, query: Vec<u32>, reply: mpsc::Sender<Response>) {
+        let _ = self.tx.send(Msg::Req(Box::new(Request {
+            dense,
+            query,
+            reply,
+            submitted: Instant::now(),
+        })));
+    }
+
+    /// Convenience: blocking single inference.
+    pub fn infer_blocking(&self, dense: Vec<f32>, query: Vec<u32>) -> Result<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(dense, query, tx);
+        rx.recv().context("coordinator dropped the request")
+    }
+
+    /// Stop and collect statistics.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle
+            .take()
+            .expect("handle")
+            .join()
+            .map_err(|_| anyhow::anyhow!("coordinator panicked"))?
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher(
+    rx: mpsc::Receiver<Msg>,
+    ready_tx: mpsc::Sender<Result<()>>,
+    artifacts: PathBuf,
+    policy: BatchPolicy,
+) -> Result<ServeStats> {
+    let exec = crate::runtime::DlrmExecutor::load(&artifacts);
+    let mut exec = match exec {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready_tx.send(Err(e));
+            anyhow::bail!("load failed: {msg}");
+        }
+    };
+
+    let mut batcher: Batcher<Box<Request>> = Batcher::new(policy);
+    let mut lat = Histogram::new();
+    let mut batch_sizes = Summary::new();
+    let t0 = Instant::now();
+    let run_batch = |batch: Vec<Box<Request>>,
+                         exec: &mut crate::runtime::DlrmExecutor,
+                         lat: &mut Histogram,
+                         batch_sizes: &mut Summary|
+     -> Result<()> {
+        let dense: Vec<Vec<f32>> = batch.iter().map(|r| r.dense.clone()).collect();
+        let queries: Vec<Vec<u32>> = batch.iter().map(|r| r.query.clone()).collect();
+        let logits = exec.infer(&dense, &queries)?;
+        batch_sizes.add(batch.len() as f64);
+        for (req, &logit) in batch.iter().zip(&logits) {
+            let latency = req.submitted.elapsed();
+            lat.record(latency.as_nanos() as u64);
+            let _ = req.reply.send(Response { logit, latency });
+        }
+        Ok(())
+    };
+
+    loop {
+        // Wait bounded by the batch deadline.
+        let timeout = batcher
+            .time_to_deadline()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(req)) => {
+                if let Some(batch) = batcher.push(req) {
+                    run_batch(batch, &mut exec, &mut lat, &mut batch_sizes)?;
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                if let Some(batch) = batcher.flush() {
+                    run_batch(batch, &mut exec, &mut lat, &mut batch_sizes)?;
+                }
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll_deadline() {
+                    run_batch(batch, &mut exec, &mut lat, &mut batch_sizes)?;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if let Some(batch) = batcher.flush() {
+                    run_batch(batch, &mut exec, &mut lat, &mut batch_sizes)?;
+                }
+                break;
+            }
+        }
+    }
+
+    Ok(ServeStats {
+        requests: lat.count(),
+        batches: batch_sizes.count(),
+        mean_batch: batch_sizes.mean(),
+        latency_us_mean: lat.mean() / 1_000.0,
+        latency_us_p99: lat.p99() as f64 / 1_000.0,
+        wall: t0.elapsed(),
+    })
+}

@@ -1,0 +1,240 @@
+//! The cpoll checker: region registration and signal→ring resolution.
+
+use crate::interconnect::coherence::CoherenceDirectory;
+use crate::interconnect::CohSignal;
+use crate::ringbuf::pointer_buf::RingTracker;
+use crate::ringbuf::PointerBuffer;
+
+/// What is registered as the cpoll region.
+#[derive(Clone, Debug)]
+pub enum Region {
+    /// The request rings themselves, contiguous: `n_rings` rings of
+    /// `ring_bytes` each starting at `base`. Signal offset → ring index.
+    DirectRings {
+        base: u64,
+        ring_bytes: u64,
+        n_rings: usize,
+    },
+    /// The pointer buffer (4 B per ring).
+    PointerBuffer { base: u64, n_rings: usize },
+}
+
+impl Region {
+    pub fn start(&self) -> u64 {
+        match *self {
+            Region::DirectRings { base, .. } | Region::PointerBuffer { base, .. } => base,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match *self {
+            Region::DirectRings {
+                ring_bytes, n_rings, ..
+            } => ring_bytes * n_rings as u64,
+            Region::PointerBuffer { n_rings, .. } => 4 * n_rings as u64,
+        }
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        let s = self.start();
+        addr >= s && addr < s + self.bytes()
+    }
+}
+
+/// A notification the checker hands to the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RingEvent {
+    pub ring: usize,
+    /// New requests discovered (1 for direct mode; possibly >1 for
+    /// pointer-buffer mode after coalescing).
+    pub count: u32,
+    pub at: u64,
+}
+
+/// The checker plus the accelerator-side coherence state of the region.
+#[derive(Clone, Debug)]
+pub struct CpollChecker {
+    region: Region,
+    dir: CoherenceDirectory,
+    tracker: RingTracker,
+    line_bytes: u64,
+    /// Signals that fell outside the region (ignored; counted for tests).
+    pub out_of_region: u64,
+}
+
+impl CpollChecker {
+    pub fn new(region: Region, line_bytes: u64) -> Self {
+        let n = match region {
+            Region::DirectRings { n_rings, .. } | Region::PointerBuffer { n_rings, .. } => n_rings,
+        };
+        let mut dir = CoherenceDirectory::new(line_bytes);
+        // Pin/own every line of the region (§III-B: "pin the region on the
+        // cc-accelerator's local cache" / own the pointer buffer).
+        let mut a = region.start();
+        let end = region.start() + region.bytes();
+        while a < end {
+            dir.own(a);
+            a += line_bytes;
+        }
+        CpollChecker {
+            region,
+            dir,
+            tracker: RingTracker::new(n),
+            line_bytes,
+            out_of_region: 0,
+        }
+    }
+
+    pub fn region(&self) -> &Region {
+        &self.region
+    }
+
+    /// A host-side write lands at `addr` at time `at`. Returns the
+    /// coherence signal if one is raised (i.e. the accelerator owned the
+    /// line — writes to an already-invalidated line coalesce).
+    pub fn host_write(&mut self, addr: u64, at: u64) -> Option<CohSignal> {
+        if !self.region.contains(addr) {
+            self.out_of_region += 1;
+            return None;
+        }
+        self.dir.host_write(addr, at)
+    }
+
+    /// The accelerator consumes a signal: resolves which ring(s) it refers
+    /// to and re-acquires the line so future writes signal again. For
+    /// pointer-buffer mode the current pointer values must be supplied so
+    /// the ring tracker can recover coalesced counts.
+    pub fn consume(
+        &mut self,
+        sig: CohSignal,
+        pointer_buf: Option<&PointerBuffer>,
+    ) -> Vec<RingEvent> {
+        self.dir.reacquire(sig.addr);
+        match self.region {
+            Region::DirectRings {
+                base, ring_bytes, ..
+            } => {
+                let ring = ((sig.addr - base) / ring_bytes) as usize;
+                vec![RingEvent {
+                    ring,
+                    count: 1,
+                    at: sig.at,
+                }]
+            }
+            Region::PointerBuffer { .. } => {
+                let pb = pointer_buf.expect("pointer-buffer mode needs the buffer");
+                let mut out = Vec::new();
+                for ring in pb.rings_on_line(sig.addr, self.line_bytes) {
+                    let n = self.tracker.observe(ring, pb.read(ring));
+                    if n > 0 {
+                        out.push(RingEvent {
+                            ring,
+                            count: n,
+                            at: sig.at,
+                        });
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    pub fn coalesced(&self) -> u64 {
+        self.dir.coalesced
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.dir.invalidations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_mode_maps_offset_to_ring() {
+        // 8 rings of 1 KB at 0x10000.
+        let mut c = CpollChecker::new(
+            Region::DirectRings {
+                base: 0x10000,
+                ring_bytes: 1024,
+                n_rings: 8,
+            },
+            64,
+        );
+        let sig = c.host_write(0x10000 + 3 * 1024 + 128, 42).expect("signal");
+        let evs = c.consume(sig, None);
+        assert_eq!(evs, vec![RingEvent { ring: 3, count: 1, at: 42 }]);
+    }
+
+    #[test]
+    fn writes_outside_region_ignored() {
+        let mut c = CpollChecker::new(
+            Region::DirectRings {
+                base: 0x10000,
+                ring_bytes: 1024,
+                n_rings: 8,
+            },
+            64,
+        );
+        assert!(c.host_write(0x9000, 1).is_none());
+        assert_eq!(c.out_of_region, 1);
+    }
+
+    #[test]
+    fn pointer_buffer_mode_recovers_coalesced_writes() {
+        let mut pb = PointerBuffer::new(16, 0x4000);
+        let mut c = CpollChecker::new(
+            Region::PointerBuffer {
+                base: 0x4000,
+                n_rings: 16,
+            },
+            64,
+        );
+        // Three rapid requests to ring 5: first write signals, next two
+        // coalesce (line already invalid at the accelerator).
+        pb.bump(5);
+        let sig = c.host_write(pb.entry_addr(5), 10).expect("first signals");
+        pb.bump(5);
+        assert!(c.host_write(pb.entry_addr(5), 11).is_none());
+        pb.bump(5);
+        assert!(c.host_write(pb.entry_addr(5), 12).is_none());
+        assert_eq!(c.coalesced(), 2);
+
+        // Consuming the one signal still discovers all 3 requests.
+        let evs = c.consume(sig, Some(&pb));
+        assert_eq!(evs, vec![RingEvent { ring: 5, count: 3, at: 10 }]);
+
+        // After re-acquisition the next write signals again.
+        pb.bump(5);
+        assert!(c.host_write(pb.entry_addr(5), 20).is_some());
+    }
+
+    #[test]
+    fn one_line_covers_16_pointer_entries() {
+        let mut pb = PointerBuffer::new(32, 0);
+        let mut c = CpollChecker::new(
+            Region::PointerBuffer { base: 0, n_rings: 32 },
+            64,
+        );
+        // Rings 0 and 7 share line 0; both get discovered from one signal.
+        pb.bump(0);
+        let sig = c.host_write(pb.entry_addr(0), 5).unwrap();
+        pb.bump(7); // coalesces into the same line's invalidation window
+        assert!(c.host_write(pb.entry_addr(7), 6).is_none());
+        let evs = c.consume(sig, Some(&pb));
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].ring, 0);
+        assert_eq!(evs[1].ring, 7);
+    }
+
+    #[test]
+    fn region_size_accounting() {
+        let r = Region::PointerBuffer { base: 0x100, n_rings: 1000 };
+        assert_eq!(r.bytes(), 4000);
+        assert!(r.contains(0x100));
+        assert!(r.contains(0x100 + 3999));
+        assert!(!r.contains(0x100 + 4000));
+    }
+}

@@ -1,0 +1,23 @@
+//! ORCA component (2): **cpoll** — coherence-assisted accelerator
+//! notification (§III-B).
+//!
+//! Instead of the accelerator spin-polling request rings over the
+//! cc-interconnect (burning link bandwidth and power), a *cpoll checker*
+//! sits in the coherence controller's UPI-port datapath: at init a
+//! contiguous region (the request rings, or the compact pointer buffer) is
+//! registered; the accelerator's cache owns those lines, so any host/RNIC
+//! write raises an invalidation — and the invalidation *is* the
+//! notification. The checker maps the invalidated line's offset back to a
+//! ring in O(1).
+//!
+//! Two deployment modes, as in the paper:
+//! * [`Region::DirectRings`] — rings pinned in the accelerator cache
+//!   (limited by 64 KB on the prototype);
+//! * [`Region::PointerBuffer`] — the 4 B/ring pointer buffer, which also
+//!   rides out signal **coalescing** via the ring tracker (§III-C).
+
+pub mod checker;
+pub mod notify;
+
+pub use checker::{CpollChecker, Region};
+pub use notify::{NotifyModel, PollModel};

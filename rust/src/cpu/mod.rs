@@ -1,0 +1,320 @@
+//! The CPU baseline (§VI-B "CPU"): two-sided RDMA RPC in the
+//! HERD/MICA style [76,77,99] — ten server cores, each fed by one client
+//! instance, EREW partitioned data (no concurrency control on the data
+//! path), request-processing batches of size B to amortize per-message
+//! NIC costs and overlap memory stalls.
+//!
+//! Timing anatomy per batch of B requests on one core:
+//!
+//! * **NIC rx**: per-message RNIC processing + recv-WQE bookkeeping; the
+//!   WQE-fetch engine (a shared `Pipeline` at PCIe-round-trip latency)
+//!   is paid once per *batch* doorbell rather than once per message —
+//!   this is where the paper's ~12× batching win (Fig 10) lives.
+//! * **CPU**: B × `rpc_cycles` of per-request work, with the batch's
+//!   memory accesses overlapped per dependency step (MICA prefetch
+//!   batching), each step costing one memory latency + bandwidth.
+//! * **NIC tx**: one doorbell MMIO (+sfence) per batch, then per-message
+//!   send processing.
+//!
+//! The same core also suffers OS/scheduling jitter (§VI-B: CPU tail is
+//! "affected by multiple factors like OS scheduling and CPU resource
+//! contention") — an occasional exponential delay.
+
+use crate::config::Testbed;
+use crate::mem::{Dram, Llc, LlcLookup, MemTrace};
+use crate::sim::{cycles_ps, MultiServer, Pipeline, Rng, NS, US};
+
+/// One serving core's batching state.
+#[derive(Clone, Debug, Default)]
+struct CoreBatch {
+    staged: Vec<(u64, MemTrace)>, // (arrival, trace)
+}
+
+/// The CPU KVS/RPC server: `cores` workers, shared LLC + DRAM.
+pub struct CpuServer {
+    t: Testbed,
+    cores: MultiServer,
+    batches: Vec<CoreBatch>,
+    /// Shared NIC WQE-fetch engine (PCIe reads, ~2 in flight).
+    wqe_fetch: Pipeline,
+    pub llc: Llc,
+    pub dram: Dram,
+    pub batch: usize,
+    rng: Rng,
+    /// Probability a batch hits an OS-scheduling hiccup, and its mean cost.
+    jitter_p: f64,
+    jitter_mean_ps: f64,
+    pub served: u64,
+}
+
+impl CpuServer {
+    pub fn new(t: &Testbed, n_cores: usize, batch: usize, seed: u64) -> Self {
+        let pcie_rtt = 2.0 * t.pcie.one_way_ns * NS as f64;
+        CpuServer {
+            t: t.clone(),
+            cores: MultiServer::new(n_cores),
+            batches: vec![CoreBatch::default(); n_cores],
+            wqe_fetch: Pipeline::new(pcie_rtt as u64, 2),
+            llc: Llc::new(t.llc.clone()),
+            dram: Dram::new(t.dram.clone()),
+            batch: batch.max(1),
+            rng: Rng::new(seed),
+            jitter_p: 0.01,
+            jitter_mean_ps: 10.0 * US as f64,
+            served: 0,
+        }
+    }
+
+    fn mem_access(&mut self, now: u64, addr: u64, bytes: u64, write: bool) -> u64 {
+        match self.llc.access(addr, write) {
+            LlcLookup::Hit => now + (self.t.llc.hit_latency_ns * NS as f64) as u64,
+            LlcLookup::MissClean => self.dram.access(now, bytes, false),
+            LlcLookup::MissWriteback(victim) => {
+                self.dram.access(now, 64, true); // victim writeback
+                let _ = victim;
+                self.dram.access(now, bytes, false)
+            }
+        }
+    }
+
+    /// Submit one request that arrived (payload in LLC via DDIO) at
+    /// `arrive`, destined to core `core`. Returns per-request completion
+    /// times for the whole batch once it fills, `None` while staging.
+    pub fn submit(&mut self, core: usize, arrive: u64, trace: MemTrace) -> Option<Vec<u64>> {
+        let core = core % self.batches.len();
+        self.batches[core].staged.push((arrive, trace));
+        if self.batches[core].staged.len() >= self.batch {
+            Some(self.process_batch(core))
+        } else {
+            None
+        }
+    }
+
+    /// Force processing of a partial batch (tail flush).
+    pub fn flush(&mut self, core: usize) -> Vec<u64> {
+        if self.batches[core].staged.is_empty() {
+            Vec::new()
+        } else {
+            self.process_batch(core)
+        }
+    }
+
+    fn process_batch(&mut self, core: usize) -> Vec<u64> {
+        let staged = std::mem::take(&mut self.batches[core].staged);
+        let last_arrival = staged.iter().map(|&(a, _)| a).max().unwrap();
+        // Secure a core lane from the shared pool, then execute.
+        let rpc = cycles_ps(self.t.cpu.rpc_cycles, self.t.cpu.freq_mhz) * staged.len() as u64;
+        let (start, _d, _lane) = self.cores.acquire(last_arrival, rpc);
+        self.exec_batch(start, staged)
+    }
+
+    /// Opportunistic streaming execution (the experiment driver's path):
+    /// each core takes whatever is pending — up to `batch` — whenever it
+    /// frees up, like MICA's RX-queue batching. No waiting to fill B.
+    /// `jobs` must be sorted by arrival; `core_of(i)` maps job → core.
+    pub fn run_stream(
+        &mut self,
+        jobs: &[(u64, MemTrace)],
+        core_of: impl Fn(usize) -> usize,
+    ) -> Vec<u64> {
+        use std::cmp::Reverse;
+        use std::collections::{BinaryHeap, VecDeque};
+        let n_cores = self.batches.len();
+        let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_cores];
+        for i in 0..jobs.len() {
+            queues[core_of(i) % n_cores].push_back(i);
+        }
+        let mut done = vec![0u64; jobs.len()];
+        // Global time order across cores (shared pipelines are timelines):
+        // heap of (next wake time, core).
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        let mut core_free = vec![0u64; n_cores];
+        for c in 0..n_cores {
+            if let Some(&first) = queues[c].front() {
+                heap.push(Reverse((jobs[first].0, c)));
+            }
+        }
+        while let Some(Reverse((start, c))) = heap.pop() {
+            let mut batch_idx = Vec::with_capacity(self.batch);
+            while let Some(&i) = queues[c].front() {
+                if jobs[i].0 <= start && batch_idx.len() < self.batch {
+                    batch_idx.push(i);
+                    queues[c].pop_front();
+                } else {
+                    break;
+                }
+            }
+            if batch_idx.is_empty() {
+                // Spurious wake (shouldn't happen): skip to next arrival.
+                if let Some(&first) = queues[c].front() {
+                    heap.push(Reverse((jobs[first].0.max(start + 1), c)));
+                }
+                continue;
+            }
+            let staged: Vec<(u64, MemTrace)> =
+                batch_idx.iter().map(|&i| jobs[i].clone()).collect();
+            let ds = self.exec_batch(start, staged);
+            core_free[c] = ds.iter().copied().max().unwrap_or(start);
+            for (&i, d) in batch_idx.iter().zip(ds) {
+                done[i] = d;
+            }
+            if let Some(&first) = queues[c].front() {
+                heap.push(Reverse((core_free[c].max(jobs[first].0), c)));
+            }
+        }
+        done
+    }
+
+    /// Execute one batch starting at `ready` (the core is already
+    /// secured). Returns per-request completion times.
+    fn exec_batch(&mut self, ready: u64, staged: Vec<(u64, MemTrace)>) -> Vec<u64> {
+        let b = staged.len();
+        self.served += b as u64;
+
+        // One recv-WQE replenish + CQE-batch poll per batch.
+        let batch_ready = self.wqe_fetch.acquire(ready);
+
+        // Core does B×rpc work; memory steps overlap across the batch.
+        let rpc = cycles_ps(self.t.cpu.rpc_cycles, self.t.cpu.freq_mhz) * b as u64;
+        let cpu_done = batch_ready + rpc;
+
+        // Batched memory walk: per dependency step, all B requests issue
+        // together; step latency = slowest access in the step.
+        let max_depth = staged
+            .iter()
+            .map(|(_, t)| t.depth())
+            .max()
+            .unwrap_or(0);
+        let mut step_start = cpu_done;
+        for step in 0..max_depth {
+            let mut step_end = step_start;
+            for (_, trace) in &staged {
+                // Pick the accesses belonging to this dependency step.
+                let mut s = 0usize;
+                for (i, a) in trace.accesses.iter().enumerate() {
+                    if i == 0 || a.dep {
+                        s += 1;
+                    }
+                    if s == step + 1 {
+                        let done = self.mem_access(step_start, a.addr, a.bytes as u64, a.write);
+                        step_end = step_end.max(done);
+                    } else if s > step + 1 {
+                        break;
+                    }
+                }
+            }
+            step_start = step_end;
+        }
+        let mem_done = step_start;
+
+        // One tx doorbell (MMIO+sfence) per batch, then per-message send.
+        let mmio = cycles_ps(self.t.cpu.mmio_doorbell_cycles, self.t.cpu.freq_mhz);
+        let msg = (self.t.net.rnic_msg_ns * NS as f64) as u64;
+        let mut done = mem_done + mmio;
+
+        // OS jitter hits the whole batch occasionally.
+        if self.rng.chance(self.jitter_p) {
+            done += self.rng.exp(self.jitter_mean_ps) as u64;
+        }
+
+        (0..b).map(|i| done + (i as u64 + 1) * msg).collect()
+    }
+
+    /// Peak processing rate of the core pool, Mops (no memory effects) —
+    /// used to sanity-check network-boundedness.
+    pub fn core_bound_mops(&self) -> f64 {
+        let per_req_s =
+            self.t.cpu.rpc_cycles as f64 / (self.t.cpu.freq_mhz * 1e6);
+        self.batches.len() as f64 / per_req_s / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Access;
+
+    fn get_trace(seed: u64) -> MemTrace {
+        let mut t = MemTrace::new();
+        // Spread addresses so the LLC mostly misses (7GB working set).
+        let base = seed.wrapping_mul(0x9E3779B97F4A7C15) % (7 << 30);
+        t.push(Access::read(base, 64));
+        t.push(Access::read(base ^ 0x123456, 64));
+        t.push(Access::read(base ^ 0xabcdef0, 64));
+        t
+    }
+
+    #[test]
+    fn ten_cores_clear_the_network_bound() {
+        // §VI-B: ten CPU threads saturate the 25Gbps network (~21.4 Mops).
+        let t = Testbed::paper();
+        let s = CpuServer::new(&t, 10, 32, 1);
+        assert!(s.core_bound_mops() > 21.4, "{}", s.core_bound_mops());
+    }
+
+    #[test]
+    fn batch_completes_only_when_full() {
+        let t = Testbed::paper();
+        let mut s = CpuServer::new(&t, 1, 4, 1);
+        assert!(s.submit(0, 0, get_trace(0)).is_none());
+        assert!(s.submit(0, 100, get_trace(1)).is_none());
+        assert!(s.submit(0, 200, get_trace(2)).is_none());
+        let done = s.submit(0, 300, get_trace(3)).expect("batch full");
+        assert_eq!(done.len(), 4);
+        assert!(done.iter().all(|&d| d > 300));
+        assert_eq!(s.served, 4);
+    }
+
+    #[test]
+    fn batching_improves_throughput_by_an_order_of_magnitude() {
+        // Fig 10: CPU batch-32 throughput ~12× batch-1.
+        let t = Testbed::paper();
+        let run = |batch: usize| {
+            let mut s = CpuServer::new(&t, 10, batch, 7);
+            let n = 20_000u64;
+            let mut last = 0u64;
+            for i in 0..n {
+                if let Some(done) = s.submit((i % 10) as usize, 0, get_trace(i)) {
+                    last = last.max(*done.iter().max().unwrap());
+                }
+            }
+            for c in 0..10 {
+                for d in s.flush(c) {
+                    last = last.max(d);
+                }
+            }
+            n as f64 / (last as f64 / 1e12) / 1e6 // Mops
+        };
+        let b1 = run(1);
+        let b32 = run(32);
+        let gain = b32 / b1;
+        assert!(
+            (6.0..25.0).contains(&gain),
+            "batching gain {gain} (b1={b1} Mops, b32={b32} Mops)"
+        );
+    }
+
+    #[test]
+    fn flush_handles_partial_batches() {
+        let t = Testbed::paper();
+        let mut s = CpuServer::new(&t, 2, 32, 1);
+        s.submit(0, 0, get_trace(0));
+        s.submit(0, 0, get_trace(1));
+        let done = s.flush(0);
+        assert_eq!(done.len(), 2);
+        assert!(s.flush(0).is_empty());
+    }
+
+    #[test]
+    fn jitter_fattens_the_tail() {
+        let t = Testbed::paper();
+        let mut s = CpuServer::new(&t, 1, 1, 42);
+        let mut h = crate::sim::Histogram::new();
+        for i in 0..20_000u64 {
+            let done = s.submit(0, i * 1_000_000, get_trace(i)).unwrap();
+            h.record(done[0] - i * 1_000_000);
+        }
+        // p999 should reveal multi-µs scheduling hiccups well above p50.
+        assert!(h.p999() > h.p50() * 3, "p50 {} p999 {}", h.p50(), h.p999());
+    }
+}

@@ -1,0 +1,242 @@
+//! Fig 12: MERCI-based DLRM inference throughput on the six
+//! Amazon-Review-like datasets — CPU (1–8 cores) vs ORCA / ORCA-LD /
+//! ORCA-LH.
+//!
+//! Functional side: real embedding tables + real MERCI memoization over
+//! the synthetic query streams generate the *actual* per-query access
+//! traces (bytes moved, access counts, memo hit rates). Timing side:
+//! per-design bandwidth/issue constraints (§VI-D):
+//!
+//! * CPU cores exploit the full host bandwidth with deep OoO windows but
+//!   pay per-query software cost; random 64–256 B gathers achieve ~55%
+//!   of peak DRAM bandwidth (the measured gather efficiency on Skylake).
+//! * ORCA (base) issues serially from the 400 MHz soft controller over
+//!   UPI — `coh_outstanding` × 64 B / RTT of achievable gather rate.
+//! * ORCA-LD/LH stream from accelerator-local DDR4/HBM2 at ~90% of peak
+//!   (the APU's 64-deep request window, §IV-C).
+//! * Everything is additionally capped by the 25 Gbps request wire.
+
+use super::{Opts, Table};
+use crate::accel::host_access_rtt_ps;
+use crate::apps::dlrm::{EmbeddingConfig, EmbeddingTable, Merci};
+use crate::config::{AccelMem, Testbed};
+use crate::workload::{DatasetProfile, QueryGen, AMAZON_PROFILES};
+
+/// Fraction of peak DRAM bandwidth a CPU core pool achieves on random
+/// embedding gathers (measured-gather-efficiency class constant).
+pub const CPU_GATHER_EFF: f64 = 0.55;
+/// Gather bandwidth one core sustains (MSHR-limited): ~10 misses in
+/// flight × 64 B / 90 ns class ⇒ the pool scales linearly to ~7 cores
+/// before hitting the 55%-of-120 GB/s wall (§VI-D: "scales linearly
+/// until eight cores ... bounded by the host memory bandwidth").
+pub const PER_CORE_GATHER_GBS: f64 = 9.5;
+/// Fraction of peak local bandwidth the APU's 64-deep window achieves.
+pub const APU_STREAM_EFF: f64 = 0.95;
+/// Row reads the soft coherence controller keeps in flight for the
+/// DLRM gather loop (§VI-D: "memory requests have to be issued serially
+/// from the FPGA's wimpy coherence controller" — unlike the KVS case,
+/// these are within-query 256 B row fetches on one FSM context).
+pub const ORCA_GATHER_OUTSTANDING: f64 = 4.0;
+/// Per-query CPU software cost (parse + MLP + bookkeeping), cycles.
+pub const CPU_QUERY_CYCLES: u64 = 2_600;
+/// Embedding tables per model (DLRM has one per sparse feature; the
+/// MERCI configs cluster them — 16 is the evaluated scale).
+pub const TABLES_PER_QUERY: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct Fig12Row {
+    pub dataset: &'static str,
+    /// Queries/s for CPU at 1, 2, 4, 8 cores.
+    pub cpu_qps: [f64; 4],
+    pub orca_qps: f64,
+    pub ld_qps: f64,
+    pub lh_qps: f64,
+    /// Diagnostics.
+    pub bytes_per_query: f64,
+    pub memo_hit_rate: f64,
+}
+
+/// Measure average bytes/query and accesses/query functionally.
+fn profile_queries(
+    profile: &DatasetProfile,
+    scale: usize,
+    n: usize,
+    seed: u64,
+) -> (f64, f64, f64) {
+    let mut gen = QueryGen::new(*profile, scale, seed);
+    let table = EmbeddingTable::new(EmbeddingConfig {
+        rows: gen.rows(),
+        dim: 64,
+        base_addr: 0x2000_0000_0000,
+    });
+    let train = gen.training_set(2_000);
+    let mut merci = Merci::build(&table, &train, 0.25);
+    let mut bytes = 0u64;
+    let mut accesses = 0u64;
+    for _ in 0..n {
+        let q = gen.query();
+        let (_, trace) = merci.reduce(&table, &q, 64);
+        bytes += trace.bytes();
+        accesses += trace.len() as u64;
+    }
+    (
+        bytes as f64 / n as f64 * TABLES_PER_QUERY as f64,
+        accesses as f64 / n as f64 * TABLES_PER_QUERY as f64,
+        merci.hit_rate(),
+    )
+}
+
+pub fn run_dataset(t: &Testbed, profile: &DatasetProfile, opts: &Opts) -> Fig12Row {
+    let (bytes_per_query, accesses_per_query, memo_hit_rate) =
+        profile_queries(profile, 10, 2_000, opts.seed);
+
+    // CPU: min(compute bound, per-core gather bound, socket bound).
+    let query_s_compute = CPU_QUERY_CYCLES as f64 / (t.cpu.freq_mhz * 1e6);
+    let host_bw = t.dram.bandwidth_gbs * 1e9 * CPU_GATHER_EFF;
+    let mut cpu_qps = [0f64; 4];
+    for (i, cores) in [1usize, 2, 4, 8].iter().enumerate() {
+        let compute = *cores as f64 / query_s_compute;
+        let core_bw = *cores as f64 * PER_CORE_GATHER_GBS * 1e9;
+        let bw = core_bw.min(host_bw) / bytes_per_query;
+        cpu_qps[i] = compute.min(bw);
+    }
+
+    // Network bound: request = feature ids + dense; response tiny.
+    let req_bytes = (profile.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82;
+    let net_qps = t.net.line_gbps / 8.0 * 1e9 / req_bytes as f64;
+
+    // ORCA base: near-serial row fetches over UPI from the soft
+    // controller — ORCA_GATHER_OUTSTANDING × row / RTT of achievable
+    // gather bandwidth.
+    let row_bytes = bytes_per_query / accesses_per_query; // avg access size
+    let rtt_s = host_access_rtt_ps(t) as f64 / 1e12
+        + row_bytes / (t.upi.bandwidth_gbs * 1e9);
+    let orca_gather_gbs = ORCA_GATHER_OUTSTANDING * row_bytes / rtt_s;
+    let orca_qps = (orca_gather_gbs / bytes_per_query)
+        .min(t.upi.bandwidth_gbs * 1e9 / bytes_per_query)
+        .min(net_qps);
+
+    // ORCA-LD / LH: local-memory streams.
+    let ld_qps = (AccelMem::LocalDdr.bandwidth_gbs().unwrap() * 1e9 * APU_STREAM_EFF
+        / bytes_per_query)
+        .min(net_qps);
+    let lh_qps = (AccelMem::LocalHbm.bandwidth_gbs().unwrap() * 1e9 * APU_STREAM_EFF
+        / bytes_per_query)
+        .min(net_qps);
+
+    Fig12Row {
+        dataset: profile.name,
+        cpu_qps,
+        orca_qps,
+        ld_qps,
+        lh_qps,
+        bytes_per_query,
+        memo_hit_rate,
+    }
+}
+
+pub fn run_all(opts: &Opts) -> Vec<Fig12Row> {
+    AMAZON_PROFILES
+        .iter()
+        .map(|p| run_dataset(&opts.testbed, p, opts))
+        .collect()
+}
+
+pub fn report(opts: &Opts) -> Table {
+    let mut tb = Table::new(
+        "Fig 12 — DLRM (MERCI) inference throughput, Kqueries/s",
+        &[
+            "dataset",
+            "CPU-1",
+            "CPU-2",
+            "CPU-4",
+            "CPU-8",
+            "ORCA",
+            "ORCA-LD",
+            "ORCA-LH",
+            "ORCA/1core",
+            "LD/8core",
+            "LH/8core",
+        ],
+    );
+    for r in run_all(opts) {
+        let k = |x: f64| format!("{:.0}", x / 1e3);
+        tb.row(&[
+            r.dataset.into(),
+            k(r.cpu_qps[0]),
+            k(r.cpu_qps[1]),
+            k(r.cpu_qps[2]),
+            k(r.cpu_qps[3]),
+            k(r.orca_qps),
+            k(r.ld_qps),
+            k(r.lh_qps),
+            format!("{:.0}%", r.orca_qps / r.cpu_qps[0] * 100.0),
+            format!("{:.0}%", r.ld_qps / r.cpu_qps[3] * 100.0),
+            format!("{:.1}x", r.lh_qps / r.cpu_qps[3]),
+        ]);
+    }
+    tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Opts {
+        Opts::default()
+    }
+
+    #[test]
+    fn cpu_scales_then_hits_the_bandwidth_wall() {
+        // §VI-D: "MERCI scales linearly until eight cores, which is
+        // bounded by the host memory bandwidth".
+        let r = run_dataset(&Testbed::paper(), &AMAZON_PROFILES[0], &opts());
+        assert!(r.cpu_qps[1] / r.cpu_qps[0] > 1.9, "2-core scaling");
+        assert!(
+            r.cpu_qps[3] < r.cpu_qps[0] * 8.0 * 0.9,
+            "8 cores must be bandwidth-capped: {:?}",
+            r.cpu_qps
+        );
+    }
+
+    #[test]
+    fn orca_base_is_a_fraction_of_one_core() {
+        // Fig 12: ORCA = 19.7–31.3% of a single CPU core.
+        for r in run_all(&opts()) {
+            let frac = r.orca_qps / r.cpu_qps[0];
+            assert!(
+                (0.10..0.45).contains(&frac),
+                "{}: ORCA/1-core = {frac:.2}",
+                r.dataset
+            );
+        }
+    }
+
+    #[test]
+    fn local_ddr_recovers_most_of_eight_cores() {
+        // Fig 12: ORCA-LD = 52.8–95.3% of eight CPU cores.
+        for r in run_all(&opts()) {
+            let frac = r.ld_qps / r.cpu_qps[3];
+            assert!(
+                (0.40..1.1).contains(&frac),
+                "{}: LD/8-core = {frac:.2}",
+                r.dataset
+            );
+        }
+    }
+
+    #[test]
+    fn hbm_beats_the_cpu_and_hits_the_network() {
+        // Fig 12: ORCA-LH = 1.6–3.1× of eight cores, network-bound.
+        for r in run_all(&opts()) {
+            let x = r.lh_qps / r.cpu_qps[3];
+            assert!((1.2..4.0).contains(&x), "{}: LH = {x:.2}x of 8-core", r.dataset);
+        }
+    }
+
+    #[test]
+    fn memoization_actually_hits() {
+        let r = run_dataset(&Testbed::paper(), &AMAZON_PROFILES[5], &opts());
+        assert!(r.memo_hit_rate > 0.2, "memo hit {}", r.memo_hit_rate);
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig 7: notification-latency CDFs — cpoll vs conventional polling at
+//! intervals {1, 15, 63, 255} fabric cycles, via the §VI-A ping-pong
+//! (60 K iterations of CPU-writes → accelerator-detects).
+
+use super::{Opts, Table};
+use crate::config::Testbed;
+use crate::cpoll::{NotifyModel, PollModel};
+use crate::sim::{Histogram, Rng};
+
+pub const POLL_INTERVALS: [u64; 4] = [1, 15, 63, 255];
+pub const ITERS: u64 = 60_000;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Series {
+    pub label: String,
+    pub hist: Histogram,
+    /// Sustained interconnect traffic of the mechanism, GB/s.
+    pub traffic_gbs: f64,
+}
+
+pub fn run(t: &Testbed, seed: u64) -> Vec<Fig7Series> {
+    let mut out = Vec::new();
+
+    let notify = NotifyModel::new(t);
+    let mut rng = Rng::new(seed);
+    let mut h = Histogram::new();
+    for _ in 0..ITERS {
+        h.record(notify.sample(&mut rng));
+    }
+    out.push(Fig7Series {
+        label: "cpoll".into(),
+        hist: h,
+        traffic_gbs: 0.0, // event-driven: traffic only per notification
+    });
+
+    for cycles in POLL_INTERVALS {
+        let pm = PollModel::new(t, cycles);
+        let mut rng = Rng::new(seed ^ cycles);
+        let mut h = Histogram::new();
+        for _ in 0..ITERS {
+            h.record(pm.sample(&mut rng));
+        }
+        out.push(Fig7Series {
+            label: format!("polling-{cycles}"),
+            hist: h,
+            traffic_gbs: pm.traffic_gbs(),
+        });
+    }
+    out
+}
+
+pub fn report(opts: &Opts) -> Table {
+    let series = run(&opts.testbed, opts.seed);
+    let mut tb = Table::new(
+        "Fig 7 — CPU→accelerator notification latency (60K ping-pongs)",
+        &["mechanism", "mean ns", "p50 ns", "p99 ns", "p999 ns", "poll traffic GB/s"],
+    );
+    for s in &series {
+        tb.row(&[
+            s.label.clone(),
+            format!("{:.0}", s.hist.mean() / 1e3),
+            format!("{:.0}", s.hist.p50() as f64 / 1e3),
+            format!("{:.0}", s.hist.p99() as f64 / 1e3),
+            format!("{:.0}", s.hist.p999() as f64 / 1e3),
+            if s.traffic_gbs == 0.0 {
+                "—".into()
+            } else {
+                format!("{:.2}", s.traffic_gbs)
+            },
+        ]);
+    }
+    tb
+}
+
+/// CDF dump for plotting (value_ns, fraction) per series.
+pub fn cdf_dump(opts: &Opts) -> Vec<(String, Vec<(f64, f64)>)> {
+    run(&opts.testbed, opts.seed)
+        .into_iter()
+        .map(|s| {
+            let pts = s
+                .hist
+                .cdf()
+                .into_iter()
+                .map(|(v, f)| (v as f64 / 1e3, f))
+                .collect();
+            (s.label, pts)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpoll_dominates_every_polling_interval() {
+        let series = run(&Testbed::paper(), 9);
+        let cp = &series[0];
+        assert_eq!(cp.label, "cpoll");
+        for s in &series[1..] {
+            assert!(cp.hist.mean() < s.hist.mean(), "{}", s.label);
+            assert!(cp.hist.p99() < s.hist.p99(), "{} p99", s.label);
+        }
+    }
+
+    #[test]
+    fn polling_latency_grows_with_interval() {
+        let series = run(&Testbed::paper(), 10);
+        let means: Vec<f64> = series[1..].iter().map(|s| s.hist.mean()).collect();
+        for w in means.windows(2) {
+            assert!(w[0] <= w[1] * 1.05, "{means:?}");
+        }
+    }
+
+    #[test]
+    fn cdf_dump_is_plot_ready() {
+        let opts = Opts::default();
+        let dump = cdf_dump(&opts);
+        assert_eq!(dump.len(), 1 + POLL_INTERVALS.len());
+        for (_, pts) in &dump {
+            assert!(pts.len() > 3);
+            assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-9);
+        }
+    }
+}

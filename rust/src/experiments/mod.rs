@@ -1,0 +1,51 @@
+//! The experiment harness: one module per paper table/figure, each
+//! regenerating the paper's rows/series on the simulated testbed.
+//!
+//! | paper artifact | module | CLI |
+//! |---|---|---|
+//! | Fig 4 (DDIO/TPH bandwidth) | [`fig4`] | `orca fig4` |
+//! | Fig 7 (cpoll vs polling CDF) | [`fig7`] | `orca fig7` |
+//! | Fig 8 (KVS peak throughput) | [`kvs`] | `orca fig8` |
+//! | Fig 9 (KVS latency) | [`kvs`] | `orca fig9` |
+//! | Fig 10 (batch-size sweep) | [`kvs`] | `orca fig10` |
+//! | Tab III (power efficiency) | [`tab3`] | `orca tab3` |
+//! | Fig 11 (Tx latency) | [`fig11`] | `orca fig11` |
+//! | Fig 12 (DLRM throughput) | [`fig12`] | `orca fig12` |
+//!
+//! Absolute numbers are *this testbed's*; the claims under test are the
+//! paper's shapes (who wins, by what factor, where crossovers sit) — see
+//! EXPERIMENTS.md for paper-vs-measured.
+
+pub mod fig11;
+pub mod fig12;
+pub mod fig4;
+pub mod fig7;
+pub mod kvs;
+pub mod tab3;
+pub mod table;
+
+pub use table::Table;
+
+/// Common experiment options from the CLI.
+#[derive(Clone, Debug)]
+pub struct Opts {
+    pub seed: u64,
+    /// KVS dataset size (keys). The paper uses 100 M; the default is
+    /// scaled down (hit rates and shapes are scale-invariant, see
+    /// EXPERIMENTS.md §Scaling).
+    pub keys: u64,
+    /// Requests per measurement run.
+    pub requests: u64,
+    pub testbed: crate::config::Testbed,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            seed: 42,
+            keys: 2_000_000,
+            requests: 200_000,
+            testbed: crate::config::Testbed::paper(),
+        }
+    }
+}

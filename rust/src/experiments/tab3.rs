@@ -1,0 +1,96 @@
+//! Tab III: overall power efficiency (Kop/W) of the KVS designs on the
+//! uniform-GET workload — throughput from the Fig-8 pipeline, power from
+//! the whole-box model (RAPL package numbers + IPMI box baseline,
+//! §VI-B).
+
+use super::kvs::{self, KvDesign, RequestStream};
+use super::{Opts, Table};
+use crate::config::AccelMem;
+use crate::power::{Design, PowerModel};
+use crate::workload::{KeyDist, KvMix};
+
+#[derive(Clone, Debug)]
+pub struct Tab3Row {
+    pub design: KvDesign,
+    pub mops: f64,
+    pub box_w: f64,
+    pub kops_per_w: f64,
+}
+
+pub fn run(opts: &Opts) -> Vec<Tab3Row> {
+    let stream = RequestStream::generate(
+        opts.keys,
+        opts.requests,
+        &KeyDist::uniform(opts.keys),
+        KvMix::GetOnly,
+        64,
+        opts.seed,
+    );
+    let pm = PowerModel::from_testbed(&opts.testbed);
+    [
+        (KvDesign::Cpu, Design::Cpu),
+        (KvDesign::SmartNic, Design::SmartNic),
+        (KvDesign::Orca(AccelMem::None), Design::Orca),
+    ]
+    .into_iter()
+    .map(|(kd, pd)| {
+        let r = kvs::run(
+            &opts.testbed,
+            kd,
+            &stream,
+            32,
+            kvs::Load::Saturation,
+            opts.seed,
+        );
+        let box_w = pm.box_power(pd);
+        Tab3Row {
+            design: kd,
+            mops: r.mops,
+            box_w,
+            kops_per_w: r.mops * 1e3 / box_w,
+        }
+    })
+    .collect()
+}
+
+pub fn report(opts: &Opts) -> Table {
+    let mut tb = Table::new(
+        "Tab III — overall power efficiency (uniform GET, batch 32)",
+        &["design", "Mops", "box W", "Kop/W"],
+    );
+    for r in run(opts) {
+        tb.row(&[
+            r.design.label().into(),
+            format!("{:.1}", r.mops),
+            format!("{:.0}", r.box_w),
+            format!("{:.1}", r.kops_per_w),
+        ]);
+    }
+    tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_the_paper() {
+        // Tab III: ORCA > CPU ≫ SmartNIC in Kop/W (paper: 188.7 / 130.4 /
+        // 25.2).
+        let opts = Opts {
+            keys: 200_000,
+            requests: 40_000,
+            ..Opts::default()
+        };
+        let rows = run(&opts);
+        let find = |d: &str| rows.iter().find(|r| r.design.label() == d).unwrap().kops_per_w;
+        let cpu = find("CPU");
+        let nic = find("Smart NIC");
+        let orca = find("ORCA");
+        assert!(orca > cpu, "ORCA {orca} !> CPU {cpu}");
+        assert!(cpu > nic * 2.0, "CPU {cpu} !>> SmartNIC {nic}");
+        // ORCA/CPU efficiency ratio ~1.3–1.8× at box level (paper 1.45×).
+        let ratio = orca / cpu;
+        assert!((1.1..2.2).contains(&ratio), "ratio {ratio}");
+    }
+}

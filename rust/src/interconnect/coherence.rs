@@ -1,0 +1,168 @@
+//! Coherence-message layer on top of the cc-interconnect.
+//!
+//! Just enough MESI to express what cpoll needs (§III-B): the accelerator's
+//! coherence controller *owns* the cpoll region's lines (M state in its
+//! local cache); any write by the CPU or an RNIC DMA triggers an
+//! invalidation (`M → I` at the accelerator), and that invalidation —
+//! observed at the controller's UPI port — *is* the notification. The
+//! model tracks per-line state at the accelerator side and synthesizes the
+//! signals; it also reproduces signal **coalescing** (two writes to a line
+//! before the accelerator re-acquires it yield one signal, §III-C).
+
+use std::collections::HashMap;
+
+/// MESI state of a line in the accelerator's local cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MesiState {
+    Modified,
+    Exclusive,
+    Shared,
+    Invalid,
+}
+
+/// A coherence event delivered to the accelerator's cpoll checker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CohSignal {
+    /// Line address (64B-aligned).
+    pub addr: u64,
+    /// Time the signal is visible at the accelerator's controller port.
+    pub at: u64,
+}
+
+/// Message types on the coherence layer (for traffic accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CohMsg {
+    /// Host (CPU or DMA) wants ownership: invalidate accelerator's copy.
+    InvalidateReq,
+    /// Accelerator acknowledges / writes back.
+    InvalidateAck,
+    /// Accelerator re-acquires the line (read-for-ownership).
+    Rfo,
+    /// Data transfer of one line.
+    Data,
+}
+
+impl CohMsg {
+    /// Approximate wire size on UPI, bytes (control flits ~16B, data 64B+hdr).
+    pub fn bytes(self) -> u64 {
+        match self {
+            CohMsg::Data => 64 + 16,
+            _ => 16,
+        }
+    }
+}
+
+/// Tracks the accelerator-side state of a registered (pinned) region and
+/// generates invalidation signals on host writes.
+#[derive(Clone, Debug)]
+pub struct CoherenceDirectory {
+    line_bytes: u64,
+    state: HashMap<u64, MesiState>,
+    /// Signals generated (for tests / traffic accounting).
+    pub invalidations: u64,
+    pub coalesced: u64,
+}
+
+impl CoherenceDirectory {
+    pub fn new(line_bytes: u64) -> Self {
+        CoherenceDirectory {
+            line_bytes,
+            state: HashMap::new(),
+            invalidations: 0,
+            coalesced: 0,
+        }
+    }
+
+    fn line(&self, addr: u64) -> u64 {
+        addr / self.line_bytes * self.line_bytes
+    }
+
+    /// Accelerator pins/owns a line (cpoll region setup, §III-B approach 1,
+    /// or after re-reading it post-invalidation).
+    pub fn own(&mut self, addr: u64) {
+        let l = self.line(addr);
+        self.state.insert(l, MesiState::Modified);
+    }
+
+    pub fn state_of(&self, addr: u64) -> MesiState {
+        *self
+            .state
+            .get(&self.line(addr))
+            .unwrap_or(&MesiState::Invalid)
+    }
+
+    /// Host-side write to `addr` at time `at`. If the accelerator owned the
+    /// line, an invalidation signal is produced; if the line was already
+    /// invalid (a previous write not yet re-acquired), the hardware
+    /// coalesces — no new signal (§III-C: "cpoll signals can be coalesced").
+    pub fn host_write(&mut self, addr: u64, at: u64) -> Option<CohSignal> {
+        let l = self.line(addr);
+        match self.state.get(&l).copied().unwrap_or(MesiState::Invalid) {
+            MesiState::Modified | MesiState::Exclusive | MesiState::Shared => {
+                self.state.insert(l, MesiState::Invalid);
+                self.invalidations += 1;
+                Some(CohSignal { addr: l, at })
+            }
+            MesiState::Invalid => {
+                self.coalesced += 1;
+                None
+            }
+        }
+    }
+
+    /// Accelerator re-reads the line (RFO) after consuming the update,
+    /// restoring ownership so the next host write signals again.
+    pub fn reacquire(&mut self, addr: u64) {
+        self.own(addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_to_owned_line_signals_invalidation() {
+        let mut dir = CoherenceDirectory::new(64);
+        dir.own(0x1000);
+        assert_eq!(dir.state_of(0x1000), MesiState::Modified);
+        let sig = dir.host_write(0x1010, 500).expect("signal");
+        assert_eq!(sig.addr, 0x1000); // line-aligned
+        assert_eq!(sig.at, 500);
+        assert_eq!(dir.state_of(0x1000), MesiState::Invalid);
+    }
+
+    #[test]
+    fn second_write_before_reacquire_coalesces() {
+        let mut dir = CoherenceDirectory::new(64);
+        dir.own(0x2000);
+        assert!(dir.host_write(0x2000, 10).is_some());
+        assert!(dir.host_write(0x2000, 20).is_none()); // coalesced
+        assert_eq!(dir.coalesced, 1);
+        dir.reacquire(0x2000);
+        assert!(dir.host_write(0x2000, 30).is_some()); // signals again
+        assert_eq!(dir.invalidations, 2);
+    }
+
+    #[test]
+    fn unowned_lines_never_signal() {
+        let mut dir = CoherenceDirectory::new(64);
+        assert!(dir.host_write(0x3000, 1).is_none());
+    }
+
+    #[test]
+    fn distinct_lines_signal_independently() {
+        let mut dir = CoherenceDirectory::new(64);
+        dir.own(0);
+        dir.own(64);
+        assert!(dir.host_write(0, 1).is_some());
+        assert!(dir.host_write(64, 2).is_some());
+        assert_eq!(dir.invalidations, 2);
+    }
+
+    #[test]
+    fn message_sizes() {
+        assert_eq!(CohMsg::InvalidateReq.bytes(), 16);
+        assert_eq!(CohMsg::Data.bytes(), 80);
+    }
+}

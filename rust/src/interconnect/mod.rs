@@ -1,0 +1,12 @@
+//! Off-chip interconnect models: PCIe (with the TLP-processing-hints bit
+//! that powers the paper's adaptive DDIO, §III-D) and the cache-coherent
+//! UPI/CXL link plus its coherence-message layer (which powers cpoll,
+//! §III-B).
+
+pub mod coherence;
+pub mod pcie;
+pub mod upi;
+
+pub use coherence::{CohMsg, CohSignal, MesiState};
+pub use pcie::{Pcie, SteeringPolicy, Tlp};
+pub use upi::Upi;

@@ -1,0 +1,306 @@
+//! PCIe link model.
+//!
+//! Models what the paper's evaluation depends on: one-way TLP latency
+//! (the "at least 1 µs" round-trip tax of SmartNIC host access, §II-B),
+//! serialization at link bandwidth with TLP header overhead, MMIO doorbell
+//! writes, and — for §III-D — the **TPH bit** on each write TLP that,
+//! together with the global DDIO enable, decides whether DMA data lands
+//! in the LLC or in memory (validated against Fig 4's four on/off
+//! configurations).
+
+use crate::config::PcieParams;
+use crate::mem::{Dram, Llc, Nvm};
+use crate::sim::{transfer_ps, Server, NS};
+
+/// A write TLP as the steering logic sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct Tlp {
+    pub addr: u64,
+    pub bytes: u64,
+    /// TLP Processing Hint bit (§III-D): set ⇒ steer to LLC.
+    pub tph: bool,
+}
+
+/// Where device writes should land, per the paper's Fig-5 configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SteeringPolicy {
+    /// DDIO on (CPU-global), TPH ignored — today's default: all DMA → LLC.
+    DdioOn,
+    /// DDIO off, TPH ignored — all DMA → memory.
+    DdioOff,
+    /// The paper's proposal: DDIO off globally, but a set TPH bit steers
+    /// the individual TLP into the LLC ("DDIO NVM-aware per device").
+    Adaptive,
+}
+
+impl SteeringPolicy {
+    /// Does this write TLP go to the LLC?
+    #[inline]
+    pub fn to_llc(self, tlp: &Tlp) -> bool {
+        match self {
+            SteeringPolicy::DdioOn => true,
+            SteeringPolicy::DdioOff => false,
+            SteeringPolicy::Adaptive => tlp.tph,
+        }
+    }
+
+    /// Fig-4 configuration labels (DDIO, TPH) → effective policy for a
+    /// device that sets TPH on every packet when `tph` is true.
+    pub fn fig4(ddio: bool, _tph: bool) -> SteeringPolicy {
+        if ddio {
+            SteeringPolicy::DdioOn
+        } else {
+            SteeringPolicy::Adaptive // TPH honored only when DDIO is off
+        }
+    }
+}
+
+/// The link itself: two independent directions.
+#[derive(Clone, Debug)]
+pub struct Pcie {
+    p: PcieParams,
+    to_host: Server,
+    from_host: Server,
+    pub dma_bytes: u64,
+    pub mmio_writes: u64,
+}
+
+impl Pcie {
+    pub fn new(p: PcieParams) -> Self {
+        Pcie {
+            p,
+            to_host: Server::new(),
+            from_host: Server::new(),
+            dma_bytes: 0,
+            mmio_writes: 0,
+        }
+    }
+
+    fn one_way_ps(&self) -> u64 {
+        (self.p.one_way_ns * NS as f64) as u64
+    }
+
+    /// Wire bytes for a payload, including per-TLP header overhead.
+    pub fn wire_bytes(&self, payload: u64) -> u64 {
+        if payload == 0 {
+            return self.p.tlp_overhead_bytes;
+        }
+        let tlps = payload.div_ceil(self.p.mps_bytes);
+        payload + tlps * self.p.tlp_overhead_bytes
+    }
+
+    /// Device → host DMA write of `bytes`; returns delivery time at the
+    /// host's steering point (LLC/iMC).
+    pub fn dma_write(&mut self, now: u64, bytes: u64) -> u64 {
+        let wire = self.wire_bytes(bytes);
+        self.dma_bytes += bytes;
+        let service = transfer_ps(wire, self.p.bandwidth_gbs);
+        let (_s, done) = self.to_host.acquire(now, service);
+        done + self.one_way_ps()
+    }
+
+    /// Device-initiated read of host memory: request TLP up, completion
+    /// TLP(s) back. Returns data-arrival time at the device **excluding**
+    /// host memory service time (caller adds DRAM/LLC time in between).
+    pub fn read_round_trip(&mut self, now: u64, bytes: u64) -> u64 {
+        let req = transfer_ps(self.wire_bytes(0), self.p.bandwidth_gbs);
+        let (_s, up) = self.to_host.acquire(now, req);
+        let arrive_host = up + self.one_way_ps();
+        let cpl = transfer_ps(self.wire_bytes(bytes), self.p.bandwidth_gbs);
+        let (_s, down) = self.from_host.acquire(arrive_host, cpl);
+        down + self.one_way_ps()
+    }
+
+    /// Host MMIO write (doorbell): posted, but the store itself costs the
+    /// caller `mmio_doorbell_cycles` on its core (modeled by the caller);
+    /// link-side we account serialization + latency to the device.
+    pub fn mmio_write(&mut self, now: u64, bytes: u64) -> u64 {
+        self.mmio_writes += 1;
+        let service = transfer_ps(self.wire_bytes(bytes), self.p.bandwidth_gbs);
+        let (_s, done) = self.from_host.acquire(now, service);
+        done + self.one_way_ps()
+    }
+
+    /// Steer one DMA write into the memory system under `policy`:
+    /// to LLC (possibly causing a dirty writeback of the victim to DRAM or
+    /// NVM) or directly to the backing store. `nvm_addr` tells the router
+    /// which addresses are NVM. Returns completion time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn steer_dma_write(
+        &mut self,
+        now: u64,
+        tlp: Tlp,
+        policy: SteeringPolicy,
+        llc: &mut Llc,
+        dram: &mut Dram,
+        nvm: Option<&mut Nvm>,
+        is_nvm_addr: impl Fn(u64) -> bool,
+    ) -> u64 {
+        let arrive = self.dma_write(now, tlp.bytes);
+        if policy.to_llc(&tlp) {
+            // Allocate line(s) in LLC; dirty victims write back to their
+            // own domain.
+            let line = llc.params().line_bytes;
+            let mut t = arrive;
+            let mut nvm = nvm;
+            let mut a = tlp.addr / line * line;
+            let end = tlp.addr + tlp.bytes;
+            while a < end {
+                if let crate::mem::LlcLookup::MissWriteback(victim) = llc.dma_write(a) {
+                    t = if is_nvm_addr(victim) {
+                        match nvm.as_deref_mut() {
+                            Some(n) => t.max(n.write(arrive, victim, line)),
+                            None => t.max(dram.access(arrive, line, true)),
+                        }
+                    } else {
+                        t.max(dram.access(arrive, line, true))
+                    };
+                }
+                a += line;
+            }
+            t
+        } else {
+            // Straight to backing store; invalidate stale cached copies.
+            let line = llc.params().line_bytes;
+            let mut a = tlp.addr / line * line;
+            let end = tlp.addr + tlp.bytes;
+            while a < end {
+                llc.dma_write_bypass(a);
+                a += line;
+            }
+            if is_nvm_addr(tlp.addr) {
+                match nvm {
+                    Some(n) => n.write(arrive, tlp.addr, tlp.bytes),
+                    None => dram.access(arrive, tlp.bytes, true),
+                }
+            } else {
+                dram.access(arrive, tlp.bytes, true)
+            }
+        }
+    }
+
+    pub fn params(&self) -> &PcieParams {
+        &self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramParams, LlcParams, PcieParams};
+    use crate::sim::US;
+
+    #[test]
+    fn round_trip_at_least_one_microsecond_class() {
+        // §II-B: PCIe adds ≥1µs to host memory access from a SmartNIC.
+        let mut p = Pcie::new(PcieParams::default());
+        let done = p.read_round_trip(0, 64);
+        assert!(done >= 900 * 1000, "round trip {} ps", done);
+        assert!(done < 2 * US);
+    }
+
+    #[test]
+    fn wire_overhead_per_tlp() {
+        let p = Pcie::new(PcieParams::default());
+        assert_eq!(p.wire_bytes(0), 24);
+        assert_eq!(p.wire_bytes(64), 64 + 24);
+        assert_eq!(p.wire_bytes(1024), 1024 + 4 * 24); // 4 TLPs at MPS 256
+    }
+
+    #[test]
+    fn steering_policy_truth_table() {
+        let t_on = Tlp { addr: 0, bytes: 64, tph: true };
+        let t_off = Tlp { addr: 0, bytes: 64, tph: false };
+        assert!(SteeringPolicy::DdioOn.to_llc(&t_off));
+        assert!(!SteeringPolicy::DdioOff.to_llc(&t_on)); // hard off ignores TPH
+        assert!(SteeringPolicy::Adaptive.to_llc(&t_on));
+        assert!(!SteeringPolicy::Adaptive.to_llc(&t_off));
+    }
+
+    #[test]
+    fn ddio_on_spares_memory_bandwidth() {
+        // Miniature Fig 4: stream DMA writes over a small region; with
+        // steering to LLC the DRAM write counter stays ~0, without it the
+        // full stream hits DRAM.
+        let mk = || {
+            (
+                Pcie::new(PcieParams::default()),
+                Llc::new(LlcParams::default()),
+                Dram::new(DramParams::default()),
+            )
+        };
+        let not_nvm = |_a: u64| false;
+
+        let (mut pc, mut llc, mut dram) = mk();
+        let mut now = 0;
+        for i in 0..1000u64 {
+            let tlp = Tlp { addr: (i % 64) * 64, bytes: 64, tph: false };
+            now = pc.steer_dma_write(now, tlp, SteeringPolicy::DdioOn, &mut llc, &mut dram, None, not_nvm);
+        }
+        assert_eq!(dram.write_bytes, 0, "DDIO-on should not touch DRAM");
+
+        let (mut pc, mut llc, mut dram) = mk();
+        let mut now = 0;
+        for i in 0..1000u64 {
+            let tlp = Tlp { addr: (i % 64) * 64, bytes: 64, tph: false };
+            now = pc.steer_dma_write(now, tlp, SteeringPolicy::DdioOff, &mut llc, &mut dram, None, not_nvm);
+        }
+        assert_eq!(dram.write_bytes, 64_000, "DDIO-off must stream to DRAM");
+    }
+
+    #[test]
+    fn adaptive_steers_by_tph_bit() {
+        let mut pc = Pcie::new(PcieParams::default());
+        let mut llc = Llc::new(LlcParams::default());
+        let mut dram = Dram::new(DramParams::default());
+        let not_nvm = |_a: u64| false;
+        // TPH=1 → LLC
+        pc.steer_dma_write(
+            0,
+            Tlp { addr: 0, bytes: 64, tph: true },
+            SteeringPolicy::Adaptive,
+            &mut llc,
+            &mut dram,
+            None,
+            not_nvm,
+        );
+        assert_eq!(dram.write_bytes, 0);
+        // TPH=0 → memory
+        pc.steer_dma_write(
+            0,
+            Tlp { addr: 4096, bytes: 64, tph: false },
+            SteeringPolicy::Adaptive,
+            &mut llc,
+            &mut dram,
+            None,
+            not_nvm,
+        );
+        assert_eq!(dram.write_bytes, 64);
+    }
+
+    #[test]
+    fn nvm_writes_bypassing_llc_avoid_amplification() {
+        // The §III-D pathology: DDIO-on + later random evictions amplify
+        // NVM writes; adaptive TPH=0 for NVM addresses writes 256B-aligned
+        // sequentially, amp → 1.
+        use crate::config::NvmParams;
+        let mut pc = Pcie::new(PcieParams::default());
+        let mut llc = Llc::new(LlcParams::default());
+        let mut dram = Dram::new(DramParams::default());
+        let mut nvm = Nvm::new(NvmParams::default());
+        let is_nvm = |_a: u64| true;
+        for i in 0..100u64 {
+            pc.steer_dma_write(
+                0,
+                Tlp { addr: i * 256, bytes: 256, tph: false },
+                SteeringPolicy::Adaptive,
+                &mut llc,
+                &mut dram,
+                Some(&mut nvm),
+                is_nvm,
+            );
+        }
+        assert!((nvm.write_amp() - 1.0).abs() < 1e-9);
+        assert_eq!(nvm.logical_write_bytes, 25_600);
+    }
+}

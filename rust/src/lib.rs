@@ -1,0 +1,42 @@
+//! # ORCA — network & architecture co-design for offloading µs-scale datacenter apps
+//!
+//! Reproduction of *"ORCA: A Network and Architecture Co-design for Offloading
+//! µs-scale Datacenter Applications"* (cs.AR 2022; published as RAMBDA, HPCA-29).
+//!
+//! The crate is organized as a three-layer stack (see `DESIGN.md`):
+//!
+//! * **Substrate** — a deterministic discrete-event simulator of the paper's
+//!   testbed: memory ([`mem`]), interconnects ([`interconnect`]), network
+//!   ([`net`]), RDMA NIC ([`rnic`]).
+//! * **ORCA mechanisms** — ring buffers ([`ringbuf`]), coherence-assisted
+//!   notification ([`cpoll`]), the cc-accelerator ([`accel`]), adaptive
+//!   DDIO/TPH steering (in [`interconnect::pcie`] + [`mem::llc`]).
+//! * **Applications & harness** — KVS / chain-replicated transactions / DLRM
+//!   ([`apps`]), baselines ([`smartnic`], [`cpu`], [`baselines`]), workload
+//!   generators ([`workload`]), power accounting ([`power`]), the experiment
+//!   harness ([`experiments`]), and the real serving path: PJRT runtime
+//!   ([`runtime`]) + threaded coordinator ([`coordinator`]).
+//!
+//! All timing is in **picoseconds** (`u64`) to keep integer math exact; the
+//! public helpers in [`sim::time`] convert to ns/µs.
+
+pub mod sim;
+pub mod mem;
+pub mod interconnect;
+pub mod net;
+pub mod rnic;
+pub mod ringbuf;
+pub mod cpoll;
+pub mod accel;
+pub mod smartnic;
+pub mod cpu;
+pub mod baselines;
+pub mod apps;
+pub mod workload;
+pub mod power;
+pub mod testing;
+pub mod experiments;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;
+pub mod cli;

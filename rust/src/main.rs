@@ -1,0 +1,15 @@
+//! `orca` — the reproduction's CLI entry point. See `orca --help`.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match orca::cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    orca::cli::run(&cli)
+}

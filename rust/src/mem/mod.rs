@@ -1,0 +1,15 @@
+//! Memory-system models: host DRAM, NVM (Optane-class, emulated the same
+//! way the paper does), and the shared LLC with DDIO way-restriction —
+//! plus the `MemTrace` interface through which the *functional*
+//! applications (real hash tables, real logs, real embedding tables) feed
+//! the *timing* layer the exact addresses they touch.
+
+pub mod dram;
+pub mod llc;
+pub mod nvm;
+pub mod trace;
+
+pub use dram::Dram;
+pub use llc::{Llc, LlcLookup};
+pub use nvm::Nvm;
+pub use trace::{Access, Domain, MemTrace};

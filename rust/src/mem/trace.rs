@@ -1,0 +1,151 @@
+//! Memory-access traces.
+//!
+//! The functional layer (KVS hash walk, Tx log append, embedding gather)
+//! emits `Access` records; each hardware design replays them through its
+//! own path (CPU: LLC→DRAM; SmartNIC: on-board cache→PCIe→host; ORCA:
+//! UPI→host memory, or accelerator-local DDR/HBM). This is what makes
+//! uniform-vs-zipfian workloads behave differently per design in Fig 8
+//! without hand-coding the outcome.
+
+/// Which physical memory an address lives in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    /// Host DDR4 behind the CPU's memory controller.
+    HostDram,
+    /// Host NVM DIMMs (Optane-class).
+    HostNvm,
+    /// Accelerator-attached memory (ORCA-LD/LH).
+    AccelLocal,
+    /// SmartNIC on-board DRAM.
+    NicLocal,
+}
+
+/// One memory access of the application's data path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub addr: u64,
+    pub bytes: u32,
+    pub write: bool,
+    pub domain: Domain,
+    /// True if this access depends on the previous one in the trace
+    /// (pointer chase) and therefore cannot be overlapped with it.
+    pub dep: bool,
+}
+
+impl Access {
+    pub fn read(addr: u64, bytes: u32) -> Self {
+        Access {
+            addr,
+            bytes,
+            write: false,
+            domain: Domain::HostDram,
+            dep: true,
+        }
+    }
+    pub fn write(addr: u64, bytes: u32) -> Self {
+        Access {
+            addr,
+            bytes,
+            write: true,
+            domain: Domain::HostDram,
+            dep: true,
+        }
+    }
+    pub fn in_domain(mut self, d: Domain) -> Self {
+        self.domain = d;
+        self
+    }
+    /// Mark as overlappable with the previous access (no data dependency).
+    pub fn parallel(mut self) -> Self {
+        self.dep = false;
+        self
+    }
+}
+
+/// A request's access trace plus bookkeeping the timing layer wants.
+#[derive(Clone, Debug, Default)]
+pub struct MemTrace {
+    pub accesses: Vec<Access>,
+}
+
+impl MemTrace {
+    pub fn new() -> Self {
+        MemTrace::default()
+    }
+
+    pub fn push(&mut self, a: Access) {
+        self.accesses.push(a);
+    }
+
+    pub fn len(&self) -> usize {
+        self.accesses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accesses.is_empty()
+    }
+
+    /// Total bytes moved.
+    pub fn bytes(&self) -> u64 {
+        self.accesses.iter().map(|a| a.bytes as u64).sum()
+    }
+
+    /// Number of serialized (dependent) steps — the critical-path depth.
+    /// Consecutive non-`dep` accesses collapse into their predecessor's step.
+    pub fn depth(&self) -> usize {
+        let mut d = 0;
+        for (i, a) in self.accesses.iter().enumerate() {
+            if i == 0 || a.dep {
+                d += 1;
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_set_fields() {
+        let a = Access::read(0x1000, 64);
+        assert!(!a.write && a.dep);
+        let b = Access::write(0x2000, 256)
+            .in_domain(Domain::HostNvm)
+            .parallel();
+        assert!(b.write && !b.dep);
+        assert_eq!(b.domain, Domain::HostNvm);
+    }
+
+    #[test]
+    fn trace_depth_counts_dependent_chain() {
+        let mut t = MemTrace::new();
+        // GET: bucket -> entry -> value, all dependent. depth 3.
+        t.push(Access::read(0x0, 64));
+        t.push(Access::read(0x100, 64));
+        t.push(Access::read(0x200, 64));
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.bytes(), 192);
+
+        // DLRM: one index read, then a batch of 64 gathers. The first
+        // gather depends on the index read (new step); the remaining 63
+        // overlap with it. depth 2.
+        let mut t = MemTrace::new();
+        t.push(Access::read(0x0, 64));
+        t.push(Access::read(0x1000, 256));
+        for i in 1..64 {
+            t.push(Access::read(0x1000 + i * 256, 256).parallel());
+        }
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.len(), 65);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = MemTrace::new();
+        assert!(t.is_empty());
+        assert_eq!(t.depth(), 0);
+        assert_eq!(t.bytes(), 0);
+    }
+}

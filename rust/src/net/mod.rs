@@ -1,0 +1,135 @@
+//! Network fabric model: RoCEv2 over 25 Gbps ports through a ToR.
+//!
+//! What the evaluation needs from the fabric: line-rate serialization with
+//! per-packet header overhead (this is the resource that bounds peak KVS
+//! throughput for CPU and ORCA in Fig 8), a base propagation/switching
+//! latency (§VI-C treats 2–3 µs as a representative datacenter RTT), and
+//! independent directions per port.
+
+use crate::config::NetParams;
+use crate::sim::{transfer_ps, BandwidthLedger, NS};
+
+/// One direction of one port. Bandwidth is tracked with order-insensitive
+/// ledgers (callers replay pipelines whose completion times are not
+/// globally monotone).
+#[derive(Clone, Debug)]
+pub struct Network {
+    p: NetParams,
+    ingress: BandwidthLedger, // toward the server
+    egress: BandwidthLedger,  // toward the client
+    pub ingress_bytes: u64,
+    pub egress_bytes: u64,
+}
+
+impl Network {
+    pub fn new(p: NetParams) -> Self {
+        Network {
+            p,
+            ingress: BandwidthLedger::new(),
+            egress: BandwidthLedger::new(),
+            ingress_bytes: 0,
+            egress_bytes: 0,
+        }
+    }
+
+    fn gbs(&self) -> f64 {
+        self.p.line_gbps / 8.0
+    }
+
+    fn one_way_ps(&self) -> u64 {
+        (self.p.one_way_ns * NS as f64) as u64
+    }
+
+    /// Wire bytes for a message payload (RoCEv2 headers per MTU-sized packet).
+    pub fn wire_bytes(&self, payload: u64) -> u64 {
+        let pkts = payload.div_ceil(self.p.mtu_bytes).max(1);
+        payload + pkts * self.p.header_bytes
+    }
+
+    /// Client → server message; returns arrival time at the server RNIC.
+    pub fn send_to_server(&mut self, now: u64, payload: u64) -> u64 {
+        let wire = self.wire_bytes(payload);
+        self.ingress_bytes += wire;
+        let (_s, done) = self.ingress.acquire(now, transfer_ps(wire, self.gbs()));
+        done + self.one_way_ps()
+    }
+
+    /// Server → client message; returns arrival time at the client RNIC.
+    pub fn send_to_client(&mut self, now: u64, payload: u64) -> u64 {
+        let wire = self.wire_bytes(payload);
+        self.egress_bytes += wire;
+        let (_s, done) = self.egress.acquire(now, transfer_ps(wire, self.gbs()));
+        done + self.one_way_ps()
+    }
+
+    /// Peak sustainable request rate for `payload`-byte requests, in Mops —
+    /// the Fig-8 network bound.
+    pub fn peak_mops(&self, payload: u64) -> f64 {
+        let wire = self.wire_bytes(payload);
+        self.gbs() * 1e9 / wire as f64 / 1e6
+    }
+
+    pub fn utilization(&self, end_ps: u64) -> f64 {
+        self.ingress
+            .utilization(end_ps)
+            .max(self.egress.utilization(end_ps))
+    }
+
+    pub fn params(&self) -> &NetParams {
+        &self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ps_to_us, SEC};
+
+    #[test]
+    fn rtt_is_datacenter_class() {
+        // §VI-C: 2–3 µs RTT. One way ≈ 1.2µs + serialization.
+        let mut n = Network::new(NetParams::default());
+        let there = n.send_to_server(0, 64);
+        let back = n.send_to_client(there, 64);
+        let rtt_us = ps_to_us(back);
+        assert!((2.0..3.5).contains(&rtt_us), "RTT {rtt_us} µs");
+    }
+
+    #[test]
+    fn line_rate_bounds_throughput() {
+        let mut n = Network::new(NetParams::default());
+        // Push 3.125 GB (1s worth at 25Gbps) of 146B wire messages.
+        let wire = n.wire_bytes(64);
+        assert_eq!(wire, 146);
+        let msgs = 3_125_000_000u64 / wire;
+        let mut last = 0;
+        for _ in 0..msgs {
+            last = n.send_to_server(0, 64);
+        }
+        let secs = last as f64 / SEC as f64;
+        assert!((secs - 1.0).abs() < 0.05, "took {secs}s");
+    }
+
+    #[test]
+    fn peak_mops_for_kv_requests() {
+        let n = Network::new(NetParams::default());
+        // 64B KV request → 146B wire → ~21.4 Mops on 25 Gbps.
+        let mops = n.peak_mops(64);
+        assert!((mops - 21.4).abs() < 0.5, "{mops} Mops");
+    }
+
+    #[test]
+    fn directions_independent() {
+        let mut n = Network::new(NetParams::default());
+        let a = n.send_to_server(0, 1 << 20);
+        let b = n.send_to_client(0, 1 << 20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_packet_messages_pay_per_packet_headers() {
+        let n = Network::new(NetParams::default());
+        // 10 KB payload at 4096 MTU → 3 packets.
+        assert_eq!(n.wire_bytes(10_240), 10_240 + 3 * 82);
+    }
+}

@@ -1,0 +1,14 @@
+//! ORCA component (1): the unified inter-/intra-machine communication
+//! abstraction — lock-free ring buffers with credit-based flow control
+//! (§III-A) and the **pointer buffer** that makes cpoll scale past the
+//! accelerator's cache size (§III-B, Fig 2b).
+//!
+//! One `RingPair` per client-server connection (never shared across
+//! connections, §III-A); threads on one machine may share it behind a
+//! dispatcher (Flock-style, modeled in [`crate::cpu`]).
+
+pub mod pointer_buf;
+pub mod ring;
+
+pub use pointer_buf::PointerBuffer;
+pub use ring::{Ring, RingPair};

@@ -1,0 +1,273 @@
+//! The request/response ring pair.
+//!
+//! Semantics follow §III-A exactly:
+//!
+//! * the **client** tracks the request ring's tail (its writes) and the
+//!   response ring's head (its reads); it may only issue a request when
+//!   the in-flight window `tail - head` is below capacity — credit-based
+//!   flow control with no shared counters and no atomics;
+//! * the **server** mirrors this for the request head / response tail;
+//! * consuming a message **resets the slot to zero**, which (a) returns
+//!   the credit and (b), on the ORCA server, keeps the accelerator's
+//!   cache owning the line so the next write raises a coherence signal.
+
+/// A single ring of fixed-size slots. `Vec<u8>` payloads keep it
+/// functional (real bytes move through it in tests and in the
+/// coordinator's in-process fast path).
+#[derive(Clone, Debug)]
+pub struct Ring {
+    slots: Vec<Option<Vec<u8>>>,
+    /// Producer position (monotonic; slot = seq % capacity).
+    pub tail: u64,
+    /// Consumer position.
+    pub head: u64,
+    /// Base "address" of the ring in the simulated memory map (for cpoll
+    /// region registration and LLC/coherence modeling).
+    pub base_addr: u64,
+    /// Slot size in bytes (fixed at init, §III-B: "size of buffers is
+    /// fixed after the initialization").
+    pub slot_bytes: u64,
+}
+
+impl Ring {
+    pub fn new(capacity: usize, slot_bytes: u64, base_addr: u64) -> Self {
+        assert!(capacity > 0);
+        Ring {
+            slots: vec![None; capacity],
+            tail: 0,
+            head: 0,
+            base_addr,
+            slot_bytes,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn len(&self) -> usize {
+        (self.tail - self.head) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head == self.tail
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() == self.slots.len()
+    }
+
+    /// Address of the slot that `seq` maps to.
+    pub fn slot_addr(&self, seq: u64) -> u64 {
+        self.base_addr + (seq % self.slots.len() as u64) * self.slot_bytes
+    }
+
+    /// Producer: write a message at the tail. Returns the slot address
+    /// written (the cpoll-relevant store) or `None` if the ring is full
+    /// (caller must back off — flow-control violation otherwise).
+    pub fn push(&mut self, msg: Vec<u8>) -> Option<u64> {
+        if self.is_full() {
+            return None;
+        }
+        assert!(
+            msg.len() as u64 <= self.slot_bytes,
+            "message {} exceeds slot {}",
+            msg.len(),
+            self.slot_bytes
+        );
+        let idx = (self.tail % self.slots.len() as u64) as usize;
+        debug_assert!(self.slots[idx].is_none(), "slot not reset");
+        let addr = self.slot_addr(self.tail);
+        self.slots[idx] = Some(msg);
+        self.tail += 1;
+        Some(addr)
+    }
+
+    /// Consumer: take the message at the head and reset the slot to "0"
+    /// (§III-A). Returns `None` if empty.
+    pub fn pop(&mut self) -> Option<Vec<u8>> {
+        if self.is_empty() {
+            return None;
+        }
+        let idx = (self.head % self.slots.len() as u64) as usize;
+        let msg = self.slots[idx].take();
+        debug_assert!(msg.is_some(), "head slot empty");
+        self.head += 1;
+        msg
+    }
+
+    /// Consumer peek without consuming (polling check).
+    pub fn peek(&self) -> Option<&Vec<u8>> {
+        if self.is_empty() {
+            return None;
+        }
+        let idx = (self.head % self.slots.len() as u64) as usize;
+        self.slots[idx].as_ref()
+    }
+}
+
+/// The client-side view of one connection: its request ring lives in the
+/// *server's* memory (written via one-sided RDMA write), its response
+/// ring in its own memory. Credit accounting per §III-A.
+#[derive(Clone, Debug)]
+pub struct RingPair {
+    /// Request ring (conceptually in server memory).
+    pub req: Ring,
+    /// Response ring (conceptually in client memory).
+    pub resp: Ring,
+    /// Client's local record of the request tail.
+    req_tail_local: u64,
+    /// Client's local record of the response head.
+    resp_head_local: u64,
+}
+
+impl RingPair {
+    pub fn new(capacity: usize, slot_bytes: u64, req_base: u64, resp_base: u64) -> Self {
+        RingPair {
+            req: Ring::new(capacity, slot_bytes, req_base),
+            resp: Ring::new(capacity, slot_bytes, resp_base),
+            req_tail_local: 0,
+            resp_head_local: 0,
+        }
+    }
+
+    /// May the client issue another request? ("Only if the request
+    /// buffer's tail is behind the response buffer's head [plus the
+    /// window] can the client issue a request.")
+    pub fn client_may_send(&self) -> bool {
+        (self.req_tail_local - self.resp_head_local) < self.req.capacity() as u64
+    }
+
+    /// In-flight requests from this client's point of view.
+    pub fn in_flight(&self) -> u64 {
+        self.req_tail_local - self.resp_head_local
+    }
+
+    /// Client sends a request (one-sided write into the server-side ring).
+    /// Returns the written slot address. Panics if flow control was
+    /// violated (callers must check `client_may_send`).
+    pub fn client_send(&mut self, msg: Vec<u8>) -> u64 {
+        assert!(self.client_may_send(), "ring-pair window exceeded");
+        let addr = self.req.push(msg).expect("req ring full despite credit");
+        self.req_tail_local += 1;
+        addr
+    }
+
+    /// Client polls its response ring; consuming a response returns one
+    /// credit.
+    pub fn client_poll(&mut self) -> Option<Vec<u8>> {
+        let msg = self.resp.pop()?;
+        self.resp_head_local += 1;
+        Some(msg)
+    }
+
+    /// Server consumes a request.
+    pub fn server_poll(&mut self) -> Option<Vec<u8>> {
+        self.req.pop()
+    }
+
+    /// Server writes a response (one-sided write into the client-side ring).
+    pub fn server_respond(&mut self, msg: Vec<u8>) -> u64 {
+        self.resp
+            .push(msg)
+            .expect("response ring full: server produced more than consumed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_slot_reset() {
+        let mut r = Ring::new(4, 64, 0x1000);
+        assert!(r.push(vec![1]).is_some());
+        assert!(r.push(vec![2]).is_some());
+        assert_eq!(r.pop(), Some(vec![1]));
+        assert_eq!(r.pop(), Some(vec![2]));
+        assert_eq!(r.pop(), None);
+        // Slots reset: a full wrap-around works.
+        for i in 0..8u8 {
+            assert!(r.push(vec![i]).is_some());
+            assert_eq!(r.pop(), Some(vec![i]));
+        }
+    }
+
+    #[test]
+    fn push_fails_when_full() {
+        let mut r = Ring::new(2, 64, 0);
+        assert!(r.push(vec![0]).is_some());
+        assert!(r.push(vec![1]).is_some());
+        assert!(r.push(vec![2]).is_none());
+        r.pop();
+        assert!(r.push(vec![2]).is_some());
+    }
+
+    #[test]
+    fn slot_addresses_wrap() {
+        let r = Ring::new(4, 64, 0x1000);
+        assert_eq!(r.slot_addr(0), 0x1000);
+        assert_eq!(r.slot_addr(3), 0x10C0);
+        assert_eq!(r.slot_addr(4), 0x1000); // wraps
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds slot")]
+    fn oversized_message_panics() {
+        let mut r = Ring::new(2, 8, 0);
+        r.push(vec![0; 9]);
+    }
+
+    #[test]
+    fn credit_flow_control_blocks_at_window() {
+        let mut p = RingPair::new(4, 64, 0, 0x10000);
+        for i in 0..4u8 {
+            assert!(p.client_may_send());
+            p.client_send(vec![i]);
+        }
+        assert!(!p.client_may_send());
+        assert_eq!(p.in_flight(), 4);
+
+        // Server consumes one and responds; client reclaims the credit by
+        // *consuming the response*, not before (§III-A).
+        let req = p.server_poll().unwrap();
+        p.server_respond(req);
+        assert!(!p.client_may_send());
+        assert!(p.client_poll().is_some());
+        assert!(p.client_may_send());
+        assert_eq!(p.in_flight(), 3);
+    }
+
+    #[test]
+    fn round_trip_carries_payload() {
+        let mut p = RingPair::new(8, 64, 0, 0);
+        p.client_send(b"GET k1".to_vec());
+        let req = p.server_poll().unwrap();
+        assert_eq!(&req, b"GET k1");
+        p.server_respond(b"VAL v1".to_vec());
+        assert_eq!(p.client_poll().unwrap(), b"VAL v1");
+        assert_eq!(p.in_flight(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "window exceeded")]
+    fn violating_flow_control_panics() {
+        let mut p = RingPair::new(1, 64, 0, 0);
+        p.client_send(vec![0]);
+        p.client_send(vec![1]);
+    }
+
+    #[test]
+    fn many_connections_do_not_share_state() {
+        // §III-A: one pair per connection; no cross-talk.
+        let mut pairs: Vec<RingPair> = (0..10)
+            .map(|i| RingPair::new(4, 64, i * 0x1000, 0x100000 + i * 0x1000))
+            .collect();
+        for (i, p) in pairs.iter_mut().enumerate() {
+            p.client_send(vec![i as u8]);
+        }
+        for (i, p) in pairs.iter_mut().enumerate() {
+            assert_eq!(p.server_poll().unwrap(), vec![i as u8]);
+        }
+    }
+}

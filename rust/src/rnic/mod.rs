@@ -1,0 +1,18 @@
+//! RDMA NIC (RNIC) model: queue pairs, work/completion queues, doorbells.
+//!
+//! Functional structures (real rings with heads/tails — the tests drive
+//! them through full post→doorbell→complete cycles) plus the timing
+//! behaviour the paper's evaluation depends on:
+//!
+//! * **Doorbell batching** (§III-B, §VI-B, [77]): one MMIO write can ring
+//!   in many WQEs; the RNIC then fetches them in one DMA burst. This is
+//!   where ORCA's ~2× batching gain comes from.
+//! * **Unsignaled WQEs** (§III-C, [77]): only selected operations write a
+//!   CQE, cutting RNIC→host traffic when one CPU core polls all CQs.
+//! * **WQE-before-doorbell execution** (§VI-B, [108]): the RNIC may prefetch
+//!   and execute a posted WQE before the doorbell rings, which is why
+//!   ORCA's latency grows only sub-linearly with batch size.
+
+pub mod verbs;
+
+pub use verbs::*;

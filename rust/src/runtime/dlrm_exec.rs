@@ -1,0 +1,141 @@
+//! DLRM executor: the artifact bundle (manifest + params.bin + per-batch
+//! HLO modules) compiled and ready to serve. Parameters are transferred
+//! to device buffers **once** at load; the per-request path only builds
+//! the two small input literals (dense features + padded indices).
+
+use super::manifest::Manifest;
+use super::Runtime;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub struct DlrmExecutor {
+    pub manifest: Manifest,
+    rt: Runtime,
+    /// Per-batch-size compiled modules.
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Parameter device buffers in PARAM_NAMES order.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    pub executions: u64,
+}
+
+impl DlrmExecutor {
+    /// Load everything from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let manifest_text = std::fs::read_to_string(dir.join("dlrm_manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let manifest = Manifest::parse(&manifest_text)?;
+
+        let blob = std::fs::read(dir.join("dlrm_params.bin")).context("reading params blob")?;
+        if (blob.len() as u64) < manifest.blob_bytes() {
+            bail!(
+                "params blob too small: {} < {}",
+                blob.len(),
+                manifest.blob_bytes()
+            );
+        }
+
+        // One device buffer per parameter, in manifest order (default device).
+        let mut param_bufs = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let start = p.offset_bytes as usize;
+            let end = start + p.elems() * 4;
+            let floats: Vec<f32> = blob[start..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let dims: Vec<usize> = p.shape.clone();
+            let buf = rt
+                .client
+                .buffer_from_host_buffer(&floats, &dims, None)
+                .with_context(|| format!("uploading param {}", p.name))?;
+            param_bufs.push(buf);
+        }
+
+        let mut exes = BTreeMap::new();
+        for &b in &manifest.batches {
+            let path: PathBuf = dir.join(format!("dlrm_b{b}.hlo.txt"));
+            let module = rt.load_hlo_text(&path)?;
+            exes.insert(b, module.exe);
+        }
+        if exes.is_empty() {
+            bail!("manifest lists no batch variants");
+        }
+
+        Ok(DlrmExecutor {
+            manifest,
+            rt,
+            exes,
+            param_bufs,
+            executions: 0,
+        })
+    }
+
+    /// Batch sizes available (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Smallest compiled batch ≥ n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        *self
+            .exes
+            .keys()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.exes.keys().last().unwrap())
+    }
+
+    /// Run inference for up to `batch` queries; inputs shorter than the
+    /// compiled batch are padded (dense zeros, index 0 = the zero row).
+    /// Returns one logit per *real* query.
+    pub fn infer(&mut self, dense: &[Vec<f32>], queries: &[Vec<u32>]) -> Result<Vec<f32>> {
+        if dense.len() != queries.len() {
+            bail!("dense/queries length mismatch");
+        }
+        let n = queries.len();
+        let b = self.pick_batch(n);
+        if n > b {
+            bail!("batch {n} exceeds largest compiled variant {b}");
+        }
+        let nd = self.manifest.n_dense;
+        let lk = self.manifest.lookups;
+
+        let mut dense_flat = vec![0f32; b * nd];
+        for (i, d) in dense.iter().enumerate() {
+            if d.len() != nd {
+                bail!("dense feature count {} != {}", d.len(), nd);
+            }
+            dense_flat[i * nd..(i + 1) * nd].copy_from_slice(d);
+        }
+        let mut idx_flat = vec![0i32; b * lk];
+        for (i, q) in queries.iter().enumerate() {
+            for (j, &f) in q.iter().take(lk).enumerate() {
+                if f as usize >= self.manifest.rows {
+                    bail!("feature id {f} out of range {}", self.manifest.rows);
+                }
+                idx_flat[i * lk + j] = f as i32;
+            }
+        }
+
+        let dense_buf = self
+            .rt
+            .client
+            .buffer_from_host_buffer(&dense_flat, &[b, nd], None)?;
+        let idx_buf = self
+            .rt
+            .client
+            .buffer_from_host_buffer(&idx_flat, &[b, lk], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&dense_buf, &idx_buf];
+        args.extend(self.param_bufs.iter());
+
+        let exe = self.exes.get(&b).context("module for batch")?;
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        // Lowered with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let logits = out.to_vec::<f32>()?;
+        Ok(logits[..n].to_vec())
+    }
+}

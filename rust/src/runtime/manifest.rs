@@ -1,0 +1,133 @@
+//! Parser for `artifacts/dlrm_manifest.txt` — the contract emitted by
+//! `python/compile/aot.py` describing model dims, available batch
+//! variants, and the parameter layout inside `dlrm_params.bin`.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: u64,
+}
+
+impl ParamEntry {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_dense: usize,
+    pub dim: usize,
+    pub rows: usize,
+    pub lookups: usize,
+    pub batches: Vec<usize>,
+    pub params: Vec<ParamEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut n_dense = None;
+        let mut dim = None;
+        let mut rows = None;
+        let mut lookups = None;
+        let mut batches = Vec::new();
+        let mut params = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().context("empty line")?;
+            let ctx = || format!("manifest line {}", i + 1);
+            match key {
+                "n_dense" => n_dense = Some(parts.next().with_context(ctx)?.parse()?),
+                "dim" => dim = Some(parts.next().with_context(ctx)?.parse()?),
+                "rows" => rows = Some(parts.next().with_context(ctx)?.parse()?),
+                "lookups" => lookups = Some(parts.next().with_context(ctx)?.parse()?),
+                "batches" => {
+                    for b in parts {
+                        batches.push(b.parse()?);
+                    }
+                }
+                "param" => {
+                    let name = parts.next().with_context(ctx)?.to_string();
+                    let dims = parts.next().with_context(ctx)?;
+                    let offset_bytes = parts.next().with_context(ctx)?.parse()?;
+                    let shape = dims
+                        .split('x')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()?;
+                    params.push(ParamEntry {
+                        name,
+                        shape,
+                        offset_bytes,
+                    });
+                }
+                other => bail!("unknown manifest key `{other}` at line {}", i + 1),
+            }
+        }
+        Ok(Manifest {
+            n_dense: n_dense.context("missing n_dense")?,
+            dim: dim.context("missing dim")?,
+            rows: rows.context("missing rows")?,
+            lookups: lookups.context("missing lookups")?,
+            batches,
+            params,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamEntry> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Total bytes the params blob must have.
+    pub fn blob_bytes(&self) -> u64 {
+        self.params
+            .iter()
+            .map(|p| p.offset_bytes + p.elems() as u64 * 4)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+n_dense 13
+dim 64
+rows 64
+lookups 8
+batches 8 32
+param table 64x64 0
+param w_bot0 13x64 16384
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_dense, 13);
+        assert_eq!(m.dim, 64);
+        assert_eq!(m.batches, vec![8, 32]);
+        assert_eq!(m.params.len(), 2);
+        let t = m.param("table").unwrap();
+        assert_eq!(t.shape, vec![64, 64]);
+        assert_eq!(t.elems(), 4096);
+        assert_eq!(m.blob_bytes(), 16384 + 13 * 64 * 4);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Manifest::parse("bogus 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("n_dense 13\n").is_err());
+    }
+}

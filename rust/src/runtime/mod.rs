@@ -1,0 +1,62 @@
+//! The PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the Rust hot path. Python never runs here —
+//! `make artifacts` is the only place the JAX/Pallas layer executes.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.
+
+pub mod dlrm_exec;
+pub mod manifest;
+
+pub use dlrm_exec::DlrmExecutor;
+pub use manifest::Manifest;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModule {
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client plus loaded modules.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule { exe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+    }
+}

@@ -1,0 +1,218 @@
+//! The discrete-event engine.
+//!
+//! `Sim<W>` owns a time-ordered queue of events; each event is a boxed
+//! closure that receives the engine (to schedule further events) and the
+//! user world `W` (all mutable component state). Ties are broken by
+//! insertion order, which makes runs fully deterministic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+type EventFn<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+
+struct Entry<W> {
+    at: u64,
+    seq: u64,
+    f: EventFn<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Discrete-event simulator over a user world `W`.
+pub struct Sim<W> {
+    now: u64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Entry<W>>>,
+    executed: u64,
+    /// Hard stop: events scheduled past this instant are dropped.
+    horizon: u64,
+}
+
+impl<W> Default for Sim<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Sim<W> {
+    pub fn new() -> Self {
+        Sim {
+            now: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            executed: 0,
+            horizon: u64::MAX,
+        }
+    }
+
+    /// Current simulated time in picoseconds.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    #[inline]
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Set a hard time horizon; events at `t > horizon` are silently dropped.
+    pub fn set_horizon(&mut self, horizon: u64) {
+        self.horizon = horizon;
+    }
+
+    /// Schedule `f` at absolute time `at` (clamped to `now` if in the past).
+    pub fn at(&mut self, at: u64, f: impl FnOnce(&mut Sim<W>, &mut W) + 'static) {
+        let at = at.max(self.now);
+        if at > self.horizon {
+            return;
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry {
+            at,
+            seq,
+            f: Box::new(f),
+        }));
+    }
+
+    /// Schedule `f` after a delay of `dt` picoseconds.
+    pub fn after(&mut self, dt: u64, f: impl FnOnce(&mut Sim<W>, &mut W) + 'static) {
+        self.at(self.now.saturating_add(dt), f);
+    }
+
+    /// Run until the queue drains (or the horizon passes). Returns the
+    /// final simulated time.
+    pub fn run(&mut self, world: &mut W) -> u64 {
+        while let Some(Reverse(e)) = self.heap.pop() {
+            debug_assert!(e.at >= self.now, "time went backwards");
+            self.now = e.at;
+            self.executed += 1;
+            (e.f)(self, world);
+        }
+        self.now
+    }
+
+    /// Run until `world` satisfies `done` (checked after every event) or the
+    /// queue drains.
+    pub fn run_until(&mut self, world: &mut W, mut done: impl FnMut(&W) -> bool) -> u64 {
+        while let Some(Reverse(e)) = self.heap.pop() {
+            self.now = e.at;
+            self.executed += 1;
+            (e.f)(self, world);
+            if done(world) {
+                break;
+            }
+        }
+        self.now
+    }
+
+    /// True if no events remain.
+    pub fn idle(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(u64, &'static str)>,
+        count: u32,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(30, |s, w| w.log.push((s.now(), "c")));
+        sim.at(10, |s, w| w.log.push((s.now(), "a")));
+        sim.at(20, |s, w| w.log.push((s.now(), "b")));
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn ties_fire_in_insertion_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for (i, name) in ["first", "second", "third"].iter().enumerate() {
+            let name = *name;
+            let _ = i;
+            sim.at(5, move |s, w| w.log.push((s.now(), name)));
+        }
+        sim.run(&mut w);
+        assert_eq!(
+            w.log,
+            vec![(5, "first"), (5, "second"), (5, "third")]
+        );
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        fn tick(s: &mut Sim<World>, w: &mut World) {
+            w.count += 1;
+            if w.count < 5 {
+                s.after(100, tick);
+            }
+        }
+        sim.at(0, tick);
+        let end = sim.run(&mut w);
+        assert_eq!(w.count, 5);
+        assert_eq!(end, 400);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(100, |s, _w| {
+            s.at(50, |s, w| w.log.push((s.now(), "clamped")));
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(100, "clamped")]);
+    }
+
+    #[test]
+    fn horizon_drops_late_events() {
+        let mut sim: Sim<World> = Sim::new();
+        sim.set_horizon(1_000);
+        let mut w = World::default();
+        sim.at(999, |_s, w| w.count += 1);
+        sim.at(1_001, |_s, w| w.count += 100);
+        sim.run(&mut w);
+        assert_eq!(w.count, 1);
+    }
+
+    #[test]
+    fn run_until_stops_early() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 0..100 {
+            sim.at(i * 10, |_s, w| w.count += 1);
+        }
+        sim.run_until(&mut w, |w| w.count == 7);
+        assert_eq!(w.count, 7);
+        assert!(!sim.idle());
+    }
+}

@@ -1,0 +1,20 @@
+//! Deterministic discrete-event simulation substrate.
+//!
+//! Everything timing-related in the reproduction runs on this engine: the
+//! cpoll ping-pong (Fig 7), the KVS serving pipelines (Fig 8–10), chain
+//! replication (Fig 11) and the DLRM throughput model (Fig 12). The engine
+//! is single-threaded and fully deterministic: identical seeds produce
+//! identical event orders and identical statistics, which the test suite
+//! asserts.
+
+pub mod engine;
+pub mod rng;
+pub mod server;
+pub mod stats;
+pub mod time;
+
+pub use engine::Sim;
+pub use rng::Rng;
+pub use server::{BandwidthLedger, MultiServer, Pipeline, Server};
+pub use stats::{Histogram, Summary};
+pub use time::*;

@@ -1,0 +1,302 @@
+//! Statistics: streaming summaries and HDR-style log-linear histograms for
+//! latency distributions (average, p50/p99/p999, CDF export for Fig 7).
+
+/// Streaming mean/min/max/count (Welford variance).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Log-linear histogram over `u64` values (e.g. picoseconds).
+///
+/// Buckets: 64 logarithmic tiers × `sub` linear sub-buckets each, giving
+/// bounded relative error (~1/sub) at any magnitude — the usual HDR layout.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    sub_bits: u32,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+    min: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Default: 64 sub-buckets per tier (≈1.6% relative error).
+    pub fn new() -> Self {
+        Self::with_sub_bits(6)
+    }
+
+    pub fn with_sub_bits(sub_bits: u32) -> Self {
+        let sub = 1usize << sub_bits;
+        Histogram {
+            sub_bits,
+            counts: vec![0; 64 * sub],
+            total: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
+    }
+
+    #[inline]
+    fn index(&self, v: u64) -> usize {
+        let sub = 1u64 << self.sub_bits;
+        if v < sub {
+            return v as usize;
+        }
+        let tier = 63 - v.leading_zeros() as u64; // position of msb, >= sub_bits
+        let shift = tier - self.sub_bits as u64;
+        let sub_idx = (v >> shift) & (sub - 1);
+        ((tier - self.sub_bits as u64 + 1) * sub + sub_idx) as usize
+    }
+
+    /// Lower bound of the bucket with the given index (for percentile read-back).
+    fn bucket_low(&self, idx: usize) -> u64 {
+        let sub = 1usize << self.sub_bits;
+        let tier = idx / sub;
+        let sub_idx = (idx % sub) as u64;
+        if tier == 0 {
+            sub_idx
+        } else {
+            let shift = tier as u64 - 1;
+            ((sub as u64) << shift) + (sub_idx << shift)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let idx = self.index(v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Value at quantile `q` in [0,1]. Returns the lower bound of the bucket
+    /// containing the q-th sample (bounded relative error).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.bucket_low(idx).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// CDF points `(value, cumulative_fraction)` for plotting (Fig 7).
+    pub fn cdf(&self) -> Vec<(u64, f64)> {
+        let mut out = Vec::new();
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            out.push((self.bucket_low(idx), seen as f64 / self.total as f64));
+        }
+        out
+    }
+
+    /// Merge another histogram with identical geometry.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.sub_bits, other.sub_bits);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn histogram_exact_for_small_values() {
+        let mut h = Histogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 64);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        let p50 = h.p50();
+        assert!((31..=32).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_quantiles_bounded_error() {
+        let mut h = Histogram::new();
+        let mut r = Rng::new(123);
+        let mut exact: Vec<u64> = Vec::new();
+        for _ in 0..100_000 {
+            let v = r.range(1_000, 10_000_000);
+            exact.push(v);
+            h.record(v);
+        }
+        exact.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let want = exact[((q * exact.len() as f64) as usize).min(exact.len() - 1)];
+            let got = h.quantile(q);
+            let rel = (got as f64 - want as f64).abs() / want as f64;
+            assert!(rel < 0.04, "q={q}: got {got} want {want} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_mean_is_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert!((h.mean() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_ends_at_one() {
+        let mut h = Histogram::new();
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            h.record(r.range(100, 100_000));
+        }
+        let cdf = h.cdf();
+        assert!(!cdf.is_empty());
+        let mut prev = 0.0;
+        for &(_, f) in &cdf {
+            assert!(f >= prev);
+            prev = f;
+        }
+        assert!((prev - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(100);
+        b.record(200);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 200);
+        assert_eq!(a.min(), 100);
+    }
+}

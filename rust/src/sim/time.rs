@@ -1,0 +1,76 @@
+//! Time units. The simulator's clock is `u64` **picoseconds** so that
+//! per-byte link costs (fractions of a nanosecond) stay exact in integer
+//! arithmetic.
+
+/// Picoseconds per nanosecond.
+pub const NS: u64 = 1_000;
+/// Picoseconds per microsecond.
+pub const US: u64 = 1_000_000;
+/// Picoseconds per millisecond.
+pub const MS: u64 = 1_000_000_000;
+/// Picoseconds per second.
+pub const SEC: u64 = 1_000_000_000_000;
+
+/// Convert picoseconds to (fractional) nanoseconds.
+#[inline]
+pub fn ps_to_ns(ps: u64) -> f64 {
+    ps as f64 / NS as f64
+}
+
+/// Convert picoseconds to (fractional) microseconds.
+#[inline]
+pub fn ps_to_us(ps: u64) -> f64 {
+    ps as f64 / US as f64
+}
+
+/// Picoseconds it takes to move `bytes` across a link of `gbytes_per_s`.
+///
+/// Uses 1 GB = 1e9 bytes (link-rate convention, matching how the paper
+/// quotes 20.8 GB/s UPI and 3.5 GB/s DMA rates).
+#[inline]
+pub fn transfer_ps(bytes: u64, gbytes_per_s: f64) -> u64 {
+    // ps = bytes / (GB/s * 1e9 B/GB) * 1e12 ps/s = bytes * 1000 / (GB/s)
+    ((bytes as f64) * 1_000.0 / gbytes_per_s).ceil() as u64
+}
+
+/// Picoseconds per cycle at `mhz`.
+#[inline]
+pub fn cycle_ps(mhz: f64) -> u64 {
+    (1_000_000.0 / mhz).round() as u64
+}
+
+/// Cycles at `mhz` expressed in picoseconds.
+#[inline]
+pub fn cycles_ps(cycles: u64, mhz: f64) -> u64 {
+    cycles * cycle_ps(mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_matches_link_rate() {
+        // 64B over 20.8 GB/s UPI ≈ 3.08 ns
+        let ps = transfer_ps(64, 20.8);
+        assert!((ps_to_ns(ps) - 3.08).abs() < 0.01, "got {}", ps_to_ns(ps));
+        // 1500B over 3.125 GB/s (25 Gbps) = 480 ns
+        let ps = transfer_ps(1500, 3.125);
+        assert_eq!(ps, 480_000);
+    }
+
+    #[test]
+    fn cycles_at_fpga_and_cpu_freq() {
+        assert_eq!(cycle_ps(400.0), 2_500); // Arria-10 @ 400 MHz
+        assert_eq!(cycle_ps(2000.0), 500); // Xeon 6138P @ 2.0 GHz
+        assert_eq!(cycles_ps(15, 400.0), 37_500);
+    }
+
+    #[test]
+    fn unit_constants() {
+        assert_eq!(NS * 1000, US);
+        assert_eq!(US * 1000, MS);
+        assert_eq!(MS * 1000, SEC);
+        assert!((ps_to_us(1_500_000) - 1.5).abs() < 1e-12);
+    }
+}

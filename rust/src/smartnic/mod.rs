@@ -1,0 +1,316 @@
+//! The SmartNIC baseline (§VI-B "Smart NIC"): a BlueField-2-class DPU —
+//! eight ARM A72 cores processing requests out of 16 GB on-board DRAM,
+//! with a 512 MB slice used as a cache over the host-resident data
+//! (cache:data ratio mirrors the paper's 512 MB : 7 GB). Host accesses go
+//! over PCIe via one-sided reads issued from the data path
+//! (direct verbs), effectively synchronous per core (§II-B).
+
+pub mod bigcache;
+
+pub use bigcache::BigCache;
+
+use crate::config::Testbed;
+use crate::mem::MemTrace;
+use crate::sim::{cycles_ps, BandwidthLedger, MultiServer, Pipeline, transfer_ps, NS};
+
+/// The SmartNIC server pipeline.
+pub struct SmartNicServer {
+    t: Testbed,
+    cores: MultiServer,
+    batches: Vec<Vec<(u64, MemTrace)>>,
+    /// Per-core synchronous host-read path (PCIe RTT + host DRAM).
+    host_read: Vec<Pipeline>,
+    /// On-board DRAM bandwidth (shared, order-insensitive).
+    local_mem: BandwidthLedger,
+    /// Shared PCIe link serialization for host reads.
+    pcie_data: BandwidthLedger,
+    pub cache: BigCache,
+    pub batch: usize,
+    pub served: u64,
+    pub host_accesses: u64,
+    pub local_accesses: u64,
+}
+
+impl SmartNicServer {
+    pub fn new(t: &Testbed, batch: usize) -> Self {
+        let n = t.smartnic.cores;
+        let host_rtt =
+            (2.0 * t.pcie.one_way_ns * NS as f64) as u64 + (t.dram.latency_ns * NS as f64) as u64;
+        SmartNicServer {
+            t: t.clone(),
+            cores: MultiServer::new(n),
+            batches: vec![Vec::new(); n],
+            host_read: (0..n)
+                .map(|_| Pipeline::new(host_rtt, t.smartnic.host_outstanding))
+                .collect(),
+            local_mem: BandwidthLedger::new(),
+            pcie_data: BandwidthLedger::new(),
+            cache: BigCache::new(t.smartnic.cache_bytes, 64),
+            batch: batch.max(1),
+            served: 0,
+            host_accesses: 0,
+            local_accesses: 0,
+        }
+    }
+
+    /// One data access from core `core` at `now`.
+    fn access(&mut self, core: usize, now: u64, addr: u64, bytes: u64) -> u64 {
+        if self.cache.access(addr) {
+            // On-board DRAM hit.
+            self.local_accesses += 1;
+            let service = transfer_ps(bytes.max(64), self.t.smartnic.local_bandwidth_gbs);
+            let (_s, done) = self.local_mem.acquire(now, service);
+            done + (self.t.smartnic.local_latency_ns * NS as f64) as u64
+        } else {
+            // Synchronous host read over PCIe; the fetched line fills the
+            // cache (evicting LRU).
+            self.host_accesses += 1;
+            let wire = bytes.max(64) + self.t.pcie.tlp_overhead_bytes;
+            let (_s, _ser) = self.pcie_data.acquire(now, transfer_ps(wire, self.t.pcie.bandwidth_gbs));
+            self.host_read[core].acquire(now)
+        }
+    }
+
+    /// Submit a request; same batching contract as [`crate::cpu::CpuServer`].
+    pub fn submit(&mut self, core: usize, arrive: u64, trace: MemTrace) -> Option<Vec<u64>> {
+        let core = core % self.batches.len();
+        self.batches[core].push((arrive, trace));
+        if self.batches[core].len() >= self.batch {
+            Some(self.process_batch(core))
+        } else {
+            None
+        }
+    }
+
+    pub fn flush(&mut self, core: usize) -> Vec<u64> {
+        if self.batches[core].is_empty() {
+            Vec::new()
+        } else {
+            self.process_batch(core)
+        }
+    }
+
+    fn process_batch(&mut self, core: usize) -> Vec<u64> {
+        let staged = std::mem::take(&mut self.batches[core]);
+        let last_arrival = staged.iter().map(|&(a, _)| a).max().unwrap();
+        let rpc = cycles_ps(self.t.smartnic.rpc_cycles, self.t.smartnic.freq_mhz)
+            * staged.len() as u64;
+        let (start, _d, _lane) = self.cores.acquire(last_arrival, rpc);
+        self.exec_batch(core, start, staged)
+    }
+
+    /// Opportunistic streaming execution — same contract as
+    /// [`crate::cpu::CpuServer::run_stream`].
+    pub fn run_stream(
+        &mut self,
+        jobs: &[(u64, MemTrace)],
+        core_of: impl Fn(usize) -> usize,
+    ) -> Vec<u64> {
+        use std::cmp::Reverse;
+        use std::collections::{BinaryHeap, VecDeque};
+        let n_cores = self.batches.len();
+        let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_cores];
+        for i in 0..jobs.len() {
+            queues[core_of(i) % n_cores].push_back(i);
+        }
+        let mut done = vec![0u64; jobs.len()];
+        // Global time order across cores (shared pipelines are timelines):
+        // heap of (next wake time, core).
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        let mut core_free = vec![0u64; n_cores];
+        for c in 0..n_cores {
+            if let Some(&first) = queues[c].front() {
+                heap.push(Reverse((jobs[first].0, c)));
+            }
+        }
+        while let Some(Reverse((start, c))) = heap.pop() {
+            let mut batch_idx = Vec::with_capacity(self.batch);
+            while let Some(&i) = queues[c].front() {
+                if jobs[i].0 <= start && batch_idx.len() < self.batch {
+                    batch_idx.push(i);
+                    queues[c].pop_front();
+                } else {
+                    break;
+                }
+            }
+            if batch_idx.is_empty() {
+                // Spurious wake (shouldn't happen): skip to next arrival.
+                if let Some(&first) = queues[c].front() {
+                    heap.push(Reverse((jobs[first].0.max(start + 1), c)));
+                }
+                continue;
+            }
+            let staged: Vec<(u64, MemTrace)> =
+                batch_idx.iter().map(|&i| jobs[i].clone()).collect();
+            let ds = self.exec_batch(c, start, staged);
+            core_free[c] = ds.iter().copied().max().unwrap_or(start);
+            for (&i, d) in batch_idx.iter().zip(ds) {
+                done[i] = d;
+            }
+            if let Some(&first) = queues[c].front() {
+                heap.push(Reverse((core_free[c].max(jobs[first].0), c)));
+            }
+        }
+        done
+    }
+
+    /// Execute one batch starting at `ready` on `core`.
+    fn exec_batch(&mut self, core: usize, ready: u64, staged: Vec<(u64, MemTrace)>) -> Vec<u64> {
+        let b = staged.len();
+        self.served += b as u64;
+
+        // ARM processing for the batch.
+        let rpc = cycles_ps(self.t.smartnic.rpc_cycles, self.t.smartnic.freq_mhz) * b as u64;
+        let cpu_done = ready + rpc;
+
+        // Memory walk: within a dependency step the batch's accesses
+        // overlap on local memory, but host reads are bounded by the
+        // core's synchronous host-read pipeline — the §II-B linearity.
+        let max_depth = staged.iter().map(|(_, t)| t.depth()).max().unwrap_or(0);
+        let mut step_start = cpu_done;
+        for step in 0..max_depth {
+            let mut step_end = step_start;
+            for (_, trace) in &staged {
+                let mut s = 0usize;
+                for (i, a) in trace.accesses.iter().enumerate() {
+                    if i == 0 || a.dep {
+                        s += 1;
+                    }
+                    if s == step + 1 {
+                        let done = self.access(core, step_start, a.addr, a.bytes as u64);
+                        step_end = step_end.max(done);
+                    } else if s > step + 1 {
+                        break;
+                    }
+                }
+            }
+            step_start = step_end;
+        }
+
+        // Response posting: direct verbs from the ARM core, one doorbell
+        // per batch.
+        let msg = (self.t.net.rnic_msg_ns * NS as f64) as u64;
+        let done = step_start + cycles_ps(200, self.t.smartnic.freq_mhz);
+        (0..b).map(|i| done + (i as u64 + 1) * msg).collect()
+    }
+
+    /// Fraction of data accesses that went to the host.
+    pub fn host_fraction(&self) -> f64 {
+        let total = self.host_accesses + self.local_accesses;
+        if total == 0 {
+            0.0
+        } else {
+            self.host_accesses as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Access;
+    use crate::sim::Rng;
+
+    /// Trace over a `data_bytes` working set: 3 dependent reads at
+    /// key-derived addresses (hash-table walk).
+    fn trace_for(key: u64, data_bytes: u64) -> MemTrace {
+        let mut t = MemTrace::new();
+        let h = key.wrapping_mul(0x9E3779B97F4A7C15);
+        t.push(Access::read(h % data_bytes, 64));
+        t.push(Access::read(h.rotate_left(17) % data_bytes, 64));
+        t.push(Access::read(h.rotate_left(34) % data_bytes, 64));
+        t
+    }
+
+    #[test]
+    fn uniform_workload_mostly_misses_the_onboard_cache() {
+        // §VI-B: with uniform keys over 7 GB, >90% of accesses go to host.
+        let t = Testbed::paper();
+        let mut s = SmartNicServer::new(&t, 32);
+        let mut rng = Rng::new(3);
+        let data = 7u64 << 30;
+        for _ in 0..60_000 {
+            let key = rng.next_u64();
+            s.submit(0, 0, trace_for(key, data));
+        }
+        assert!(s.host_fraction() > 0.9, "host frac {}", s.host_fraction());
+    }
+
+    #[test]
+    fn skewed_workload_mostly_hits() {
+        // Zipf-ish: 90% of accesses to 5% of keys → high hit rate after
+        // warmup.
+        let t = Testbed::paper();
+        let mut s = SmartNicServer::new(&t, 32);
+        let mut rng = Rng::new(4);
+        let data = 7u64 << 30;
+        // 90% of requests go to 50K hot keys (~10 MB of lines ≪ 512 MB).
+        for _ in 0..200_000 {
+            let key = if rng.chance(0.9) {
+                rng.below(50_000)
+            } else {
+                rng.next_u64()
+            };
+            s.submit(0, 0, trace_for(key, data));
+        }
+        // Ignore cold-start: overall host fraction must be well below the
+        // uniform case.
+        assert!(s.host_fraction() < 0.5, "host frac {}", s.host_fraction());
+    }
+
+    #[test]
+    fn host_heavy_batches_are_much_slower_than_local() {
+        let t = Testbed::paper();
+        // All-local: tiny working set fits the 512MB cache.
+        let mut local = SmartNicServer::new(&t, 32);
+        // All-host: huge working set.
+        let mut remote = SmartNicServer::new(&t, 32);
+        let mut l_done = 0u64;
+        let mut r_done = 0u64;
+        for i in 0..3200u64 {
+            if let Some(d) = local.submit(0, 0, trace_for(i % 100, 1 << 20)) {
+                l_done = l_done.max(*d.iter().max().unwrap());
+            }
+            if let Some(d) = remote.submit(0, 0, trace_for(i, 7 << 30)) {
+                r_done = r_done.max(*d.iter().max().unwrap());
+            }
+        }
+        assert!(
+            r_done > l_done * 3,
+            "host-heavy {r_done} vs local {l_done}"
+        );
+    }
+
+    #[test]
+    fn eight_cores_spread_batches() {
+        let t8 = Testbed::paper();
+        let mut t1 = Testbed::paper();
+        t1.smartnic.cores = 1;
+        // Warm the cache first so cold-miss chains don't mask core scaling;
+        // then compare warm-path makespans.
+        let run = |t: &Testbed| {
+            let mut s = SmartNicServer::new(t, 1);
+            let mut warm_end = 0u64;
+            for i in 0..50u64 {
+                let d = s.submit(0, 0, trace_for(i, 1 << 20)).unwrap();
+                warm_end = warm_end.max(d[0]);
+            }
+            let mut last = warm_end;
+            for i in 0..800u64 {
+                let d = s
+                    .submit(
+                        (i % t.smartnic.cores as u64) as usize,
+                        warm_end,
+                        trace_for(i % 50, 1 << 20),
+                    )
+                    .unwrap();
+                last = last.max(d[0]);
+            }
+            last - warm_end
+        };
+        let eight = run(&t8);
+        let one = run(&t1);
+        assert!(eight * 4 < one, "8 cores {eight} vs 1 core {one}");
+    }
+}
+

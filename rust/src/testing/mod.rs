@@ -1,0 +1,198 @@
+//! In-repo property-testing mini-framework.
+//!
+//! The offline build has no `proptest`, so this provides the subset the
+//! test suite needs: seeded generators over [`crate::sim::Rng`], a
+//! `forall` runner that reports the failing case and its reproduction
+//! seed, and greedy input shrinking for `Vec`-shaped cases.
+//!
+//! ```text
+//! use orca::testing::{forall, Gen};
+//! forall(0xC0FFEE, 500, |g| g.vec(0..100, |g| g.u64(0..1000)), |xs| {
+//!     let mut s = xs.clone();
+//!     s.sort_unstable();
+//!     if s.len() != xs.len() { return Err("length changed".into()); }
+//!     Ok(())
+//! });
+//! ```
+//! (Illustrative snippet — the executable doctest is skipped because the
+//! offline doctest runner lacks the xla rpath; `tests::` below covers it.)
+
+use crate::sim::Rng;
+use std::fmt::Debug;
+use std::ops::Range;
+
+/// Generator context handed to the case generator.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn u64(&mut self, r: Range<u64>) -> u64 {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        self.rng.range(r.start as u64, r.end as u64) as usize
+    }
+
+    pub fn u32(&mut self, r: Range<u32>) -> u32 {
+        self.rng.range(r.start as u64, r.end as u64) as u32
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn bytes(&mut self, len: Range<usize>) -> Vec<u8> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.rng.below(256) as u8).collect()
+    }
+
+    pub fn vec<T>(&mut self, len: Range<usize>, mut item: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| item(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `iters` generated cases. Panics with the failing
+/// case, iteration and seed on the first counterexample.
+pub fn forall<T: Debug + Clone>(
+    seed: u64,
+    iters: u64,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..iters {
+        let case_seed = seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(case_seed);
+        let case = gen(&mut g);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed at iteration {i} (seed {case_seed:#x}): {msg}\ncase: {case:?}"
+            );
+        }
+    }
+}
+
+/// `forall` for `Vec<T>` cases with greedy shrinking: on failure, tries to
+/// remove chunks/elements while the property still fails, then reports the
+/// minimized case.
+pub fn forall_vec<T: Debug + Clone>(
+    seed: u64,
+    iters: u64,
+    mut gen: impl FnMut(&mut Gen) -> Vec<T>,
+    mut prop: impl FnMut(&[T]) -> Result<(), String>,
+) {
+    for i in 0..iters {
+        let case_seed = seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(case_seed);
+        let case = gen(&mut g);
+        if let Err(first_msg) = prop(&case) {
+            let minimized = shrink_vec(case, &mut prop);
+            let msg = prop(&minimized).err().unwrap_or(first_msg);
+            panic!(
+                "property failed at iteration {i} (seed {case_seed:#x}): {msg}\nminimized case ({} elems): {minimized:?}",
+                minimized.len()
+            );
+        }
+    }
+}
+
+fn shrink_vec<T: Clone>(
+    mut case: Vec<T>,
+    prop: &mut impl FnMut(&[T]) -> Result<(), String>,
+) -> Vec<T> {
+    // Halve-and-retry, then element-wise removal.
+    let mut chunk = case.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= case.len() {
+            let mut trial = case.clone();
+            trial.drain(i..i + chunk);
+            if prop(&trial).is_err() {
+                case = trial;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    case
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall(1, 200, |g| g.u64(0..100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_counterexample() {
+        forall(2, 200, |g| g.u64(0..100), |&x| {
+            if x < 90 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(0..1_000_000), b.u64(0..1_000_000));
+        }
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Property: no element equals 42. Failing cases should shrink to
+        // exactly [42].
+        let mut failing = vec![1u64, 5, 42, 7, 9];
+        let minimized = shrink_vec(std::mem::take(&mut failing), &mut |xs: &[u64]| {
+            if xs.contains(&42) {
+                Err("contains 42".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(minimized, vec![42]);
+    }
+
+    #[test]
+    fn vec_generator_respects_length_range() {
+        let mut g = Gen::new(3);
+        for _ in 0..100 {
+            let v = g.vec(2..10, |g| g.bool());
+            assert!((2..10).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Synthetic Amazon-Review-like DLRM query streams (Fig 12).
+//!
+//! We do not have the real datasets [59]; per the substitution rule we
+//! generate query streams from per-dataset profiles that preserve what
+//! Fig 12 actually depends on: the embedding-table scale, the mean query
+//! length (features per query), and the co-occurrence skew that MERCI's
+//! memoization exploits. Profile constants follow the dataset statistics
+//! reported by MERCI [92] (item counts, average basket sizes).
+
+use crate::sim::Rng;
+
+/// Per-dataset generation profile.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// Rows in the (merged) embedding table.
+    pub table_rows: usize,
+    /// Mean features per query (basket size).
+    pub mean_query_len: usize,
+    /// Zipf skew of item popularity.
+    pub pop_theta: f64,
+    /// Fraction of features drawn from the co-occurrence model (pairs
+    /// that repeat across queries — what MERCI memoizes).
+    pub pair_affinity: f64,
+}
+
+/// The six categories evaluated in §VI-D.
+pub const AMAZON_PROFILES: [DatasetProfile; 6] = [
+    DatasetProfile { name: "electronics", table_rows: 476_001, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.7 },
+    DatasetProfile { name: "clothing-shoes-jewelry", table_rows: 2_685_059, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.65 },
+    DatasetProfile { name: "home-kitchen", table_rows: 1_301_225, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.7 },
+    DatasetProfile { name: "books", table_rows: 2_930_451, mean_query_len: 12, pop_theta: 0.85, pair_affinity: 0.6 },
+    DatasetProfile { name: "sports-outdoors", table_rows: 962_876, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.7 },
+    DatasetProfile { name: "office-products", table_rows: 306_800, mean_query_len: 6, pop_theta: 0.75, pair_affinity: 0.75 },
+];
+
+/// Query generator for one profile.
+pub struct QueryGen {
+    profile: DatasetProfile,
+    zipf: super::keydist::Zipf,
+    rng: Rng,
+    /// Scale-down factor applied to table_rows (benchmarks use reduced
+    /// tables; recorded so EXPERIMENTS.md can report it).
+    pub scale: usize,
+}
+
+impl QueryGen {
+    pub fn new(profile: DatasetProfile, scale: usize, seed: u64) -> Self {
+        let rows = (profile.table_rows / scale.max(1)).max(1000);
+        QueryGen {
+            profile,
+            zipf: super::keydist::Zipf::new(rows as u64, profile.pop_theta),
+            rng: Rng::new(seed),
+            scale: scale.max(1),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        (self.profile.table_rows / self.scale).max(1000)
+    }
+
+    pub fn profile(&self) -> &DatasetProfile {
+        &self.profile
+    }
+
+    /// Generate one query: a list of feature ids. Features come in
+    /// correlated pairs with probability `pair_affinity` (item k pairs
+    /// with item k^1 — a fixed partner), else independent populars.
+    pub fn query(&mut self) -> Vec<u32> {
+        // Poisson-ish length around the mean (±50%).
+        let base = self.profile.mean_query_len as u64;
+        let len = self.rng.range(base - base / 2, base + base / 2 + 1) as usize;
+        let mut q = Vec::with_capacity(len);
+        while q.len() < len {
+            let a = self.zipf.sample(&mut self.rng) as u32;
+            if q.len() + 2 <= len && self.rng.chance(self.profile.pair_affinity) {
+                q.push(a & !1);
+                q.push(a | 1);
+            } else {
+                q.push(a);
+            }
+        }
+        q.truncate(len);
+        for f in q.iter_mut() {
+            *f = (*f as usize % self.rows()) as u32;
+        }
+        q
+    }
+
+    /// A batch of training queries (for MERCI memo construction).
+    pub fn training_set(&mut self, n: usize) -> Vec<Vec<u32>> {
+        (0..n).map(|_| self.query()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_cover_six_datasets() {
+        assert_eq!(AMAZON_PROFILES.len(), 6);
+        let names: Vec<_> = AMAZON_PROFILES.iter().map(|p| p.name).collect();
+        assert!(names.contains(&"books"));
+        assert!(AMAZON_PROFILES.iter().all(|p| p.table_rows > 100_000));
+    }
+
+    #[test]
+    fn query_lengths_follow_the_profile() {
+        let mut g = QueryGen::new(AMAZON_PROFILES[0], 10, 1);
+        let mean: f64 = (0..10_000).map(|_| g.query().len() as f64).sum::<f64>() / 10_000.0;
+        let want = AMAZON_PROFILES[0].mean_query_len as f64;
+        assert!((mean - want).abs() < 1.0, "mean {mean} want ~{want}");
+    }
+
+    #[test]
+    fn features_stay_in_table_range() {
+        let mut g = QueryGen::new(AMAZON_PROFILES[3], 20, 2);
+        let rows = g.rows() as u32;
+        for _ in 0..1000 {
+            assert!(g.query().iter().all(|&f| f < rows));
+        }
+    }
+
+    #[test]
+    fn pair_affinity_creates_repeating_pairs() {
+        let mut g = QueryGen::new(AMAZON_PROFILES[5], 10, 3);
+        let mut pair_count = std::collections::HashMap::<(u32, u32), u32>::new();
+        for _ in 0..5_000 {
+            for w in g.query().chunks(2) {
+                if let [a, b] = *w {
+                    let k = if a <= b { (a, b) } else { (b, a) };
+                    *pair_count.entry(k).or_default() += 1;
+                }
+            }
+        }
+        // Some pairs must repeat often — the memoizable structure.
+        let max = pair_count.values().max().copied().unwrap_or(0);
+        assert!(max > 50, "hottest pair seen {max} times");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = QueryGen::new(AMAZON_PROFILES[1], 10, 42);
+        let mut b = QueryGen::new(AMAZON_PROFILES[1], 10, 42);
+        for _ in 0..100 {
+            assert_eq!(a.query(), b.query());
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Key distributions. The Zipfian sampler is the standard YCSB/Gray et
+//! al. rejection-free construction with precomputed constants — O(1) per
+//! sample for any N (we need N = 100 M), exact for parameter θ ∈ (0, 1).
+
+use crate::sim::Rng;
+
+/// Zipfian(θ) over `[0, n)` (θ = 0.9 in §VI-B).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf {
+            n,
+            theta,
+            alpha,
+            zetan,
+            eta,
+            zeta2,
+        }
+    }
+
+    /// Generalized harmonic number H_{n,θ}. Exact sum below a cutoff,
+    /// Euler–Maclaurin integral approximation above it (needed for
+    /// n = 100 M without a multi-second init).
+    fn zeta(n: u64, theta: f64) -> f64 {
+        const EXACT: u64 = 1_000_000;
+        if n <= EXACT {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            let head: f64 = (1..=EXACT).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+            // ∫_{EXACT}^{n} x^-θ dx + midpoint correction
+            let a = EXACT as f64;
+            let b = n as f64;
+            let integral = (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta);
+            head + integral + 0.5 * (b.powf(-theta) - a.powf(-theta))
+        }
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let r = ((self.n as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        r.min(self.n - 1)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Probability mass of the single hottest key (sanity metric).
+    pub fn p_top(&self) -> f64 {
+        1.0 / self.zetan
+    }
+
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+/// A key distribution for the KVS experiments. Keys are *ranks* scattered
+/// over the id space by a bijective mix so that hot keys are not
+/// physically adjacent (as in YCSB).
+#[derive(Clone, Debug)]
+pub enum KeyDist {
+    Uniform { n: u64 },
+    Zipf(Zipf),
+}
+
+impl KeyDist {
+    pub fn uniform(n: u64) -> Self {
+        KeyDist::Uniform { n }
+    }
+
+    pub fn zipf(n: u64, theta: f64) -> Self {
+        KeyDist::Zipf(Zipf::new(n, theta))
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KeyDist::Uniform { .. } => "uniform",
+            KeyDist::Zipf(_) => "zipf-0.9",
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        match self {
+            KeyDist::Uniform { n } => *n,
+            KeyDist::Zipf(z) => z.n(),
+        }
+    }
+
+    /// Sample a key id. Uniform draws are uniform already; Zipf ranks are
+    /// scattered by a hash so hot keys are not physically adjacent (as in
+    /// YCSB).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            KeyDist::Uniform { n } => rng.below(*n),
+            KeyDist::Zipf(z) => scatter(z.sample(rng), z.n()),
+        }
+    }
+}
+
+/// Hash-scatter of ranks over [0, n). Not a bijection after the modulo;
+/// rare collisions merge key identities, which only (negligibly)
+/// sharpens the skew — harmless for cache/popularity behaviour.
+fn scatter(rank: u64, n: u64) -> u64 {
+    let mut z = rank.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    (z ^ (z >> 31)) % n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_head_mass_is_correct() {
+        // For n=1e6, θ=0.9: p(top) = 1/ζ ≈ 1/19.9 ≈ 5%.
+        let z = Zipf::new(1_000_000, 0.9);
+        let mut rng = Rng::new(1);
+        let hits = (0..100_000).filter(|_| z.sample(&mut rng) == 0).count();
+        let p = hits as f64 / 100_000.0;
+        assert!((p - z.p_top()).abs() < 0.01, "p {p} vs want {}", z.p_top());
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_mass() {
+        // Top 1% of ranks should absorb a large fraction at θ=0.9.
+        let n = 100_000u64;
+        let z = Zipf::new(n, 0.9);
+        let mut rng = Rng::new(2);
+        let in_top = (0..100_000)
+            .filter(|_| z.sample(&mut rng) < n / 100)
+            .count();
+        let frac = in_top as f64 / 100_000.0;
+        // ~48% of mass on 1% of keys at θ=0.9 (vs 1% under uniform).
+        assert!((0.40..0.80).contains(&frac), "top-1% mass {frac}");
+    }
+
+    #[test]
+    fn zeta_approximation_matches_exact() {
+        // Compare approximated ζ against a direct (slow) sum at 2e6.
+        let approx = Zipf::zeta(2_000_000, 0.9);
+        let exact: f64 = (1..=2_000_000u64).map(|i| 1.0 / (i as f64).powf(0.9)).sum();
+        assert!((approx - exact).abs() / exact < 1e-6, "{approx} vs {exact}");
+    }
+
+    #[test]
+    fn uniform_covers_the_space_evenly() {
+        let d = KeyDist::uniform(1000);
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            counts[d.sample(&mut rng) as usize] += 1;
+        }
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero > 990);
+        assert!(*counts.iter().max().unwrap() < 200);
+    }
+
+    #[test]
+    fn zipf_sampler_is_fast_for_100m_keys() {
+        // Init + 1M samples under a couple of seconds (O(1) sampling).
+        let t0 = std::time::Instant::now();
+        let z = Zipf::new(100_000_000, 0.9);
+        let mut rng = Rng::new(4);
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(z.sample(&mut rng));
+        }
+        assert!(acc > 0);
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn scatter_spreads_hot_ranks() {
+        let n = 1_000_000;
+        let a = scatter(0, n);
+        let b = scatter(1, n);
+        assert!(a.abs_diff(b) > 1000, "adjacent ranks must not be adjacent keys");
+        // And it is deterministic.
+        assert_eq!(scatter(0, n), a);
+    }
+}

@@ -1,0 +1,51 @@
+//! Workload generators: key distributions (uniform / Zipfian-0.9, §VI-B),
+//! KVS op mixes, transaction shapes (§VI-C), and the synthetic
+//! Amazon-Review-like DLRM query streams (§VI-D substitution — see
+//! DESIGN.md).
+
+pub mod amazon;
+pub mod keydist;
+
+pub use amazon::{DatasetProfile, QueryGen, AMAZON_PROFILES};
+pub use keydist::{KeyDist, Zipf};
+
+use crate::sim::Rng;
+
+/// KVS operation mix (§VI-B: 100% GET, or 50/50 GET/PUT).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMix {
+    GetOnly,
+    HalfPut,
+}
+
+impl KvMix {
+    pub fn label(self) -> &'static str {
+        match self {
+            KvMix::GetOnly => "100% GET",
+            KvMix::HalfPut => "50% GET / 50% PUT",
+        }
+    }
+
+    /// Is the next op a GET?
+    pub fn next_is_get(self, rng: &mut Rng) -> bool {
+        match self {
+            KvMix::GetOnly => true,
+            KvMix::HalfPut => rng.chance(0.5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_have_expected_ratios() {
+        let mut rng = Rng::new(1);
+        let gets = (0..10_000)
+            .filter(|_| KvMix::HalfPut.next_is_get(&mut rng))
+            .count();
+        assert!((4_700..5_300).contains(&gets), "{gets}");
+        assert!((0..100).all(|_| KvMix::GetOnly.next_is_get(&mut rng)));
+    }
+}

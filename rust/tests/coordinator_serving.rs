@@ -1,0 +1,88 @@
+//! Integration test: the threaded serving coordinator over the real
+//! artifact bundle — concurrent clients, dynamic batching, deadline
+//! flushes, clean shutdown with stats.
+
+use orca::coordinator::{BatchPolicy, Coordinator};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("dlrm_manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn concurrent_clients_get_correct_individual_responses() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let coord = Coordinator::start(
+        dir,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+    )
+    .expect("start");
+
+    // Each client sends a distinctive query and checks determinism: the
+    // same query twice must give the same logit even when batched with
+    // other clients' traffic.
+    let results: Vec<(f32, f32)> = std::thread::scope(|s| {
+        let coord = &coord;
+        let handles: Vec<_> = (0..6)
+            .map(|c| {
+                s.spawn(move || {
+                    let dense = vec![0.1 * c as f32; 13];
+                    let query = vec![c as u32 * 7 + 1, c as u32 * 13 + 2];
+                    let a = coord
+                        .infer_blocking(dense.clone(), query.clone())
+                        .expect("first");
+                    let b = coord.infer_blocking(dense, query).expect("second");
+                    (a.logit, b.logit)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, (a, b)) in results.iter().enumerate() {
+        assert_eq!(a, b, "client {i} nondeterministic");
+        assert!(a.is_finite());
+    }
+    // Distinct clients ⇒ distinct logits (queries differ).
+    for i in 1..results.len() {
+        assert_ne!(results[0].0, results[i].0, "client {i} collided");
+    }
+
+    let stats = coord.shutdown().expect("stats");
+    assert_eq!(stats.requests, 12);
+    assert!(stats.batches >= 2);
+}
+
+#[test]
+fn deadline_flushes_partial_batches() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    // Batch 32 but only one request: the 5ms deadline must flush it.
+    let coord = Coordinator::start(
+        dir,
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+        },
+    )
+    .expect("start");
+    let (tx, rx) = mpsc::channel();
+    coord.submit(vec![0.0; 13], vec![1, 2, 3], tx);
+    let resp = rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("deadline flush delivered the response");
+    assert!(resp.logit.is_finite());
+    let stats = coord.shutdown().expect("stats");
+    assert_eq!(stats.requests, 1);
+    assert!((stats.mean_batch - 1.0).abs() < 1e-9);
+}

@@ -1,0 +1,125 @@
+//! Integration test over the experiment harness: every paper table and
+//! figure regenerates (small configs) and reproduces the paper's
+//! *qualitative* claims end to end through the public API.
+
+use orca::cli;
+use orca::experiments::{self, Opts};
+
+fn small_opts() -> Opts {
+    Opts {
+        seed: 42,
+        keys: 100_000,
+        requests: 30_000,
+        ..Opts::default()
+    }
+}
+
+#[test]
+fn fig4_table_reproduces_the_truth_table() {
+    let tb = experiments::fig4::report(&small_opts());
+    assert_eq!(tb.n_rows(), 4);
+    // Rows: (on,1), (on,0), (off,1) → LLC; (off,0) → memory.
+    assert_eq!(tb.cell(0, 4), "LLC");
+    assert_eq!(tb.cell(1, 4), "LLC");
+    assert_eq!(tb.cell(2, 4), "LLC");
+    assert_eq!(tb.cell(3, 4), "memory");
+}
+
+#[test]
+fn fig7_cpoll_wins_in_the_rendered_table() {
+    let tb = experiments::fig7::report(&small_opts());
+    assert_eq!(tb.n_rows(), 5);
+    let mean = |r: usize| tb.cell(r, 1).parse::<f64>().unwrap();
+    for poll_row in 1..5 {
+        assert!(mean(0) < mean(poll_row), "cpoll row must have least mean");
+    }
+}
+
+#[test]
+fn fig8_fig9_fig10_render_with_expected_geometry() {
+    let opts = small_opts();
+    let f8 = cli::fig8(&opts);
+    assert_eq!(f8.n_rows(), 10); // 5 designs × 2 mixes
+    let f9 = cli::fig9(&opts);
+    assert_eq!(f9.n_rows(), 10); // 5 designs × 2 distributions
+    let f10 = cli::fig10(&opts);
+    assert_eq!(f10.n_rows(), 18); // 3 designs × 6 batch sizes
+}
+
+#[test]
+fn fig8_claims_hold_in_rendered_output() {
+    let opts = small_opts();
+    let tb = cli::fig8(&opts);
+    // Row 0: CPU GET; row 2: ORCA GET — uniform column (index 2).
+    let cpu: f64 = tb.cell(0, 2).parse().unwrap();
+    let orca: f64 = tb.cell(2, 2).parse().unwrap();
+    assert!(orca > cpu, "ORCA {orca} must beat CPU {cpu} (Fig 8)");
+    // SmartNIC row 1: uniform < zipf (distribution sensitivity).
+    let nic_uni: f64 = tb.cell(1, 2).parse().unwrap();
+    let nic_zipf: f64 = tb.cell(1, 3).parse().unwrap();
+    assert!(nic_uni < nic_zipf * 0.8);
+}
+
+#[test]
+fn tab3_ordering_holds() {
+    let rows = experiments::tab3::run(&small_opts());
+    assert!(rows[2].kops_per_w > rows[0].kops_per_w, "ORCA > CPU");
+    assert!(rows[0].kops_per_w > rows[1].kops_per_w, "CPU > SmartNIC");
+}
+
+#[test]
+fn fig11_multi_op_reduction_in_range() {
+    let r = experiments::fig11::run_cell(
+        &small_opts().testbed,
+        (4, 2),
+        64,
+        20_000,
+        1,
+    );
+    assert!((0.5..0.8).contains(&r.avg_reduction), "{}", r.avg_reduction);
+}
+
+#[test]
+fn fig12_all_datasets_reproduce_the_ordering() {
+    for r in experiments::fig12::run_all(&small_opts()) {
+        assert!(r.orca_qps < r.cpu_qps[0], "{}: base ORCA < 1 core", r.dataset);
+        assert!(r.lh_qps > r.cpu_qps[3], "{}: LH > 8 cores", r.dataset);
+        assert!(r.ld_qps > r.orca_qps * 5.0, "{}: LD ≫ base", r.dataset);
+    }
+}
+
+#[test]
+fn cli_parses_and_runs_a_small_experiment() {
+    let cli = cli::parse(&[
+        "fig4".to_string(),
+        "--seed".into(),
+        "7".into(),
+        "--requests".into(),
+        "1000".into(),
+    ])
+    .expect("parse");
+    cli::run(&cli).expect("fig4 runs");
+}
+
+#[test]
+fn overrides_flow_through_to_results() {
+    // §VII: with a faster network, ORCA-LH (no controller bound) scales
+    // up, while base ORCA stops at its soft coherence controller — the
+    // paper's own scalability discussion.
+    let mut fast = small_opts();
+    fast.testbed.net.line_gbps = 100.0;
+    let base = cli::fig8(&small_opts());
+    let fat = cli::fig8(&fast);
+    let lh_base: f64 = base.cell(4, 2).parse().unwrap();
+    let lh_fast: f64 = fat.cell(4, 2).parse().unwrap();
+    assert!(
+        lh_fast > lh_base * 1.5,
+        "100G should lift ORCA-LH: {lh_base} → {lh_fast}"
+    );
+    let orca_base: f64 = base.cell(2, 2).parse().unwrap();
+    let orca_fast: f64 = fat.cell(2, 2).parse().unwrap();
+    assert!(
+        orca_fast < orca_base * 1.3,
+        "base ORCA must hit the soft-controller bound: {orca_base} → {orca_fast}"
+    );
+}

@@ -1,0 +1,113 @@
+//! Integration test: the full AOT round trip — HLO-text artifacts built
+//! by `make artifacts` (JAX + Pallas, interpret mode) loaded and executed
+//! through the PJRT CPU client, with numerics cross-checked against the
+//! Rust functional DLRM layer.
+//!
+//! Skips (with a message) when `artifacts/` has not been built — the
+//! `make test` path always builds it first.
+
+use orca::apps::dlrm::{EmbeddingConfig, EmbeddingTable};
+use orca::runtime::DlrmExecutor;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("dlrm_manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn load_and_execute_all_batch_variants() {
+    let dir = require_artifacts!();
+    let mut exec = DlrmExecutor::load(&dir).expect("load artifact bundle");
+    for b in exec.batch_sizes() {
+        let dense: Vec<Vec<f32>> = (0..b).map(|i| vec![i as f32 * 0.01; 13]).collect();
+        let queries: Vec<Vec<u32>> = (0..b).map(|i| vec![(i as u32) + 1, 5, 9]).collect();
+        let logits = exec.infer(&dense, &queries).expect("infer");
+        assert_eq!(logits.len(), b);
+        assert!(logits.iter().all(|l| l.is_finite()));
+    }
+}
+
+#[test]
+fn padding_preserves_real_queries() {
+    let dir = require_artifacts!();
+    let mut exec = DlrmExecutor::load(&dir).expect("load");
+    // 3 queries into a batch-8 module: the 3 logits must equal the same
+    // queries run inside a full batch.
+    let dense: Vec<Vec<f32>> = (0..3).map(|i| vec![0.1 * i as f32; 13]).collect();
+    let queries: Vec<Vec<u32>> = vec![vec![1, 2], vec![3, 4, 5], vec![6]];
+    let partial = exec.infer(&dense, &queries).expect("partial batch");
+
+    let mut dense8 = dense.clone();
+    let mut queries8 = queries.clone();
+    while dense8.len() < 8 {
+        dense8.push(vec![0.0; 13]);
+        queries8.push(vec![0]);
+    }
+    let full = exec.infer(&dense8, &queries8).expect("full batch");
+    for i in 0..3 {
+        assert!(
+            (partial[i] - full[i]).abs() < 1e-5,
+            "query {i}: {} vs {}",
+            partial[i],
+            full[i]
+        );
+    }
+}
+
+#[test]
+fn served_numerics_track_the_functional_reduction() {
+    // Two queries that differ by one feature: the served logit must move,
+    // and with identical queries it must not.
+    let dir = require_artifacts!();
+    let mut exec = DlrmExecutor::load(&dir).expect("load");
+    let dense = vec![vec![0.25f32; 13]];
+    let a = exec.infer(&dense, &[vec![10, 20, 30]]).unwrap()[0];
+    let b = exec.infer(&dense, &[vec![10, 20, 30]]).unwrap()[0];
+    let c = exec.infer(&dense, &[vec![10, 20, 31]]).unwrap()[0];
+    assert_eq!(a, b, "deterministic");
+    assert_ne!(a, c, "query-sensitive");
+
+    // And the functional table the Rust side builds from the shared init
+    // formula is itself sensitive the same way.
+    let table = EmbeddingTable::new(EmbeddingConfig {
+        rows: exec.manifest.rows,
+        dim: exec.manifest.dim,
+        base_addr: 0,
+    });
+    let r1 = table.reduce(&[10, 20, 30]);
+    let r2 = table.reduce(&[10, 20, 31]);
+    assert!(r1.iter().zip(&r2).any(|(x, y)| x != y));
+}
+
+#[test]
+fn out_of_range_features_are_rejected() {
+    let dir = require_artifacts!();
+    let mut exec = DlrmExecutor::load(&dir).expect("load");
+    let rows = exec.manifest.rows as u32;
+    let err = exec.infer(&[vec![0.0; 13]], &[vec![rows]]);
+    assert!(err.is_err(), "feature id == rows must be rejected");
+}
+
+#[test]
+fn oversized_batches_are_rejected() {
+    let dir = require_artifacts!();
+    let mut exec = DlrmExecutor::load(&dir).expect("load");
+    let max = *exec.batch_sizes().last().unwrap();
+    let n = max + 1;
+    let dense: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; 13]).collect();
+    let queries: Vec<Vec<u32>> = (0..n).map(|_| vec![1]).collect();
+    assert!(exec.infer(&dense, &queries).is_err());
+}
