@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
                 for _ in 0..per_client {
                     let (d, q) = mk_query(&mut rng);
                     let t = Instant::now();
-                    coord.submit(d, q, tx.clone());
+                    coord.submit(d, q, tx.clone()).expect("submit");
                     let resp = rx.recv().expect("response");
                     h.record(t.elapsed().as_nanos() as u64);
                     let _ = resp.logit;

@@ -21,22 +21,74 @@ pub use sq_handler::SqHandler;
 use crate::config::{AccelMem, Testbed};
 use crate::mem::MemTrace;
 use crate::sim::{cycles_ps, transfer_ps, BandwidthLedger, MultiServer, Server, NS};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// The cc-interconnect's data-return path. There is **one** physical
+/// UPI link per socket, so accelerator shards gathering from host
+/// memory must share it — pass one handle to every shard
+/// ([`CcAccelerator::with_upi_link`]) and the link's bandwidth becomes
+/// the aggregate cap that binds when per-shard controller bounds no
+/// longer do.
+pub type UpiLink = Rc<RefCell<BandwidthLedger>>;
+
+/// A fresh (unshared) UPI-link ledger.
+pub fn upi_link() -> UpiLink {
+    Rc::new(RefCell::new(BandwidthLedger::new()))
+}
 
 /// The memory path application data takes from the APU.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 enum MemPath {
     /// Base ORCA: every access crosses the cc-interconnect to host memory;
     /// the soft coherence controller sustains a bounded number of
     /// outstanding reads — modeled exactly as K slots each occupied for
     /// the access round trip (a `MultiServer` lane per slot, so idle
-    /// slots absorb out-of-order issue from interleaved requests).
-    Host { coh: MultiServer, rtt_ps: u64 },
+    /// slots absorb out-of-order issue from interleaved requests) — and
+    /// the returned lines serialize on the (possibly shared) UPI link.
+    Host {
+        coh: MultiServer,
+        rtt_ps: u64,
+        link: UpiLink,
+        upi_gbs: f64,
+    },
     /// ORCA-LD / ORCA-LH: data in accelerator-attached memory.
     Local {
         chan: BandwidthLedger,
         latency_ps: u64,
         per_byte: f64, // GB/s of the local memory
     },
+}
+
+impl Clone for MemPath {
+    /// A cloned accelerator is an independent device: it gets a fresh,
+    /// unconsumed UPI-link ledger, never a silently shared (or
+    /// snapshotted) one. Sharing is only ever explicit, via
+    /// [`CcAccelerator::with_upi_link`].
+    fn clone(&self) -> Self {
+        match self {
+            MemPath::Host {
+                coh,
+                rtt_ps,
+                link: _,
+                upi_gbs,
+            } => MemPath::Host {
+                coh: coh.clone(),
+                rtt_ps: *rtt_ps,
+                link: upi_link(),
+                upi_gbs: *upi_gbs,
+            },
+            MemPath::Local {
+                chan,
+                latency_ps,
+                per_byte,
+            } => MemPath::Local {
+                chan: chan.clone(),
+                latency_ps: *latency_ps,
+                per_byte: *per_byte,
+            },
+        }
+    }
 }
 
 /// The composed cc-accelerator (timing model).
@@ -64,10 +116,18 @@ pub fn host_access_rtt_ps(t: &Testbed) -> u64 {
 
 impl CcAccelerator {
     pub fn new(t: &Testbed, mem: AccelMem) -> Self {
+        Self::with_upi_link(t, mem, upi_link())
+    }
+
+    /// Build a shard that shares `link` with the other shards on the
+    /// same socket (single-shard callers can just use [`Self::new`]).
+    pub fn with_upi_link(t: &Testbed, mem: AccelMem, link: UpiLink) -> Self {
         let mem_path = match mem.bandwidth_gbs() {
             None => MemPath::Host {
                 coh: MultiServer::new(t.accel.coh_outstanding),
                 rtt_ps: host_access_rtt_ps(t),
+                link,
+                upi_gbs: t.upi.bandwidth_gbs,
             },
             Some(gbs) => {
                 let latency_ns = match mem {
@@ -95,12 +155,22 @@ impl CcAccelerator {
     fn access(&mut self, now: u64, bytes: u64) -> u64 {
         self.data_bytes += bytes;
         match &mut self.mem_path {
-            MemPath::Host { coh, rtt_ps } => {
+            MemPath::Host {
+                coh,
+                rtt_ps,
+                link,
+                upi_gbs,
+            } => {
                 // Larger transfers stretch the data leg of the RTT; the
                 // slot is held for the whole round trip.
-                let extra = transfer_ps(bytes.saturating_sub(64), 20.8);
+                let extra = transfer_ps(bytes.saturating_sub(64), *upi_gbs);
                 let (_s, done, _lane) = coh.acquire(now, *rtt_ps + extra);
-                done
+                // The returned line also serializes on the shared UPI
+                // link; uncontended this finishes well inside the RTT,
+                // but with many shards it is the aggregate cap.
+                let wire = transfer_ps(bytes.max(64), *upi_gbs);
+                let (_s, ser_done) = link.borrow_mut().acquire(now, wire);
+                done.max(ser_done)
             }
             MemPath::Local {
                 chan,
@@ -247,6 +317,40 @@ mod tests {
         // And that bound clears the 25Gbps network bound (~21.4 Mops), so
         // ORCA KV is network-bound end to end (§VI-B).
         assert!(want > 20.0, "controller bound {want} Mops must exceed network");
+    }
+
+    #[test]
+    fn shared_upi_link_caps_aggregate_shard_bandwidth() {
+        // On a deliberately skinny link, two shards sharing the wire
+        // finish a fixed workload ~2x slower than two shards with a
+        // (physically impossible) private link each.
+        let mut tb = Testbed::paper();
+        tb.upi.bandwidth_gbs = 2.0;
+        let n = 30_000u64;
+        let jobs: Vec<(u64, MemTrace)> = (0..n).map(|_| (0u64, get_trace())).collect();
+
+        let link = upi_link();
+        let mut a = CcAccelerator::with_upi_link(&tb, AccelMem::None, link.clone());
+        let mut b = CcAccelerator::with_upi_link(&tb, AccelMem::None, link);
+        let shared = a
+            .serve_stream(&jobs)
+            .into_iter()
+            .max()
+            .unwrap()
+            .max(b.serve_stream(&jobs).into_iter().max().unwrap());
+
+        let mut c = CcAccelerator::new(&tb, AccelMem::None);
+        // Clone semantics: an independent device with its own link.
+        let mut d = c.clone();
+        let independent = c
+            .serve_stream(&jobs)
+            .into_iter()
+            .max()
+            .unwrap()
+            .max(d.serve_stream(&jobs).into_iter().max().unwrap());
+
+        let ratio = shared as f64 / independent as f64;
+        assert!((1.7..2.3).contains(&ratio), "shared/independent = {ratio}");
     }
 
     #[test]

@@ -129,6 +129,15 @@ impl HyperLoopChain {
     }
 }
 
+/// HyperLoop serves one transaction at a time (sequential group RDMA)
+/// — the closed-loop side of the serving layer.
+impl crate::serving::ClosedLoop for HyperLoopChain {
+    type Job = TxnShape;
+    fn serve_one(&mut self, now: u64, job: &TxnShape) -> u64 {
+        self.execute(now, *job)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,10 +1,11 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
-//! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3, all,
-//! serve (coordinator demo), info.
+//! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
+//! sharding, all, serve (coordinator demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
-//! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points).
+//! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points),
+//! --shards LIST (sharding: shard counts to sweep).
 
 use crate::config::{Overrides, Testbed};
 use crate::experiments::{self, Opts};
@@ -16,6 +17,8 @@ pub struct Cli {
     pub opts: Opts,
     pub artifacts: std::path::PathBuf,
     pub cdf: bool,
+    /// Shard counts for the `sharding` sweep.
+    pub shards: Vec<usize>,
 }
 
 pub const USAGE: &str = "\
@@ -32,6 +35,7 @@ COMMANDS:
   tab3    power efficiency (Kop/W)
   fig11   chain-replication transaction latency
   fig12   DLRM inference throughput
+  sharding  multi-APU sharding sweep (throughput vs shard count)
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
   info    testbed parameters after overrides
@@ -44,6 +48,7 @@ FLAGS:
   --config FILE     read overrides from FILE (key=value lines)
   --artifacts DIR   artifact bundle for `serve` (default ./artifacts)
   --cdf             with fig7: dump CDF points for plotting
+  --shards LIST     comma-separated shard counts for `sharding` (default 1,2,4,8)
 ";
 
 pub fn parse(args: &[String]) -> Result<Cli> {
@@ -55,6 +60,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut overrides = Overrides::new();
     let mut artifacts = std::path::PathBuf::from("artifacts");
     let mut cdf = false;
+    let mut shards: Vec<usize> = experiments::sharding::SHARD_COUNTS.to_vec();
     let mut i = 1;
     while i < args.len() {
         let take = |i: &mut usize| -> Result<String> {
@@ -76,6 +82,20 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             }
             "--artifacts" => artifacts = take(&mut i)?.into(),
             "--cdf" => cdf = true,
+            "--shards" => {
+                let list = take(&mut i)?;
+                shards = list
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<usize>()
+                            .with_context(|| format!("bad shard count `{s}`"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if shards.is_empty() || shards.contains(&0) {
+                    bail!("--shards needs positive counts, got `{list}`");
+                }
+            }
             "-h" | "--help" => bail!("{USAGE}"),
             other => bail!("unknown flag `{other}`\n\n{USAGE}"),
         }
@@ -89,6 +109,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         opts,
         artifacts,
         cdf,
+        shards,
     })
 }
 
@@ -115,6 +136,7 @@ pub fn run(cli: &Cli) -> Result<()> {
         "tab3" => experiments::tab3::report(&cli.opts).print(),
         "fig11" => experiments::fig11::report(&cli.opts).print(),
         "fig12" => experiments::fig12::report(&cli.opts).print(),
+        "sharding" => experiments::sharding::report(&cli.opts, &cli.shards).print(),
         "all" => {
             experiments::fig4::report(&cli.opts).print();
             experiments::fig4::report_nvm(&cli.opts).print();
@@ -125,6 +147,7 @@ pub fn run(cli: &Cli) -> Result<()> {
             experiments::tab3::report(&cli.opts).print();
             experiments::fig11::report(&cli.opts).print();
             experiments::fig12::report(&cli.opts).print();
+            experiments::sharding::report(&cli.opts, &cli.shards).print();
         }
         "serve" => serve(cli)?,
         "info" => info(&cli.opts),
@@ -258,7 +281,7 @@ fn serve(cli: &Cli) -> Result<()> {
     for _ in 0..n {
         let dense: Vec<f32> = (0..13).map(|_| rng.f64() as f32).collect();
         let query: Vec<u32> = (0..8).map(|_| rng.below(1000) as u32 + 1).collect();
-        coord.submit(dense, query, tx.clone());
+        coord.submit(dense, query, tx.clone())?;
     }
     drop(tx);
     let mut got = 0u64;
@@ -297,6 +320,16 @@ mod tests {
         assert_eq!(cli.opts.seed, 7);
         assert_eq!(cli.opts.keys, 1000);
         assert_eq!(cli.opts.testbed.net.line_gbps, 100.0);
+    }
+
+    #[test]
+    fn parses_shards_list() {
+        let cli = parse(&s(&["sharding", "--shards", "1,2,8"])).unwrap();
+        assert_eq!(cli.shards, vec![1, 2, 8]);
+        let def = parse(&s(&["sharding"])).unwrap();
+        assert_eq!(def.shards, experiments::sharding::SHARD_COUNTS.to_vec());
+        assert!(parse(&s(&["sharding", "--shards", "0,2"])).is_err());
+        assert!(parse(&s(&["sharding", "--shards", "x"])).is_err());
     }
 
     #[test]

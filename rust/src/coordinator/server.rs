@@ -69,20 +69,30 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request; the response arrives on `reply`.
-    pub fn submit(&self, dense: Vec<f32>, query: Vec<u32>, reply: mpsc::Sender<Response>) {
-        let _ = self.tx.send(Msg::Req(Box::new(Request {
-            dense,
-            query,
-            reply,
-            submitted: Instant::now(),
-        })));
+    /// Submit a request; the response arrives on `reply`. Fails when
+    /// the dispatcher thread is gone (shut down, or died serving an
+    /// earlier batch) — callers must see a dead dispatcher rather than
+    /// have the request silently vanish.
+    pub fn submit(
+        &self,
+        dense: Vec<f32>,
+        query: Vec<u32>,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<()> {
+        self.tx
+            .send(Msg::Req(Box::new(Request {
+                dense,
+                query,
+                reply,
+                submitted: Instant::now(),
+            })))
+            .map_err(|_| anyhow::anyhow!("coordinator dispatcher is not running"))
     }
 
     /// Convenience: blocking single inference.
     pub fn infer_blocking(&self, dense: Vec<f32>, query: Vec<u32>) -> Result<Response> {
         let (tx, rx) = mpsc::channel();
-        self.submit(dense, query, tx);
+        self.submit(dense, query, tx)?;
         rx.recv().context("coordinator dropped the request")
     }
 

@@ -20,4 +20,4 @@ pub mod checker;
 pub mod notify;
 
 pub use checker::{CpollChecker, Region};
-pub use notify::{NotifyModel, PollModel};
+pub use notify::{NotifyModel, PollModel, ShardedNotify};

@@ -81,6 +81,35 @@ impl NotifyModel {
     }
 }
 
+/// Per-shard cpoll rings for the multi-APU configuration: one
+/// notification path per accelerator shard. Rings are registered
+/// regions in each shard's own coherence-controller datapath, so
+/// notifications on different shards never contend; what sharding
+/// changes is *which* APU the invalidation wakes.
+#[derive(Clone, Debug)]
+pub struct ShardedNotify {
+    rings: Vec<NotifyModel>,
+}
+
+impl ShardedNotify {
+    pub fn new(t: &Testbed, shards: usize) -> Self {
+        assert!(shards > 0, "need at least one cpoll ring");
+        ShardedNotify {
+            rings: vec![NotifyModel::new(t); shards],
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Notification latency on `shard`'s ring. Panics on an
+    /// out-of-range shard — a routing bug should fail loudly, not wrap.
+    pub fn sample(&self, shard: usize, rng: &mut Rng) -> u64 {
+        self.rings[shard].sample(rng)
+    }
+}
+
 /// Spin-polling notification latency at a given poll interval.
 #[derive(Clone, Copy, Debug)]
 pub struct PollModel {
@@ -189,6 +218,22 @@ mod tests {
         let pm = PollModel::new(&t, 1);
         assert!(pm.period_ps > pm.interval_ps);
         assert_eq!(pm.period_ps, pm.rtt_ps);
+    }
+
+    #[test]
+    fn sharded_rings_match_the_single_ring_timing() {
+        // Per-shard rings are independent instances of the same path:
+        // with the same RNG stream, any ring samples identically to the
+        // single-ring model (sharding redirects, it does not slow down).
+        let t = Testbed::paper();
+        let single = NotifyModel::new(&t);
+        let sharded = ShardedNotify::new(&t, 4);
+        assert_eq!(sharded.shards(), 4);
+        let mut r1 = Rng::new(11);
+        let mut r2 = Rng::new(11);
+        for shard in 0..4 {
+            assert_eq!(single.sample(&mut r1), sharded.sample(shard, &mut r2));
+        }
     }
 
     #[test]

@@ -112,57 +112,18 @@ impl CpuServer {
     /// each core takes whatever is pending — up to `batch` — whenever it
     /// frees up, like MICA's RX-queue batching. No waiting to fill B.
     /// `jobs` must be sorted by arrival; `core_of(i)` maps job → core.
+    /// (The scheduler itself is shared with the SmartNIC server:
+    /// [`crate::serving::run_stream_batched`].)
     pub fn run_stream(
         &mut self,
         jobs: &[(u64, MemTrace)],
         core_of: impl Fn(usize) -> usize,
     ) -> Vec<u64> {
-        use std::cmp::Reverse;
-        use std::collections::{BinaryHeap, VecDeque};
         let n_cores = self.batches.len();
-        let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_cores];
-        for i in 0..jobs.len() {
-            queues[core_of(i) % n_cores].push_back(i);
-        }
-        let mut done = vec![0u64; jobs.len()];
-        // Global time order across cores (shared pipelines are timelines):
-        // heap of (next wake time, core).
-        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
-        let mut core_free = vec![0u64; n_cores];
-        for c in 0..n_cores {
-            if let Some(&first) = queues[c].front() {
-                heap.push(Reverse((jobs[first].0, c)));
-            }
-        }
-        while let Some(Reverse((start, c))) = heap.pop() {
-            let mut batch_idx = Vec::with_capacity(self.batch);
-            while let Some(&i) = queues[c].front() {
-                if jobs[i].0 <= start && batch_idx.len() < self.batch {
-                    batch_idx.push(i);
-                    queues[c].pop_front();
-                } else {
-                    break;
-                }
-            }
-            if batch_idx.is_empty() {
-                // Spurious wake (shouldn't happen): skip to next arrival.
-                if let Some(&first) = queues[c].front() {
-                    heap.push(Reverse((jobs[first].0.max(start + 1), c)));
-                }
-                continue;
-            }
-            let staged: Vec<(u64, MemTrace)> =
-                batch_idx.iter().map(|&i| jobs[i].clone()).collect();
-            let ds = self.exec_batch(start, staged);
-            core_free[c] = ds.iter().copied().max().unwrap_or(start);
-            for (&i, d) in batch_idx.iter().zip(ds) {
-                done[i] = d;
-            }
-            if let Some(&first) = queues[c].front() {
-                heap.push(Reverse((core_free[c].max(jobs[first].0), c)));
-            }
-        }
-        done
+        let batch = self.batch;
+        crate::serving::run_stream_batched(jobs, n_cores, batch, core_of, |_core, start, staged| {
+            self.exec_batch(start, staged)
+        })
     }
 
     /// Execute one batch starting at `ready` (the core is already

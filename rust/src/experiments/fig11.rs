@@ -14,7 +14,8 @@ use crate::apps::txn::{Chain, Transaction, TxOp};
 use crate::baselines::hyperloop::{ChainCosts, HyperLoopChain, TxnShape};
 use crate::config::Testbed;
 use crate::mem::Nvm;
-use crate::sim::{cycles_ps, Histogram, Rng, US};
+use crate::serving::{ClosedLoop, ServingPipeline};
+use crate::sim::{cycles_ps, Rng, US};
 
 pub const SHAPES: [(u32, u32); 2] = [(0, 1), (4, 2)];
 pub const VALUE_SIZES: [u64; 2] = [64, 1024];
@@ -79,6 +80,15 @@ impl OrcaTx {
     }
 }
 
+/// ORCA Tx serves one combined transaction at a time from the shared
+/// clock — the closed-loop side of the serving layer.
+impl ClosedLoop for OrcaTx {
+    type Job = TxnShape;
+    fn serve_one(&mut self, now: u64, job: &TxnShape) -> u64 {
+        self.execute(now, *job)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Fig11Row {
     pub shape: (u32, u32),
@@ -93,24 +103,13 @@ pub struct Fig11Row {
 
 pub fn run_cell(t: &Testbed, shape: (u32, u32), value_bytes: u64, txns: u64, seed: u64) -> Fig11Row {
     let s = TxnShape::new(shape.0, shape.1, value_bytes);
-    let mut rng = Rng::new(seed);
     // Issue one-by-one (§VI-C: "transactions are issued by the client one
-    // by one") with small think gaps.
+    // by one") with small think gaps — the serving layer's closed-loop
+    // lockstep driver.
     let mut hl = HyperLoopChain::new(t, 2);
     let mut orca = OrcaTx::new(t, 2);
-    let mut h_hl = Histogram::new();
-    let mut h_orca = Histogram::new();
-    let mut now = 0u64;
-    for _ in 0..txns {
-        let l1 = hl.execute(now, s) - now;
-        let l2 = orca.execute(now, s) - now;
-        // Client-side jitter on both (NIC/host variance).
-        let j1 = rng.exp(0.05 * l1 as f64) as u64;
-        let j2 = rng.exp(0.05 * l2 as f64) as u64;
-        h_hl.record(l1 + j1);
-        h_orca.record(l2 + j2);
-        now += (l1 + l2) / 2 + rng.below(2 * US);
-    }
+    let jobs = vec![s; txns as usize];
+    let (h_hl, h_orca) = ServingPipeline::lockstep(&mut hl, &mut orca, &jobs, seed);
     let red = |a: f64, b: f64| (a - b) / a;
     Fig11Row {
         shape,

@@ -17,28 +17,18 @@
 //! * Everything is additionally capped by the 25 Gbps request wire.
 
 use super::{Opts, Table};
-use crate::accel::host_access_rtt_ps;
 use crate::apps::dlrm::{EmbeddingConfig, EmbeddingTable, Merci};
 use crate::config::{AccelMem, Testbed};
+use crate::serving::analytic::{self, GatherProfile};
 use crate::workload::{DatasetProfile, QueryGen, AMAZON_PROFILES};
 
-/// Fraction of peak DRAM bandwidth a CPU core pool achieves on random
-/// embedding gathers (measured-gather-efficiency class constant).
-pub const CPU_GATHER_EFF: f64 = 0.55;
-/// Gather bandwidth one core sustains (MSHR-limited): ~10 misses in
-/// flight × 64 B / 90 ns class ⇒ the pool scales linearly to ~7 cores
-/// before hitting the 55%-of-120 GB/s wall (§VI-D: "scales linearly
-/// until eight cores ... bounded by the host memory bandwidth").
-pub const PER_CORE_GATHER_GBS: f64 = 9.5;
-/// Fraction of peak local bandwidth the APU's 64-deep window achieves.
-pub const APU_STREAM_EFF: f64 = 0.95;
-/// Row reads the soft coherence controller keeps in flight for the
-/// DLRM gather loop (§VI-D: "memory requests have to be issued serially
-/// from the FPGA's wimpy coherence controller" — unlike the KVS case,
-/// these are within-query 256 B row fetches on one FSM context).
-pub const ORCA_GATHER_OUTSTANDING: f64 = 4.0;
-/// Per-query CPU software cost (parse + MLP + bookkeeping), cycles.
-pub const CPU_QUERY_CYCLES: u64 = 2_600;
+// The per-design gather bounds live with the serving layer now; the
+// class constants are re-exported for compatibility.
+pub use crate::serving::analytic::{
+    APU_STREAM_EFF, CPU_GATHER_EFF, CPU_QUERY_CYCLES, ORCA_GATHER_OUTSTANDING,
+    PER_CORE_GATHER_GBS,
+};
+
 /// Embedding tables per model (DLRM has one per sparse feature; the
 /// MERCI configs cluster them — 16 is the evaluated scale).
 pub const TABLES_PER_QUERY: usize = 16;
@@ -53,6 +43,7 @@ pub struct Fig12Row {
     pub lh_qps: f64,
     /// Diagnostics.
     pub bytes_per_query: f64,
+    pub accesses_per_query: f64,
     pub memo_hit_rate: f64,
 }
 
@@ -90,39 +81,21 @@ pub fn run_dataset(t: &Testbed, profile: &DatasetProfile, opts: &Opts) -> Fig12R
     let (bytes_per_query, accesses_per_query, memo_hit_rate) =
         profile_queries(profile, 10, 2_000, opts.seed);
 
-    // CPU: min(compute bound, per-core gather bound, socket bound).
-    let query_s_compute = CPU_QUERY_CYCLES as f64 / (t.cpu.freq_mhz * 1e6);
-    let host_bw = t.dram.bandwidth_gbs * 1e9 * CPU_GATHER_EFF;
+    // The measured data-movement profile, handed to the serving layer's
+    // analytic bounds. Request = feature ids + dense; response tiny.
+    let gp = GatherProfile {
+        bytes_per_query,
+        accesses_per_query,
+        req_bytes: (profile.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82,
+    };
+
     let mut cpu_qps = [0f64; 4];
     for (i, cores) in [1usize, 2, 4, 8].iter().enumerate() {
-        let compute = *cores as f64 / query_s_compute;
-        let core_bw = *cores as f64 * PER_CORE_GATHER_GBS * 1e9;
-        let bw = core_bw.min(host_bw) / bytes_per_query;
-        cpu_qps[i] = compute.min(bw);
+        cpu_qps[i] = analytic::cpu_qps(t, &gp, *cores);
     }
-
-    // Network bound: request = feature ids + dense; response tiny.
-    let req_bytes = (profile.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82;
-    let net_qps = t.net.line_gbps / 8.0 * 1e9 / req_bytes as f64;
-
-    // ORCA base: near-serial row fetches over UPI from the soft
-    // controller — ORCA_GATHER_OUTSTANDING × row / RTT of achievable
-    // gather bandwidth.
-    let row_bytes = bytes_per_query / accesses_per_query; // avg access size
-    let rtt_s = host_access_rtt_ps(t) as f64 / 1e12
-        + row_bytes / (t.upi.bandwidth_gbs * 1e9);
-    let orca_gather_gbs = ORCA_GATHER_OUTSTANDING * row_bytes / rtt_s;
-    let orca_qps = (orca_gather_gbs / bytes_per_query)
-        .min(t.upi.bandwidth_gbs * 1e9 / bytes_per_query)
-        .min(net_qps);
-
-    // ORCA-LD / LH: local-memory streams.
-    let ld_qps = (AccelMem::LocalDdr.bandwidth_gbs().unwrap() * 1e9 * APU_STREAM_EFF
-        / bytes_per_query)
-        .min(net_qps);
-    let lh_qps = (AccelMem::LocalHbm.bandwidth_gbs().unwrap() * 1e9 * APU_STREAM_EFF
-        / bytes_per_query)
-        .min(net_qps);
+    let orca_qps = analytic::orca_host_qps(t, &gp);
+    let ld_qps = analytic::orca_local_qps(t, &gp, AccelMem::LocalDdr);
+    let lh_qps = analytic::orca_local_qps(t, &gp, AccelMem::LocalHbm);
 
     Fig12Row {
         dataset: profile.name,
@@ -131,6 +104,7 @@ pub fn run_dataset(t: &Testbed, profile: &DatasetProfile, opts: &Opts) -> Fig12R
         ld_qps,
         lh_qps,
         bytes_per_query,
+        accesses_per_query,
         memo_hit_rate,
     }
 }

@@ -1,8 +1,9 @@
 //! The KVS end-to-end driver behind Fig 8 (peak throughput), Fig 9
 //! (latency), Fig 10 (batch sweep) and Tab III (power).
 //!
-//! Pipeline per design (all over the *same* functional hash table and the
-//! same sampled key stream):
+//! All designs dispatch through the unified serving path
+//! ([`crate::serving::ServingPipeline`]) over the *same* functional hash
+//! table and the same sampled key stream:
 //!
 //! * **CPU** — two-sided RDMA RPC on `n` cores (HERD/MICA), batch-B
 //!   request processing ([`crate::cpu::CpuServer`]).
@@ -12,18 +13,14 @@
 //!   cc-accelerator APU ([`crate::accel::CcAccelerator`]) → SQ handler
 //!   doorbell-batched responses.
 
-use crate::accel::{CcAccelerator, SqHandler};
 use crate::apps::kvs::{HashTable, KvConfig};
 use crate::config::{AccelMem, Testbed};
-use crate::cpoll::NotifyModel;
-use crate::cpu::CpuServer;
-use crate::interconnect::Pcie;
 use crate::mem::MemTrace;
-use crate::net::Network;
-use crate::rnic::Rnic;
-use crate::sim::{Histogram, Rng, SEC, US};
-use crate::smartnic::SmartNicServer;
+use crate::serving::{self, ServingPipeline};
+use crate::sim::Rng;
 use crate::workload::{KeyDist, KvMix};
+
+pub use crate::serving::Load;
 
 /// Which serving design to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,16 +112,10 @@ impl RequestStream {
     }
 }
 
-/// Arrival model.
-#[derive(Clone, Copy, Debug)]
-pub enum Load {
-    /// Back-to-back at line rate (peak-throughput measurement).
-    Saturation,
-    /// Poisson arrivals at `mops` offered load (latency measurement).
-    Open { mops: f64 },
-}
-
-/// Run one design over a request stream. Returns the run metrics.
+/// Run one design over a request stream through the unified
+/// [`ServingPipeline`] (64 B request/response payloads; the two-sided
+/// CPU design adds its in-band RPC header itself). Returns the run
+/// metrics.
 pub fn run(
     t: &Testbed,
     design: KvDesign,
@@ -133,57 +124,13 @@ pub fn run(
     load: Load,
     seed: u64,
 ) -> KvRun {
-    let n = stream.traces.len();
-    let mut rng = Rng::new(seed ^ 0xD1CE);
-    let mut net = Network::new(t.net.clone());
-    // Request wire: 64B payload; the two-sided baseline carries the RPC
-    // header in-band (+12B) which is where ORCA's 2–8% edge comes from
-    // (§VI-B, [75,120]).
-    let req_bytes: u64 = match design {
-        KvDesign::Cpu => 80,
-        _ => 64,
-    };
-    let resp_bytes: u64 = 64;
-    let net_bound_mops = net.peak_mops(req_bytes);
-
-    // Issue times.
-    let mut issue = Vec::with_capacity(n);
-    match load {
-        Load::Saturation => {
-            issue.resize(n, 0u64);
-        }
-        Load::Open { mops } => {
-            let mean_gap_ps = 1e6 / mops; // ps between arrivals at `mops`
-            let mut tphys = 0f64;
-            for _ in 0..n {
-                tphys += rng.exp(mean_gap_ps);
-                issue.push(tphys as u64);
-            }
-        }
-    }
-
-    // Ingress.
-    let arrivals: Vec<u64> = issue
-        .iter()
-        .map(|&t0| net.send_to_server(t0, req_bytes))
-        .collect();
-
-    // Serve.
-    let mut host_frac = 0.0;
-    let mut done: Vec<(usize, u64)> = match design {
+    let pipe = ServingPipeline::new(load, 64, 64, seed);
+    let m = match design {
         KvDesign::Cpu => {
             let cores = 10; // §VI-B: ten threads saturate the network
-            let mut srv = CpuServer::new(t, cores, batch, seed);
-            let jobs: Vec<(u64, MemTrace)> = arrivals
-                .iter()
-                .zip(&stream.traces)
-                .map(|(&a, tr)| (a, tr.clone()))
-                .collect();
-            let ds = srv.run_stream(&jobs, |i| i % cores);
-            ds.into_iter().enumerate().collect()
+            pipe.run(&mut serving::Cpu::new(t, cores, batch, seed), &stream.traces)
         }
         KvDesign::SmartNic => {
-            let cores = t.smartnic.cores;
             // Scale the on-board cache to the dataset so the paper's
             // 512 MB : 7 GB ratio is preserved on scaled-down key counts.
             let mut tn = t.clone();
@@ -192,79 +139,18 @@ pub fn run(
                 .cache_bytes
                 .min((stream.data_bytes as f64 * NIC_CACHE_RATIO) as u64)
                 .max(1 << 20);
-            let mut srv = SmartNicServer::new(&tn, batch);
-            let jobs: Vec<(u64, MemTrace)> = arrivals
-                .iter()
-                .zip(&stream.traces)
-                .map(|(&a, tr)| (a, tr.clone()))
-                .collect();
-            let ds = srv.run_stream(&jobs, |i| i % cores);
-            host_frac = srv.host_fraction();
-            ds.into_iter().enumerate().collect()
+            pipe.run(&mut serving::SmartNic::new(&tn, batch), &stream.traces)
         }
-        KvDesign::Orca(mem) => {
-            let mut rnic = Rnic::new(t.net.clone());
-            let mut pcie = Pcie::new(t.pcie.clone());
-            let notify = NotifyModel::new(t);
-            let mut accel = CcAccelerator::new(t, mem);
-            // RNIC DMA of the one-sided write + cpoll notification.
-            let mut jobs: Vec<(usize, u64)> = arrivals
-                .iter()
-                .enumerate()
-                .map(|(i, &arr)| {
-                    let visible = rnic.rx_one_sided(arr, req_bytes, &mut pcie);
-                    (i, visible + notify.sample(&mut rng))
-                })
-                .collect();
-            jobs.sort_by_key(|&(_, t0)| t0);
-            let ordered: Vec<(u64, MemTrace)> = jobs
-                .iter()
-                .map(|&(i, t0)| (t0, stream.traces[i].clone()))
-                .collect();
-            let served = accel.serve_stream(&ordered);
-            jobs.iter()
-                .zip(served)
-                .map(|(&(i, _), d)| (i, d))
-                .collect()
-        }
+        KvDesign::Orca(mem) => pipe.run(&mut serving::Orca::new(t, mem, batch), &stream.traces),
     };
-
-    // Response path: ORCA goes through the SQ handler (doorbell batching);
-    // CPU/SmartNIC egress directly (their per-batch tx costs are already
-    // inside the server models).
-    done.sort_by_key(|&(_, d)| d);
-    let mut latency = Histogram::new();
-    let mut last = 0u64;
-    match design {
-        KvDesign::Orca(_) => {
-            let mut rnic = Rnic::new(t.net.clone());
-            let mut pcie = Pcie::new(t.pcie.clone());
-            let mut sq = SqHandler::new(t, batch);
-            for &(i, d) in &done {
-                let at_client = sq.respond(d, resp_bytes, &mut rnic, &mut pcie, &mut net);
-                last = last.max(at_client);
-                latency.record(at_client.saturating_sub(issue[i]).max(1));
-            }
-        }
-        _ => {
-            for &(i, d) in &done {
-                let at_client = net.send_to_client(d, resp_bytes);
-                last = last.max(at_client);
-                latency.record(at_client.saturating_sub(issue[i]).max(1));
-            }
-        }
-    }
-
-    let first = arrivals.iter().min().copied().unwrap_or(0);
-    let span = last.saturating_sub(first).max(1);
     KvRun {
         design,
-        mops: n as f64 / (span as f64 / SEC as f64) / 1e6,
-        avg_us: latency.mean() / US as f64,
-        p50_us: latency.p50() as f64 / US as f64,
-        p99_us: latency.p99() as f64 / US as f64,
-        host_frac,
-        net_bound_mops,
+        mops: m.mops,
+        avg_us: m.avg_us,
+        p50_us: m.p50_us,
+        p99_us: m.p99_us,
+        host_frac: m.host_frac,
+        net_bound_mops: m.net_bound_mops,
     }
 }
 

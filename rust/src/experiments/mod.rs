@@ -11,16 +11,19 @@
 //! | Tab III (power efficiency) | [`tab3`] | `orca tab3` |
 //! | Fig 11 (Tx latency) | [`fig11`] | `orca fig11` |
 //! | Fig 12 (DLRM throughput) | [`fig12`] | `orca fig12` |
+//! | multi-APU sharding sweep (beyond the paper) | [`sharding`] | `orca sharding` |
 //!
 //! Absolute numbers are *this testbed's*; the claims under test are the
 //! paper's shapes (who wins, by what factor, where crossovers sit) — see
-//! EXPERIMENTS.md for paper-vs-measured.
+//! EXPERIMENTS.md for paper-vs-measured. All serving-path drivers
+//! dispatch through [`crate::serving::ServingPipeline`].
 
 pub mod fig11;
 pub mod fig12;
 pub mod fig4;
 pub mod fig7;
 pub mod kvs;
+pub mod sharding;
 pub mod tab3;
 pub mod table;
 

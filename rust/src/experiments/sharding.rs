@@ -1,0 +1,194 @@
+//! Sharded multi-APU scaling sweep (beyond the paper): N cc-accelerator
+//! shards behind one RNIC, keys hash-partitioned over per-shard cpoll
+//! rings, serving the Fig-8 KVS workload through the unified
+//! [`crate::serving::ServingPipeline`].
+//!
+//! What the sweep shows:
+//!
+//! * at the paper's 25 Gbps a single APU is already network-bound, so
+//!   extra shards keep peak throughput flat (non-decreasing, not
+//!   growing) — the paper's §VII scalability observation;
+//! * at 100 Gbps the soft coherence controller (~20 Mops/shard on
+//!   3-access GETs) becomes the bottleneck and sharding scales peak
+//!   throughput until the shared PCIe/RNIC front-end or the fatter wire
+//!   takes over;
+//! * hash partitioning keeps shard load balanced even under zipf key
+//!   skew (hot *keys* spread across shards; imbalance ≈ 1).
+
+use super::kvs::RequestStream;
+use super::{Opts, Table};
+use crate::config::{AccelMem, Testbed};
+use crate::serving::{Load, Orca, ServingPipeline};
+use crate::workload::{KeyDist, KvMix};
+
+/// Shard counts the sweep and the CLI default cover.
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    pub line_gbps: f64,
+    pub shards: usize,
+    pub mops: f64,
+    pub net_bound_mops: f64,
+    pub net_utilization: f64,
+    /// Hottest shard's request share over the mean share (1 = balanced).
+    pub imbalance: f64,
+}
+
+/// Peak throughput of an N-shard ORCA over `stream` (saturation load,
+/// batch 32 — the Fig-8 operating point).
+pub fn run_shards(t: &Testbed, stream: &RequestStream, shards: usize, seed: u64) -> ShardRow {
+    let pipe = ServingPipeline::new(Load::Saturation, 64, 64, seed);
+    let mut design = Orca::sharded(t, AccelMem::None, 32, shards);
+    let m = pipe.run(&mut design, &stream.traces);
+    ShardRow {
+        line_gbps: t.net.line_gbps,
+        shards,
+        mops: m.mops,
+        net_bound_mops: m.net_bound_mops,
+        net_utilization: m.utilization,
+        imbalance: design.imbalance(),
+    }
+}
+
+/// Sweep shard counts over one request stream.
+pub fn sweep(t: &Testbed, stream: &RequestStream, counts: &[usize], seed: u64) -> Vec<ShardRow> {
+    counts
+        .iter()
+        .map(|&n| run_shards(t, stream, n, seed))
+        .collect()
+}
+
+pub fn report(opts: &Opts, counts: &[usize]) -> Table {
+    let mut tb = Table::new(
+        "Sharding — peak Mops vs. cc-accelerator shard count (100% GET, batch 32)",
+        &[
+            "line rate",
+            "workload",
+            "shards",
+            "Mops",
+            "net bound",
+            "net util",
+            "imbalance",
+        ],
+    );
+    // The configured testbed, plus a 100 Gbps variant where sharding
+    // actually pays (skipped when the testbed is already ≥ 100G).
+    let mut testbeds = vec![opts.testbed.clone()];
+    if opts.testbed.net.line_gbps < 100.0 {
+        let mut fat = opts.testbed.clone();
+        fat.net.line_gbps = 100.0;
+        testbeds.push(fat);
+    }
+    for t in &testbeds {
+        for (dist, dl) in [
+            (KeyDist::uniform(opts.keys), "uniform"),
+            (KeyDist::zipf(opts.keys, 0.9), "zipf-0.9"),
+        ] {
+            let stream = RequestStream::generate(
+                opts.keys,
+                opts.requests,
+                &dist,
+                KvMix::GetOnly,
+                64,
+                opts.seed,
+            );
+            for row in sweep(t, &stream, counts, opts.seed) {
+                tb.row(&[
+                    format!("{:.0}G", row.line_gbps),
+                    dl.into(),
+                    row.shards.to_string(),
+                    format!("{:.1}", row.mops),
+                    format!("{:.1}", row.net_bound_mops),
+                    format!("{:.0}%", row.net_utilization * 100.0),
+                    format!("{:.2}", row.imbalance),
+                ]);
+            }
+        }
+    }
+    tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::kvs::{self, KvDesign};
+
+    fn stream(keys: u64, n: u64) -> RequestStream {
+        RequestStream::generate(keys, n, &KeyDist::uniform(keys), KvMix::GetOnly, 64, 7)
+    }
+
+    #[test]
+    fn one_shard_is_bit_identical_to_unsharded_orca() {
+        let t = Testbed::paper();
+        let s = stream(50_000, 20_000);
+        let sharded = run_shards(&t, &s, 1, 1);
+        let plain = kvs::run(
+            &t,
+            KvDesign::Orca(AccelMem::None),
+            &s,
+            32,
+            kvs::Load::Saturation,
+            1,
+        );
+        assert_eq!(sharded.mops, plain.mops, "1-shard must equal the paper path");
+    }
+
+    #[test]
+    fn peak_mops_non_decreasing_one_to_four_shards_at_line_rate() {
+        // At 25 Gbps one APU is already network-bound: sharding must not
+        // regress (flat is fine).
+        let t = Testbed::paper();
+        let s = stream(50_000, 20_000);
+        let rows = sweep(&t, &s, &[1, 2, 4], 1);
+        for w in rows.windows(2) {
+            assert!(
+                w[1].mops >= w[0].mops * 0.98,
+                "{} shards {} < {} shards {}",
+                w[1].shards,
+                w[1].mops,
+                w[0].shards,
+                w[0].mops
+            );
+        }
+    }
+
+    #[test]
+    fn sharding_scales_past_the_controller_on_a_fat_pipe() {
+        // At 100 Gbps the soft coherence controller is the bottleneck;
+        // shards add controllers, so peak throughput must grow.
+        let mut t = Testbed::paper();
+        t.net.line_gbps = 100.0;
+        let s = stream(200_000, 40_000);
+        let rows = sweep(&t, &s, &[1, 2, 4], 1);
+        for w in rows.windows(2) {
+            assert!(w[1].mops >= w[0].mops * 0.98, "non-decreasing");
+        }
+        assert!(
+            rows[2].mops > rows[0].mops * 1.5,
+            "4 shards {} must clearly beat 1 shard {}",
+            rows[2].mops,
+            rows[0].mops
+        );
+        // And never beyond the wire.
+        for r in &rows {
+            assert!(r.mops <= r.net_bound_mops * 1.05, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn hash_partitioning_stays_balanced_under_zipf() {
+        let t = Testbed::paper();
+        let keys = 50_000;
+        let s = RequestStream::generate(
+            keys,
+            20_000,
+            &KeyDist::zipf(keys, 0.9),
+            KvMix::GetOnly,
+            64,
+            7,
+        );
+        let row = run_shards(&t, &s, 4, 1);
+        assert!(row.imbalance < 1.35, "zipf imbalance {}", row.imbalance);
+    }
+}

@@ -7,6 +7,7 @@ use super::kvs::{self, KvDesign, RequestStream};
 use super::{Opts, Table};
 use crate::config::AccelMem;
 use crate::power::{Design, PowerModel};
+use crate::serving;
 use crate::workload::{KeyDist, KvMix};
 
 #[derive(Clone, Debug)]
@@ -47,7 +48,7 @@ pub fn run(opts: &Opts) -> Vec<Tab3Row> {
             design: kd,
             mops: r.mops,
             box_w,
-            kops_per_w: r.mops * 1e3 / box_w,
+            kops_per_w: serving::kops_per_watt(r.mops, box_w),
         }
     })
     .collect()

@@ -13,9 +13,11 @@
 //!   DDIO/TPH steering (in [`interconnect::pcie`] + [`mem::llc`]).
 //! * **Applications & harness** — KVS / chain-replicated transactions / DLRM
 //!   ([`apps`]), baselines ([`smartnic`], [`cpu`], [`baselines`]), workload
-//!   generators ([`workload`]), power accounting ([`power`]), the experiment
-//!   harness ([`experiments`]), and the real serving path: PJRT runtime
-//!   ([`runtime`]) + threaded coordinator ([`coordinator`]).
+//!   generators ([`workload`]), power accounting ([`power`]), the **unified
+//!   serving path** ([`serving`]: one ingress→notify→serve→egress pipeline
+//!   for every design, including the sharded multi-APU configuration), the
+//!   experiment harness ([`experiments`]), and the real serving path: PJRT
+//!   runtime ([`runtime`]) + threaded coordinator ([`coordinator`]).
 //!
 //! All timing is in **picoseconds** (`u64`) to keep integer math exact; the
 //! public helpers in [`sim::time`] convert to ns/µs.
@@ -32,6 +34,7 @@ pub mod smartnic;
 pub mod cpu;
 pub mod baselines;
 pub mod apps;
+pub mod serving;
 pub mod workload;
 pub mod power;
 pub mod testing;

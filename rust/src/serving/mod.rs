@@ -1,0 +1,383 @@
+//! The unified serving path (DESIGN.md §Serving): **one**
+//! ingress → notify → serve → egress pipeline shared by every hardware
+//! design and every workload driver.
+//!
+//! Before this layer existed each experiment hand-rolled the same
+//! plumbing (Network → Rnic/Pcie/NotifyModel → server → SqHandler) per
+//! design. Now a design is just an implementation of [`Design`]:
+//!
+//! * **ingress** — what it costs for a request to become visible to the
+//!   serving element (wire + RNIC DMA + notification, per design);
+//! * **serve**  — the batch/stream engine over the request's
+//!   [`MemTrace`]s (the existing `run_stream` / `serve_stream` engines);
+//! * **egress** — the response path back to the client (direct tx, or
+//!   the SQ-handler doorbell path).
+//!
+//! [`ServingPipeline`] drives jobs through those three stages under a
+//! [`Load`] model and returns a unified [`RunMetrics`]. The closed-loop
+//! lockstep driver ([`ServingPipeline::lockstep`]) covers latency
+//! benchmarks that issue one request at a time (Fig 11), and
+//! [`analytic`] holds the bandwidth/compute-bound throughput models
+//! (Fig 12). Concrete designs — [`Cpu`], [`SmartNic`], and the
+//! (optionally sharded) [`Orca`] — live in [`designs`].
+
+pub mod analytic;
+pub mod designs;
+
+pub use designs::{Cpu, Orca, SmartNic};
+
+use crate::mem::MemTrace;
+use crate::net::Network;
+use crate::sim::{Histogram, Rng, SEC, US};
+
+/// Arrival model (shared by all open-loop drivers).
+#[derive(Clone, Copy, Debug)]
+pub enum Load {
+    /// Back-to-back at line rate (peak-throughput measurement).
+    Saturation,
+    /// Poisson arrivals at `mops` offered load (latency measurement).
+    Open { mops: f64 },
+}
+
+/// One run's unified result, whatever the design or workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunMetrics {
+    pub label: String,
+    pub mops: f64,
+    pub avg_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Network utilization over the run (max of the two directions).
+    pub utilization: f64,
+    /// Fraction of data accesses served from host memory (SmartNIC).
+    pub host_frac: f64,
+    /// The wire's own bound for this design's request size, Mops.
+    pub net_bound_mops: f64,
+}
+
+/// Tab-III power accounting: throughput per watt of box power.
+pub fn kops_per_watt(mops: f64, box_w: f64) -> f64 {
+    mops * 1e3 / box_w
+}
+
+/// One request's ingress outcome: when it reached the server's wire
+/// port, and when it became visible to the serving element (post
+/// RNIC DMA + notification for ORCA; identical for designs whose NIC
+/// hands requests straight to the server model).
+#[derive(Clone, Copy, Debug)]
+pub struct Ingress {
+    pub wire_at: u64,
+    pub visible_at: u64,
+}
+
+impl Ingress {
+    /// Wire arrival and visibility coincide.
+    pub fn immediate(at: u64) -> Self {
+        Ingress {
+            wire_at: at,
+            visible_at: at,
+        }
+    }
+}
+
+/// A hardware design's view of the serving path.
+///
+/// `Job` is whatever the functional layer produced for one request —
+/// a [`MemTrace`] for the KVS/DLRM designs, a transaction shape for the
+/// chain-replication models.
+pub trait Design {
+    type Job: Clone;
+
+    fn label(&self) -> String;
+
+    /// Wire-visible request bytes for a `payload`-byte request.
+    /// Two-sided designs add their in-band RPC header here.
+    fn request_bytes(&self, payload: u64) -> u64 {
+        payload
+    }
+
+    /// Cost of a request issued at `issue` becoming visible to the
+    /// serving element: wire, receive-side DMA, notification.
+    fn ingress(&mut self, issue: u64, job: &Self::Job, req_bytes: u64, rng: &mut Rng) -> Ingress;
+
+    /// Serve a whole stream of `(visible_time, job)` pairs sorted by
+    /// visibility; returns per-job completion times (same order). Takes
+    /// the jobs by value so sharded designs can partition without
+    /// another deep copy.
+    fn serve(&mut self, jobs: Vec<(u64, Self::Job)>) -> Vec<u64>;
+
+    /// Response path; calls arrive in nondecreasing `done` order.
+    /// Returns the time the response reaches the client.
+    fn egress(&mut self, done: u64, resp_bytes: u64) -> u64;
+
+    /// The design's client-facing network, if it has one (used for the
+    /// wire bound and utilization in [`RunMetrics`]).
+    fn network(&self) -> Option<&Network> {
+        None
+    }
+
+    /// Fraction of data accesses that crossed to the host (SmartNIC).
+    fn host_frac(&self) -> f64 {
+        0.0
+    }
+}
+
+/// A design serving one request at a time from a shared clock
+/// (closed-loop latency benchmarks, §VI-C: "transactions are issued by
+/// the client one by one").
+pub trait ClosedLoop {
+    type Job;
+    /// Completion time of a job issued at `now`.
+    fn serve_one(&mut self, now: u64, job: &Self::Job) -> u64;
+}
+
+/// The generic open-loop driver: issue times from the [`Load`] model,
+/// per-design ingress, stream service, per-design egress, unified
+/// metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingPipeline {
+    pub load: Load,
+    /// Request payload bytes on the wire (pre-header).
+    pub req_bytes: u64,
+    /// Response payload bytes.
+    pub resp_bytes: u64,
+    pub seed: u64,
+}
+
+impl ServingPipeline {
+    pub fn new(load: Load, req_bytes: u64, resp_bytes: u64, seed: u64) -> Self {
+        ServingPipeline {
+            load,
+            req_bytes,
+            resp_bytes,
+            seed,
+        }
+    }
+
+    /// Drive `jobs` through `design` end to end.
+    pub fn run<D: Design>(&self, design: &mut D, jobs: &[D::Job]) -> RunMetrics {
+        let n = jobs.len();
+        let mut rng = Rng::new(self.seed ^ 0xD1CE);
+        let req = design.request_bytes(self.req_bytes);
+
+        // Issue times.
+        let mut issue = Vec::with_capacity(n);
+        match self.load {
+            Load::Saturation => {
+                issue.resize(n, 0u64);
+            }
+            Load::Open { mops } => {
+                let mean_gap_ps = 1e6 / mops; // ps between arrivals at `mops`
+                let mut tphys = 0f64;
+                for _ in 0..n {
+                    tphys += rng.exp(mean_gap_ps);
+                    issue.push(tphys as u64);
+                }
+            }
+        }
+
+        // Ingress (in issue order). The throughput span is anchored at
+        // the first *wire* arrival; service order follows visibility —
+        // the notification jitter can reorder neighbors.
+        let mut first = u64::MAX;
+        let mut order: Vec<(usize, u64)> = issue
+            .iter()
+            .zip(jobs)
+            .enumerate()
+            .map(|(i, (&t0, job))| {
+                let ing = design.ingress(t0, job, req, &mut rng);
+                first = first.min(ing.wire_at);
+                (i, ing.visible_at)
+            })
+            .collect();
+        let first = if n == 0 { 0 } else { first };
+        order.sort_by_key(|&(_, t)| t);
+        let ordered: Vec<(u64, D::Job)> = order
+            .iter()
+            .map(|&(i, t)| (t, jobs[i].clone()))
+            .collect();
+
+        // Serve.
+        let served = design.serve(ordered);
+        let mut done: Vec<(usize, u64)> = order
+            .iter()
+            .map(|&(i, _)| i)
+            .zip(served)
+            .collect();
+        done.sort_by_key(|&(_, d)| d);
+
+        // Egress in completion order.
+        let mut latency = Histogram::new();
+        let mut last = 0u64;
+        for &(i, d) in &done {
+            let at_client = design.egress(d, self.resp_bytes);
+            last = last.max(at_client);
+            latency.record(at_client.saturating_sub(issue[i]).max(1));
+        }
+
+        let span = last.saturating_sub(first).max(1);
+        RunMetrics {
+            label: design.label(),
+            mops: n as f64 / (span as f64 / SEC as f64) / 1e6,
+            avg_us: latency.mean() / US as f64,
+            p50_us: latency.p50() as f64 / US as f64,
+            p99_us: latency.p99() as f64 / US as f64,
+            utilization: design.network().map_or(0.0, |nw| nw.utilization(last)),
+            host_frac: design.host_frac(),
+            net_bound_mops: design.network().map_or(f64::INFINITY, |nw| nw.peak_mops(req)),
+        }
+    }
+
+    /// Closed-loop lockstep comparison: the same jobs issued one by one
+    /// to two designs from a shared clock, with client-side jitter (an
+    /// exponential at 5% of each latency — NIC/host variance) and small
+    /// uniform think gaps. Returns both latency histograms.
+    pub fn lockstep<A, B>(a: &mut A, b: &mut B, jobs: &[A::Job], seed: u64) -> (Histogram, Histogram)
+    where
+        A: ClosedLoop,
+        B: ClosedLoop<Job = A::Job>,
+    {
+        let mut rng = Rng::new(seed);
+        let mut ha = Histogram::new();
+        let mut hb = Histogram::new();
+        let mut now = 0u64;
+        for job in jobs {
+            let l1 = a.serve_one(now, job) - now;
+            let l2 = b.serve_one(now, job) - now;
+            let j1 = rng.exp(0.05 * l1 as f64) as u64;
+            let j2 = rng.exp(0.05 * l2 as f64) as u64;
+            ha.record(l1 + j1);
+            hb.record(l2 + j2);
+            now += (l1 + l2) / 2 + rng.below(2 * US);
+        }
+        (ha, hb)
+    }
+}
+
+/// MICA-style opportunistic streaming scheduler shared by the CPU and
+/// SmartNIC servers: each core takes whatever is pending — up to
+/// `batch` — whenever it frees up; no waiting to fill a batch. `jobs`
+/// must be sorted by arrival; `core_of(i)` maps job index → core;
+/// `exec(core, start, staged)` runs one batch and returns per-request
+/// completion times.
+pub fn run_stream_batched(
+    jobs: &[(u64, MemTrace)],
+    n_cores: usize,
+    batch: usize,
+    core_of: impl Fn(usize) -> usize,
+    mut exec: impl FnMut(usize, u64, Vec<(u64, MemTrace)>) -> Vec<u64>,
+) -> Vec<u64> {
+    use std::cmp::Reverse;
+    use std::collections::{BinaryHeap, VecDeque};
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_cores];
+    for i in 0..jobs.len() {
+        queues[core_of(i) % n_cores].push_back(i);
+    }
+    let mut done = vec![0u64; jobs.len()];
+    // Global time order across cores (shared pipelines are timelines):
+    // heap of (next wake time, core).
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut core_free = vec![0u64; n_cores];
+    for (c, q) in queues.iter().enumerate() {
+        if let Some(&first) = q.front() {
+            heap.push(Reverse((jobs[first].0, c)));
+        }
+    }
+    while let Some(Reverse((start, c))) = heap.pop() {
+        let mut batch_idx = Vec::with_capacity(batch);
+        while let Some(&i) = queues[c].front() {
+            if jobs[i].0 <= start && batch_idx.len() < batch {
+                batch_idx.push(i);
+                queues[c].pop_front();
+            } else {
+                break;
+            }
+        }
+        if batch_idx.is_empty() {
+            // Spurious wake (shouldn't happen): skip to next arrival.
+            if let Some(&first) = queues[c].front() {
+                heap.push(Reverse((jobs[first].0.max(start + 1), c)));
+            }
+            continue;
+        }
+        let staged: Vec<(u64, MemTrace)> = batch_idx.iter().map(|&i| jobs[i].clone()).collect();
+        let ds = exec(c, start, staged);
+        core_free[c] = ds.iter().copied().max().unwrap_or(start);
+        for (&i, d) in batch_idx.iter().zip(ds) {
+            done[i] = d;
+        }
+        if let Some(&first) = queues[c].front() {
+            heap.push(Reverse((core_free[c].max(jobs[first].0), c)));
+        }
+    }
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AccelMem, Testbed};
+    use crate::mem::Access;
+
+    fn get_trace(i: u64) -> MemTrace {
+        let mut t = MemTrace::new();
+        let h = i.wrapping_mul(0x9E3779B97F4A7C15);
+        t.push(Access::read(h % (1 << 30), 64));
+        t.push(Access::read(h.rotate_left(17) % (1 << 30), 64));
+        t.push(Access::read(h.rotate_left(34) % (1 << 30), 64));
+        t
+    }
+
+    fn traces(n: u64) -> Vec<MemTrace> {
+        (0..n).map(get_trace).collect()
+    }
+
+    #[test]
+    fn pipeline_is_deterministic_per_seed() {
+        let t = Testbed::paper();
+        let jobs = traces(5_000);
+        let pipe = ServingPipeline::new(Load::Saturation, 64, 64, 7);
+        let a = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+        let b = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+        assert_eq!(a, b, "same seed must give bit-identical metrics");
+        let c = ServingPipeline::new(Load::Saturation, 64, 64, 8)
+            .run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+        assert_ne!(a, c, "different seed must actually change the run");
+    }
+
+    #[test]
+    fn all_designs_drive_through_the_same_pipeline() {
+        let t = Testbed::paper();
+        let jobs = traces(4_000);
+        let pipe = ServingPipeline::new(Load::Open { mops: 2.0 }, 64, 64, 3);
+        let cpu = pipe.run(&mut Cpu::new(&t, 10, 32, 3), &jobs);
+        let nic = pipe.run(&mut SmartNic::new(&t, 32), &jobs);
+        let orca = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+        for m in [&cpu, &nic, &orca] {
+            assert!(m.mops > 0.0 && m.p99_us >= m.p50_us, "{m:?}");
+        }
+        // The two-sided CPU design pays its in-band header on the wire.
+        assert!(cpu.net_bound_mops < orca.net_bound_mops);
+        // Only the SmartNIC reports a host fraction.
+        assert!(nic.host_frac > 0.0);
+        assert_eq!(cpu.host_frac, 0.0);
+    }
+
+    #[test]
+    fn run_stream_batched_batches_up_to_limit() {
+        // 8 jobs all at t=0 on one core with batch 4: exactly two execs.
+        let jobs: Vec<(u64, MemTrace)> = (0..8).map(|_| (0u64, MemTrace::new())).collect();
+        let mut calls = Vec::new();
+        let done = run_stream_batched(&jobs, 1, 4, |_| 0, |_c, start, staged| {
+            calls.push(staged.len());
+            staged.iter().map(|_| start + 100).collect()
+        });
+        assert_eq!(calls, vec![4, 4]);
+        assert_eq!(done.len(), 8);
+    }
+
+    #[test]
+    fn kops_per_watt_accounting() {
+        assert!((kops_per_watt(21.4, 165.0) - 129.7).abs() < 0.1);
+    }
+}

@@ -72,17 +72,19 @@ impl<W> Sim<W> {
         self.executed
     }
 
-    /// Set a hard time horizon; events at `t > horizon` are silently dropped.
+    /// Set a hard time horizon: events at `t > horizon` are held in the
+    /// queue and fire only if the horizon is later raised past them.
     pub fn set_horizon(&mut self, horizon: u64) {
         self.horizon = horizon;
     }
 
-    /// Schedule `f` at absolute time `at` (clamped to `now` if in the past).
+    /// Schedule `f` at absolute time `at` (clamped to `now` if in the
+    /// past). Always enqueues — the horizon gates *execution* (in
+    /// [`Sim::run`]/[`Sim::run_until`]), not scheduling, so the same
+    /// holding semantics apply whether the event was queued before or
+    /// after a horizon change.
     pub fn at(&mut self, at: u64, f: impl FnOnce(&mut Sim<W>, &mut W) + 'static) {
         let at = at.max(self.now);
-        if at > self.horizon {
-            return;
-        }
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Reverse(Entry {
@@ -99,8 +101,22 @@ impl<W> Sim<W> {
 
     /// Run until the queue drains (or the horizon passes). Returns the
     /// final simulated time.
+    ///
+    /// Past-horizon events are never executed: [`Sim::at`] refuses to
+    /// schedule them, and events already queued when the horizon is
+    /// tightened are held (not popped), so raising the horizon later
+    /// resumes them in order.
     pub fn run(&mut self, world: &mut W) -> u64 {
-        while let Some(Reverse(e)) = self.heap.pop() {
+        loop {
+            // Peek first: the heap is time-ordered, so the moment the
+            // front is past the horizon everything behind it is too —
+            // leave it all queued (the horizon may be raised later).
+            match self.heap.peek() {
+                None => break,
+                Some(Reverse(e)) if e.at > self.horizon => break,
+                Some(_) => {}
+            }
+            let Reverse(e) = self.heap.pop().expect("peeked");
             debug_assert!(e.at >= self.now, "time went backwards");
             self.now = e.at;
             self.executed += 1;
@@ -109,10 +125,18 @@ impl<W> Sim<W> {
         self.now
     }
 
-    /// Run until `world` satisfies `done` (checked after every event) or the
-    /// queue drains.
+    /// Run until `world` satisfies `done` (checked after every event) or
+    /// the queue drains. Same monotonicity and horizon contract as
+    /// [`Sim::run`].
     pub fn run_until(&mut self, world: &mut W, mut done: impl FnMut(&W) -> bool) -> u64 {
-        while let Some(Reverse(e)) = self.heap.pop() {
+        loop {
+            match self.heap.peek() {
+                None => break,
+                Some(Reverse(e)) if e.at > self.horizon => break,
+                Some(_) => {}
+            }
+            let Reverse(e) = self.heap.pop().expect("peeked");
+            debug_assert!(e.at >= self.now, "time went backwards");
             self.now = e.at;
             self.executed += 1;
             (e.f)(self, world);
@@ -194,7 +218,7 @@ mod tests {
     }
 
     #[test]
-    fn horizon_drops_late_events() {
+    fn horizon_holds_late_events() {
         let mut sim: Sim<World> = Sim::new();
         sim.set_horizon(1_000);
         let mut w = World::default();
@@ -202,6 +226,53 @@ mod tests {
         sim.at(1_001, |_s, w| w.count += 100);
         sim.run(&mut w);
         assert_eq!(w.count, 1);
+    }
+
+    #[test]
+    fn both_loops_respect_a_horizon_set_after_scheduling() {
+        // Events already in the heap when the horizon tightens must be
+        // held back by `run` and `run_until` alike.
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(500, |_s, w| w.count += 1);
+        sim.at(2_000, |_s, w| w.count += 100);
+        sim.set_horizon(1_000);
+        sim.run(&mut w);
+        assert_eq!(w.count, 1);
+
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(500, |_s, w| w.count += 1);
+        sim.at(2_000, |_s, w| w.count += 100);
+        sim.set_horizon(1_000);
+        sim.run_until(&mut w, |w| w.count >= 101);
+        assert_eq!(w.count, 1, "run_until must hold past-horizon events too");
+    }
+
+    #[test]
+    fn raising_the_horizon_resumes_held_events_in_order() {
+        // A tightened horizon must not silently lose queued events: the
+        // front is peeked, not popped, so raising the horizon and
+        // re-running fires them all in time order.
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(500, |s, w| w.log.push((s.now(), "a")));
+        sim.at(2_000, |s, w| w.log.push((s.now(), "b")));
+        sim.at(3_000, |s, w| w.log.push((s.now(), "c")));
+        sim.set_horizon(1_000);
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(500, "a")]);
+        assert!(!sim.idle(), "held events must stay queued");
+
+        // Scheduling while the horizon is tight holds the event too
+        // (same semantics as events queued before the tighten).
+        sim.at(2_500, |s, w| w.log.push((s.now(), "x")));
+        sim.set_horizon(u64::MAX);
+        sim.run(&mut w);
+        assert_eq!(
+            w.log,
+            vec![(500, "a"), (2_000, "b"), (2_500, "x"), (3_000, "c")]
+        );
     }
 
     #[test]

@@ -12,20 +12,34 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("dlrm_manifest.txt").exists().then_some(dir)
 }
 
+/// Start the coordinator, skipping (None) when the build carries the
+/// vendored `xla` API stub instead of the real PJRT bindings.
+fn start_or_skip(dir: PathBuf, policy: BatchPolicy) -> Option<Coordinator> {
+    match Coordinator::start(dir, policy) {
+        Ok(c) => Some(c),
+        Err(e) if format!("{e:#}").contains("xla stub") => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+        Err(e) => panic!("coordinator start failed: {e:#}"),
+    }
+}
+
 #[test]
 fn concurrent_clients_get_correct_individual_responses() {
     let Some(dir) = artifacts_dir() else {
         eprintln!("skipping: run `make artifacts` first");
         return;
     };
-    let coord = Coordinator::start(
+    let Some(coord) = start_or_skip(
         dir,
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
         },
-    )
-    .expect("start");
+    ) else {
+        return;
+    };
 
     // Each client sends a distinctive query and checks determinism: the
     // same query twice must give the same logit even when batched with
@@ -68,16 +82,17 @@ fn deadline_flushes_partial_batches() {
         return;
     };
     // Batch 32 but only one request: the 5ms deadline must flush it.
-    let coord = Coordinator::start(
+    let Some(coord) = start_or_skip(
         dir,
         BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(5),
         },
-    )
-    .expect("start");
+    ) else {
+        return;
+    };
     let (tx, rx) = mpsc::channel();
-    coord.submit(vec![0.0; 13], vec![1, 2, 3], tx);
+    coord.submit(vec![0.0; 13], vec![1, 2, 3], tx).expect("submit");
     let resp = rx
         .recv_timeout(Duration::from_secs(20))
         .expect("deadline flush delivered the response");

@@ -1,0 +1,276 @@
+//! Golden-value tests for the unified serving layer: the refactored
+//! kvs/fig11/fig12 drivers must reproduce the pre-refactor pipeline's
+//! headline numbers within 1%, and identical seeds must give identical
+//! metrics.
+//!
+//! The reference implementations below are line-for-line ports of the
+//! per-design plumbing the experiment files used to hand-roll (Network
+//! → Rnic/Pcie/NotifyModel → server → SqHandler match arms), kept here
+//! as the fixed point the `serving::ServingPipeline` refactor is
+//! measured against.
+
+use orca::accel::{host_access_rtt_ps, CcAccelerator, SqHandler};
+use orca::config::{AccelMem, Testbed};
+use orca::cpoll::NotifyModel;
+use orca::cpu::CpuServer;
+use orca::experiments::fig11;
+use orca::experiments::fig12::{self, TABLES_PER_QUERY};
+use orca::experiments::kvs::{self, KvDesign, Load, RequestStream, NIC_CACHE_RATIO};
+use orca::experiments::Opts;
+use orca::interconnect::Pcie;
+use orca::mem::MemTrace;
+use orca::net::Network;
+use orca::rnic::Rnic;
+use orca::sim::{Histogram, Rng, SEC, US};
+use orca::smartnic::SmartNicServer;
+use orca::workload::{KeyDist, KvMix, AMAZON_PROFILES};
+
+fn close(a: f64, b: f64, what: &str) {
+    let rel = (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel < 0.01, "{what}: refactored {a} vs reference {b} ({rel:.4} rel)");
+}
+
+/// The pre-refactor `kvs::run` datapath, verbatim.
+fn reference_kvs_run(
+    t: &Testbed,
+    design: KvDesign,
+    stream: &RequestStream,
+    batch: usize,
+    load: Load,
+    seed: u64,
+) -> (f64, f64, f64) {
+    let n = stream.traces.len();
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let mut net = Network::new(t.net.clone());
+    let req_bytes: u64 = match design {
+        KvDesign::Cpu => 80,
+        _ => 64,
+    };
+    let resp_bytes: u64 = 64;
+
+    let mut issue = Vec::with_capacity(n);
+    match load {
+        Load::Saturation => issue.resize(n, 0u64),
+        Load::Open { mops } => {
+            let mean_gap_ps = 1e6 / mops;
+            let mut tphys = 0f64;
+            for _ in 0..n {
+                tphys += rng.exp(mean_gap_ps);
+                issue.push(tphys as u64);
+            }
+        }
+    }
+
+    let arrivals: Vec<u64> = issue
+        .iter()
+        .map(|&t0| net.send_to_server(t0, req_bytes))
+        .collect();
+
+    let mut done: Vec<(usize, u64)> = match design {
+        KvDesign::Cpu => {
+            let cores = 10;
+            let mut srv = CpuServer::new(t, cores, batch, seed);
+            let jobs: Vec<(u64, MemTrace)> = arrivals
+                .iter()
+                .zip(&stream.traces)
+                .map(|(&a, tr)| (a, tr.clone()))
+                .collect();
+            srv.run_stream(&jobs, |i| i % cores)
+                .into_iter()
+                .enumerate()
+                .collect()
+        }
+        KvDesign::SmartNic => {
+            let cores = t.smartnic.cores;
+            let mut tn = t.clone();
+            tn.smartnic.cache_bytes = tn
+                .smartnic
+                .cache_bytes
+                .min((stream.data_bytes as f64 * NIC_CACHE_RATIO) as u64)
+                .max(1 << 20);
+            let mut srv = SmartNicServer::new(&tn, batch);
+            let jobs: Vec<(u64, MemTrace)> = arrivals
+                .iter()
+                .zip(&stream.traces)
+                .map(|(&a, tr)| (a, tr.clone()))
+                .collect();
+            srv.run_stream(&jobs, |i| i % cores)
+                .into_iter()
+                .enumerate()
+                .collect()
+        }
+        KvDesign::Orca(mem) => {
+            let mut rnic = Rnic::new(t.net.clone());
+            let mut pcie = Pcie::new(t.pcie.clone());
+            let notify = NotifyModel::new(t);
+            let mut accel = CcAccelerator::new(t, mem);
+            let mut jobs: Vec<(usize, u64)> = arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, &arr)| {
+                    let visible = rnic.rx_one_sided(arr, req_bytes, &mut pcie);
+                    (i, visible + notify.sample(&mut rng))
+                })
+                .collect();
+            jobs.sort_by_key(|&(_, t0)| t0);
+            let ordered: Vec<(u64, MemTrace)> = jobs
+                .iter()
+                .map(|&(i, t0)| (t0, stream.traces[i].clone()))
+                .collect();
+            let served = accel.serve_stream(&ordered);
+            jobs.iter().zip(served).map(|(&(i, _), d)| (i, d)).collect()
+        }
+    };
+
+    done.sort_by_key(|&(_, d)| d);
+    let mut latency = Histogram::new();
+    let mut last = 0u64;
+    match design {
+        KvDesign::Orca(_) => {
+            let mut rnic = Rnic::new(t.net.clone());
+            let mut pcie = Pcie::new(t.pcie.clone());
+            let mut sq = SqHandler::new(t, batch);
+            for &(i, d) in &done {
+                let at_client = sq.respond(d, resp_bytes, &mut rnic, &mut pcie, &mut net);
+                last = last.max(at_client);
+                latency.record(at_client.saturating_sub(issue[i]).max(1));
+            }
+        }
+        _ => {
+            for &(i, d) in &done {
+                let at_client = net.send_to_client(d, resp_bytes);
+                last = last.max(at_client);
+                latency.record(at_client.saturating_sub(issue[i]).max(1));
+            }
+        }
+    }
+
+    let first = arrivals.iter().min().copied().unwrap_or(0);
+    let span = last.saturating_sub(first).max(1);
+    (
+        n as f64 / (span as f64 / SEC as f64) / 1e6,
+        latency.mean() / US as f64,
+        latency.p99() as f64 / US as f64,
+    )
+}
+
+fn small_stream() -> RequestStream {
+    RequestStream::generate(50_000, 20_000, &KeyDist::zipf(50_000, 0.9), KvMix::GetOnly, 64, 7)
+}
+
+#[test]
+fn kvs_designs_match_the_prerefactor_pipeline_within_1pct() {
+    let t = Testbed::paper();
+    let s = small_stream();
+    for design in [
+        KvDesign::Cpu,
+        KvDesign::SmartNic,
+        KvDesign::Orca(AccelMem::None),
+        KvDesign::Orca(AccelMem::LocalDdr),
+    ] {
+        for load in [Load::Saturation, Load::Open { mops: 2.0 }] {
+            let new = kvs::run(&t, design, &s, 32, load, 9);
+            let (mops, avg, p99) = reference_kvs_run(&t, design, &s, 32, load, 9);
+            let what = format!("{:?} {:?}", design, load);
+            close(new.mops, mops, &format!("{what} mops"));
+            close(new.avg_us, avg, &format!("{what} avg"));
+            close(new.p99_us, p99, &format!("{what} p99"));
+        }
+    }
+}
+
+#[test]
+fn fig11_matches_the_prerefactor_lockstep_loop_within_1pct() {
+    use orca::baselines::hyperloop::{HyperLoopChain, TxnShape};
+    use orca::experiments::fig11::OrcaTx;
+
+    let t = Testbed::paper();
+    let (shape, vb, txns, seed) = ((4u32, 2u32), 64u64, 20_000u64, 2u64);
+    // Reference: the old run_cell body.
+    let s = TxnShape::new(shape.0, shape.1, vb);
+    let mut rng = Rng::new(seed);
+    let mut hl = HyperLoopChain::new(&t, 2);
+    let mut orca = OrcaTx::new(&t, 2);
+    let mut h_hl = Histogram::new();
+    let mut h_orca = Histogram::new();
+    let mut now = 0u64;
+    for _ in 0..txns {
+        let l1 = hl.execute(now, s) - now;
+        let l2 = orca.execute(now, s) - now;
+        let j1 = rng.exp(0.05 * l1 as f64) as u64;
+        let j2 = rng.exp(0.05 * l2 as f64) as u64;
+        h_hl.record(l1 + j1);
+        h_orca.record(l2 + j2);
+        now += (l1 + l2) / 2 + rng.below(2 * US);
+    }
+
+    let r = fig11::run_cell(&t, shape, vb, txns, seed);
+    close(r.hyperloop_avg_us, h_hl.mean() / US as f64, "fig11 hyperloop avg");
+    close(r.orca_avg_us, h_orca.mean() / US as f64, "fig11 orca avg");
+    close(
+        r.hyperloop_p99_us,
+        h_hl.p99() as f64 / US as f64,
+        "fig11 hyperloop p99",
+    );
+    close(r.orca_p99_us, h_orca.p99() as f64 / US as f64, "fig11 orca p99");
+}
+
+#[test]
+fn fig12_matches_the_prerefactor_bound_formulas_within_1pct() {
+    let opts = Opts::default();
+    let t = &opts.testbed;
+    for (profile, row) in AMAZON_PROFILES.iter().zip(fig12::run_all(&opts)) {
+        // Reference: the old run_dataset formulas over the measured
+        // per-query profile the row reports.
+        let bpq = row.bytes_per_query;
+        let apq = row.accesses_per_query;
+        let req_bytes = (profile.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82;
+        let net_qps = t.net.line_gbps / 8.0 * 1e9 / req_bytes as f64;
+
+        let query_s_compute = fig12::CPU_QUERY_CYCLES as f64 / (t.cpu.freq_mhz * 1e6);
+        let host_bw = t.dram.bandwidth_gbs * 1e9 * fig12::CPU_GATHER_EFF;
+        for (i, cores) in [1usize, 2, 4, 8].iter().enumerate() {
+            let compute = *cores as f64 / query_s_compute;
+            let core_bw = *cores as f64 * fig12::PER_CORE_GATHER_GBS * 1e9;
+            close(
+                row.cpu_qps[i],
+                compute.min(core_bw.min(host_bw) / bpq),
+                &format!("{} cpu-{cores}", row.dataset),
+            );
+        }
+
+        let row_bytes = bpq / apq;
+        let rtt_s = host_access_rtt_ps(t) as f64 / 1e12 + row_bytes / (t.upi.bandwidth_gbs * 1e9);
+        let orca = (fig12::ORCA_GATHER_OUTSTANDING * row_bytes / rtt_s / bpq)
+            .min(t.upi.bandwidth_gbs * 1e9 / bpq)
+            .min(net_qps);
+        close(row.orca_qps, orca, &format!("{} orca", row.dataset));
+
+        let ld = (36.0 * 1e9 * fig12::APU_STREAM_EFF / bpq).min(net_qps);
+        let lh = (425.0 * 1e9 * fig12::APU_STREAM_EFF / bpq).min(net_qps);
+        close(row.ld_qps, ld, &format!("{} ld", row.dataset));
+        close(row.lh_qps, lh, &format!("{} lh", row.dataset));
+    }
+}
+
+#[test]
+fn same_seed_gives_identical_runs_across_the_board() {
+    let t = Testbed::paper();
+    let s = small_stream();
+    for design in [
+        KvDesign::Cpu,
+        KvDesign::SmartNic,
+        KvDesign::Orca(AccelMem::None),
+    ] {
+        let a = kvs::run(&t, design, &s, 32, Load::Saturation, 5);
+        let b = kvs::run(&t, design, &s, 32, Load::Saturation, 5);
+        assert_eq!(a.mops, b.mops, "{design:?} mops");
+        assert_eq!(a.avg_us, b.avg_us, "{design:?} avg");
+        assert_eq!(a.p50_us, b.p50_us, "{design:?} p50");
+        assert_eq!(a.p99_us, b.p99_us, "{design:?} p99");
+    }
+    let ra = fig11::run_cell(&t, (4, 2), 64, 5_000, 3);
+    let rb = fig11::run_cell(&t, (4, 2), 64, 5_000, 3);
+    assert_eq!(ra.orca_avg_us, rb.orca_avg_us);
+    assert_eq!(ra.hyperloop_p99_us, rb.hyperloop_p99_us);
+}

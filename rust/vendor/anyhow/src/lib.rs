@@ -1,0 +1,186 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build must work fully offline (no crates.io), so the repo carries
+//! this drop-in shim instead of the real crate: an opaque [`Error`] with a
+//! context chain, [`Result`], the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`. Only the surface
+//! this repository uses is implemented; swap in the real `anyhow` by
+//! replacing the `path` dependency if a registry is available.
+
+use std::fmt;
+
+/// Opaque error: an outermost message plus a chain of underlying causes
+/// (outermost cause first).
+pub struct Error {
+    msg: String,
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            causes: Vec::new(),
+        }
+    }
+
+    /// Wrap with higher-level context; the old message becomes a cause.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.msg);
+        causes.extend(self.causes);
+        Error {
+            msg: context.to_string(),
+            causes,
+        }
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(|s| s.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` the full `a: b: c` chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    /// Matches anyhow's report shape (used when `main` returns `Err`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the source chain the typed error already carries.
+        let mut causes = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        Error {
+            msg: e.to_string(),
+            causes,
+        }
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an ad-hoc [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to fallible values (`Result` with a std error, or
+/// `Option` treated as "value missing").
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Mirrors anyhow's ext impl: context can also be layered onto an
+// already-opaque `Result<T, Error>`. No overlap with the blanket impl
+// above because `Error` itself (deliberately) does not implement
+// `std::error::Error`.
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        fn f() -> Result<()> {
+            bail!("bad value {}", 7)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_stacks_on_opaque_results() {
+        let r: Result<()> = Err(io_err()).context("inner");
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u64> {
+            Ok("12x".parse::<u64>()?)
+        }
+        assert!(f().is_err());
+    }
+}
