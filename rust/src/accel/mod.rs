@@ -19,7 +19,7 @@ pub use scheduler::RoundRobin;
 pub use sq_handler::SqHandler;
 
 use crate::config::{AccelMem, Testbed};
-use crate::mem::MemTrace;
+use crate::mem::{Access, MemTrace, MemorySystem, SharedMemorySystem};
 use crate::sim::{cycles_ps, transfer_ps, BandwidthLedger, MultiServer, Server, NS};
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -46,11 +46,16 @@ enum MemPath {
     /// the access round trip (a `MultiServer` lane per slot, so idle
     /// slots absorb out-of-order issue from interleaved requests) — and
     /// the returned lines serialize on the (possibly shared) UPI link.
+    /// The memory-service leg of the round trip comes from the (possibly
+    /// shared) [`MemorySystem`] — LLC hit, DRAM, or NVM by domain — not
+    /// from a fixed DRAM-latency constant.
     Host {
         coh: MultiServer,
-        rtt_ps: u64,
+        /// Interconnect-only RTT: hops + controller, no memory service.
+        hop_ps: u64,
         link: UpiLink,
         upi_gbs: f64,
+        mem: SharedMemorySystem,
     },
     /// ORCA-LD / ORCA-LH: data in accelerator-attached memory.
     Local {
@@ -62,21 +67,24 @@ enum MemPath {
 
 impl Clone for MemPath {
     /// A cloned accelerator is an independent device: it gets a fresh,
-    /// unconsumed UPI-link ledger, never a silently shared (or
-    /// snapshotted) one. Sharing is only ever explicit, via
-    /// [`CcAccelerator::with_upi_link`].
+    /// unconsumed UPI-link ledger and a private snapshot of the memory
+    /// system, never a silently shared one. Sharing is only ever
+    /// explicit, via [`CcAccelerator::with_upi_link`] /
+    /// [`CcAccelerator::with_shared`].
     fn clone(&self) -> Self {
         match self {
             MemPath::Host {
                 coh,
-                rtt_ps,
+                hop_ps,
                 link: _,
                 upi_gbs,
+                mem,
             } => MemPath::Host {
                 coh: coh.clone(),
-                rtt_ps: *rtt_ps,
+                hop_ps: *hop_ps,
                 link: upi_link(),
                 upi_gbs: *upi_gbs,
+                mem: Rc::new(RefCell::new(mem.borrow().clone())),
             },
             MemPath::Local {
                 chan,
@@ -105,13 +113,20 @@ pub struct CcAccelerator {
     pub requests: u64,
 }
 
-/// Round-trip for one host-memory access from the APU: two UPI hops,
-/// host memory service, coherence-controller occupancy at entry and exit.
-pub fn host_access_rtt_ps(t: &Testbed) -> u64 {
+/// Interconnect-only portion of one host access from the APU: two UPI
+/// hops plus coherence-controller occupancy at entry and exit. The
+/// memory-service leg is added per access by the [`MemorySystem`].
+pub fn host_interconnect_ps(t: &Testbed) -> u64 {
     let hop = (t.upi.hop_latency_ns * NS as f64) as u64;
-    let dram = (t.dram.latency_ns * NS as f64) as u64;
     let ctrl = cycles_ps(t.accel.coh_ctrl_cycles, t.accel.freq_mhz);
-    2 * hop + dram + 2 * ctrl
+    2 * hop + 2 * ctrl
+}
+
+/// Nominal round-trip for one DRAM-miss host access from the APU (the
+/// interconnect portion plus the idle DRAM load-to-use latency) — the
+/// analytic planning number used by Fig 12's bounds and the tests.
+pub fn host_access_rtt_ps(t: &Testbed) -> u64 {
+    host_interconnect_ps(t) + (t.dram.latency_ns * NS as f64) as u64
 }
 
 impl CcAccelerator {
@@ -120,14 +135,27 @@ impl CcAccelerator {
     }
 
     /// Build a shard that shares `link` with the other shards on the
-    /// same socket (single-shard callers can just use [`Self::new`]).
+    /// same socket (single-shard callers can just use [`Self::new`]);
+    /// the device gets a private host [`MemorySystem`].
     pub fn with_upi_link(t: &Testbed, mem: AccelMem, link: UpiLink) -> Self {
+        Self::with_shared(t, mem, link, MemorySystem::shared(t))
+    }
+
+    /// Build a shard that shares both the UPI link and the host memory
+    /// system with the other shards on the same socket.
+    pub fn with_shared(
+        t: &Testbed,
+        mem: AccelMem,
+        link: UpiLink,
+        memsys: SharedMemorySystem,
+    ) -> Self {
         let mem_path = match mem.bandwidth_gbs() {
             None => MemPath::Host {
                 coh: MultiServer::new(t.accel.coh_outstanding),
-                rtt_ps: host_access_rtt_ps(t),
+                hop_ps: host_interconnect_ps(t),
                 link,
                 upi_gbs: t.upi.bandwidth_gbs,
+                mem: memsys,
             },
             Some(gbs) => {
                 let latency_ns = match mem {
@@ -151,20 +179,25 @@ impl CcAccelerator {
         }
     }
 
-    /// One data access of `bytes`; returns completion time.
-    fn access(&mut self, now: u64, bytes: u64) -> u64 {
+    /// One data access; returns completion time.
+    fn access(&mut self, now: u64, a: &Access) -> u64 {
+        let bytes = a.bytes as u64;
         self.data_bytes += bytes;
         match &mut self.mem_path {
             MemPath::Host {
                 coh,
-                rtt_ps,
+                hop_ps,
                 link,
                 upi_gbs,
+                mem,
             } => {
+                // Memory-service leg from the shared memory system (LLC
+                // hit / DRAM / NVM by domain, with bandwidth contention).
+                let mem_ps = mem.borrow_mut().access(now, a).saturating_sub(now);
                 // Larger transfers stretch the data leg of the RTT; the
                 // slot is held for the whole round trip.
                 let extra = transfer_ps(bytes.saturating_sub(64), *upi_gbs);
-                let (_s, done, _lane) = coh.acquire(now, *rtt_ps + extra);
+                let (_s, done, _lane) = coh.acquire(now, *hop_ps + mem_ps + extra);
                 // The returned line also serializes on the shared UPI
                 // link; uncontended this finishes well inside the RTT,
                 // but with many shards it is the aggregate cap.
@@ -229,7 +262,7 @@ impl CcAccelerator {
             let (lo, hi) = steps[j][s];
             let mut step_end = t;
             for a in &jobs[j].1.accesses[lo..hi] {
-                let d = self.access(t, a.bytes as u64);
+                let d = self.access(t, a);
                 step_end = step_end.max(d);
             }
             heap.push(Reverse((step_end, j, s + 1)));
@@ -255,7 +288,7 @@ impl CcAccelerator {
                 // New dependency step: wait for the previous step to drain.
                 t = step_end;
             }
-            let done = self.access(t, a.bytes as u64);
+            let done = self.access(t, a);
             step_end = step_end.max(done);
         }
         step_end
@@ -275,12 +308,15 @@ mod tests {
     use super::*;
     use crate::mem::Access;
 
-    fn get_trace() -> MemTrace {
-        // KVS GET: bucket -> entry -> value (3 dependent reads, §IV-A).
+    fn get_trace(key: u64) -> MemTrace {
+        // KVS GET: bucket -> entry -> value (3 dependent reads, §IV-A),
+        // spread over a 7 GB working set so the host LLC mostly misses.
+        // (+1 so key 0 doesn't degenerate to three reads of address 0.)
         let mut t = MemTrace::new();
-        t.push(Access::read(0x1000, 64));
-        t.push(Access::read(0x2000, 64));
-        t.push(Access::read(0x3000, 64));
+        let h = (key + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        t.push(Access::read(h % (7 << 30), 64));
+        t.push(Access::read(h.rotate_left(17) % (7 << 30), 64));
+        t.push(Access::read(h.rotate_left(34) % (7 << 30), 64));
         t
     }
 
@@ -288,7 +324,7 @@ mod tests {
     fn single_get_latency_is_three_rtts() {
         let tb = Testbed::paper();
         let mut acc = CcAccelerator::new(&tb, AccelMem::None);
-        let done = acc.serve(0, &get_trace());
+        let done = acc.serve(0, &get_trace(0));
         let rtt = host_access_rtt_ps(&tb);
         let want = 3 * rtt;
         let got = done;
@@ -304,7 +340,7 @@ mod tests {
         let tb = Testbed::paper();
         let mut acc = CcAccelerator::new(&tb, AccelMem::None);
         let n = 50_000u64;
-        let jobs: Vec<(u64, MemTrace)> = (0..n).map(|_| (0u64, get_trace())).collect();
+        let jobs: Vec<(u64, MemTrace)> = (0..n).map(|i| (0u64, get_trace(i))).collect();
         let done = acc.serve_stream(&jobs);
         let last = *done.iter().max().unwrap();
         let rate_mops = n as f64 / (last as f64 / 1e12) / 1e6;
@@ -327,7 +363,7 @@ mod tests {
         let mut tb = Testbed::paper();
         tb.upi.bandwidth_gbs = 2.0;
         let n = 30_000u64;
-        let jobs: Vec<(u64, MemTrace)> = (0..n).map(|_| (0u64, get_trace())).collect();
+        let jobs: Vec<(u64, MemTrace)> = (0..n).map(|i| (0u64, get_trace(i))).collect();
 
         let link = upi_link();
         let mut a = CcAccelerator::with_upi_link(&tb, AccelMem::None, link.clone());
@@ -358,7 +394,7 @@ mod tests {
         let tb = Testbed::paper();
         let mut base = CcAccelerator::new(&tb, AccelMem::None);
         let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr);
-        let t = get_trace();
+        let t = get_trace(0);
         let base_done = base.serve(0, &t);
         let ld_done = ld.serve(0, &t);
         assert!(
@@ -374,7 +410,7 @@ mod tests {
         let tb = Testbed::paper();
         let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr);
         let mut lh = CcAccelerator::new(&tb, AccelMem::LocalHbm);
-        let t = get_trace();
+        let t = get_trace(0);
         assert!(lh.serve(0, &t) > ld.serve(0, &t));
 
         // But a bandwidth-bound burst finishes sooner on HBM.
@@ -392,7 +428,7 @@ mod tests {
     fn data_byte_accounting() {
         let tb = Testbed::paper();
         let mut acc = CcAccelerator::new(&tb, AccelMem::None);
-        acc.serve(0, &get_trace());
+        acc.serve(0, &get_trace(0));
         assert_eq!(acc.data_bytes, 192);
         assert_eq!(acc.requests, 1);
     }

@@ -33,8 +33,11 @@ pub struct Slab {
     pub freed: u64,
 }
 
-/// Size classes: 64B, 256B, 1KB, 4KB.
-const CLASS_SIZES: [u32; 4] = [64, 256, 1024, 4096];
+/// Size classes: 64B, 256B, 1KB, 4KB, plus two large-object classes
+/// (16KB, 32KB) for the DRAM+NVM placement scenarios, where big values
+/// are homed out-of-line. The top class stays below 64KB so key+value
+/// lengths always fit the entry's u16 length fields.
+const CLASS_SIZES: [u32; 6] = [64, 256, 1024, 4096, 16384, 32768];
 
 fn tag_of(bytes: &[u8]) -> u64 {
     // FNV-1a
@@ -195,7 +198,9 @@ mod tests {
         assert_eq!(Slab::class_for(64), Some(0));
         assert_eq!(Slab::class_for(65), Some(1));
         assert_eq!(Slab::class_for(4096), Some(3));
-        assert_eq!(Slab::class_for(4097), None);
+        assert_eq!(Slab::class_for(4097), Some(4));
+        assert_eq!(Slab::class_for(32768), Some(5));
+        assert_eq!(Slab::class_for(32769), None);
     }
 
     #[test]

@@ -1,14 +1,15 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
 //! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
-//! sharding, all, serve (coordinator demo), info.
+//! sharding, adaptive, all, serve (coordinator demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
 //! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points),
-//! --shards LIST (sharding: shard counts to sweep).
+//! --shards LIST (sharding: shard counts to sweep), --json PATH (dump
+//! the run's tables as machine-readable JSON).
 
 use crate::config::{Overrides, Testbed};
-use crate::experiments::{self, Opts};
+use crate::experiments::{self, Opts, Table};
 use anyhow::{bail, Context, Result};
 
 #[derive(Clone, Debug)]
@@ -19,6 +20,8 @@ pub struct Cli {
     pub cdf: bool,
     /// Shard counts for the `sharding` sweep.
     pub shards: Vec<usize>,
+    /// Dump every table of the run to this path as JSON.
+    pub json: Option<std::path::PathBuf>,
 }
 
 pub const USAGE: &str = "\
@@ -36,6 +39,7 @@ COMMANDS:
   fig11   chain-replication transaction latency
   fig12   DLRM inference throughput
   sharding  multi-APU sharding sweep (throughput vs shard count)
+  adaptive  adaptive D2H steering: SET-heavy KVS over DRAM+NVM, end to end
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
   info    testbed parameters after overrides
@@ -49,6 +53,7 @@ FLAGS:
   --artifacts DIR   artifact bundle for `serve` (default ./artifacts)
   --cdf             with fig7: dump CDF points for plotting
   --shards LIST     comma-separated shard counts for `sharding` (default 1,2,4,8)
+  --json PATH       also write the run's tables to PATH as JSON
 ";
 
 pub fn parse(args: &[String]) -> Result<Cli> {
@@ -61,6 +66,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut artifacts = std::path::PathBuf::from("artifacts");
     let mut cdf = false;
     let mut shards: Vec<usize> = experiments::sharding::SHARD_COUNTS.to_vec();
+    let mut json = None;
     let mut i = 1;
     while i < args.len() {
         let take = |i: &mut usize| -> Result<String> {
@@ -82,6 +88,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             }
             "--artifacts" => artifacts = take(&mut i)?.into(),
             "--cdf" => cdf = true,
+            "--json" => json = Some(take(&mut i)?.into()),
             "--shards" => {
                 let list = take(&mut i)?;
                 shards = list
@@ -110,48 +117,65 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         artifacts,
         cdf,
         shards,
+        json,
     })
 }
 
 pub fn run(cli: &Cli) -> Result<()> {
+    // Fail fast: table-less commands can run for minutes before the
+    // post-hoc JSON check would fire.
+    if cli.json.is_some() && matches!(cli.command.as_str(), "serve" | "info") {
+        bail!("--json: command `{}` produces no tables", cli.command);
+    }
+    let mut tables: Vec<Table> = Vec::new();
     match cli.command.as_str() {
         "fig4" => {
-            experiments::fig4::report(&cli.opts).print();
-            experiments::fig4::report_nvm(&cli.opts).print();
+            tables.push(experiments::fig4::report(&cli.opts));
+            tables.push(experiments::fig4::report_nvm(&cli.opts));
         }
-        "fig7" => {
-            experiments::fig7::report(&cli.opts).print();
-            if cli.cdf {
-                for (label, pts) in experiments::fig7::cdf_dump(&cli.opts) {
-                    println!("# CDF {label}");
-                    for (ns, f) in pts {
-                        println!("{ns:.1} {f:.5}");
-                    }
-                }
-            }
-        }
-        "fig8" => fig8(&cli.opts).print(),
-        "fig9" => fig9(&cli.opts).print(),
-        "fig10" => fig10(&cli.opts).print(),
-        "tab3" => experiments::tab3::report(&cli.opts).print(),
-        "fig11" => experiments::fig11::report(&cli.opts).print(),
-        "fig12" => experiments::fig12::report(&cli.opts).print(),
-        "sharding" => experiments::sharding::report(&cli.opts, &cli.shards).print(),
+        "fig7" => tables.push(experiments::fig7::report(&cli.opts)),
+        "fig8" => tables.push(fig8(&cli.opts)),
+        "fig9" => tables.push(fig9(&cli.opts)),
+        "fig10" => tables.push(fig10(&cli.opts)),
+        "tab3" => tables.push(experiments::tab3::report(&cli.opts)),
+        "fig11" => tables.push(experiments::fig11::report(&cli.opts)),
+        "fig12" => tables.push(experiments::fig12::report(&cli.opts)),
+        "sharding" => tables.push(experiments::sharding::report(&cli.opts, &cli.shards)),
+        "adaptive" => tables.push(experiments::adaptive::report(&cli.opts)),
         "all" => {
-            experiments::fig4::report(&cli.opts).print();
-            experiments::fig4::report_nvm(&cli.opts).print();
-            experiments::fig7::report(&cli.opts).print();
-            fig8(&cli.opts).print();
-            fig9(&cli.opts).print();
-            fig10(&cli.opts).print();
-            experiments::tab3::report(&cli.opts).print();
-            experiments::fig11::report(&cli.opts).print();
-            experiments::fig12::report(&cli.opts).print();
-            experiments::sharding::report(&cli.opts, &cli.shards).print();
+            tables.push(experiments::fig4::report(&cli.opts));
+            tables.push(experiments::fig4::report_nvm(&cli.opts));
+            tables.push(experiments::fig7::report(&cli.opts));
+            tables.push(fig8(&cli.opts));
+            tables.push(fig9(&cli.opts));
+            tables.push(fig10(&cli.opts));
+            tables.push(experiments::tab3::report(&cli.opts));
+            tables.push(experiments::fig11::report(&cli.opts));
+            tables.push(experiments::fig12::report(&cli.opts));
+            tables.push(experiments::sharding::report(&cli.opts, &cli.shards));
+            tables.push(experiments::adaptive::report(&cli.opts));
         }
         "serve" => serve(cli)?,
         "info" => info(&cli.opts),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+    for t in &tables {
+        t.print();
+    }
+    if cli.command == "fig7" && cli.cdf {
+        for (label, pts) in experiments::fig7::cdf_dump(&cli.opts) {
+            println!("# CDF {label}");
+            for (ns, f) in pts {
+                println!("{ns:.1} {f:.5}");
+            }
+        }
+    }
+    if let Some(path) = &cli.json {
+        if tables.is_empty() {
+            bail!("--json: command `{}` produces no tables", cli.command);
+        }
+        std::fs::write(path, experiments::table::to_json(&tables))
+            .with_context(|| format!("writing {}", path.display()))?;
     }
     Ok(())
 }
@@ -201,7 +225,16 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
     use experiments::kvs::{self, KvDesign, RequestStream};
     let mut tb = experiments::Table::new(
         "Fig 9 — KVS latency, 100% GET (µs; batch 32; 70% load)",
-        &["design", "distribution", "avg", "p50", "p99"],
+        &[
+            "design",
+            "distribution",
+            "avg",
+            "p50",
+            "p99",
+            "DRAM rd GB/s",
+            "DRAM wr GB/s",
+            "NVM amp",
+        ],
     );
     for (dist, dl) in [
         (KeyDist::uniform(opts.keys), "uniform"),
@@ -228,6 +261,9 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
                 format!("{:.1}", r.avg_us),
                 format!("{:.1}", r.p50_us),
                 tail,
+                format!("{:.2}", r.dram_read_gbs),
+                format!("{:.2}", r.dram_write_gbs),
+                format!("{:.2}x", r.nvm_write_amp),
             ]);
         }
     }
@@ -330,6 +366,17 @@ mod tests {
         assert_eq!(def.shards, experiments::sharding::SHARD_COUNTS.to_vec());
         assert!(parse(&s(&["sharding", "--shards", "0,2"])).is_err());
         assert!(parse(&s(&["sharding", "--shards", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_json_flag() {
+        let cli = parse(&s(&["fig4", "--json", "/tmp/orca.json"])).unwrap();
+        assert_eq!(
+            cli.json.as_deref(),
+            Some(std::path::Path::new("/tmp/orca.json"))
+        );
+        assert!(parse(&s(&["fig4"])).unwrap().json.is_none());
+        assert!(parse(&s(&["fig4", "--json"])).is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! contention") — an occasional exponential delay.
 
 use crate::config::Testbed;
-use crate::mem::{Dram, Llc, LlcLookup, MemTrace};
+use crate::mem::{MemTrace, MemorySystem};
 use crate::sim::{cycles_ps, MultiServer, Pipeline, Rng, NS, US};
 
 /// One serving core's batching state.
@@ -30,15 +30,15 @@ struct CoreBatch {
     staged: Vec<(u64, MemTrace)>, // (arrival, trace)
 }
 
-/// The CPU KVS/RPC server: `cores` workers, shared LLC + DRAM.
+/// The CPU KVS/RPC server: `cores` workers over one host memory system
+/// (shared LLC + DRAM + NVM, Domain-routed).
 pub struct CpuServer {
     t: Testbed,
     cores: MultiServer,
     batches: Vec<CoreBatch>,
     /// Shared NIC WQE-fetch engine (PCIe reads, ~2 in flight).
     wqe_fetch: Pipeline,
-    pub llc: Llc,
-    pub dram: Dram,
+    pub mem: MemorySystem,
     pub batch: usize,
     rng: Rng,
     /// Probability a batch hits an OS-scheduling hiccup, and its mean cost.
@@ -55,25 +55,12 @@ impl CpuServer {
             cores: MultiServer::new(n_cores),
             batches: vec![CoreBatch::default(); n_cores],
             wqe_fetch: Pipeline::new(pcie_rtt as u64, 2),
-            llc: Llc::new(t.llc.clone()),
-            dram: Dram::new(t.dram.clone()),
+            mem: MemorySystem::new(t),
             batch: batch.max(1),
             rng: Rng::new(seed),
             jitter_p: 0.01,
             jitter_mean_ps: 10.0 * US as f64,
             served: 0,
-        }
-    }
-
-    fn mem_access(&mut self, now: u64, addr: u64, bytes: u64, write: bool) -> u64 {
-        match self.llc.access(addr, write) {
-            LlcLookup::Hit => now + (self.t.llc.hit_latency_ns * NS as f64) as u64,
-            LlcLookup::MissClean => self.dram.access(now, bytes, false),
-            LlcLookup::MissWriteback(victim) => {
-                self.dram.access(now, 64, true); // victim writeback
-                let _ = victim;
-                self.dram.access(now, bytes, false)
-            }
         }
     }
 
@@ -157,7 +144,7 @@ impl CpuServer {
                         s += 1;
                     }
                     if s == step + 1 {
-                        let done = self.mem_access(step_start, a.addr, a.bytes as u64, a.write);
+                        let done = self.mem.access(step_start, a);
                         step_end = step_end.max(done);
                     } else if s > step + 1 {
                         break;

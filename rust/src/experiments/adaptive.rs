@@ -1,0 +1,380 @@
+//! Adaptive D2H steering, end to end (§III-D as a serving-path concern,
+//! beyond the paper's PCIe-bench microbenchmark): a SET-heavy KVS whose
+//! host memory is DRAM **plus** NVM, served by ORCA through the unified
+//! [`crate::serving::ServingPipeline`], under the three steering
+//! policies of Fig 4/5 — static DDIO-on, static DDIO-off, and adaptive
+//! per-TLP TPH.
+//!
+//! The placement protocol (RDCA-style: steer NIC payloads to where the
+//! consumer wants them):
+//!
+//! * **Small values** (`< NVM_VALUE_THRESHOLD`) ride *inline* in the
+//!   2 MB request ring; the APU reads the whole payload from the ring,
+//!   writes the value to its DRAM slab home, and updates the index.
+//!   The ring fits the LLC's DDIO ways, so steered DMA (DDIO-on /
+//!   TPH=1) makes every ring read an LLC hit, while DDIO-off forces a
+//!   DRAM round trip per line — the DRAM-bound end of the sweep.
+//! * **Large values** (`≥` threshold) are RDMA-written *zero-copy* to
+//!   their NVM log home (only the 128 B header+key enters the ring).
+//!   Bouncing that stream through the LLC (DDIO-on) replays §III-D's
+//!   pathology — random 64 B evictions, ~4× media write amplification,
+//!   NVM write bandwidth exhausted — while TPH=0 writes the values
+//!   sequentially at media granularity. The NVM-bound end of the sweep.
+//!
+//! Adaptive steering sets TPH per TLP by destination (1 → ring/DRAM,
+//! 0 → NVM log) and therefore matches the best static policy at *both*
+//! ends, which is the paper's argument for making DDIO NVM-aware per
+//! device rather than a global switch.
+//!
+//! Like the sharding sweep, the comparison runs on a 100 Gbps variant of
+//! the testbed when the configured wire is slower: at 25 Gbps the wire
+//! is the binding resource for every policy and hides the memory path.
+
+use super::{Opts, Table};
+use crate::apps::kvs::{HashTable, KvConfig};
+use crate::config::{AccelMem, Testbed};
+use crate::mem::{Access, DmaWrite, Domain, MemTrace, MemorySystem, SteeringPolicy};
+use crate::serving::{Load, Orca, RunMetrics, ServingPipeline};
+use crate::sim::Rng;
+use crate::workload::KeyDist;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Base of the NVM region in the simulated address map (above every
+/// DRAM-backed structure the KVS uses).
+pub const NVM_BASE: u64 = 1 << 44;
+/// Values at or above this size are homed in NVM and RDMA-written
+/// zero-copy; smaller values ride inline in the ring and live in DRAM.
+pub const NVM_VALUE_THRESHOLD: u64 = 2048;
+/// Fraction of operations that are SETs ("SET-heavy").
+pub const SET_FRACTION: f64 = 0.9;
+/// Value sizes the sweep covers (DRAM-bound end → NVM-bound end).
+pub const VALUE_SWEEP: [u64; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// Request-ring geometry: 2 MB, as in Fig 4's PCIe-bench setup — small
+/// enough that steered DMA stays resident in the LLC's DDIO ways.
+const RING_BASE: u64 = 0x8000_0000;
+const RING_BYTES: u64 = 2 << 20;
+/// Header + key lines every request carries in the ring.
+const HDR_BYTES: u64 = 128;
+
+/// One sweep point's pre-generated request stream.
+pub struct AdaptiveStream {
+    pub traces: Vec<MemTrace>,
+    pub value_bytes: u64,
+    /// True when this point's values are homed in NVM (out-of-line).
+    pub nvm_resident: bool,
+}
+
+/// Remap a slab address into the NVM log region.
+fn nvm_home(addr: u64, slab_base: u64) -> u64 {
+    NVM_BASE + (addr - slab_base)
+}
+
+/// Build one sweep point: a SET-heavy op stream over a real
+/// [`HashTable`], each op turned into (a) the NIC's placement — TPH-
+/// tagged [`DmaWrite`]s — and (b) the APU's serve-side [`MemTrace`].
+pub fn build_stream(
+    keys: u64,
+    requests: u64,
+    value_bytes: u64,
+    seed: u64,
+) -> AdaptiveStream {
+    let nvm_resident = value_bytes >= NVM_VALUE_THRESHOLD;
+    let cfg = KvConfig {
+        buckets: (keys / 4).max(64) as usize,
+        materialize: false,
+        ..KvConfig::default()
+    };
+    let slab_base = cfg.slab_base;
+    let mut table = HashTable::new(cfg);
+    let val = vec![0xABu8; value_bytes as usize];
+    for k in 0..keys {
+        table.put(&k.to_le_bytes(), &val);
+    }
+
+    let dist = KeyDist::uniform(keys);
+    let mut rng = Rng::new(seed);
+    // Ring slots hold header+key plus the inline value (if any).
+    let inline_bytes = if nvm_resident { 0 } else { value_bytes };
+    let slot_stride = (HDR_BYTES + inline_bytes).next_multiple_of(64);
+    let slots = (RING_BYTES / slot_stride).max(1);
+    // One ring credit per request: a measurement issues at most one full
+    // ring (the client-side flow control every ring protocol has). This
+    // also keeps the simulation honest — the pipeline replays all ingress
+    // DMA before all serve reads, so reusing a slot inside one
+    // measurement would let a request observe LLC state from a *later*
+    // wrap's DMA.
+    let requests = requests.min(slots);
+
+    let mut traces = Vec::with_capacity(requests as usize);
+    for i in 0..requests {
+        let key = dist.sample(&mut rng);
+        let ring = RING_BASE + i * slot_stride;
+        let mut tr = MemTrace::new();
+        // Every request's header+key is DRAM-destined: TPH set.
+        // The APU parses it out of the ring first.
+        let hdr_read = |tr: &mut MemTrace| {
+            tr.push(Access::read(ring, 64));
+            tr.push(Access::read(ring + 64, 64).parallel());
+        };
+        if rng.chance(SET_FRACTION) {
+            let op = table.put(&key.to_le_bytes(), &val);
+            let home = op
+                .trace
+                .accesses
+                .iter()
+                .find(|a| a.write && a.addr >= slab_base)
+                .map(|a| a.addr)
+                .expect("a PUT always writes its slab slot");
+            if nvm_resident {
+                // Out-of-line: header to the ring, value zero-copy to
+                // its NVM log home (TPH clear — the adaptive policy's
+                // whole point).
+                tr.dma.push(DmaWrite { addr: ring, bytes: HDR_BYTES, tph: true });
+                tr.dma.push(DmaWrite {
+                    addr: nvm_home(home, slab_base),
+                    bytes: value_bytes,
+                    tph: false,
+                });
+                hdr_read(&mut tr);
+                // Serve side: index walk/update only — the value is
+                // already durable at its home.
+                for a in &op.trace.accesses {
+                    if a.write && a.addr >= slab_base {
+                        continue; // placed by the NIC
+                    }
+                    tr.push(*a);
+                }
+            } else {
+                // Inline: the whole request rides in the ring slot.
+                tr.dma.push(DmaWrite {
+                    addr: ring,
+                    bytes: HDR_BYTES + value_bytes,
+                    tph: true,
+                });
+                hdr_read(&mut tr);
+                // The APU streams the inline value out of the ring...
+                let mut off = HDR_BYTES;
+                while off < HDR_BYTES + value_bytes {
+                    tr.push(Access::read(ring + off, 64).parallel());
+                    off += 64;
+                }
+                // ...then writes it home (DRAM slab) and updates the
+                // index — the table's own trace, verbatim.
+                for a in &op.trace.accesses {
+                    tr.push(*a);
+                }
+            }
+        } else {
+            let op = table.get(&key.to_le_bytes());
+            tr.dma.push(DmaWrite { addr: ring, bytes: HDR_BYTES, tph: true });
+            hdr_read(&mut tr);
+            for a in &op.trace.accesses {
+                let mut a = *a;
+                if nvm_resident && a.addr >= slab_base {
+                    a.addr = nvm_home(a.addr, slab_base);
+                    a.domain = Domain::HostNvm;
+                }
+                tr.push(a);
+            }
+        }
+        traces.push(tr);
+    }
+    AdaptiveStream {
+        traces,
+        value_bytes,
+        nvm_resident,
+    }
+}
+
+/// One (sweep point, policy) measurement.
+#[derive(Clone, Debug)]
+pub struct AdaptiveRow {
+    pub value_bytes: u64,
+    pub nvm_resident: bool,
+    pub policy: SteeringPolicy,
+    pub metrics: RunMetrics,
+}
+
+/// Table label for a policy.
+pub fn policy_label(p: SteeringPolicy) -> &'static str {
+    match p {
+        SteeringPolicy::DdioOn => "DDIO on",
+        SteeringPolicy::DdioOff => "DDIO off",
+        SteeringPolicy::Adaptive => "adaptive",
+    }
+}
+
+/// Run one policy over one sweep point through the serving pipeline
+/// (single-APU ORCA, batch 32, saturation load).
+pub fn run_policy(
+    t: &Testbed,
+    stream: &AdaptiveStream,
+    policy: SteeringPolicy,
+    seed: u64,
+) -> AdaptiveRow {
+    let mem = Rc::new(RefCell::new(
+        MemorySystem::new(t)
+            .with_policy(policy)
+            .with_nvm_region(NVM_BASE),
+    ));
+    let mut design = Orca::with_memory(t, AccelMem::None, 32, 1, mem);
+    let req_bytes = HDR_BYTES + stream.value_bytes;
+    let pipe = ServingPipeline::new(Load::Saturation, req_bytes, 64, seed);
+    let metrics = pipe.run(&mut design, &stream.traces);
+    AdaptiveRow {
+        value_bytes: stream.value_bytes,
+        nvm_resident: stream.nvm_resident,
+        policy,
+        metrics,
+    }
+}
+
+/// The testbed the sweep actually runs on: at least 100 Gbps, so the
+/// memory system (not the wire) is the binding resource.
+pub fn sweep_testbed(t: &Testbed) -> Testbed {
+    let mut t = t.clone();
+    if t.net.line_gbps < 100.0 {
+        t.net.line_gbps = 100.0;
+    }
+    t
+}
+
+/// The full sweep: every value size × every policy.
+pub fn sweep(opts: &Opts) -> Vec<AdaptiveRow> {
+    let t = sweep_testbed(&opts.testbed);
+    let requests = opts.requests.min(30_000);
+    let keys = opts.keys.min(400_000);
+    let mut rows = Vec::new();
+    for &vb in &VALUE_SWEEP {
+        let stream = build_stream(keys, requests, vb, opts.seed);
+        for policy in [
+            SteeringPolicy::DdioOn,
+            SteeringPolicy::DdioOff,
+            SteeringPolicy::Adaptive,
+        ] {
+            rows.push(run_policy(&t, &stream, policy, opts.seed));
+        }
+    }
+    rows
+}
+
+pub fn report(opts: &Opts) -> Table {
+    let mut tb = Table::new(
+        "Adaptive D2H steering — SET-heavy KVS over DRAM+NVM (ORCA, 100G, saturation)",
+        &[
+            "value",
+            "home",
+            "policy",
+            "Mops",
+            "avg µs",
+            "DRAM rd GB/s",
+            "DRAM wr GB/s",
+            "NVM amp",
+        ],
+    );
+    for r in sweep(opts) {
+        tb.row(&[
+            format!("{}B", r.value_bytes),
+            if r.nvm_resident { "NVM" } else { "DRAM" }.into(),
+            policy_label(r.policy).into(),
+            format!("{:.2}", r.metrics.mops),
+            format!("{:.1}", r.metrics.avg_us),
+            format!("{:.2}", r.metrics.dram_read_gbs),
+            format!("{:.2}", r.metrics.dram_write_gbs),
+            format!("{:.2}x", r.metrics.nvm_write_amp),
+        ]);
+    }
+    tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rig(keys: u64, value_bytes: u64, requests: u64) -> (Testbed, AdaptiveStream) {
+        let t = sweep_testbed(&Testbed::paper());
+        let stream = build_stream(keys, requests, value_bytes, 7);
+        (t, stream)
+    }
+
+    #[test]
+    fn streams_place_values_by_size() {
+        let (_t, small) = rig(10_000, 512, 200);
+        assert!(!small.nvm_resident);
+        // Inline: one DMA write covering header+value, nothing at NVM.
+        assert!(small.traces.iter().all(|tr| tr
+            .dma
+            .iter()
+            .all(|w| w.addr < NVM_BASE && w.tph)));
+        let (_t, large) = rig(10_000, 4096, 200);
+        assert!(large.nvm_resident);
+        // Out-of-line SETs carry one NVM-destined, TPH-clear write.
+        assert!(large
+            .traces
+            .iter()
+            .any(|tr| tr.dma.iter().any(|w| w.addr >= NVM_BASE && !w.tph)));
+    }
+
+    #[test]
+    fn adaptive_matches_best_static_at_the_dram_bound_end() {
+        // Small inline values: DDIO-on keeps the ring in the LLC; DDIO-off
+        // pays a DRAM round trip per ring line and loses >10% throughput;
+        // adaptive (TPH=1 everywhere here) matches DDIO-on.
+        let (t, s) = rig(200_000, VALUE_SWEEP[0], 10_000);
+        let on = run_policy(&t, &s, SteeringPolicy::DdioOn, 7);
+        let off = run_policy(&t, &s, SteeringPolicy::DdioOff, 7);
+        let ad = run_policy(&t, &s, SteeringPolicy::Adaptive, 7);
+        let loss = (on.metrics.mops - off.metrics.mops) / on.metrics.mops;
+        assert!(loss > 0.10, "DDIO-off should lose >10% here, lost {loss:.3}");
+        let gap = (ad.metrics.mops - on.metrics.mops).abs() / on.metrics.mops;
+        assert!(
+            gap < 0.02,
+            "adaptive {} vs best static {} ({gap:.3})",
+            ad.metrics.mops,
+            on.metrics.mops
+        );
+    }
+
+    #[test]
+    fn adaptive_matches_best_static_at_the_nvm_bound_end() {
+        // Large NVM-homed values: DDIO-on bounces the stream through the
+        // LLC and pays ~4x media write amplification; DDIO-off and
+        // adaptive write at media granularity.
+        let (t, s) = rig(20_000, VALUE_SWEEP[VALUE_SWEEP.len() - 1], 6_000);
+        let on = run_policy(&t, &s, SteeringPolicy::DdioOn, 7);
+        let off = run_policy(&t, &s, SteeringPolicy::DdioOff, 7);
+        let ad = run_policy(&t, &s, SteeringPolicy::Adaptive, 7);
+        let loss = (off.metrics.mops - on.metrics.mops) / off.metrics.mops;
+        assert!(loss > 0.10, "DDIO-on should lose >10% here, lost {loss:.3}");
+        assert!(
+            on.metrics.nvm_write_amp > 3.0,
+            "LLC bounce must amplify: {}",
+            on.metrics.nvm_write_amp
+        );
+        assert!(
+            ad.metrics.nvm_write_amp < 1.2 && off.metrics.nvm_write_amp < 1.2,
+            "direct paths must not amplify"
+        );
+        let best = off.metrics.mops.max(ad.metrics.mops);
+        let gap = (best - ad.metrics.mops) / best;
+        assert!(
+            gap < 0.02,
+            "adaptive {} vs best static {} ({gap:.3})",
+            ad.metrics.mops,
+            off.metrics.mops
+        );
+    }
+
+    #[test]
+    fn report_has_a_row_per_point_and_policy() {
+        let opts = Opts {
+            keys: 5_000,
+            requests: 600,
+            ..Opts::default()
+        };
+        let tb = report(&opts);
+        assert_eq!(tb.n_rows(), VALUE_SWEEP.len() * 3);
+    }
+}

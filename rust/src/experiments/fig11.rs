@@ -13,7 +13,7 @@ use super::{Opts, Table};
 use crate::apps::txn::{Chain, Transaction, TxOp};
 use crate::baselines::hyperloop::{ChainCosts, HyperLoopChain, TxnShape};
 use crate::config::Testbed;
-use crate::mem::Nvm;
+use crate::mem::{Access, Domain, MemorySystem};
 use crate::serving::{ClosedLoop, ServingPipeline};
 use crate::sim::{cycles_ps, Rng, US};
 
@@ -21,10 +21,14 @@ pub const SHAPES: [(u32, u32); 2] = [(0, 1), (4, 2)];
 pub const VALUE_SIZES: [u64; 2] = [64, 1024];
 
 /// ORCA Tx latency model for one transaction: one request up, APU
-/// executes all ops against NVM (near-data), one chain traversal, ack.
+/// executes all ops against the host memory system's NVM (near-data),
+/// one chain traversal, ack. Log accesses are tagged `Domain::HostNvm`,
+/// so NVM timing and write amplification are modeled once — by the same
+/// [`MemorySystem`] the rest of the serving path uses — not by a
+/// private `Nvm` copy.
 pub struct OrcaTx {
     costs: ChainCosts,
-    pub nvm: Nvm,
+    pub mem: MemorySystem,
     apu_op_ps: u64,
     next_addr: u64,
 }
@@ -33,10 +37,20 @@ impl OrcaTx {
     pub fn new(t: &Testbed, replicas: u32) -> Self {
         OrcaTx {
             costs: ChainCosts::from_testbed(t, replicas),
-            nvm: Nvm::new(t.nvm.clone()),
+            mem: MemorySystem::new(t),
             apu_op_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
             next_addr: 0,
         }
+    }
+
+    fn nvm_read(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        self.mem
+            .access(now, &Access::read(addr, bytes as u32).in_domain(Domain::HostNvm))
+    }
+
+    fn nvm_write(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        self.mem
+            .access(now, &Access::write(addr, bytes as u32).in_domain(Domain::HostNvm))
     }
 
     pub fn execute(&mut self, now: u64, shape: TxnShape) -> u64 {
@@ -52,12 +66,12 @@ impl OrcaTx {
         for i in 0..shape.reads {
             t += self.apu_op_ps;
             let addr = self.next_addr + i as u64 * 4096;
-            t = self.nvm.read(t, addr, shape.value_bytes);
+            t = self.nvm_read(t, addr, shape.value_bytes);
         }
         let mut log_addr = self.next_addr;
         for _ in 0..shape.writes {
             t += self.apu_op_ps;
-            t = self.nvm.write(t, log_addr, shape.value_bytes);
+            t = self.nvm_write(t, log_addr, shape.value_bytes);
             log_addr += shape.value_bytes.max(64);
         }
         self.next_addr = log_addr;
@@ -67,7 +81,7 @@ impl OrcaTx {
         for _ in 1..self.costs.replicas {
             t += self.costs.net_leg_ps + self.costs.wire_ps(fwd_payload);
             t += self.costs.pcie_rtt_ps / 2;
-            t = self.nvm.write(t, log_addr + (1 << 30), fwd_payload);
+            t = self.nvm_write(t, log_addr + (1 << 30), fwd_payload);
         }
         for _ in 0..self.costs.replicas {
             t += self.costs.net_leg_ps + self.costs.wire_ps(16);

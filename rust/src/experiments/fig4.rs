@@ -12,7 +12,7 @@
 use super::{Opts, Table};
 use crate::config::Testbed;
 use crate::interconnect::{Pcie, SteeringPolicy, Tlp};
-use crate::mem::{Dram, Llc, Nvm};
+use crate::mem::{Dram, Llc, MemorySystem, Nvm};
 use crate::sim::{Rng, SEC};
 
 #[derive(Clone, Debug)]
@@ -23,11 +23,11 @@ pub struct Fig4Row {
     pub dram_write_gbs: f64,
 }
 
-/// Stream `seconds` of 3.5 GB/s random 64 B DMA writes over a buffer.
+/// Stream `seconds` of 3.5 GB/s random 64 B DMA writes over a buffer —
+/// a thin driver over [`MemorySystem::dma_ingress`] via the PCIe link.
 pub fn run_config(t: &Testbed, ddio: bool, tph: bool, seed: u64) -> Fig4Row {
     let mut pcie = Pcie::new(t.pcie.clone());
-    let mut llc = Llc::new(t.llc.clone());
-    let mut dram = Dram::new(t.dram.clone());
+    let mut mem = MemorySystem::new(t).with_policy(SteeringPolicy::fig4(ddio, tph));
     let mut rng = Rng::new(seed);
 
     // 3.5 GB/s of 64 B writes = one write every ~18.3 ns; simulate 2 ms.
@@ -36,31 +36,19 @@ pub fn run_config(t: &Testbed, ddio: bool, tph: bool, seed: u64) -> Fig4Row {
     // A 2 MB I/O buffer (descriptor/data rings) — PCIe-bench's DMA target
     // fits in the LLC's DDIO ways, as the paper's Fig-4 setup does.
     let buf_lines = (2u64 << 20) / 64;
-    let policy = if ddio {
-        SteeringPolicy::DdioOn
-    } else {
-        SteeringPolicy::Adaptive // DDIO off: TPH bit decides
-    };
     let mut now = 0;
     while now < span_ps {
         let addr = rng.below(buf_lines) * 64;
-        pcie.steer_dma_write(
-            now,
-            Tlp { addr, bytes: 64, tph },
-            policy,
-            &mut llc,
-            &mut dram,
-            None,
-            |_| false,
-        );
+        pcie.steer_dma_write(now, Tlp { addr, bytes: 64, tph }, &mut mem);
         now += gap_ps;
     }
     let secs = span_ps as f64 / SEC as f64;
+    let stats = mem.stats();
     Fig4Row {
         ddio,
         tph,
-        dram_read_gbs: dram.read_bytes as f64 / secs / 1e9,
-        dram_write_gbs: dram.write_bytes as f64 / secs / 1e9,
+        dram_read_gbs: stats.dram_read_bytes as f64 / secs / 1e9,
+        dram_write_gbs: stats.dram_write_bytes as f64 / secs / 1e9,
     }
 }
 
@@ -69,20 +57,20 @@ pub fn run_config(t: &Testbed, ddio: bool, tph: bool, seed: u64) -> Fig4Row {
 pub fn nvm_amplification(t: &Testbed, seed: u64) -> (f64, f64) {
     let run = |to_llc: bool| {
         let mut pcie = Pcie::new(t.pcie.clone());
-        let mut llc = Llc::new(crate::config::LlcParams {
+        let llc = Llc::new(crate::config::LlcParams {
             // Small LLC slice so evictions happen within the run.
             size_bytes: 1 << 20,
             ..t.llc.clone()
         });
-        let mut dram = Dram::new(t.dram.clone());
-        let mut nvm = Nvm::new(t.nvm.clone());
+        let mut mem = MemorySystem::from_parts(
+            llc,
+            Dram::new(t.dram.clone()),
+            Nvm::new(t.nvm.clone()),
+            SteeringPolicy::fig4(to_llc, false),
+            0, // the whole DMA target is the NVM region
+        );
         let mut rng = Rng::new(seed);
         let buf_lines = (64u64 << 20) / 64;
-        let policy = if to_llc {
-            SteeringPolicy::DdioOn
-        } else {
-            SteeringPolicy::Adaptive
-        };
         // 256B sequential-ish device writes (journal append pattern).
         let mut now = 0;
         for i in 0..200_000u64 {
@@ -94,18 +82,11 @@ pub fn nvm_amplification(t: &Testbed, seed: u64) -> (f64, f64) {
             } else {
                 (i % buf_lines) * 256 % (buf_lines * 64)
             };
-            pcie.steer_dma_write(
-                now,
-                Tlp { addr, bytes: if to_llc { 64 } else { 256 }, tph: false },
-                policy,
-                &mut llc,
-                &mut dram,
-                Some(&mut nvm),
-                |_| true,
-            );
+            let bytes = if to_llc { 64 } else { 256 };
+            pcie.steer_dma_write(now, Tlp { addr, bytes, tph: false }, &mut mem);
             now += 10_000;
         }
-        nvm.write_amp()
+        mem.nvm_write_amp()
     };
     (run(true), run(false))
 }

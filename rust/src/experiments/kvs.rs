@@ -59,6 +59,11 @@ pub struct KvRun {
     /// Diagnostics.
     pub host_frac: f64,
     pub net_bound_mops: f64,
+    /// Memory-side counters (host DRAM bandwidth over the run, NVM
+    /// write amplification) from the design's memory system.
+    pub dram_read_gbs: f64,
+    pub dram_write_gbs: f64,
+    pub nvm_write_amp: f64,
 }
 
 /// Pre-generated request stream: per request, the trace the functional
@@ -151,6 +156,9 @@ pub fn run(
         p99_us: m.p99_us,
         host_frac: m.host_frac,
         net_bound_mops: m.net_bound_mops,
+        dram_read_gbs: m.dram_read_gbs,
+        dram_write_gbs: m.dram_write_gbs,
+        nvm_write_amp: m.nvm_write_amp,
     }
 }
 

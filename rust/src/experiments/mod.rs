@@ -12,12 +12,14 @@
 //! | Fig 11 (Tx latency) | [`fig11`] | `orca fig11` |
 //! | Fig 12 (DLRM throughput) | [`fig12`] | `orca fig12` |
 //! | multi-APU sharding sweep (beyond the paper) | [`sharding`] | `orca sharding` |
+//! | adaptive D2H steering, end to end (beyond the paper) | [`adaptive`] | `orca adaptive` |
 //!
 //! Absolute numbers are *this testbed's*; the claims under test are the
 //! paper's shapes (who wins, by what factor, where crossovers sit) — see
 //! EXPERIMENTS.md for paper-vs-measured. All serving-path drivers
 //! dispatch through [`crate::serving::ServingPipeline`].
 
+pub mod adaptive;
 pub mod fig11;
 pub mod fig12;
 pub mod fig4;

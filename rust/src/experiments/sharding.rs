@@ -33,6 +33,10 @@ pub struct ShardRow {
     pub net_utilization: f64,
     /// Hottest shard's request share over the mean share (1 = balanced).
     pub imbalance: f64,
+    /// Host DRAM bandwidth all shards drew through the shared memory
+    /// system over the run, GB/s.
+    pub dram_read_gbs: f64,
+    pub dram_write_gbs: f64,
 }
 
 /// Peak throughput of an N-shard ORCA over `stream` (saturation load,
@@ -48,6 +52,8 @@ pub fn run_shards(t: &Testbed, stream: &RequestStream, shards: usize, seed: u64)
         net_bound_mops: m.net_bound_mops,
         net_utilization: m.utilization,
         imbalance: design.imbalance(),
+        dram_read_gbs: m.dram_read_gbs,
+        dram_write_gbs: m.dram_write_gbs,
     }
 }
 
@@ -70,6 +76,8 @@ pub fn report(opts: &Opts, counts: &[usize]) -> Table {
             "net bound",
             "net util",
             "imbalance",
+            "DRAM rd GB/s",
+            "DRAM wr GB/s",
         ],
     );
     // The configured testbed, plus a 100 Gbps variant where sharding
@@ -102,6 +110,8 @@ pub fn report(opts: &Opts, counts: &[usize]) -> Table {
                     format!("{:.1}", row.net_bound_mops),
                     format!("{:.0}%", row.net_utilization * 100.0),
                     format!("{:.2}", row.imbalance),
+                    format!("{:.2}", row.dram_read_gbs),
+                    format!("{:.2}", row.dram_write_gbs),
                 ]);
             }
         }

@@ -75,6 +75,70 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// Machine-readable form: `{"title": …, "header": […], "rows":
+    /// [{"col": "cell", …}, …]}` (hand-rolled — no serde offline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"title\":");
+        out.push_str(&json_str(&self.title));
+        out.push_str(",\"header\":[");
+        for (i, h) in self.header.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&json_str(h));
+        }
+        out.push_str("],\"rows\":[");
+        for (r, row) in self.rows.iter().enumerate() {
+            if r > 0 {
+                out.push(',');
+            }
+            out.push('{');
+            for (i, (h, c)) in self.header.iter().zip(row).enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&json_str(h));
+                out.push(':');
+                out.push_str(&json_str(c));
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// JSON-dump a run's tables as one array (the `--json` CLI flag; the
+/// bench trajectory's `BENCH_*.json` files are built from this).
+pub fn to_json(tables: &[Table]) -> String {
+    let mut out = String::from("[");
+    for (i, t) in tables.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&t.to_json());
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 #[cfg(test)]
@@ -99,5 +163,17 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_round_trips_the_cells() {
+        let mut t = Table::new("demo \"x\"", &["design", "Mops"]);
+        t.row(&["CPU".into(), "21.4".into()]);
+        let j = to_json(&[t]);
+        assert!(j.starts_with('[') && j.trim_end().ends_with(']'));
+        assert!(j.contains(r#""title":"demo \"x\"""#));
+        assert!(j.contains(r#"{"design":"CPU","Mops":"21.4"}"#));
+        // Escaping keeps the output single-line (parseable by the driver).
+        assert_eq!(j.trim_end().lines().count(), 1);
     }
 }

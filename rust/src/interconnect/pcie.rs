@@ -6,11 +6,17 @@
 //! writes, and — for §III-D — the **TPH bit** on each write TLP that,
 //! together with the global DDIO enable, decides whether DMA data lands
 //! in the LLC or in memory (validated against Fig 4's four on/off
-//! configurations).
+//! configurations). The steering decision itself — and the LLC/DRAM/NVM
+//! it lands in — lives in [`crate::mem::MemorySystem`]; the link hands
+//! each write TLP over at [`Pcie::steer_dma_write`].
 
 use crate::config::PcieParams;
-use crate::mem::{Dram, Llc, Nvm};
+use crate::mem::MemorySystem;
 use crate::sim::{transfer_ps, Server, NS};
+
+// The steering policy is owned by the memory system; re-exported here
+// because the TLP-processing-hints bit is a PCIe-level concept.
+pub use crate::mem::SteeringPolicy;
 
 /// A write TLP as the steering logic sees it.
 #[derive(Clone, Copy, Debug)]
@@ -19,40 +25,6 @@ pub struct Tlp {
     pub bytes: u64,
     /// TLP Processing Hint bit (§III-D): set ⇒ steer to LLC.
     pub tph: bool,
-}
-
-/// Where device writes should land, per the paper's Fig-5 configurations.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SteeringPolicy {
-    /// DDIO on (CPU-global), TPH ignored — today's default: all DMA → LLC.
-    DdioOn,
-    /// DDIO off, TPH ignored — all DMA → memory.
-    DdioOff,
-    /// The paper's proposal: DDIO off globally, but a set TPH bit steers
-    /// the individual TLP into the LLC ("DDIO NVM-aware per device").
-    Adaptive,
-}
-
-impl SteeringPolicy {
-    /// Does this write TLP go to the LLC?
-    #[inline]
-    pub fn to_llc(self, tlp: &Tlp) -> bool {
-        match self {
-            SteeringPolicy::DdioOn => true,
-            SteeringPolicy::DdioOff => false,
-            SteeringPolicy::Adaptive => tlp.tph,
-        }
-    }
-
-    /// Fig-4 configuration labels (DDIO, TPH) → effective policy for a
-    /// device that sets TPH on every packet when `tph` is true.
-    pub fn fig4(ddio: bool, _tph: bool) -> SteeringPolicy {
-        if ddio {
-            SteeringPolicy::DdioOn
-        } else {
-            SteeringPolicy::Adaptive // TPH honored only when DDIO is off
-        }
-    }
 }
 
 /// The link itself: two independent directions.
@@ -121,62 +93,13 @@ impl Pcie {
         done + self.one_way_ps()
     }
 
-    /// Steer one DMA write into the memory system under `policy`:
-    /// to LLC (possibly causing a dirty writeback of the victim to DRAM or
-    /// NVM) or directly to the backing store. `nvm_addr` tells the router
-    /// which addresses are NVM. Returns completion time.
-    #[allow(clippy::too_many_arguments)]
-    pub fn steer_dma_write(
-        &mut self,
-        now: u64,
-        tlp: Tlp,
-        policy: SteeringPolicy,
-        llc: &mut Llc,
-        dram: &mut Dram,
-        nvm: Option<&mut Nvm>,
-        is_nvm_addr: impl Fn(u64) -> bool,
-    ) -> u64 {
+    /// Serialize one DMA write over the link, then steer it into `mem`
+    /// under the memory system's owned policy: to the LLC (possibly
+    /// causing dirty writebacks of victims to DRAM or NVM) or directly to
+    /// the backing store. Returns completion time.
+    pub fn steer_dma_write(&mut self, now: u64, tlp: Tlp, mem: &mut MemorySystem) -> u64 {
         let arrive = self.dma_write(now, tlp.bytes);
-        if policy.to_llc(&tlp) {
-            // Allocate line(s) in LLC; dirty victims write back to their
-            // own domain.
-            let line = llc.params().line_bytes;
-            let mut t = arrive;
-            let mut nvm = nvm;
-            let mut a = tlp.addr / line * line;
-            let end = tlp.addr + tlp.bytes;
-            while a < end {
-                if let crate::mem::LlcLookup::MissWriteback(victim) = llc.dma_write(a) {
-                    t = if is_nvm_addr(victim) {
-                        match nvm.as_deref_mut() {
-                            Some(n) => t.max(n.write(arrive, victim, line)),
-                            None => t.max(dram.access(arrive, line, true)),
-                        }
-                    } else {
-                        t.max(dram.access(arrive, line, true))
-                    };
-                }
-                a += line;
-            }
-            t
-        } else {
-            // Straight to backing store; invalidate stale cached copies.
-            let line = llc.params().line_bytes;
-            let mut a = tlp.addr / line * line;
-            let end = tlp.addr + tlp.bytes;
-            while a < end {
-                llc.dma_write_bypass(a);
-                a += line;
-            }
-            if is_nvm_addr(tlp.addr) {
-                match nvm {
-                    Some(n) => n.write(arrive, tlp.addr, tlp.bytes),
-                    None => dram.access(arrive, tlp.bytes, true),
-                }
-            } else {
-                dram.access(arrive, tlp.bytes, true)
-            }
-        }
+        mem.dma_ingress(arrive, tlp.addr, tlp.bytes, tlp.tph)
     }
 
     pub fn params(&self) -> &PcieParams {
@@ -187,7 +110,8 @@ impl Pcie {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DramParams, LlcParams, PcieParams};
+    use crate::config::{LlcParams, NvmParams, PcieParams, Testbed};
+    use crate::mem::{Dram, Llc, Nvm};
     use crate::sim::US;
 
     #[test]
@@ -209,12 +133,10 @@ mod tests {
 
     #[test]
     fn steering_policy_truth_table() {
-        let t_on = Tlp { addr: 0, bytes: 64, tph: true };
-        let t_off = Tlp { addr: 0, bytes: 64, tph: false };
-        assert!(SteeringPolicy::DdioOn.to_llc(&t_off));
-        assert!(!SteeringPolicy::DdioOff.to_llc(&t_on)); // hard off ignores TPH
-        assert!(SteeringPolicy::Adaptive.to_llc(&t_on));
-        assert!(!SteeringPolicy::Adaptive.to_llc(&t_off));
+        assert!(SteeringPolicy::DdioOn.to_llc(false));
+        assert!(!SteeringPolicy::DdioOff.to_llc(true)); // hard off ignores TPH
+        assert!(SteeringPolicy::Adaptive.to_llc(true));
+        assert!(!SteeringPolicy::Adaptive.to_llc(false));
     }
 
     #[test]
@@ -222,60 +144,32 @@ mod tests {
         // Miniature Fig 4: stream DMA writes over a small region; with
         // steering to LLC the DRAM write counter stays ~0, without it the
         // full stream hits DRAM.
-        let mk = || {
-            (
-                Pcie::new(PcieParams::default()),
-                Llc::new(LlcParams::default()),
-                Dram::new(DramParams::default()),
-            )
+        let t = Testbed::paper();
+        let run = |policy: SteeringPolicy| {
+            let mut pc = Pcie::new(PcieParams::default());
+            let mut mem = MemorySystem::new(&t).with_policy(policy);
+            let mut now = 0;
+            for i in 0..1000u64 {
+                let tlp = Tlp { addr: (i % 64) * 64, bytes: 64, tph: false };
+                now = pc.steer_dma_write(now, tlp, &mut mem);
+            }
+            mem.stats().dram_write_bytes
         };
-        let not_nvm = |_a: u64| false;
-
-        let (mut pc, mut llc, mut dram) = mk();
-        let mut now = 0;
-        for i in 0..1000u64 {
-            let tlp = Tlp { addr: (i % 64) * 64, bytes: 64, tph: false };
-            now = pc.steer_dma_write(now, tlp, SteeringPolicy::DdioOn, &mut llc, &mut dram, None, not_nvm);
-        }
-        assert_eq!(dram.write_bytes, 0, "DDIO-on should not touch DRAM");
-
-        let (mut pc, mut llc, mut dram) = mk();
-        let mut now = 0;
-        for i in 0..1000u64 {
-            let tlp = Tlp { addr: (i % 64) * 64, bytes: 64, tph: false };
-            now = pc.steer_dma_write(now, tlp, SteeringPolicy::DdioOff, &mut llc, &mut dram, None, not_nvm);
-        }
-        assert_eq!(dram.write_bytes, 64_000, "DDIO-off must stream to DRAM");
+        assert_eq!(run(SteeringPolicy::DdioOn), 0, "DDIO-on should not touch DRAM");
+        assert_eq!(run(SteeringPolicy::DdioOff), 64_000, "DDIO-off must stream to DRAM");
     }
 
     #[test]
     fn adaptive_steers_by_tph_bit() {
+        let t = Testbed::paper();
         let mut pc = Pcie::new(PcieParams::default());
-        let mut llc = Llc::new(LlcParams::default());
-        let mut dram = Dram::new(DramParams::default());
-        let not_nvm = |_a: u64| false;
+        let mut mem = MemorySystem::new(&t).with_policy(SteeringPolicy::Adaptive);
         // TPH=1 → LLC
-        pc.steer_dma_write(
-            0,
-            Tlp { addr: 0, bytes: 64, tph: true },
-            SteeringPolicy::Adaptive,
-            &mut llc,
-            &mut dram,
-            None,
-            not_nvm,
-        );
-        assert_eq!(dram.write_bytes, 0);
+        pc.steer_dma_write(0, Tlp { addr: 0, bytes: 64, tph: true }, &mut mem);
+        assert_eq!(mem.stats().dram_write_bytes, 0);
         // TPH=0 → memory
-        pc.steer_dma_write(
-            0,
-            Tlp { addr: 4096, bytes: 64, tph: false },
-            SteeringPolicy::Adaptive,
-            &mut llc,
-            &mut dram,
-            None,
-            not_nvm,
-        );
-        assert_eq!(dram.write_bytes, 64);
+        pc.steer_dma_write(0, Tlp { addr: 4096, bytes: 64, tph: false }, &mut mem);
+        assert_eq!(mem.stats().dram_write_bytes, 64);
     }
 
     #[test]
@@ -283,24 +177,19 @@ mod tests {
         // The §III-D pathology: DDIO-on + later random evictions amplify
         // NVM writes; adaptive TPH=0 for NVM addresses writes 256B-aligned
         // sequentially, amp → 1.
-        use crate::config::NvmParams;
+        let t = Testbed::paper();
         let mut pc = Pcie::new(PcieParams::default());
-        let mut llc = Llc::new(LlcParams::default());
-        let mut dram = Dram::new(DramParams::default());
-        let mut nvm = Nvm::new(NvmParams::default());
-        let is_nvm = |_a: u64| true;
+        let mut mem = MemorySystem::from_parts(
+            Llc::new(LlcParams::default()),
+            Dram::new(t.dram.clone()),
+            Nvm::new(NvmParams::default()),
+            SteeringPolicy::Adaptive,
+            0, // everything is NVM
+        );
         for i in 0..100u64 {
-            pc.steer_dma_write(
-                0,
-                Tlp { addr: i * 256, bytes: 256, tph: false },
-                SteeringPolicy::Adaptive,
-                &mut llc,
-                &mut dram,
-                Some(&mut nvm),
-                is_nvm,
-            );
+            pc.steer_dma_write(0, Tlp { addr: i * 256, bytes: 256, tph: false }, &mut mem);
         }
-        assert!((nvm.write_amp() - 1.0).abs() < 1e-9);
-        assert_eq!(nvm.logical_write_bytes, 25_600);
+        assert!((mem.nvm_write_amp() - 1.0).abs() < 1e-9);
+        assert_eq!(mem.stats().nvm_logical_write_bytes, 25_600);
     }
 }

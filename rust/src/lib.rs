@@ -10,7 +10,7 @@
 //!   ([`net`]), RDMA NIC ([`rnic`]).
 //! * **ORCA mechanisms** — ring buffers ([`ringbuf`]), coherence-assisted
 //!   notification ([`cpoll`]), the cc-accelerator ([`accel`]), adaptive
-//!   DDIO/TPH steering (in [`interconnect::pcie`] + [`mem::llc`]).
+//!   DDIO/TPH steering ([`mem::system`] behind [`interconnect::pcie`]).
 //! * **Applications & harness** — KVS / chain-replicated transactions / DLRM
 //!   ([`apps`]), baselines ([`smartnic`], [`cpu`], [`baselines`]), workload
 //!   generators ([`workload`]), power accounting ([`power`]), the **unified

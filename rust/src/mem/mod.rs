@@ -2,14 +2,18 @@
 //! way the paper does), and the shared LLC with DDIO way-restriction —
 //! plus the `MemTrace` interface through which the *functional*
 //! applications (real hash tables, real logs, real embedding tables) feed
-//! the *timing* layer the exact addresses they touch.
+//! the *timing* layer the exact addresses they touch. [`MemorySystem`]
+//! composes the three devices behind one Domain-routed replay API and
+//! one steered DMA-ingress API shared by the whole serving path.
 
 pub mod dram;
 pub mod llc;
 pub mod nvm;
+pub mod system;
 pub mod trace;
 
 pub use dram::Dram;
 pub use llc::{Llc, LlcLookup};
 pub use nvm::Nvm;
-pub use trace::{Access, Domain, MemTrace};
+pub use system::{MemStats, MemorySystem, SharedMemorySystem, SteeringPolicy};
+pub use trace::{Access, DmaWrite, Domain, MemTrace};

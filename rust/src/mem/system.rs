@@ -1,0 +1,480 @@
+//! The unified host memory system (§III-D made a first-class layer).
+//!
+//! Before this module existed the memory hierarchy was assembled ad hoc:
+//! `experiments/fig4.rs` hand-wired `Pcie + Llc + Dram + Nvm`, the
+//! serving designs hid host memory behind a fixed DRAM-latency constant
+//! inside the accelerator's RTT, `OrcaTx` owned a bare `Nvm`, and
+//! `Pcie::steer_dma_write` took a loose `(llc, dram, nvm, is_nvm_addr)`
+//! parameter list. [`MemorySystem`] owns the LLC, DRAM and NVM together
+//! with the [`SteeringPolicy`] that decides where device writes land, and
+//! gives every layer the same two entry points:
+//!
+//! * **CPU/APU side** — [`MemorySystem::access`] routes one [`Access`] by
+//!   its [`Domain`] (LLC→DRAM for `HostDram`, direct media for `HostNvm`,
+//!   the local-memory model for `AccelLocal`/`NicLocal`);
+//!   [`MemorySystem::replay`] drives a whole [`MemTrace`] through it,
+//!   honoring `dep` serialization and `parallel` overlap.
+//! * **Device side** — [`MemorySystem::dma_ingress`] is the steering
+//!   point of §III-D: a DMA write lands in the DDIO ways of the LLC or
+//!   goes straight to its backing store (DRAM or NVM by address),
+//!   according to the owned policy and the TLP's TPH bit. Dirty victims
+//!   evicted by LLC-steered writes are written back to *their* domain at
+//!   64 B granularity — which is exactly the NVM write-amplification
+//!   pathology the adaptive policy removes.
+//!
+//! One socket's consumers share one instance ([`SharedMemorySystem`]),
+//! so DRAM bandwidth, LLC state and NVM amplification are modeled once,
+//! not once per subsystem.
+
+use super::{Access, Domain, Dram, Llc, LlcLookup, MemTrace, Nvm};
+use crate::config::Testbed;
+use crate::sim::{transfer_ps, BandwidthLedger, NS};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Where device writes should land, per the paper's Fig-5 configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SteeringPolicy {
+    /// DDIO on (CPU-global), TPH ignored — today's default: all DMA → LLC.
+    DdioOn,
+    /// DDIO off, TPH ignored — all DMA → memory.
+    DdioOff,
+    /// The paper's proposal: DDIO off globally, but a set TPH bit steers
+    /// the individual TLP into the LLC ("DDIO NVM-aware per device").
+    Adaptive,
+}
+
+impl SteeringPolicy {
+    /// Does a write TLP carrying this TPH bit go to the LLC?
+    #[inline]
+    pub fn to_llc(self, tph: bool) -> bool {
+        match self {
+            SteeringPolicy::DdioOn => true,
+            SteeringPolicy::DdioOff => false,
+            SteeringPolicy::Adaptive => tph,
+        }
+    }
+
+    /// Fig-4 configuration labels (DDIO, TPH) → effective policy for a
+    /// device that sets TPH on every packet when `tph` is true.
+    pub fn fig4(ddio: bool, _tph: bool) -> SteeringPolicy {
+        if ddio {
+            SteeringPolicy::DdioOn
+        } else {
+            SteeringPolicy::Adaptive // TPH honored only when DDIO is off
+        }
+    }
+}
+
+/// A shared handle to one socket's memory system. Like
+/// [`crate::accel::UpiLink`], sharing is explicit: every consumer that
+/// should contend for the same DRAM/LLC/NVM gets a clone of the handle.
+pub type SharedMemorySystem = Rc<RefCell<MemorySystem>>;
+
+/// Accelerator-/NIC-local memory used for `Domain::AccelLocal` and
+/// `Domain::NicLocal` accesses during trace replay (DDR-class defaults).
+#[derive(Clone, Debug)]
+struct LocalMem {
+    chan: BandwidthLedger,
+    latency_ps: u64,
+    gbs: f64,
+}
+
+/// Cumulative memory-side counters, snapshotted for the serving layer's
+/// `RunMetrics` reporting (see [`crate::serving`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemStats {
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub nvm_read_bytes: u64,
+    pub nvm_logical_write_bytes: u64,
+    pub nvm_media_write_bytes: u64,
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+}
+
+impl MemStats {
+    /// Media bytes per logical byte written to NVM (1.0 when untouched).
+    pub fn nvm_write_amp(&self) -> f64 {
+        if self.nvm_logical_write_bytes == 0 {
+            1.0
+        } else {
+            self.nvm_media_write_bytes as f64 / self.nvm_logical_write_bytes as f64
+        }
+    }
+
+    /// Host DRAM read bandwidth over a span of `span_ps`, GB/s.
+    pub fn dram_read_gbs(&self, span_ps: u64) -> f64 {
+        gbs(self.dram_read_bytes, span_ps)
+    }
+
+    /// Host DRAM write bandwidth over a span of `span_ps`, GB/s.
+    pub fn dram_write_gbs(&self, span_ps: u64) -> f64 {
+        gbs(self.dram_write_bytes, span_ps)
+    }
+}
+
+fn gbs(bytes: u64, span_ps: u64) -> f64 {
+    if span_ps == 0 {
+        0.0
+    } else {
+        bytes as f64 / span_ps as f64 * 1_000.0
+    }
+}
+
+/// The host memory hierarchy as one object: LLC (with DDIO ways), DRAM,
+/// NVM, the D2H steering policy, and the NVM address region.
+#[derive(Clone, Debug)]
+pub struct MemorySystem {
+    llc: Llc,
+    dram: Dram,
+    nvm: Nvm,
+    pub policy: SteeringPolicy,
+    /// Addresses at or above this are NVM-backed (`u64::MAX` = no NVM).
+    nvm_start: u64,
+    local: LocalMem,
+    hit_ps: u64,
+}
+
+impl MemorySystem {
+    /// The testbed's memory system: DDIO on (today's default), no NVM
+    /// region mapped.
+    pub fn new(t: &Testbed) -> Self {
+        Self::from_parts(
+            Llc::new(t.llc.clone()),
+            Dram::new(t.dram.clone()),
+            Nvm::new(t.nvm.clone()),
+            SteeringPolicy::DdioOn,
+            u64::MAX,
+        )
+    }
+
+    /// Assemble from explicit components (experiments that scale the LLC
+    /// or remap the NVM region).
+    pub fn from_parts(
+        llc: Llc,
+        dram: Dram,
+        nvm: Nvm,
+        policy: SteeringPolicy,
+        nvm_start: u64,
+    ) -> Self {
+        let hit_ps = (llc.params().hit_latency_ns * NS as f64) as u64;
+        MemorySystem {
+            llc,
+            dram,
+            nvm,
+            policy,
+            nvm_start,
+            local: LocalMem {
+                chan: BandwidthLedger::new(),
+                latency_ps: (90.0 * NS as f64) as u64,
+                gbs: 36.0,
+            },
+            hit_ps,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: SteeringPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Map `[start, ∞)` as the NVM region.
+    pub fn with_nvm_region(mut self, start: u64) -> Self {
+        self.nvm_start = start;
+        self
+    }
+
+    /// A fresh shared handle (one per socket; clone it per consumer).
+    pub fn shared(t: &Testbed) -> SharedMemorySystem {
+        Rc::new(RefCell::new(Self::new(t)))
+    }
+
+    #[inline]
+    fn is_nvm(&self, addr: u64) -> bool {
+        addr >= self.nvm_start
+    }
+
+    /// One CPU-/APU-side access, routed by its [`Domain`]. Returns
+    /// completion time (load-to-use for reads, globally-visible for
+    /// writes).
+    pub fn access(&mut self, now: u64, a: &Access) -> u64 {
+        match a.domain {
+            Domain::HostDram | Domain::HostNvm => self.host_access(
+                now,
+                a.addr,
+                a.bytes as u64,
+                a.write,
+                a.domain == Domain::HostNvm,
+            ),
+            Domain::AccelLocal | Domain::NicLocal => {
+                let service = transfer_ps(u64::from(a.bytes).max(64), self.local.gbs);
+                let (_s, done) = self.local.chan.acquire(now, service);
+                done + self.local.latency_ps
+            }
+        }
+    }
+
+    /// Host-side access: NVM-mapped addresses go to the DIMM directly
+    /// (the data path treats the NVM region as non-temporal, matching
+    /// how §IV-B's log writes bypass the cache); DRAM addresses walk
+    /// LLC→DRAM, with dirty victims written back to *their* domain.
+    fn host_access(
+        &mut self,
+        now: u64,
+        addr: u64,
+        bytes: u64,
+        write: bool,
+        force_nvm: bool,
+    ) -> u64 {
+        if force_nvm || self.is_nvm(addr) {
+            return if write {
+                self.nvm.write(now, addr, bytes)
+            } else {
+                self.nvm.read(now, addr, bytes)
+            };
+        }
+        match self.llc.access(addr, write) {
+            LlcLookup::Hit => now + self.hit_ps,
+            // Write-allocate: a miss *fetches* the line (a DRAM read even
+            // for stores); the store's bytes reach DRAM later, as the
+            // dirty line's eventual writeback.
+            LlcLookup::MissClean => self.dram.access(now, bytes, false),
+            LlcLookup::MissWriteback(victim) => {
+                let line = self.llc.params().line_bytes;
+                if self.is_nvm(victim) {
+                    self.nvm.write(now, victim, line);
+                } else {
+                    self.dram.access(now, line, true);
+                }
+                self.dram.access(now, bytes, false)
+            }
+        }
+    }
+
+    /// Replay a whole trace: dependency steps serialize, accesses within
+    /// a step overlap. Returns the completion time of the last step.
+    ///
+    /// This is the reference single-request path; the serving engines
+    /// (`CpuServer`'s cross-batch stepping, `CcAccelerator`'s
+    /// slot-scheduled heap) implement their own stepping around
+    /// [`MemorySystem::access`] because they overlap *across* requests.
+    pub fn replay(&mut self, now: u64, trace: &MemTrace) -> u64 {
+        let mut t = now;
+        let mut step_end = now;
+        for (i, a) in trace.accesses.iter().enumerate() {
+            if i == 0 || a.dep {
+                t = step_end;
+            }
+            step_end = step_end.max(self.access(t, a));
+        }
+        step_end
+    }
+
+    /// Steered device write ingress (§III-D): the payload arrived at the
+    /// host's steering point at `arrive`; land it in the DDIO ways or the
+    /// backing store per the owned policy and the TLP's `tph` bit.
+    /// Returns completion time.
+    pub fn dma_ingress(&mut self, arrive: u64, addr: u64, bytes: u64, tph: bool) -> u64 {
+        let line = self.llc.params().line_bytes;
+        if self.policy.to_llc(tph) {
+            // Allocate line(s) in LLC; dirty victims write back to their
+            // own domain — 64 B lines in replacement order, which is what
+            // the NVM media then amplifies to 256 B writes.
+            let mut t = arrive;
+            let mut a = addr / line * line;
+            let end = addr + bytes;
+            while a < end {
+                if let LlcLookup::MissWriteback(victim) = self.llc.dma_write(a) {
+                    t = if self.is_nvm(victim) {
+                        t.max(self.nvm.write(arrive, victim, line))
+                    } else {
+                        t.max(self.dram.access(arrive, line, true))
+                    };
+                }
+                a += line;
+            }
+            t
+        } else {
+            // Straight to backing store; invalidate stale cached copies.
+            let mut a = addr / line * line;
+            let end = addr + bytes;
+            while a < end {
+                self.llc.dma_write_bypass(a);
+                a += line;
+            }
+            if self.is_nvm(addr) {
+                self.nvm.write(arrive, addr, bytes)
+            } else {
+                self.dram.access(arrive, bytes, true)
+            }
+        }
+    }
+
+    /// Device-initiated read of host memory (SmartNIC direct verbs):
+    /// routed by address, no LLC allocation on the DMA read path.
+    pub fn dma_read(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        if self.is_nvm(addr) {
+            self.nvm.read(now, addr, bytes)
+        } else {
+            self.dram.access(now, bytes, false)
+        }
+    }
+
+    pub fn stats(&self) -> MemStats {
+        MemStats {
+            dram_read_bytes: self.dram.read_bytes,
+            dram_write_bytes: self.dram.write_bytes,
+            nvm_read_bytes: self.nvm.read_bytes,
+            nvm_logical_write_bytes: self.nvm.logical_write_bytes,
+            nvm_media_write_bytes: self.nvm.media_write_bytes,
+            llc_hits: self.llc.hits,
+            llc_misses: self.llc.misses,
+        }
+    }
+
+    /// Observed NVM write amplification.
+    pub fn nvm_write_amp(&self) -> f64 {
+        self.nvm.write_amp()
+    }
+
+    pub fn dram(&self) -> &Dram {
+        &self.dram
+    }
+
+    pub fn nvm(&self) -> &Nvm {
+        &self.nvm
+    }
+
+    pub fn llc(&self) -> &Llc {
+        &self.llc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LlcParams;
+
+    const NVM_BASE: u64 = 1 << 40;
+
+    fn sys(policy: SteeringPolicy) -> MemorySystem {
+        let t = Testbed::paper();
+        MemorySystem::new(&t)
+            .with_policy(policy)
+            .with_nvm_region(NVM_BASE)
+    }
+
+    #[test]
+    fn domain_routing_hits_the_right_device() {
+        let mut m = sys(SteeringPolicy::DdioOn);
+        m.access(0, &Access::read(0x1000, 64));
+        m.access(0, &Access::read(NVM_BASE + 0x40, 64).in_domain(Domain::HostNvm));
+        m.access(0, &Access::write(0x2000, 64).in_domain(Domain::AccelLocal));
+        let s = m.stats();
+        assert_eq!(s.dram_read_bytes, 64, "HostDram miss must hit DRAM");
+        assert_eq!(s.nvm_read_bytes, 256, "HostNvm read moves one granule");
+        assert_eq!(s.dram_write_bytes, 0, "AccelLocal must not touch host DRAM");
+    }
+
+    #[test]
+    fn nvm_domain_wins_even_without_an_nvm_mapped_address() {
+        // Domain tagging overrides the address-range routing (OrcaTx logs
+        // use plain log offsets).
+        let mut m = sys(SteeringPolicy::DdioOn);
+        m.access(0, &Access::write(0x100, 256).in_domain(Domain::HostNvm));
+        assert_eq!(m.stats().nvm_logical_write_bytes, 256);
+        assert_eq!(m.stats().dram_write_bytes, 0);
+    }
+
+    #[test]
+    fn nvm_reads_are_slower_than_dram_misses_than_llc_hits() {
+        let mut m = sys(SteeringPolicy::DdioOn);
+        let miss = m.access(0, &Access::read(0x1000, 64));
+        let hit = m.access(0, &Access::read(0x1000, 64));
+        let nvm = m.access(0, &Access::read(NVM_BASE, 64).in_domain(Domain::HostNvm));
+        assert!(hit < miss, "LLC hit {hit} !< DRAM miss {miss}");
+        assert!(miss < nvm, "DRAM miss {miss} !< NVM read {nvm}");
+    }
+
+    #[test]
+    fn replay_serializes_deps_and_overlaps_parallel() {
+        // Three dependent DRAM misses take ~3 memory latencies; one miss
+        // plus two parallel misses takes ~1 (they share the step).
+        let mut chain = MemTrace::new();
+        chain.push(Access::read(0x10_0000, 64));
+        chain.push(Access::read(0x20_0000, 64));
+        chain.push(Access::read(0x30_0000, 64));
+        let mut fan = MemTrace::new();
+        fan.push(Access::read(0x10_0000, 64));
+        fan.push(Access::read(0x20_0000, 64).parallel());
+        fan.push(Access::read(0x30_0000, 64).parallel());
+
+        let dep = sys(SteeringPolicy::DdioOn).replay(0, &chain);
+        let par = sys(SteeringPolicy::DdioOn).replay(0, &fan);
+        assert!(
+            dep > par * 2,
+            "dependent chain {dep} must be ~3x parallel fan {par}"
+        );
+    }
+
+    #[test]
+    fn ddio_contains_a_ring_buffer_sized_working_set() {
+        // A 2 MB ring fits the DDIO ways of the full-size LLC: a steered
+        // DMA stream over it never spills to DRAM, while DDIO-off streams
+        // every byte to memory (the Fig-4 contrast).
+        let t = Testbed::paper();
+        let ring_lines = (2u64 << 20) / 64;
+        let run = |policy| {
+            let mut m = MemorySystem::new(&t).with_policy(policy);
+            for i in 0..4 * ring_lines {
+                m.dma_ingress(0, (i % ring_lines) * 64, 64, true);
+            }
+            m.stats().dram_write_bytes
+        };
+        assert_eq!(run(SteeringPolicy::DdioOn), 0, "DDIO must contain the ring");
+        assert_eq!(
+            run(SteeringPolicy::DdioOff),
+            4 * ring_lines * 64,
+            "bypass must stream to DRAM"
+        );
+    }
+
+    #[test]
+    fn adaptive_honors_the_tph_bit() {
+        let mut m = sys(SteeringPolicy::Adaptive);
+        m.dma_ingress(0, 0, 64, true);
+        assert_eq!(m.stats().dram_write_bytes, 0);
+        m.dma_ingress(0, 4096, 64, false);
+        assert_eq!(m.stats().dram_write_bytes, 64);
+    }
+
+    #[test]
+    fn llc_bounced_nvm_writes_amplify_direct_ones_do_not() {
+        // §III-D: stream 256 B device writes at an NVM region through a
+        // small LLC (evictions guaranteed) vs direct; only the bounced
+        // path amplifies (64 B random-order evictions → 256 B media).
+        let t = Testbed::paper();
+        let small_llc = LlcParams {
+            size_bytes: 1 << 20,
+            ..t.llc.clone()
+        };
+        let run = |policy| {
+            let mut m = MemorySystem::from_parts(
+                Llc::new(small_llc.clone()),
+                Dram::new(t.dram.clone()),
+                Nvm::new(t.nvm.clone()),
+                policy,
+                0, // everything is NVM
+            );
+            for i in 0..20_000u64 {
+                m.dma_ingress(0, i * 256, 256, false);
+            }
+            m.nvm_write_amp()
+        };
+        let bounced = run(SteeringPolicy::DdioOn);
+        let direct = run(SteeringPolicy::DdioOff);
+        assert!(bounced > 3.0, "bounced amp {bounced}");
+        assert!(direct < 1.1, "direct amp {direct}");
+    }
+}

@@ -62,10 +62,25 @@ impl Access {
     }
 }
 
+/// One device-placed payload write belonging to a request: the NIC DMAs
+/// `bytes` at `addr` with the TPH bit set per the destination's domain
+/// (§III-D: set for DRAM-region MRs, clear for NVM-region MRs). The
+/// serving path steers these through the shared
+/// [`crate::mem::MemorySystem`] at ingress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DmaWrite {
+    pub addr: u64,
+    pub bytes: u64,
+    pub tph: bool,
+}
+
 /// A request's access trace plus bookkeeping the timing layer wants.
 #[derive(Clone, Debug, Default)]
 pub struct MemTrace {
     pub accesses: Vec<Access>,
+    /// Payload writes the device performs on the request's behalf before
+    /// it becomes visible (empty for designs without steered ingress).
+    pub dma: Vec<DmaWrite>,
 }
 
 impl MemTrace {

@@ -18,8 +18,8 @@ use crate::accel::{upi_link, CcAccelerator, SqHandler};
 use crate::config::{AccelMem, Testbed};
 use crate::cpoll::ShardedNotify;
 use crate::cpu::CpuServer;
-use crate::interconnect::Pcie;
-use crate::mem::MemTrace;
+use crate::interconnect::{Pcie, Tlp};
+use crate::mem::{MemStats, MemTrace, MemorySystem, SharedMemorySystem};
 use crate::net::Network;
 use crate::rnic::Rnic;
 use crate::sim::Rng;
@@ -70,6 +70,10 @@ impl Design for Cpu {
     fn network(&self) -> Option<&Network> {
         Some(&self.net)
     }
+
+    fn mem_stats(&self) -> Option<MemStats> {
+        Some(self.srv.mem.stats())
+    }
 }
 
 /// The SmartNIC baseline (§VI-B "Smart NIC"). Callers scale the
@@ -118,6 +122,10 @@ impl Design for SmartNic {
     fn host_frac(&self) -> f64 {
         self.srv.host_fraction()
     }
+
+    fn mem_stats(&self) -> Option<MemStats> {
+        Some(self.srv.mem.stats())
+    }
 }
 
 /// ORCA (optionally sharded): one RNIC front-end, N cc-accelerator
@@ -125,6 +133,9 @@ impl Design for SmartNic {
 /// SQ handler multiplexing response WQEs into the shared doorbell.
 pub struct Orca {
     mem: AccelMem,
+    /// The socket's host memory system: shared by every shard's host-path
+    /// gathers and by the RNIC's steered DMA ingress.
+    host_mem: SharedMemorySystem,
     net: Network,
     rnic_rx: Rnic,
     pcie_rx: Pcie,
@@ -146,16 +157,31 @@ impl Orca {
     /// sharing the socket's one physical UPI link. With `shards == 1`
     /// this is bit-identical to [`Orca::new`].
     pub fn sharded(t: &Testbed, mem: AccelMem, batch: usize, shards: usize) -> Self {
+        Self::with_memory(t, mem, batch, shards, MemorySystem::shared(t))
+    }
+
+    /// Like [`Orca::sharded`], but serving out of an explicit host
+    /// [`MemorySystem`] — the entry point for DRAM+NVM scenarios where
+    /// the caller picks the [`crate::mem::SteeringPolicy`] and NVM
+    /// region (`orca adaptive`).
+    pub fn with_memory(
+        t: &Testbed,
+        mem: AccelMem,
+        batch: usize,
+        shards: usize,
+        host_mem: SharedMemorySystem,
+    ) -> Self {
         assert!(shards > 0, "need at least one shard");
         let link = upi_link();
         Orca {
             mem,
+            host_mem: host_mem.clone(),
             net: Network::new(t.net.clone()),
             rnic_rx: Rnic::new(t.net.clone()),
             pcie_rx: Pcie::new(t.pcie.clone()),
             notify: ShardedNotify::new(t, shards),
             shards: (0..shards)
-                .map(|_| CcAccelerator::with_upi_link(t, mem, link.clone()))
+                .map(|_| CcAccelerator::with_shared(t, mem, link.clone(), host_mem.clone()))
                 .collect(),
             sq: SqHandler::new(t, batch),
             rnic_tx: Rnic::new(t.net.clone()),
@@ -205,10 +231,27 @@ impl Design for Orca {
     }
 
     /// RNIC DMA of the one-sided write, then the cpoll notification on
-    /// the target shard's ring.
+    /// the target shard's ring. Requests carrying device-placed payload
+    /// writes ([`MemTrace::dma`]) are steered into the shared host
+    /// memory system TLP by TLP — LLC or DRAM/NVM per the memory
+    /// system's policy and each TLP's TPH bit (§III-D).
     fn ingress(&mut self, issue: u64, job: &MemTrace, req_bytes: u64, rng: &mut Rng) -> Ingress {
         let arrive = self.net.send_to_server(issue, req_bytes);
-        let visible = self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx);
+        let visible = if job.dma.is_empty() {
+            self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx)
+        } else {
+            // The payload lands where the placement says, not in one
+            // anonymous buffer: NIC processing first, then each steered
+            // write serializes on the same PCIe link.
+            let base = self.rnic_rx.rx_one_sided(arrive, 0, &mut self.pcie_rx);
+            let mut mem = self.host_mem.borrow_mut();
+            let mut done = base;
+            for w in &job.dma {
+                let tlp = Tlp { addr: w.addr, bytes: w.bytes, tph: w.tph };
+                done = done.max(self.pcie_rx.steer_dma_write(base, tlp, &mut mem));
+            }
+            done
+        };
         let shard = self.shard_of(job);
         Ingress {
             wire_at: arrive,
@@ -252,6 +295,10 @@ impl Design for Orca {
 
     fn network(&self) -> Option<&Network> {
         Some(&self.net)
+    }
+
+    fn mem_stats(&self) -> Option<MemStats> {
+        Some(self.host_mem.borrow().stats())
     }
 }
 

@@ -26,7 +26,7 @@ pub mod designs;
 
 pub use designs::{Cpu, Orca, SmartNic};
 
-use crate::mem::MemTrace;
+use crate::mem::{MemStats, MemTrace};
 use crate::net::Network;
 use crate::sim::{Histogram, Rng, SEC, US};
 
@@ -53,6 +53,13 @@ pub struct RunMetrics {
     pub host_frac: f64,
     /// The wire's own bound for this design's request size, Mops.
     pub net_bound_mops: f64,
+    /// Host DRAM read bandwidth over the run, GB/s (0 when the design
+    /// reports no memory system).
+    pub dram_read_gbs: f64,
+    /// Host DRAM write bandwidth over the run, GB/s.
+    pub dram_write_gbs: f64,
+    /// NVM media write amplification (1.0 when the NVM is untouched).
+    pub nvm_write_amp: f64,
 }
 
 /// Tab-III power accounting: throughput per watt of box power.
@@ -119,6 +126,13 @@ pub trait Design {
     /// Fraction of data accesses that crossed to the host (SmartNIC).
     fn host_frac(&self) -> f64 {
         0.0
+    }
+
+    /// Cumulative counters of the host memory system this design serves
+    /// from, if it owns/shares one (feeds the memory-side columns of
+    /// [`RunMetrics`]).
+    fn mem_stats(&self) -> Option<MemStats> {
+        None
     }
 }
 
@@ -216,6 +230,7 @@ impl ServingPipeline {
         }
 
         let span = last.saturating_sub(first).max(1);
+        let mem = design.mem_stats().unwrap_or_default();
         RunMetrics {
             label: design.label(),
             mops: n as f64 / (span as f64 / SEC as f64) / 1e6,
@@ -225,6 +240,9 @@ impl ServingPipeline {
             utilization: design.network().map_or(0.0, |nw| nw.utilization(last)),
             host_frac: design.host_frac(),
             net_bound_mops: design.network().map_or(f64::INFINITY, |nw| nw.peak_mops(req)),
+            dram_read_gbs: mem.dram_read_gbs(span),
+            dram_write_gbs: mem.dram_write_gbs(span),
+            nvm_write_amp: mem.nvm_write_amp(),
         }
     }
 

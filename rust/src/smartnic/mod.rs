@@ -10,7 +10,7 @@ pub mod bigcache;
 pub use bigcache::BigCache;
 
 use crate::config::Testbed;
-use crate::mem::MemTrace;
+use crate::mem::{MemTrace, MemorySystem};
 use crate::sim::{cycles_ps, BandwidthLedger, MultiServer, Pipeline, transfer_ps, NS};
 
 /// The SmartNIC server pipeline.
@@ -18,12 +18,16 @@ pub struct SmartNicServer {
     t: Testbed,
     cores: MultiServer,
     batches: Vec<Vec<(u64, MemTrace)>>,
-    /// Per-core synchronous host-read path (PCIe RTT + host DRAM).
+    /// Per-core synchronous host-read pipeline (the PCIe round trip; the
+    /// host memory-service leg comes from `mem` per access).
     host_read: Vec<Pipeline>,
     /// On-board DRAM bandwidth (shared, order-insensitive).
     local_mem: BandwidthLedger,
     /// Shared PCIe link serialization for host reads.
     pcie_data: BandwidthLedger,
+    /// Host memory system the DMA reads land in (address-routed DRAM/NVM;
+    /// PCIe DMA reads do not allocate in the host LLC).
+    pub mem: MemorySystem,
     pub cache: BigCache,
     pub batch: usize,
     pub served: u64,
@@ -34,6 +38,9 @@ pub struct SmartNicServer {
 impl SmartNicServer {
     pub fn new(t: &Testbed, batch: usize) -> Self {
         let n = t.smartnic.cores;
+        // Occupancy window of one synchronous host read (§II-B): the PCIe
+        // round trip plus the nominal memory service. The *actual* memory
+        // leg is measured per access against `mem`.
         let host_rtt =
             (2.0 * t.pcie.one_way_ns * NS as f64) as u64 + (t.dram.latency_ns * NS as f64) as u64;
         SmartNicServer {
@@ -45,6 +52,7 @@ impl SmartNicServer {
                 .collect(),
             local_mem: BandwidthLedger::new(),
             pcie_data: BandwidthLedger::new(),
+            mem: MemorySystem::new(t),
             cache: BigCache::new(t.smartnic.cache_bytes, 64),
             batch: batch.max(1),
             served: 0,
@@ -63,11 +71,14 @@ impl SmartNicServer {
             done + (self.t.smartnic.local_latency_ns * NS as f64) as u64
         } else {
             // Synchronous host read over PCIe; the fetched line fills the
-            // cache (evicting LRU).
+            // cache (evicting LRU). The PCIe pipeline covers the link
+            // round trip; the host memory system serves the data.
             self.host_accesses += 1;
             let wire = bytes.max(64) + self.t.pcie.tlp_overhead_bytes;
             let (_s, _ser) = self.pcie_data.acquire(now, transfer_ps(wire, self.t.pcie.bandwidth_gbs));
-            self.host_read[core].acquire(now)
+            let link_ps = (2.0 * self.t.pcie.one_way_ns * NS as f64) as u64;
+            let mem_ps = self.mem.dma_read(now, addr, bytes).saturating_sub(now);
+            self.host_read[core].acquire_with(now, link_ps + mem_ps)
         }
     }
 

@@ -102,6 +102,25 @@ fn cli_parses_and_runs_a_small_experiment() {
 }
 
 #[test]
+fn json_flag_dumps_machine_readable_tables() {
+    let path = std::env::temp_dir().join(format!("orca_e2e_{}.json", std::process::id()));
+    let cli = cli::parse(&[
+        "fig4".to_string(),
+        "--requests".into(),
+        "1000".into(),
+        "--json".into(),
+        path.display().to_string(),
+    ])
+    .expect("parse");
+    cli::run(&cli).expect("fig4 runs");
+    let text = std::fs::read_to_string(&path).expect("json written");
+    std::fs::remove_file(&path).ok();
+    assert!(text.trim_start().starts_with('['), "top-level array");
+    assert!(text.contains(r#""title":"Fig 4"#), "fig4 table present");
+    assert!(text.contains(r#""DDIO":"on""#), "row cells keyed by header");
+}
+
+#[test]
 fn overrides_flow_through_to_results() {
     // §VII: with a faster network, ORCA-LH (no controller bound) scales
     // up, while base ORCA stops at its soft coherence controller — the

@@ -1,0 +1,171 @@
+//! Golden-value tests for the MemorySystem refactor of Fig 4: the
+//! refactored driver (`Pcie::steer_dma_write` → `MemorySystem`) must
+//! reproduce the pre-refactor hand-wired `Pcie + Llc + Dram + Nvm`
+//! pipeline's numbers within 1% (in practice: bit-identical counters).
+//!
+//! The reference implementations below are line-for-line ports of the
+//! old `Pcie::steer_dma_write(llc, dram, nvm, is_nvm_addr)` body and the
+//! old `fig4::run_config` / `fig4::nvm_amplification` loops, kept here
+//! as the fixed point the refactor is measured against (the same style
+//! as `serving_golden.rs`).
+
+use orca::config::{LlcParams, Testbed};
+use orca::experiments::fig4;
+use orca::interconnect::Pcie;
+use orca::mem::{Dram, Llc, LlcLookup, Nvm};
+use orca::sim::{Rng, SEC};
+
+fn close(a: f64, b: f64, what: &str) {
+    let rel = (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel < 0.01, "{what}: refactored {a} vs reference {b} ({rel:.4} rel)");
+}
+
+/// The pre-refactor steering body, verbatim: policy resolved to a
+/// to-LLC bool by the caller, backing stores passed loose.
+#[allow(clippy::too_many_arguments)]
+fn reference_steer(
+    pcie: &mut Pcie,
+    now: u64,
+    addr: u64,
+    bytes: u64,
+    to_llc: bool,
+    llc: &mut Llc,
+    dram: &mut Dram,
+    mut nvm: Option<&mut Nvm>,
+    is_nvm_addr: bool,
+) -> u64 {
+    let arrive = pcie.dma_write(now, bytes);
+    let line = llc.params().line_bytes;
+    if to_llc {
+        let mut t = arrive;
+        let mut a = addr / line * line;
+        let end = addr + bytes;
+        while a < end {
+            if let LlcLookup::MissWriteback(victim) = llc.dma_write(a) {
+                t = if is_nvm_addr {
+                    match nvm.as_deref_mut() {
+                        Some(n) => t.max(n.write(arrive, victim, line)),
+                        None => t.max(dram.access(arrive, line, true)),
+                    }
+                } else {
+                    t.max(dram.access(arrive, line, true))
+                };
+            }
+            a += line;
+        }
+        t
+    } else {
+        let mut a = addr / line * line;
+        let end = addr + bytes;
+        while a < end {
+            llc.dma_write_bypass(a);
+            a += line;
+        }
+        if is_nvm_addr {
+            match nvm {
+                Some(n) => n.write(arrive, addr, bytes),
+                None => dram.access(arrive, bytes, true),
+            }
+        } else {
+            dram.access(arrive, bytes, true)
+        }
+    }
+}
+
+/// The pre-refactor `fig4::run_config` loop, verbatim.
+fn reference_run_config(t: &Testbed, ddio: bool, tph: bool, seed: u64) -> (f64, f64) {
+    let mut pcie = Pcie::new(t.pcie.clone());
+    let mut llc = Llc::new(t.llc.clone());
+    let mut dram = Dram::new(t.dram.clone());
+    let mut rng = Rng::new(seed);
+    let gap_ps = (64.0 / 3.5 * 1_000.0) as u64;
+    let span_ps = 2 * SEC / 1000;
+    let buf_lines = (2u64 << 20) / 64;
+    // Old policy resolution: DDIO on → always LLC; off → TPH decides.
+    let to_llc = ddio || tph;
+    let mut now = 0;
+    while now < span_ps {
+        let addr = rng.below(buf_lines) * 64;
+        reference_steer(&mut pcie, now, addr, 64, to_llc, &mut llc, &mut dram, None, false);
+        now += gap_ps;
+    }
+    let secs = span_ps as f64 / SEC as f64;
+    (
+        dram.read_bytes as f64 / secs / 1e9,
+        dram.write_bytes as f64 / secs / 1e9,
+    )
+}
+
+/// The pre-refactor `fig4::nvm_amplification` loop, verbatim.
+fn reference_nvm_amplification(t: &Testbed, seed: u64) -> (f64, f64) {
+    let run = |to_llc: bool| {
+        let mut pcie = Pcie::new(t.pcie.clone());
+        let mut llc = Llc::new(LlcParams {
+            size_bytes: 1 << 20,
+            ..t.llc.clone()
+        });
+        let mut dram = Dram::new(t.dram.clone());
+        let mut nvm = Nvm::new(t.nvm.clone());
+        let mut rng = Rng::new(seed);
+        let buf_lines = (64u64 << 20) / 64;
+        let mut now = 0;
+        for i in 0..200_000u64 {
+            let addr = if to_llc {
+                rng.below(buf_lines) * 64
+            } else {
+                (i % buf_lines) * 256 % (buf_lines * 64)
+            };
+            let bytes = if to_llc { 64 } else { 256 };
+            reference_steer(
+                &mut pcie,
+                now,
+                addr,
+                bytes,
+                to_llc,
+                &mut llc,
+                &mut dram,
+                Some(&mut nvm),
+                true,
+            );
+            now += 10_000;
+        }
+        nvm.write_amp()
+    };
+    (run(true), run(false))
+}
+
+#[test]
+fn fig4_rows_match_the_prerefactor_pipeline_within_1pct() {
+    let t = Testbed::paper();
+    for seed in [1u64, 42] {
+        for (ddio, tph) in [(true, true), (true, false), (false, true), (false, false)] {
+            let new = fig4::run_config(&t, ddio, tph, seed);
+            let (read_ref, write_ref) = reference_run_config(&t, ddio, tph, seed);
+            let what = format!("ddio={ddio} tph={tph} seed={seed}");
+            close(new.dram_read_gbs, read_ref, &format!("{what} dram read"));
+            close(new.dram_write_gbs, write_ref, &format!("{what} dram write"));
+        }
+    }
+}
+
+#[test]
+fn fig4_shape_is_preserved() {
+    // The four-config truth table itself (three sinks ≈ 0, one ≈ 3.5 GB/s)
+    // — the headline claim the golden numbers encode.
+    let t = Testbed::paper();
+    for (ddio, tph) in [(true, true), (true, false), (false, true)] {
+        let r = fig4::run_config(&t, ddio, tph, 42);
+        assert!(r.dram_write_gbs < 0.5, "{r:?}");
+    }
+    let off = fig4::run_config(&t, false, false, 42);
+    assert!((3.0..4.0).contains(&off.dram_write_gbs), "{off:?}");
+}
+
+#[test]
+fn nvm_amplification_matches_the_prerefactor_pipeline_within_1pct() {
+    let t = Testbed::paper();
+    let (via_llc, direct) = fig4::nvm_amplification(&t, 2);
+    let (via_llc_ref, direct_ref) = reference_nvm_amplification(&t, 2);
+    close(via_llc, via_llc_ref, "amp via LLC");
+    close(direct, direct_ref, "amp direct");
+}
