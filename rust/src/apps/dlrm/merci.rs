@@ -75,7 +75,12 @@ impl Merci {
     /// Reduce a query using memoized pairs where available. Returns the
     /// reduction and its memory trace (memo hits are one access per pair;
     /// misses fall back to two raw gathers).
-    pub fn reduce(&mut self, table: &EmbeddingTable, query: &[u32], mlp: usize) -> (Vec<f32>, MemTrace) {
+    pub fn reduce(
+        &mut self,
+        table: &EmbeddingTable,
+        query: &[u32],
+        mlp: usize,
+    ) -> (Vec<f32>, MemTrace) {
         let mut acc = vec![0f32; self.dim];
         let mut trace = MemTrace::new();
         trace.push(Access::read(table.cfg.base_addr - 4096, (query.len() * 4) as u32));

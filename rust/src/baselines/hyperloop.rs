@@ -2,19 +2,27 @@
 //!
 //! HyperLoop chains RNICs: a group-based RDMA write is forwarded
 //! machine-to-machine by the NICs themselves (no CPU), with each hop
-//! paying one network leg plus one PCIe round trip into that machine's
+//! paying one network leg plus one PCIe descent into that machine's
 //! NVM. Its limitation (§IV-B): *multi-value* transactions must be issued
 //! as **sequential** group operations, one per key-value pair — so a
 //! (4 reads, 2 writes) transaction pays 4 sequential one-sided-read RTTs
 //! plus 2 sequential chain traversals.
 //!
-//! The emulation detail from Fig 6 is preserved: the two "replicas" are
-//! the two DPU ports of one physical server; the client's DPU ARM routes
-//! between them, adding the 2–3 µs the paper equates to a datacenter
-//! network hop.
+//! Since the cluster layer exists, every chain member is a full
+//! [`crate::cluster::Machine`] and [`HyperLoopChain::execute`] walks the
+//! chain hop by hop — each replica charges its own link ledgers, RNIC,
+//! PCIe and NVM. [`ChainCosts`] stays as the *closed-form cross-check*:
+//! the uncontended analytic latency the hop-by-hop path must reproduce
+//! (asserted below and pinned against the pre-cluster implementation by
+//! `tests/fig11_golden.rs`).
+//!
+//! The emulation detail from Fig 6 is preserved: the 2.5 µs inter-member
+//! leg is the ARM-routed hop the paper equates to a datacenter network
+//! traversal (see [`crate::cluster::FIG6_LEG_NS`]).
 
-use crate::config::Testbed;
-use crate::mem::Nvm;
+use crate::cluster::{Cluster, Node, FIG6_LEG_NS};
+use crate::config::{NvmParams, Testbed};
+use crate::mem::nvm::span_bytes;
 use crate::sim::{transfer_ps, NS};
 
 /// Transaction shape: `(reads, writes)` over `value_bytes` values.
@@ -40,7 +48,8 @@ impl TxnShape {
     }
 }
 
-/// Shared chain geometry + link costs for both designs.
+/// Shared chain geometry + link costs: the closed-form model of one hop,
+/// kept as the analytic cross-check for the hop-by-hop cluster path.
 #[derive(Clone, Debug)]
 pub struct ChainCosts {
     /// One-way network leg between adjacent chain members, ps.
@@ -57,41 +66,86 @@ impl ChainCosts {
         ChainCosts {
             // §VI-C: ARM routing adds 2–3 µs per traversal, standing in for
             // the datacenter network between replicas.
-            net_leg_ps: (2_500.0 * NS as f64) as u64,
+            net_leg_ps: (FIG6_LEG_NS * NS as f64) as u64,
             pcie_rtt_ps: (2.0 * t.pcie.one_way_ns * NS as f64) as u64,
             line_gbs: t.net.line_gbps / 8.0,
             replicas,
         }
     }
 
-    pub(crate) fn wire_ps(&self, bytes: u64) -> u64 {
+    /// Single-packet wire serialization (RoCEv2 header included).
+    pub fn wire_ps(&self, bytes: u64) -> u64 {
         transfer_ps(bytes + 82, self.line_gbs)
     }
 
-    /// One traversal of the whole chain and back (propagate + ack), for a
-    /// payload of `bytes`, including the per-member PCIe+NVM time.
-    fn chain_round_ps(&self, bytes: u64, nvm: &mut Nvm, now: u64, addr: u64) -> u64 {
-        let mut t = now;
-        // Forward path: client → r1 → r2 → … each member persists then
-        // forwards.
-        for r in 0..self.replicas {
-            t += self.net_leg_ps + self.wire_ps(bytes);
-            t += self.pcie_rtt_ps / 2; // NIC → memory leg
-            let a = addr + r as u64 * (1 << 30);
-            t = nvm.write(t, a, bytes);
+    /// Closed-form uncontended latency of one HyperLoop transaction from
+    /// a fresh chain (log cursor at 0): sequential one-sided reads from
+    /// the head, then one sequential group-RDMA chain round per written
+    /// pair. Exact — NVM media spans are computed from the same cursor
+    /// addresses the hop-by-hop path uses.
+    pub fn hyperloop_txn_closed_ps(&self, s: TxnShape, nvm: &NvmParams) -> u64 {
+        let stride = s.value_bytes.max(64);
+        let mut t = 0;
+        for i in 0..s.reads as u64 {
+            t += self.net_leg_ps + self.wire_ps(16) + self.pcie_rtt_ps;
+            t += nvm_read_closed_ps(i * 4096, s.value_bytes, nvm);
+            t += self.net_leg_ps + self.wire_ps(s.value_bytes);
         }
-        // Ack path back through the chain (small messages).
-        for _ in 0..self.replicas {
-            t += self.net_leg_ps + self.wire_ps(16);
+        for w in 0..s.writes as u64 {
+            t += self.replicas as u64
+                * (self.net_leg_ps
+                    + self.wire_ps(s.value_bytes)
+                    + self.pcie_rtt_ps / 2
+                    + nvm_write_closed_ps(w * stride, s.value_bytes, nvm));
+            t += self.replicas as u64 * (self.net_leg_ps + self.wire_ps(16));
         }
+        t
+    }
+
+    /// Closed-form uncontended latency of one ORCA transaction from a
+    /// fresh chain: one combined request to the head, near-data APU
+    /// execution, one chain traversal of the combined record, acks back
+    /// (§IV-B).
+    pub fn orca_txn_closed_ps(&self, s: TxnShape, nvm: &NvmParams, apu_op_ps: u64) -> u64 {
+        let payload = 1 + (s.writes as u64) * (10 + s.value_bytes) + (s.reads as u64) * 10;
+        let fwd = 1 + (s.writes as u64) * (10 + s.value_bytes);
+        let stride = s.value_bytes.max(64);
+        let mut t = self.net_leg_ps + self.wire_ps(payload) + self.pcie_rtt_ps / 2;
+        for i in 0..s.reads as u64 {
+            t += apu_op_ps + nvm_read_closed_ps(i * 4096, s.value_bytes, nvm);
+        }
+        for w in 0..s.writes as u64 {
+            t += apu_op_ps + nvm_write_closed_ps(w * stride, s.value_bytes, nvm);
+        }
+        let log_addr = s.writes as u64 * stride;
+        t += (self.replicas as u64 - 1)
+            * (self.net_leg_ps
+                + self.wire_ps(fwd)
+                + self.pcie_rtt_ps / 2
+                + nvm_write_closed_ps(log_addr, fwd, nvm));
+        t += self.replicas as u64 * (self.net_leg_ps + self.wire_ps(16));
         t
     }
 }
 
-/// HyperLoop: sequential group ops, one per KV pair.
+/// Uncontended NVM read of `bytes` at `addr`, using the same media-span
+/// rule as the simulated NVM ([`crate::mem::nvm::span_bytes`]).
+fn nvm_read_closed_ps(addr: u64, bytes: u64, p: &NvmParams) -> u64 {
+    transfer_ps(span_bytes(addr, bytes, p.access_bytes), p.read_bandwidth_gbs)
+        + (p.read_latency_ns * NS as f64) as u64
+}
+
+/// Uncontended NVM write of `bytes` at `addr`.
+fn nvm_write_closed_ps(addr: u64, bytes: u64, p: &NvmParams) -> u64 {
+    transfer_ps(span_bytes(addr, bytes, p.access_bytes), p.write_bandwidth_gbs)
+        + (p.write_latency_ns * NS as f64) as u64
+}
+
+/// HyperLoop: sequential group ops over a real machine chain, one group
+/// per KV pair.
 pub struct HyperLoopChain {
     pub costs: ChainCosts,
-    pub nvm: Nvm,
+    pub cluster: Cluster,
     next_addr: u64,
 }
 
@@ -99,31 +153,43 @@ impl HyperLoopChain {
     pub fn new(t: &Testbed, replicas: u32) -> Self {
         HyperLoopChain {
             costs: ChainCosts::from_testbed(t, replicas),
-            nvm: Nvm::new(t.nvm.clone()),
+            cluster: Cluster::chain(t, replicas as usize),
             next_addr: 0,
         }
     }
 
-    /// End-to-end latency of one transaction issued at `now`.
+    /// End-to-end latency of one transaction issued at `now`, traversing
+    /// the chain hop by hop.
     pub fn execute(&mut self, now: u64, shape: TxnShape) -> u64 {
         let mut t = now;
-        // Reads: sequential one-sided RDMA reads from the chain head
-        // (client-side RTT each: leg there, NVM read via PCIe, leg back).
+        // Reads: sequential one-sided RDMA reads from the chain head —
+        // request leg in, PCIe descent to the head's NVM, completion
+        // TLPs back to its NIC, data leg back to the client.
         for i in 0..shape.reads {
-            t += self.costs.net_leg_ps + self.costs.wire_ps(16);
-            t += self.costs.pcie_rtt_ps;
+            t = self.cluster.deliver(t, Node::Client, 0, 16, false);
             let addr = self.next_addr + i as u64 * 4096;
-            t = self.nvm.read(t, addr, shape.value_bytes);
-            t += self.costs.net_leg_ps + self.costs.wire_ps(shape.value_bytes);
+            t = self.cluster.machines[0].nvm_read(t, addr, shape.value_bytes);
+            t += self.cluster.machines[0].pcie_leg_ps();
+            t = self.cluster.relay(t, Node::Machine(0), Node::Client, shape.value_bytes);
         }
-        // Writes: sequential group-based chain rounds, one per pair.
-        for i in 0..shape.writes {
+        // Writes: sequential group-based chain rounds, one per pair. The
+        // NICs forward member to member with no CPU and no notification;
+        // each member persists to its own NVM before forwarding.
+        for _ in 0..shape.writes {
             let addr = self.next_addr;
             self.next_addr += shape.value_bytes.max(64);
-            let _ = i;
-            t = self
-                .costs
-                .chain_round_ps(shape.value_bytes, &mut self.nvm, t, addr);
+            let mut from = Node::Client;
+            for r in 0..self.cluster.size() {
+                t = self.cluster.deliver(t, from, r, shape.value_bytes, false);
+                t = self.cluster.machines[r]
+                    .nvm_append(t, addr + (r as u64) * (1 << 30), shape.value_bytes);
+                from = Node::Machine(r);
+            }
+            // Acks ripple back tail → … → head → client.
+            for r in (1..self.cluster.size()).rev() {
+                t = self.cluster.relay(t, Node::Machine(r), Node::Machine(r - 1), 16);
+            }
+            t = self.cluster.relay(t, Node::Machine(0), Node::Client, 16);
         }
         t
     }
@@ -186,5 +252,31 @@ mod tests {
         let l4 = c4.execute(0, TxnShape::WRITE_ONLY);
         let ratio = l4 as f64 / l2 as f64;
         assert!((1.7..2.3).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn hop_by_hop_matches_the_closed_form_cross_check() {
+        // A single uncontended transaction through the real machine chain
+        // must land on the ChainCosts analytic total (the closed form
+        // computes NVM media spans from the same fresh-chain cursor
+        // addresses, so it is exact here).
+        let t = Testbed::paper();
+        let shapes = [
+            TxnShape::new(0, 1, 64),
+            TxnShape::new(4, 2, 64),
+            TxnShape::new(4, 2, 1024),
+        ];
+        for replicas in [2u32, 4, 6] {
+            for shape in shapes {
+                let mut hl = HyperLoopChain::new(&t, replicas);
+                let hop = hl.execute(0, shape);
+                let closed = hl.costs.hyperloop_txn_closed_ps(shape, &t.nvm);
+                let rel = (hop as f64 - closed as f64).abs() / closed as f64;
+                assert!(
+                    rel < 0.005,
+                    "replicas={replicas} {shape:?}: hop {hop} vs closed {closed} ({rel:.4})"
+                );
+            }
+        }
     }
 }

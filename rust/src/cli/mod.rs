@@ -1,12 +1,13 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
 //! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
-//! sharding, adaptive, all, serve (coordinator demo), info.
+//! sharding, adaptive, chain, all, serve (coordinator demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
 //! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points),
-//! --shards LIST (sharding: shard counts to sweep), --json PATH (dump
-//! the run's tables as machine-readable JSON).
+//! --shards LIST (sharding: shard counts to sweep), --replicas LIST|A..B
+//! and --crash-at [N] (chain: replica sweep + timed mid-chain crash),
+//! --json PATH (dump the run's tables as machine-readable JSON).
 
 use crate::config::{Overrides, Testbed};
 use crate::experiments::{self, Opts, Table};
@@ -20,6 +21,10 @@ pub struct Cli {
     pub cdf: bool,
     /// Shard counts for the `sharding` sweep.
     pub shards: Vec<usize>,
+    /// Replica counts for the `chain` sweep.
+    pub replicas: Vec<u32>,
+    /// With `chain`: crash the mid replica at this txn of a timed run.
+    pub crash_at: Option<u64>,
     /// Dump every table of the run to this path as JSON.
     pub json: Option<std::path::PathBuf>,
 }
@@ -40,6 +45,7 @@ COMMANDS:
   fig12   DLRM inference throughput
   sharding  multi-APU sharding sweep (throughput vs shard count)
   adaptive  adaptive D2H steering: SET-heavy KVS over DRAM+NVM, end to end
+  chain   hop-by-hop chain replication: replica sweep + timed crash/recovery
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
   info    testbed parameters after overrides
@@ -53,6 +59,9 @@ FLAGS:
   --artifacts DIR   artifact bundle for `serve` (default ./artifacts)
   --cdf             with fig7: dump CDF points for plotting
   --shards LIST     comma-separated shard counts for `sharding` (default 1,2,4,8)
+  --replicas R      chain replica counts: a list `2,4,6` or range `2..6` (default 2..6)
+  --crash-at [N]    with chain: crash the mid replica at txn N of the timed
+                    run (bare flag: one third in; runs cap at 20000 txns)
   --json PATH       also write the run's tables to PATH as JSON
 ";
 
@@ -66,6 +75,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut artifacts = std::path::PathBuf::from("artifacts");
     let mut cdf = false;
     let mut shards: Vec<usize> = experiments::sharding::SHARD_COUNTS.to_vec();
+    let mut replicas: Vec<u32> = experiments::chain::REPLICAS.to_vec();
+    let mut crash_at = None;
     let mut json = None;
     let mut i = 1;
     while i < args.len() {
@@ -103,6 +114,28 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     bail!("--shards needs positive counts, got `{list}`");
                 }
             }
+            "--replicas" => {
+                let list = take(&mut i)?;
+                replicas = parse_replicas(&list)?;
+            }
+            "--crash-at" => {
+                // The txn index is optional: a bare `--crash-at` (stored
+                // as the 0 sentinel) crashes at one third of the run.
+                crash_at = match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        i += 1;
+                        let at: u64 =
+                            v.parse().with_context(|| format!("bad txn index `{v}`"))?;
+                        if at == 0 {
+                            bail!(
+                                "--crash-at needs a txn index >= 1 (omit the value for the default)"
+                            );
+                        }
+                        Some(at)
+                    }
+                    _ => Some(0),
+                };
+            }
             "-h" | "--help" => bail!("{USAGE}"),
             other => bail!("unknown flag `{other}`\n\n{USAGE}"),
         }
@@ -117,16 +150,40 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         artifacts,
         cdf,
         shards,
+        replicas,
+        crash_at,
         json,
     })
 }
 
-pub fn run(cli: &Cli) -> Result<()> {
-    // Fail fast: table-less commands can run for minutes before the
-    // post-hoc JSON check would fire.
-    if cli.json.is_some() && matches!(cli.command.as_str(), "serve" | "info") {
-        bail!("--json: command `{}` produces no tables", cli.command);
+/// Replica counts: a comma list (`2,4,6`) or an inclusive range (`2..6`).
+fn parse_replicas(list: &str) -> Result<Vec<u32>> {
+    let counts: Vec<u32> = if let Some((lo, hi)) = list.split_once("..") {
+        let lo: u32 = lo.trim().parse().with_context(|| format!("bad range `{list}`"))?;
+        let hi: u32 = hi.trim().parse().with_context(|| format!("bad range `{list}`"))?;
+        if lo > hi {
+            bail!("--replicas range `{list}` is empty");
+        }
+        (lo..=hi).collect()
+    } else {
+        list.split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u32>()
+                    .with_context(|| format!("bad replica count `{s}`"))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    if counts.is_empty() || counts.iter().any(|&c| c < 2) {
+        bail!("--replicas needs counts >= 2, got `{list}`");
     }
+    Ok(counts)
+}
+
+/// The tables a command produces (none for `serve`/`info`). Shared by
+/// [`run`] and the determinism suite, which renders the same command
+/// twice and requires byte-identical JSON.
+pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
     let mut tables: Vec<Table> = Vec::new();
     match cli.command.as_str() {
         "fig4" => {
@@ -142,6 +199,36 @@ pub fn run(cli: &Cli) -> Result<()> {
         "fig12" => tables.push(experiments::fig12::report(&cli.opts)),
         "sharding" => tables.push(experiments::sharding::report(&cli.opts, &cli.shards)),
         "adaptive" => tables.push(experiments::adaptive::report(&cli.opts)),
+        "chain" => {
+            // Validate the crash configuration before the (expensive)
+            // sweep so bad flags fail fast, not after minutes of
+            // simulation. The crash run uses the longest requested
+            // chain, so its phases are comparable to a sweep row the
+            // user asked for.
+            if let Some(at) = cli.crash_at {
+                let replicas = *cli.replicas.iter().max().expect("validated non-empty");
+                if replicas < 3 {
+                    bail!(
+                        "--crash-at needs a mid-chain replica: include a count >= 3 in --replicas"
+                    );
+                }
+                let txns = cli.opts.requests.min(experiments::chain::MAX_TXNS);
+                if txns < 16 {
+                    bail!("--crash-at needs a run of >= 16 transactions (got --requests {txns})");
+                }
+                if at > txns - 4 {
+                    bail!(
+                        "--crash-at {at} is beyond the timed run ({txns} transactions; \
+                         runs are capped at {})",
+                        experiments::chain::MAX_TXNS
+                    );
+                }
+                tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
+                tables.push(experiments::chain::crash_report(&cli.opts, replicas, at));
+            } else {
+                tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
+            }
+        }
         "all" => {
             tables.push(experiments::fig4::report(&cli.opts));
             tables.push(experiments::fig4::report_nvm(&cli.opts));
@@ -154,10 +241,25 @@ pub fn run(cli: &Cli) -> Result<()> {
             tables.push(experiments::fig12::report(&cli.opts));
             tables.push(experiments::sharding::report(&cli.opts, &cli.shards));
             tables.push(experiments::adaptive::report(&cli.opts));
+            tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
         }
+        "serve" | "info" => {}
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+    Ok(tables)
+}
+
+pub fn run(cli: &Cli) -> Result<()> {
+    // Fail fast: table-less commands can run for minutes before the
+    // post-hoc JSON check would fire.
+    if cli.json.is_some() && matches!(cli.command.as_str(), "serve" | "info") {
+        bail!("--json: command `{}` produces no tables", cli.command);
+    }
+    let tables = tables_for(cli)?;
+    match cli.command.as_str() {
         "serve" => serve(cli)?,
         "info" => info(&cli.opts),
-        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+        _ => {}
     }
     for t in &tables {
         t.print();
@@ -350,8 +452,8 @@ mod tests {
 
     #[test]
     fn parses_command_and_flags() {
-        let cli = parse(&s(&["fig8", "--seed", "7", "--keys", "1000", "--set", "net.line_gbps=100"]))
-            .unwrap();
+        let args = s(&["fig8", "--seed", "7", "--keys", "1000", "--set", "net.line_gbps=100"]);
+        let cli = parse(&args).unwrap();
         assert_eq!(cli.command, "fig8");
         assert_eq!(cli.opts.seed, 7);
         assert_eq!(cli.opts.keys, 1000);
@@ -366,6 +468,48 @@ mod tests {
         assert_eq!(def.shards, experiments::sharding::SHARD_COUNTS.to_vec());
         assert!(parse(&s(&["sharding", "--shards", "0,2"])).is_err());
         assert!(parse(&s(&["sharding", "--shards", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_replicas_and_crash_at() {
+        let cli = parse(&s(&["chain", "--replicas", "2..4"])).unwrap();
+        assert_eq!(cli.replicas, vec![2, 3, 4]);
+        assert_eq!(cli.crash_at, None);
+        let cli = parse(&s(&["chain", "--replicas", "2,4,6", "--crash-at", "500"])).unwrap();
+        assert_eq!(cli.replicas, vec![2, 4, 6]);
+        assert_eq!(cli.crash_at, Some(500));
+        // Bare --crash-at (even followed by another flag) defaults to 0
+        // = "one third in".
+        let cli = parse(&s(&["chain", "--crash-at", "--seed", "7"])).unwrap();
+        assert_eq!(cli.crash_at, Some(0));
+        assert_eq!(cli.opts.seed, 7);
+        let def = parse(&s(&["chain"])).unwrap();
+        assert_eq!(def.replicas, experiments::chain::REPLICAS.to_vec());
+        assert!(parse(&s(&["chain", "--replicas", "1,2"])).is_err());
+        assert!(parse(&s(&["chain", "--replicas", "6..2"])).is_err());
+        assert!(parse(&s(&["chain", "--replicas", "x"])).is_err());
+        // An explicit 0 is rejected rather than silently remapped to the
+        // bare-flag default.
+        assert!(parse(&s(&["chain", "--crash-at", "0"])).is_err());
+    }
+
+    #[test]
+    fn crash_flags_are_validated_before_the_sweep_runs() {
+        // `--crash-at` with a 2-replica-only sweep cannot crash a
+        // mid-chain node; tables_for must refuse rather than silently
+        // running a chain size the user never asked for. (These checks
+        // run before the sweep, so the errors are also fast.)
+        let cli = parse(&s(&["chain", "--replicas", "2", "--crash-at", "10"])).unwrap();
+        assert!(tables_for(&cli).is_err());
+        // A crash index beyond the timed run is an error, not a silent
+        // clamp to a different transaction.
+        let args = s(&["chain", "--replicas", "3", "--crash-at", "999", "--requests", "100"]);
+        let cli = parse(&args).unwrap();
+        assert!(tables_for(&cli).is_err());
+        // And so is a run too short to phase.
+        let args = s(&["chain", "--replicas", "3", "--crash-at", "--requests", "10"]);
+        let cli = parse(&args).unwrap();
+        assert!(tables_for(&cli).is_err());
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! The cluster layer: N real machines behind one ToR (DESIGN.md
+//! §Cluster layer).
+//!
+//! ORCA's first component is a *unified abstraction of inter- and
+//! intra-machine communication* (§III-A): a one-sided RDMA write into a
+//! remote machine looks exactly like a cache-coherent memory write into
+//! the local one. Until this layer existed, only the head of the
+//! chain-replicated transaction path ran the real
+//! Network→RNIC→PCIe→MemorySystem stack — every other replica was a
+//! closed-form lump inside [`crate::baselines::hyperloop::ChainCosts`].
+//! Here each replica is a full [`Machine`] that owns the same component
+//! bundle the serving designs own ([`crate::serving::designs`]), and a
+//! transaction traverses the chain hop by hop.
+//!
+//! ## Hop model
+//!
+//! The paper's Fig-6 testbed emulates the datacenter fabric between
+//! chain members with ARM routing on the client DPU, measured at
+//! 2–3 µs per traversal (§VI-C) — an **end-to-end** wire-to-host-visible
+//! constant that already contains NIC processing and notification. The
+//! cluster keeps that measured budget as the hop's latency floor and
+//! runs the receiving machine's *component replay* (RNIC rx pipeline →
+//! PCIe DMA → cpoll invalidation+fetch → APU dequeue) concurrently
+//! inside it:
+//!
+//! ```text
+//! visible = max( wire_drain + leg_ps + pcie_one_way,   // fig-6 budget
+//!                component_replay(wire_drain) )         // real stack
+//! ```
+//!
+//! Uncontended, the budget dominates (asserted in the tests below and
+//! pinned by `tests/fig11_golden.rs`), so the hop-by-hop path reproduces
+//! the pre-cluster analytic numbers. Under load the replay's shared
+//! resources — the RNIC pipeline, the PCIe link, per-link
+//! [`crate::sim::BandwidthLedger`]s, each socket's NVM — push past the
+//! budget and the hop honestly lengthens; that is where multi-machine
+//! contention comes from in the scaled scenarios (`orca chain`).
+//!
+//! ## Ownership
+//!
+//! Every machine has exactly one link to the ToR, so the per-link
+//! ledgers of the shared ToR model are the two directions of each
+//! machine's own [`Network`] port ([`Network::port_egress`] /
+//! [`Network::port_ingress`]); [`Cluster::relay`] charges both
+//! endpoints' ledgers cut-through (the switch does not store-and-forward
+//! at message granularity) and adds the leg latency once.
+
+use crate::config::Testbed;
+use crate::cpoll::NotifyModel;
+use crate::interconnect::Pcie;
+use crate::mem::{Access, Domain, MemorySystem, SharedMemorySystem};
+use crate::net::Network;
+use crate::rnic::Rnic;
+use crate::sim::{cycles_ps, NS};
+
+/// The Fig-6 emulated inter-machine leg (§VI-C: ARM routing adds 2–3 µs
+/// per traversal, standing in for the datacenter network).
+pub const FIG6_LEG_NS: f64 = 2_500.0;
+
+/// One endpoint of a chain hop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// The client issuing transactions (owns a port, not a machine).
+    Client,
+    /// Replica machine by index (0 is the chain head).
+    Machine(usize),
+}
+
+/// One machine: its ToR port, RNIC, PCIe link and per-socket memory
+/// system — the same component bundle a [`crate::serving::designs`]
+/// design owns, assembled once per replica.
+pub struct Machine {
+    pub id: usize,
+    /// The machine's link to the ToR (its two ledgers are the per-link
+    /// bandwidth accounting of the shared ToR model).
+    pub port: Network,
+    pub rnic: Rnic,
+    pub pcie: Pcie,
+    /// The socket's memory system (shared handle, as in the serving
+    /// designs: every consumer on this socket clones it).
+    pub mem: SharedMemorySystem,
+    /// APU occupancy per transaction operation.
+    pub apu_op_ps: u64,
+    notify_floor_ps: u64,
+    pcie_leg_ps: u64,
+}
+
+impl Machine {
+    pub fn new(t: &Testbed, id: usize) -> Self {
+        Machine {
+            id,
+            port: Network::new(t.net.clone()),
+            rnic: Rnic::new(t.net.clone()),
+            pcie: Pcie::new(t.pcie.clone()),
+            mem: MemorySystem::shared(t),
+            apu_op_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
+            notify_floor_ps: NotifyModel::new(t).floor_ps(),
+            pcie_leg_ps: (t.pcie.one_way_ns * NS as f64) as u64,
+        }
+    }
+
+    /// NIC → memory one-way latency (the per-hop PCIe leg).
+    pub fn pcie_leg_ps(&self) -> u64 {
+        self.pcie_leg_ps
+    }
+
+    /// Component replay of an inbound one-sided write becoming visible
+    /// to this machine's serving element: RNIC rx pipeline → PCIe DMA of
+    /// the payload → (when `notified`) cpoll invalidation + line fetch
+    /// and the APU dequeue. Runs concurrently with the emulated hop
+    /// budget — see the module docs.
+    pub fn replay_ingress(&mut self, wire_at: u64, payload: u64, notified: bool) -> u64 {
+        let host_at = self.rnic.rx_one_sided(wire_at, payload, &mut self.pcie);
+        if notified {
+            host_at + self.notify_floor_ps + self.apu_op_ps
+        } else {
+            host_at
+        }
+    }
+
+    /// Read `bytes` of transaction state from this machine's NVM.
+    pub fn nvm_read(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        self.mem
+            .borrow_mut()
+            .access(now, &Access::read(addr, bytes as u32).in_domain(Domain::HostNvm))
+    }
+
+    /// Append `bytes` to this machine's NVM redo-log region.
+    pub fn nvm_append(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        self.mem
+            .borrow_mut()
+            .access(now, &Access::write(addr, bytes as u32).in_domain(Domain::HostNvm))
+    }
+}
+
+/// N machines and the client behind one ToR.
+pub struct Cluster {
+    pub machines: Vec<Machine>,
+    /// The client's own ToR port.
+    pub client: Network,
+    /// One-way switch+propagation budget per hop (the Fig-6 leg).
+    pub leg_ps: u64,
+    /// Messages the ToR has switched (all hops, data and acks).
+    pub msgs: u64,
+}
+
+impl Cluster {
+    /// A chain-replication cluster on the Fig-6 emulated fabric.
+    pub fn chain(t: &Testbed, machines: usize) -> Self {
+        Self::with_leg(t, machines, (FIG6_LEG_NS * NS as f64) as u64)
+    }
+
+    /// A cluster with an explicit per-hop leg budget (tests, what-if
+    /// fabrics).
+    pub fn with_leg(t: &Testbed, machines: usize, leg_ps: u64) -> Self {
+        assert!(machines >= 1, "a cluster needs at least one machine");
+        Cluster {
+            machines: (0..machines).map(|i| Machine::new(t, i)).collect(),
+            client: Network::new(t.net.clone()),
+            leg_ps,
+            msgs: 0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.machines.len()
+    }
+
+    /// Serialize one message onto both endpoints' link ledgers
+    /// (cut-through: the two drains overlap) and return the wire drain
+    /// time, before any propagation.
+    fn wire(&mut self, now: u64, from: Node, to: Node, payload: u64) -> u64 {
+        assert!(from != to, "a hop needs two distinct endpoints");
+        self.msgs += 1;
+        let out = match from {
+            Node::Client => self.client.port_egress(now, payload),
+            Node::Machine(i) => self.machines[i].port.port_egress(now, payload),
+        };
+        let inn = match to {
+            Node::Client => self.client.port_ingress(now, payload),
+            Node::Machine(i) => self.machines[i].port.port_ingress(now, payload),
+        };
+        out.max(inn)
+    }
+
+    /// Wire-level hop with no host-side delivery: acks flowing back
+    /// along the chain, and data returning to the client (the NIC turns
+    /// these around without waking anything).
+    pub fn relay(&mut self, now: u64, from: Node, to: Node, payload: u64) -> u64 {
+        self.wire(now, from, to, payload) + self.leg_ps
+    }
+
+    /// Full data hop into machine `to`: wire, the emulated leg + PCIe
+    /// budget, and the receiving machine's concurrent component replay
+    /// (RNIC/PCIe/cpoll/APU — `notified` selects whether the cpoll+APU
+    /// wakeup is on the path, as it is for ORCA but not for HyperLoop's
+    /// NIC-forwarded group writes). Returns host-visibility time.
+    pub fn deliver(
+        &mut self,
+        now: u64,
+        from: Node,
+        to: usize,
+        payload: u64,
+        notified: bool,
+    ) -> u64 {
+        let wire_done = self.wire(now, from, Node::Machine(to), payload);
+        let m = &mut self.machines[to];
+        let budget = wire_done + self.leg_ps + m.pcie_leg_ps;
+        let replay = m.replay_ingress(wire_done, payload, notified);
+        budget.max(replay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::transfer_ps;
+
+    fn t() -> Testbed {
+        Testbed::paper()
+    }
+
+    #[test]
+    fn uncontended_hop_equals_the_fig6_budget() {
+        // One 64 B delivery: wire serialization + 2.5 µs leg + PCIe
+        // one-way, exactly — the component replay is subsumed.
+        let tb = t();
+        let mut c = Cluster::chain(&tb, 2);
+        let wire = transfer_ps(64 + 82, tb.net.line_gbps / 8.0);
+        let want = wire + 2_500_000 + (tb.pcie.one_way_ns * 1_000.0) as u64;
+        assert_eq!(c.deliver(0, Node::Client, 0, 64, true), want);
+    }
+
+    #[test]
+    fn component_replay_stays_inside_the_budget_for_chain_payloads() {
+        // The golden-parity invariant: on the paper testbed, the real
+        // RNIC→PCIe→cpoll→APU replay of any chain-sized payload fits
+        // inside the emulated leg + PCIe budget. If a parameter change
+        // breaks this, fig11 golden numbers shift — fail here first.
+        let tb = t();
+        let mut c = Cluster::chain(&tb, 1);
+        for payload in [16u64, 64, 146, 1024, 2109, 4096] {
+            let budget = c.leg_ps + c.machines[0].pcie_leg_ps();
+            let replay = c.machines[0].replay_ingress(1 << 40, payload, true) - (1 << 40);
+            assert!(
+                replay <= budget,
+                "replay {replay} ps exceeds hop budget {budget} ps for {payload} B"
+            );
+        }
+    }
+
+    #[test]
+    fn replay_surfaces_when_the_budget_shrinks() {
+        // With a tiny emulated leg, the real component stack *is* the
+        // hop: RNIC pipeline + PCIe + cpoll floor + APU.
+        let tb = t();
+        let mut c = Cluster::with_leg(&tb, 1, 0);
+        let visible = c.deliver(0, Node::Client, 0, 64, true);
+        let budget_only = transfer_ps(64 + 82, tb.net.line_gbps / 8.0)
+            + (tb.pcie.one_way_ns * 1_000.0) as u64;
+        assert!(visible > budget_only, "replay must dominate: {visible}");
+        // And the cpoll+APU share is visible: an unnotified delivery is
+        // strictly faster.
+        let mut c2 = Cluster::with_leg(&tb, 1, 0);
+        let plain = c2.deliver(0, Node::Client, 0, 64, false);
+        assert!(plain < visible, "{plain} !< {visible}");
+    }
+
+    #[test]
+    fn per_link_ledgers_are_independent() {
+        // Saturating the 0↔1 link must not delay a 2→3 transfer.
+        let tb = t();
+        let mut c = Cluster::chain(&tb, 4);
+        for _ in 0..200 {
+            c.relay(0, Node::Machine(0), Node::Machine(1), 4096);
+        }
+        let quiet = c.relay(0, Node::Machine(2), Node::Machine(3), 4096);
+        let mut fresh = Cluster::chain(&tb, 4);
+        assert_eq!(quiet, fresh.relay(0, Node::Machine(2), Node::Machine(3), 4096));
+    }
+
+    #[test]
+    fn shared_links_contend() {
+        // Two flows into the same machine port share its ingress ledger:
+        // the second epoch of traffic lands later than the first.
+        let tb = t();
+        let mut c = Cluster::chain(&tb, 3);
+        let first = c.relay(0, Node::Machine(1), Node::Machine(0), 1 << 20);
+        let second = c.relay(0, Node::Machine(2), Node::Machine(0), 1 << 20);
+        assert!(second > first, "{second} !> {first}");
+    }
+
+    #[test]
+    fn relay_charges_both_endpoint_ledgers() {
+        let tb = t();
+        let mut c = Cluster::chain(&tb, 2);
+        c.relay(0, Node::Machine(0), Node::Machine(1), 64);
+        c.relay(0, Node::Machine(1), Node::Client, 64);
+        assert_eq!(c.machines[0].port.egress_bytes, 146);
+        assert_eq!(c.machines[1].port.ingress_bytes, 146);
+        assert_eq!(c.machines[1].port.egress_bytes, 146);
+        assert_eq!(c.client.ingress_bytes, 146);
+        assert_eq!(c.msgs, 2);
+    }
+
+    #[test]
+    fn machines_own_independent_memory_systems() {
+        let tb = t();
+        let mut c = Cluster::chain(&tb, 2);
+        c.machines[0].nvm_append(0, 0, 256);
+        assert_eq!(c.machines[0].mem.borrow().stats().nvm_logical_write_bytes, 256);
+        assert_eq!(c.machines[1].mem.borrow().stats().nvm_logical_write_bytes, 0);
+    }
+}

@@ -74,6 +74,15 @@ impl NotifyModel {
         inval + jitter + self.rtt_ps
     }
 
+    /// The jitter-free notification latency (invalidate + line fetch) —
+    /// the deterministic floor under [`NotifyModel::sample`]. The cluster
+    /// layer charges this on chain hops, where the controller-queueing
+    /// jitter is already folded into the client-side variance of the
+    /// closed-loop driver.
+    pub fn floor_ps(&self) -> u64 {
+        self.timing.hop_ps + self.timing.ctrl_ps + self.rtt_ps
+    }
+
     /// Interconnect bytes consumed *per notification* (invalidate + ack +
     /// line fetch) — compare with polling's continuous stream.
     pub fn bytes_per_notification(&self) -> u64 {
@@ -234,6 +243,34 @@ mod tests {
         for shard in 0..4 {
             assert_eq!(single.sample(&mut r1), sharded.sample(shard, &mut r2));
         }
+    }
+
+    #[test]
+    fn floor_is_the_jitter_free_sample() {
+        // Every sample is >= the floor, and the floor is the sample with
+        // zero controller-queueing jitter.
+        let t = Testbed::paper();
+        let nm = NotifyModel::new(&t);
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(nm.sample(&mut rng) >= nm.floor_ps());
+        }
+        let timing = LinkTiming::from_testbed(&t);
+        let want = timing.hop_ps + timing.ctrl_ps + timing.rtt_ps(64, t.upi.bandwidth_gbs);
+        assert_eq!(nm.floor_ps(), want);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_shard_fails_loudly() {
+        // A routing bug must not wrap onto another shard's ring. (The
+        // delivery-side conservation property — no doorbell lost or
+        // duplicated across rings — is exercised against the real
+        // checker/tracker machinery in `cpoll::checker`.)
+        let t = Testbed::paper();
+        let sharded = ShardedNotify::new(&t, 2);
+        let mut rng = Rng::new(1);
+        sharded.sample(2, &mut rng);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! `orca chain` (beyond the paper): hop-by-hop multi-machine chain
+//! replication on the cluster layer.
+//!
+//! Two scenarios:
+//!
+//! * **Replica sweep** (`--replicas 2..6`): HyperLoop vs ORCA Tx over
+//!   chains of 2–6 full machines. ORCA forwards ONE combined record per
+//!   transaction while HyperLoop pays one group-RDMA chain round per
+//!   key-value pair, so ORCA's absolute saving per transaction *grows*
+//!   with chain length (each extra replica costs HyperLoop `writes`
+//!   traversals but ORCA only one). Every row also carries the
+//!   hop-by-hop vs [`ChainCosts`] closed-form deviation — the analytic
+//!   cross-check that the machine decomposition still sums to the
+//!   measured Fig-6 hop.
+//! * **Timed mid-chain crash** (`--crash-at N`): a replica dies during
+//!   the run (dropping out of the route), recovers from its redo log
+//!   plus a catch-up stream from the head — charged on its real NVM and
+//!   link resources — and rejoins. The run reports per-phase latency and
+//!   asserts store convergence through the *functional* chain
+//!   ([`crate::apps::txn::Chain`]) that executes every transaction
+//!   alongside the timing model.
+
+use super::fig11::OrcaTx;
+use super::{Opts, Table};
+use crate::apps::txn::{Chain, Transaction, TxOp};
+use crate::baselines::hyperloop::{HyperLoopChain, TxnShape};
+use crate::config::Testbed;
+use crate::serving::ServingPipeline;
+use crate::sim::{Histogram, Rng, US};
+
+/// Default replica counts for the sweep and the CLI.
+pub const REPLICAS: [u32; 5] = [2, 3, 4, 5, 6];
+
+/// Transactions per timed run are capped here regardless of
+/// `--requests` (closed-loop chains are latency benchmarks; more
+/// transactions only tighten percentiles).
+pub const MAX_TXNS: u64 = 20_000;
+
+/// The sweep's transaction shape: the paper's multi-op (4,2) cell.
+pub const SWEEP_SHAPE: (u32, u32) = (4, 2);
+
+#[derive(Clone, Debug)]
+pub struct ChainRow {
+    pub replicas: u32,
+    pub hyperloop_avg_us: f64,
+    pub orca_avg_us: f64,
+    pub avg_reduction: f64,
+    /// Absolute average saving per transaction, µs — ORCA's
+    /// one-combined-message advantage, growing with chain length.
+    pub saved_avg_us: f64,
+    pub hyperloop_p99_us: f64,
+    pub orca_p99_us: f64,
+    pub p99_reduction: f64,
+    /// |hop-by-hop − closed-form| / closed-form for one uncontended ORCA
+    /// transaction (the ChainCosts cross-check).
+    pub closed_form_dev: f64,
+}
+
+/// One sweep point: both designs over an N-machine chain, closed-loop.
+pub fn run_replicas(t: &Testbed, replicas: u32, shape: TxnShape, txns: u64, seed: u64) -> ChainRow {
+    // Closed-form cross-check on a fresh, uncontended chain.
+    let mut probe = OrcaTx::new(t, replicas);
+    let apu = probe.cluster.machines[0].apu_op_ps;
+    let hop = probe.execute(0, shape);
+    let closed = probe.costs.orca_txn_closed_ps(shape, &t.nvm, apu);
+    let closed_form_dev = (hop as f64 - closed as f64).abs() / closed as f64;
+
+    let mut hl = HyperLoopChain::new(t, replicas);
+    let mut orca = OrcaTx::new(t, replicas);
+    let jobs = vec![shape; txns as usize];
+    let (h_hl, h_orca) = ServingPipeline::lockstep(&mut hl, &mut orca, &jobs, seed);
+    let red = |a: f64, b: f64| (a - b) / a;
+    ChainRow {
+        replicas,
+        hyperloop_avg_us: h_hl.mean() / US as f64,
+        orca_avg_us: h_orca.mean() / US as f64,
+        avg_reduction: red(h_hl.mean(), h_orca.mean()),
+        saved_avg_us: (h_hl.mean() - h_orca.mean()) / US as f64,
+        hyperloop_p99_us: h_hl.p99() as f64 / US as f64,
+        orca_p99_us: h_orca.p99() as f64 / US as f64,
+        p99_reduction: red(h_hl.p99() as f64, h_orca.p99() as f64),
+        closed_form_dev,
+    }
+}
+
+pub fn sweep(t: &Testbed, counts: &[u32], shape: TxnShape, txns: u64, seed: u64) -> Vec<ChainRow> {
+    counts
+        .iter()
+        .map(|&n| run_replicas(t, n, shape, txns, seed))
+        .collect()
+}
+
+pub fn report(opts: &Opts, counts: &[u32]) -> Table {
+    let mut tb = Table::new(
+        "Chain — hop-by-hop replication vs chain length ((4,2) txns, 64B values)",
+        &[
+            "replicas",
+            "HyperLoop avg µs",
+            "ORCA avg µs",
+            "avg Δ",
+            "saved µs",
+            "HyperLoop p99 µs",
+            "ORCA p99 µs",
+            "p99 Δ",
+            "closed-form dev",
+        ],
+    );
+    let shape = TxnShape::new(SWEEP_SHAPE.0, SWEEP_SHAPE.1, 64);
+    let txns = opts.requests.min(MAX_TXNS);
+    for r in sweep(&opts.testbed, counts, shape, txns, opts.seed) {
+        tb.row(&[
+            r.replicas.to_string(),
+            format!("{:.1}", r.hyperloop_avg_us),
+            format!("{:.1}", r.orca_avg_us),
+            format!("{:+.1}%", -r.avg_reduction * 100.0),
+            format!("{:.1}", r.saved_avg_us),
+            format!("{:.1}", r.hyperloop_p99_us),
+            format!("{:.1}", r.orca_p99_us),
+            format!("{:+.1}%", -r.p99_reduction * 100.0),
+            format!("{:.2}%", r.closed_form_dev * 100.0),
+        ]);
+    }
+    tb
+}
+
+/// Per-phase outcome of a timed mid-chain crash + recovery run.
+#[derive(Clone, Debug)]
+pub struct CrashReport {
+    pub replicas: u32,
+    pub crashed: usize,
+    pub pre: Histogram,
+    /// While the replica is down (shorter route).
+    pub degraded: Histogram,
+    /// After rejoin, while the recovery work still occupies the
+    /// machine's NVM and link.
+    pub transient: Histogram,
+    /// Post-recovery steady state.
+    pub post: Histogram,
+    pub recovery_us: f64,
+    pub converged: bool,
+    pub committed: u64,
+}
+
+/// Crash the mid-chain replica at txn `crash_at`, recover it halfway
+/// through the remaining run, and keep the transaction stream flowing
+/// throughout. Every transaction executes on the functional chain (so
+/// convergence is checked for real) while the cluster model times it.
+pub fn run_crash(t: &Testbed, replicas: u32, txns: u64, crash_at: u64, seed: u64) -> CrashReport {
+    assert!(replicas >= 3, "a mid-chain crash needs at least 3 replicas");
+    assert!(txns >= 16, "need enough transactions to phase the run");
+    let crash_at = crash_at.clamp(1, txns - 4);
+    let recover_at = crash_at + (txns - crash_at) / 2;
+    let mid = (replicas as usize) / 2;
+    let shape = TxnShape::new(0, 2, 64);
+    let record_bytes: u64 = 1 + (shape.writes as u64) * (10 + shape.value_bytes);
+
+    let mut chain = Chain::new(replicas as usize);
+    let mut orca = OrcaTx::new(t, replicas);
+    let mut rng = Rng::new(seed);
+    let mut report = CrashReport {
+        replicas,
+        crashed: mid,
+        pre: Histogram::new(),
+        degraded: Histogram::new(),
+        transient: Histogram::new(),
+        post: Histogram::new(),
+        recovery_us: 0.0,
+        converged: false,
+        committed: 0,
+    };
+    let mut now = 0u64;
+    let mut missed_bytes = 0u64;
+    let mut recovery_end = 0u64;
+    for id in 0..txns {
+        if id == crash_at {
+            chain.crash(mid);
+            orca.crash(mid);
+        }
+        if id == recover_at {
+            let replay_bytes = chain.replicas[mid].log.live_bytes();
+            chain.recover(mid);
+            recovery_end = orca.recover(now, mid, replay_bytes, missed_bytes);
+            report.recovery_us = (recovery_end - now) as f64 / US as f64;
+        }
+        let ops: Vec<TxOp> = (0..shape.writes)
+            .map(|w| {
+                let mut data = vec![0u8; shape.value_bytes as usize];
+                data[..8].copy_from_slice(&id.to_le_bytes());
+                TxOp::Write {
+                    offset: (rng.below(1 << 16) * 2 + w as u64) * 64,
+                    data,
+                }
+            })
+            .collect();
+        chain
+            .execute(&Transaction { id, ops })
+            .expect("sequential transactions must commit");
+        if chain.replicas[mid].down {
+            missed_bytes += record_bytes;
+        }
+        let lat = orca.execute(now, shape) - now;
+        let jitter = rng.exp(0.05 * lat as f64) as u64;
+        let sample = lat + jitter;
+        if id < crash_at {
+            report.pre.record(sample);
+        } else if id < recover_at {
+            report.degraded.record(sample);
+        } else if now < recovery_end {
+            report.transient.record(sample);
+        } else {
+            report.post.record(sample);
+        }
+        now += lat + rng.below(2 * US);
+    }
+    report.converged = chain.converged();
+    report.committed = chain.committed;
+    report
+}
+
+/// Render the crash scenario; `crash_at == 0` means "one third in".
+/// Callers validate ranges up front (see `cli::tables_for`) — the
+/// `run_crash` clamp is only a backstop for direct library use.
+pub fn crash_report(opts: &Opts, replicas: u32, crash_at: u64) -> Table {
+    let txns = opts.requests.min(MAX_TXNS);
+    let crash_at = if crash_at == 0 { txns / 3 } else { crash_at };
+    let r = run_crash(&opts.testbed, replicas, txns, crash_at, opts.seed);
+    let mut tb = Table::new(
+        format!(
+            "Chain — mid-chain crash/recovery under timing ({} replicas, crash r{}, \
+             recovery {:.0} µs, converged={}, committed={})",
+            r.replicas, r.crashed, r.recovery_us, r.converged, r.committed
+        ),
+        &["phase", "txns", "avg µs", "p99 µs"],
+    );
+    let phase = |tb: &mut Table, name: &str, h: &Histogram| {
+        let (avg, p99) = if h.count() == 0 {
+            ("-".to_string(), "-".to_string())
+        } else {
+            (
+                format!("{:.1}", h.mean() / US as f64),
+                format!("{:.1}", h.p99() as f64 / US as f64),
+            )
+        };
+        tb.row(&[name.to_string(), h.count().to_string(), avg, p99]);
+    };
+    phase(&mut tb, "pre-crash", &r.pre);
+    phase(&mut tb, "degraded (replica down)", &r.degraded);
+    phase(&mut tb, "recovery transient", &r.transient);
+    phase(&mut tb, "post-recovery", &r.post);
+    tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    #[test]
+    fn one_message_advantage_grows_with_chain_length() {
+        let t = Testbed::paper();
+        let shape = TxnShape::new(4, 2, 64);
+        let rows = sweep(&t, &[2, 4, 6], shape, 4_000, 11);
+        for pair in rows.windows(2) {
+            assert!(
+                pair[1].saved_avg_us > pair[0].saved_avg_us,
+                "saving must grow: {} replicas {:.1} µs vs {} replicas {:.1} µs",
+                pair[0].replicas,
+                pair[0].saved_avg_us,
+                pair[1].replicas,
+                pair[1].saved_avg_us
+            );
+        }
+        for r in &rows {
+            assert!(
+                (0.4..0.9).contains(&r.avg_reduction),
+                "replicas={} reduction {:.2}",
+                r.replicas,
+                r.avg_reduction
+            );
+            assert!(
+                r.closed_form_dev < 0.01,
+                "replicas={} closed-form dev {:.4}",
+                r.replicas,
+                r.closed_form_dev
+            );
+        }
+    }
+
+    #[test]
+    fn crash_run_converges_and_degrades_gracefully() {
+        let t = Testbed::paper();
+        let r = run_crash(&t, 4, 3_000, 1_000, 5);
+        assert!(r.converged, "stores must converge after recovery");
+        assert_eq!(r.committed, 3_000);
+        assert!(r.recovery_us > 0.0);
+        // One fewer hop while down: the degraded phase is faster.
+        assert!(r.degraded.mean() < r.pre.mean());
+    }
+}

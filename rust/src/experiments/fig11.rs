@@ -5,87 +5,124 @@
 //! ORCA Tx issues ONE combined request for the whole transaction; the
 //! accelerator executes ops near-data and forwards one message down the
 //! chain (§IV-B). HyperLoop issues one sequential group-RDMA per
-//! key-value pair. Both run over the *same* functional chain
+//! key-value pair. Both traverse a real [`crate::cluster::Cluster`] hop
+//! by hop — every replica is a full machine with its own link ledgers,
+//! RNIC, PCIe and NVM — and both run over the *same* functional chain
 //! ([`crate::apps::txn::Chain`]), so correctness (convergence,
-//! concurrency control) is exercised while latency is measured.
+//! concurrency control) is exercised while latency is measured. The
+//! replica-count sweep and the timed crash/recovery scenario live in
+//! [`super::chain`] (`orca chain`).
 
 use super::{Opts, Table};
 use crate::apps::txn::{Chain, Transaction, TxOp};
 use crate::baselines::hyperloop::{ChainCosts, HyperLoopChain, TxnShape};
+use crate::cluster::{Cluster, Node};
 use crate::config::Testbed;
-use crate::mem::{Access, Domain, MemorySystem};
 use crate::serving::{ClosedLoop, ServingPipeline};
-use crate::sim::{cycles_ps, Rng, US};
+use crate::sim::{Rng, US};
 
 pub const SHAPES: [(u32, u32); 2] = [(0, 1), (4, 2)];
 pub const VALUE_SIZES: [u64; 2] = [64, 1024];
 
-/// ORCA Tx latency model for one transaction: one request up, APU
-/// executes all ops against the host memory system's NVM (near-data),
-/// one chain traversal, ack. Log accesses are tagged `Domain::HostNvm`,
-/// so NVM timing and write amplification are modeled once — by the same
-/// [`MemorySystem`] the rest of the serving path uses — not by a
-/// private `Nvm` copy.
+/// ORCA Tx on the cluster layer: one combined request up, the head
+/// machine's APU executes all ops against *its own* memory system's NVM
+/// (near-data), then the combined record is forwarded replica to replica
+/// — each hop charging that machine's link ledgers, RNIC, PCIe, cpoll
+/// notification and NVM log append — and acks ripple back. [`ChainCosts`]
+/// ([`OrcaTx::costs`]) is kept as the closed-form cross-check.
+///
+/// Fault injection for the timed crash scenario (`orca chain
+/// --crash-at`): [`OrcaTx::crash`] removes a mid-chain machine from the
+/// route, [`OrcaTx::recover`] charges the real recovery work (local
+/// redo-log replay + catch-up stream from the head) on that machine's
+/// resources, so requests racing recovery honestly queue behind it.
 pub struct OrcaTx {
-    costs: ChainCosts,
-    pub mem: MemorySystem,
-    apu_op_ps: u64,
+    pub costs: ChainCosts,
+    pub cluster: Cluster,
     next_addr: u64,
+    down: Option<usize>,
 }
 
 impl OrcaTx {
     pub fn new(t: &Testbed, replicas: u32) -> Self {
         OrcaTx {
             costs: ChainCosts::from_testbed(t, replicas),
-            mem: MemorySystem::new(t),
-            apu_op_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
+            cluster: Cluster::chain(t, replicas as usize),
             next_addr: 0,
+            down: None,
         }
     }
 
-    fn nvm_read(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
-        self.mem
-            .access(now, &Access::read(addr, bytes as u32).in_domain(Domain::HostNvm))
+    /// The live chain, head first.
+    pub fn route(&self) -> Vec<usize> {
+        (0..self.cluster.size())
+            .filter(|&i| Some(i) != self.down)
+            .collect()
     }
 
-    fn nvm_write(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
-        self.mem
-            .access(now, &Access::write(addr, bytes as u32).in_domain(Domain::HostNvm))
+    /// Crash a mid-chain replica (the head carries the concurrency
+    /// control state and cannot be dropped here).
+    pub fn crash(&mut self, i: usize) {
+        assert!(i > 0 && i < self.cluster.size(), "crash a mid-chain replica");
+        assert!(self.down.is_none(), "one fault at a time");
+        self.down = Some(i);
+    }
+
+    /// Rejoin machine `i`: replay `replay_bytes` of its own redo log from
+    /// NVM, then stream the `missed_bytes` of records it skipped from the
+    /// head over the fabric and append them. Returns the completion time;
+    /// the machine serves the chain again immediately, so transactions
+    /// racing the recovery queue on its NVM and link.
+    pub fn recover(&mut self, now: u64, i: usize, replay_bytes: u64, missed_bytes: u64) -> u64 {
+        assert_eq!(self.down, Some(i), "machine {i} is not the crashed one");
+        self.down = None;
+        let base = (i as u64) << 30;
+        let mut t = self.cluster.machines[i].nvm_read(now, base, replay_bytes.max(64));
+        if missed_bytes > 0 {
+            t = self.cluster.machines[0].nvm_read(t, 1 << 29, missed_bytes);
+            t = self.cluster.deliver(t, Node::Machine(0), i, missed_bytes, false);
+            t = self.cluster.machines[i].nvm_append(t, base + self.next_addr, missed_bytes);
+        }
+        t
     }
 
     pub fn execute(&mut self, now: u64, shape: TxnShape) -> u64 {
         // One combined request: all tuples in one log entry (§IV-B).
         let payload: u64 =
             1 + (shape.writes as u64) * (10 + shape.value_bytes) + (shape.reads as u64) * 10;
-        let mut t = now;
-        // Client → head (one network leg), PCIe into the head's memory.
-        t += self.costs.net_leg_ps + self.costs.wire_ps(payload);
-        t += self.costs.pcie_rtt_ps / 2;
-        // APU: concurrency check + per-op NVM work, reads/writes
-        // overlapped per op but ops applied in order.
+        let route = self.route();
+        let head = route[0];
+        // Client → head: one fabric leg, RNIC DMA, cpoll wakeup.
+        let mut t = self.cluster.deliver(now, Node::Client, head, payload, true);
+        // Head APU: concurrency check + per-op NVM work, reads/writes
+        // overlapped per op but ops applied in order — all against the
+        // head machine's own memory system.
         for i in 0..shape.reads {
-            t += self.apu_op_ps;
+            t += self.cluster.machines[head].apu_op_ps;
             let addr = self.next_addr + i as u64 * 4096;
-            t = self.nvm_read(t, addr, shape.value_bytes);
+            t = self.cluster.machines[head].nvm_read(t, addr, shape.value_bytes);
         }
         let mut log_addr = self.next_addr;
         for _ in 0..shape.writes {
-            t += self.apu_op_ps;
-            t = self.nvm_write(t, log_addr, shape.value_bytes);
+            t += self.cluster.machines[head].apu_op_ps;
+            t = self.cluster.machines[head].nvm_append(t, log_addr, shape.value_bytes);
             log_addr += shape.value_bytes.max(64);
         }
         self.next_addr = log_addr;
-        // One chain traversal for the whole transaction: forward the
-        // combined record to the tail replica and ack back.
+        // One chain traversal for the whole transaction: each live
+        // replica ingests the combined record (RDMA ingress → cpoll →
+        // APU), appends it to its own NVM log, and forwards.
         let fwd_payload = 1 + (shape.writes as u64) * (10 + shape.value_bytes);
-        for _ in 1..self.costs.replicas {
-            t += self.costs.net_leg_ps + self.costs.wire_ps(fwd_payload);
-            t += self.costs.pcie_rtt_ps / 2;
-            t = self.nvm_write(t, log_addr + (1 << 30), fwd_payload);
+        for w in route.windows(2) {
+            t = self.cluster.deliver(t, Node::Machine(w[0]), w[1], fwd_payload, true);
+            t = self.cluster.machines[w[1]]
+                .nvm_append(t, log_addr + ((w[1] as u64) << 30), fwd_payload);
         }
-        for _ in 0..self.costs.replicas {
-            t += self.costs.net_leg_ps + self.costs.wire_ps(16);
+        // Acks ripple back tail → … → head → client.
+        for w in route.windows(2).rev() {
+            t = self.cluster.relay(t, Node::Machine(w[1]), Node::Machine(w[0]), 16);
         }
+        t = self.cluster.relay(t, Node::Machine(head), Node::Client, 16);
         t
     }
 
@@ -115,7 +152,13 @@ pub struct Fig11Row {
     pub p99_reduction: f64,
 }
 
-pub fn run_cell(t: &Testbed, shape: (u32, u32), value_bytes: u64, txns: u64, seed: u64) -> Fig11Row {
+pub fn run_cell(
+    t: &Testbed,
+    shape: (u32, u32),
+    value_bytes: u64,
+    txns: u64,
+    seed: u64,
+) -> Fig11Row {
     let s = TxnShape::new(shape.0, shape.1, value_bytes);
     // Issue one-by-one (§VI-C: "transactions are issued by the client one
     // by one") with small think gaps — the serving layer's closed-loop
@@ -237,5 +280,49 @@ mod tests {
     #[test]
     fn functional_chain_converges_under_the_benchmark() {
         assert!(functional_check(2_000, 4));
+    }
+
+    #[test]
+    fn hop_by_hop_matches_the_closed_form_cross_check() {
+        // A single uncontended transaction through the machine chain must
+        // land on the ChainCosts analytic total.
+        let t = Testbed::paper();
+        for replicas in [2u32, 4, 6] {
+            for (shape, vb) in [((0u32, 1u32), 64u64), ((4, 2), 64), ((4, 2), 1024)] {
+                let s = TxnShape::new(shape.0, shape.1, vb);
+                let mut orca = OrcaTx::new(&t, replicas);
+                let apu = orca.cluster.machines[0].apu_op_ps;
+                let hop = orca.execute(0, s);
+                let closed = orca.costs.orca_txn_closed_ps(s, &t.nvm, apu);
+                let rel = (hop as f64 - closed as f64).abs() / closed as f64;
+                assert!(
+                    rel < 0.005,
+                    "replicas={replicas} {s:?}: hop {hop} vs closed {closed} ({rel:.4})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn crashed_replica_leaves_the_route_and_recovery_restores_it() {
+        let t = Testbed::paper();
+        let mut orca = OrcaTx::new(&t, 4);
+        let s = TxnShape::new(0, 2, 64);
+        let healthy = orca.execute(0, s);
+        orca.crash(2);
+        assert_eq!(orca.route(), vec![0, 1, 3]);
+        let now = 1_000_000_000;
+        let degraded = orca.execute(now, s) - now;
+        assert!(
+            degraded < healthy,
+            "skipping a hop must shorten the chain: {degraded} !< {healthy}"
+        );
+        let now = 2_000_000_000;
+        let done = orca.recover(now, 2, 4096, 8192);
+        assert!(done > now, "recovery must take time");
+        assert_eq!(orca.route(), vec![0, 1, 2, 3]);
+        let now = 1_000_000_000_000;
+        let restored = orca.execute(now, s) - now;
+        assert_eq!(restored, healthy, "post-recovery latency returns to steady state");
     }
 }

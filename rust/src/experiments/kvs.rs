@@ -216,8 +216,18 @@ mod tests {
             1,
         );
         // Both near their network bounds...
-        assert!(cpu.mops > cpu.net_bound_mops * 0.75, "CPU {} vs bound {}", cpu.mops, cpu.net_bound_mops);
-        assert!(orca.mops > orca.net_bound_mops * 0.75, "ORCA {} vs bound {}", orca.mops, orca.net_bound_mops);
+        assert!(
+            cpu.mops > cpu.net_bound_mops * 0.75,
+            "CPU {} vs bound {}",
+            cpu.mops,
+            cpu.net_bound_mops
+        );
+        assert!(
+            orca.mops > orca.net_bound_mops * 0.75,
+            "ORCA {} vs bound {}",
+            orca.mops,
+            orca.net_bound_mops
+        );
         // ...and ORCA a few % ahead (Fig 8: +2.3–8.3%).
         let gain = orca.mops / cpu.mops - 1.0;
         assert!((0.0..0.25).contains(&gain), "gain {gain}");

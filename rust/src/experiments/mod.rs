@@ -13,6 +13,7 @@
 //! | Fig 12 (DLRM throughput) | [`fig12`] | `orca fig12` |
 //! | multi-APU sharding sweep (beyond the paper) | [`sharding`] | `orca sharding` |
 //! | adaptive D2H steering, end to end (beyond the paper) | [`adaptive`] | `orca adaptive` |
+//! | hop-by-hop chain sweep + crash/recovery (beyond the paper) | [`chain`] | `orca chain` |
 //!
 //! Absolute numbers are *this testbed's*; the claims under test are the
 //! paper's shapes (who wins, by what factor, where crossovers sit) — see
@@ -20,6 +21,7 @@
 //! dispatch through [`crate::serving::ServingPipeline`].
 
 pub mod adaptive;
+pub mod chain;
 pub mod fig11;
 pub mod fig12;
 pub mod fig4;

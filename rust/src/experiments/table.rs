@@ -76,13 +76,34 @@ impl Table {
         print!("{}", self.render());
     }
 
+    /// JSON object keys for the columns: duplicate headers are
+    /// disambiguated with a `#N` suffix (`"avg"`, `"avg#2"`, …) so row
+    /// objects never carry colliding keys — most parsers silently keep
+    /// only the last duplicate, dropping the earlier columns.
+    fn json_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::with_capacity(self.header.len());
+        for h in &self.header {
+            let mut key = h.clone();
+            let mut n = 2;
+            while keys.contains(&key) {
+                key = format!("{h}#{n}");
+                n += 1;
+            }
+            keys.push(key);
+        }
+        keys
+    }
+
     /// Machine-readable form: `{"title": …, "header": […], "rows":
-    /// [{"col": "cell", …}, …]}` (hand-rolled — no serde offline).
+    /// [{"col": "cell", …}, …]}` (hand-rolled — no serde offline). The
+    /// header array carries the same disambiguated keys the row objects
+    /// use, so consumers can match them positionally or by name.
     pub fn to_json(&self) -> String {
+        let keys = self.json_keys();
         let mut out = String::from("{\"title\":");
         out.push_str(&json_str(&self.title));
         out.push_str(",\"header\":[");
-        for (i, h) in self.header.iter().enumerate() {
+        for (i, h) in keys.iter().enumerate() {
             if i > 0 {
                 out.push(',');
             }
@@ -94,7 +115,7 @@ impl Table {
                 out.push(',');
             }
             out.push('{');
-            for (i, (h, c)) in self.header.iter().zip(row).enumerate() {
+            for (i, (h, c)) in keys.iter().zip(row).enumerate() {
                 if i > 0 {
                     out.push(',');
                 }
@@ -163,6 +184,26 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn duplicate_headers_get_unique_json_keys() {
+        // Regression: two columns with the same header used to produce
+        // duplicate JSON keys (last one wins in most parsers).
+        let mut t = Table::new("dup", &["design", "µs", "µs", "µs"]);
+        t.row(&["CPU".into(), "1.0".into(), "2.0".into(), "3.0".into()]);
+        let j = t.to_json();
+        assert!(j.contains(r#""header":["design","µs","µs#2","µs#3"]"#), "{j}");
+        assert!(
+            j.contains(r#"{"design":"CPU","µs":"1.0","µs#2":"2.0","µs#3":"3.0"}"#),
+            "no cell may be shadowed: {j}"
+        );
+        // A header that already looks like a suffixed key must not
+        // collide with the generated one.
+        let mut t = Table::new("tricky", &["a", "a#2", "a"]);
+        t.row(&["1".into(), "2".into(), "3".into()]);
+        let j = t.to_json();
+        assert!(j.contains(r#""header":["a","a#2","a#3"]"#), "{j}");
     }
 
     #[test]

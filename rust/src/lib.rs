@@ -16,8 +16,10 @@
 //!   generators ([`workload`]), power accounting ([`power`]), the **unified
 //!   serving path** ([`serving`]: one ingress→notify→serve→egress pipeline
 //!   for every design, including the sharded multi-APU configuration), the
-//!   experiment harness ([`experiments`]), and the real serving path: PJRT
-//!   runtime ([`runtime`]) + threaded coordinator ([`coordinator`]).
+//!   **cluster layer** ([`cluster`]: N full machines behind a ToR, driving
+//!   hop-by-hop chain replication), the experiment harness
+//!   ([`experiments`]), and the real serving path: PJRT runtime
+//!   ([`runtime`]) + threaded coordinator ([`coordinator`]).
 //!
 //! All timing is in **picoseconds** (`u64`) to keep integer math exact; the
 //! public helpers in [`sim::time`] convert to ns/µs.
@@ -35,6 +37,7 @@ pub mod cpu;
 pub mod baselines;
 pub mod apps;
 pub mod serving;
+pub mod cluster;
 pub mod workload;
 pub mod power;
 pub mod testing;

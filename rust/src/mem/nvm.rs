@@ -71,7 +71,10 @@ impl Nvm {
 
 /// Bytes the media touches for an access of `bytes` at `addr` given the
 /// internal granularity: the access is expanded to granule boundaries.
-fn span_bytes(addr: u64, bytes: u64, granule: u64) -> u64 {
+/// `pub` so the chain layer's closed-form cross-check
+/// ([`crate::baselines::hyperloop::ChainCosts`]) uses the *same* span
+/// rule as the simulated path rather than a drift-prone copy.
+pub fn span_bytes(addr: u64, bytes: u64, granule: u64) -> u64 {
     if bytes == 0 {
         return 0;
     }

@@ -62,6 +62,25 @@ impl Network {
         done + self.one_way_ps()
     }
 
+    /// Serialize a message onto this port's egress wire and return its
+    /// drain time, with **no** propagation added — the cluster layer's
+    /// ToR ([`crate::cluster`]) owns the leg latency, so its per-link
+    /// accounting charges each endpoint's ledger exactly once.
+    pub fn port_egress(&mut self, now: u64, payload: u64) -> u64 {
+        let wire = self.wire_bytes(payload);
+        self.egress_bytes += wire;
+        let (_s, done) = self.egress.acquire(now, transfer_ps(wire, self.gbs()));
+        done
+    }
+
+    /// Serialization-only ingress counterpart of [`Network::port_egress`].
+    pub fn port_ingress(&mut self, now: u64, payload: u64) -> u64 {
+        let wire = self.wire_bytes(payload);
+        self.ingress_bytes += wire;
+        let (_s, done) = self.ingress.acquire(now, transfer_ps(wire, self.gbs()));
+        done
+    }
+
     /// Peak sustainable request rate for `payload`-byte requests, in Mops —
     /// the Fig-8 network bound.
     pub fn peak_mops(&self, payload: u64) -> f64 {
@@ -124,6 +143,18 @@ mod tests {
         let a = n.send_to_server(0, 1 << 20);
         let b = n.send_to_client(0, 1 << 20);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn port_transfers_charge_serialization_but_no_propagation() {
+        let mut n = Network::new(NetParams::default());
+        let out = n.port_egress(0, 64);
+        let inn = n.port_ingress(0, 64);
+        // 146 wire bytes at 3.125 GB/s = 46.72 ns, and nothing else.
+        assert_eq!(out, 46_720);
+        assert_eq!(inn, 46_720);
+        assert_eq!(n.egress_bytes, 146);
+        assert_eq!(n.ingress_bytes, 146);
     }
 
     #[test]

@@ -110,7 +110,8 @@ mod tests {
         let cpu_box = p.box_power(Design::Cpu);
         let orca_box = p.box_power(Design::Orca);
         assert!(orca_box < cpu_box);
-        let dyn_reduction = ((cpu_box - BOX_BASE_W) - (orca_box - BOX_BASE_W)) / (cpu_box - BOX_BASE_W);
+        let dyn_reduction =
+            ((cpu_box - BOX_BASE_W) - (orca_box - BOX_BASE_W)) / (cpu_box - BOX_BASE_W);
         assert!((0.3..0.8).contains(&dyn_reduction), "{dyn_reduction}");
     }
 

@@ -12,6 +12,13 @@
 //!   outstanding-read bound scales with N) while the RNIC, PCIe link,
 //!   SQ handler, wire and the socket's one physical UPI link stay
 //!   shared.
+//!
+//! These designs are single-machine serving elements. The multi-machine
+//! deployment — N replicas each owning the same Network/RNIC/PCIe/
+//! memory-system bundle, behind one ToR — is [`crate::cluster`]; the
+//! chain-replication paths ([`crate::experiments::fig11::OrcaTx`],
+//! [`crate::baselines::hyperloop::HyperLoopChain`]) are its
+//! [`super::ClosedLoop`] designs.
 
 use super::{Design, Ingress};
 use crate::accel::{upi_link, CcAccelerator, SqHandler};

@@ -250,7 +250,12 @@ impl ServingPipeline {
     /// to two designs from a shared clock, with client-side jitter (an
     /// exponential at 5% of each latency — NIC/host variance) and small
     /// uniform think gaps. Returns both latency histograms.
-    pub fn lockstep<A, B>(a: &mut A, b: &mut B, jobs: &[A::Job], seed: u64) -> (Histogram, Histogram)
+    pub fn lockstep<A, B>(
+        a: &mut A,
+        b: &mut B,
+        jobs: &[A::Job],
+        seed: u64,
+    ) -> (Histogram, Histogram)
     where
         A: ClosedLoop,
         B: ClosedLoop<Job = A::Job>,

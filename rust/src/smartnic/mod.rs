@@ -75,7 +75,9 @@ impl SmartNicServer {
             // round trip; the host memory system serves the data.
             self.host_accesses += 1;
             let wire = bytes.max(64) + self.t.pcie.tlp_overhead_bytes;
-            let (_s, _ser) = self.pcie_data.acquire(now, transfer_ps(wire, self.t.pcie.bandwidth_gbs));
+            let (_s, _ser) = self
+                .pcie_data
+                .acquire(now, transfer_ps(wire, self.t.pcie.bandwidth_gbs));
             let link_ps = (2.0 * self.t.pcie.one_way_ns * NS as f64) as u64;
             let mem_ps = self.mem.dma_read(now, addr, bytes).saturating_sub(now);
             self.host_read[core].acquire_with(now, link_ps + mem_ps)

@@ -26,12 +26,48 @@ pub struct DatasetProfile {
 
 /// The six categories evaluated in §VI-D.
 pub const AMAZON_PROFILES: [DatasetProfile; 6] = [
-    DatasetProfile { name: "electronics", table_rows: 476_001, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.7 },
-    DatasetProfile { name: "clothing-shoes-jewelry", table_rows: 2_685_059, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.65 },
-    DatasetProfile { name: "home-kitchen", table_rows: 1_301_225, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.7 },
-    DatasetProfile { name: "books", table_rows: 2_930_451, mean_query_len: 12, pop_theta: 0.85, pair_affinity: 0.6 },
-    DatasetProfile { name: "sports-outdoors", table_rows: 962_876, mean_query_len: 8, pop_theta: 0.8, pair_affinity: 0.7 },
-    DatasetProfile { name: "office-products", table_rows: 306_800, mean_query_len: 6, pop_theta: 0.75, pair_affinity: 0.75 },
+    DatasetProfile {
+        name: "electronics",
+        table_rows: 476_001,
+        mean_query_len: 8,
+        pop_theta: 0.8,
+        pair_affinity: 0.7,
+    },
+    DatasetProfile {
+        name: "clothing-shoes-jewelry",
+        table_rows: 2_685_059,
+        mean_query_len: 8,
+        pop_theta: 0.8,
+        pair_affinity: 0.65,
+    },
+    DatasetProfile {
+        name: "home-kitchen",
+        table_rows: 1_301_225,
+        mean_query_len: 8,
+        pop_theta: 0.8,
+        pair_affinity: 0.7,
+    },
+    DatasetProfile {
+        name: "books",
+        table_rows: 2_930_451,
+        mean_query_len: 12,
+        pop_theta: 0.85,
+        pair_affinity: 0.6,
+    },
+    DatasetProfile {
+        name: "sports-outdoors",
+        table_rows: 962_876,
+        mean_query_len: 8,
+        pop_theta: 0.8,
+        pair_affinity: 0.7,
+    },
+    DatasetProfile {
+        name: "office-products",
+        table_rows: 306_800,
+        mean_query_len: 6,
+        pop_theta: 0.75,
+        pair_affinity: 0.75,
+    },
 ];
 
 /// Query generator for one profile.

@@ -1,0 +1,233 @@
+//! Golden-value tests for the cluster rebuild of Fig 11: the hop-by-hop
+//! chain (`Cluster` of full machines) must reproduce the pre-cluster
+//! analytic implementations' latencies within 1% at replicas=2, for
+//! every (shape, value-size) cell.
+//!
+//! The reference implementations below are line-for-line ports of the
+//! old `ChainCosts`-lump `HyperLoopChain::execute` / `OrcaTx::execute`
+//! bodies (one shared `Nvm`/`MemorySystem`, per-hop cost =
+//! `net_leg + wire + pcie/2`), kept here as the fixed point the cluster
+//! decomposition is measured against — the same style as
+//! `fig4_golden.rs` and `serving_golden.rs`.
+
+use orca::baselines::hyperloop::TxnShape;
+use orca::config::Testbed;
+use orca::experiments::fig11::{self, SHAPES, VALUE_SIZES};
+use orca::mem::{Access, Domain, MemorySystem, Nvm};
+use orca::serving::{ClosedLoop, ServingPipeline};
+use orca::sim::{cycles_ps, transfer_ps, US};
+
+fn close(a: f64, b: f64, what: &str) {
+    let rel = (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel < 0.01, "{what}: cluster {a} vs reference {b} ({rel:.4} rel)");
+}
+
+/// The pre-cluster `ChainCosts`, verbatim.
+struct RefCosts {
+    net_leg_ps: u64,
+    pcie_rtt_ps: u64,
+    line_gbs: f64,
+    replicas: u32,
+}
+
+impl RefCosts {
+    fn from_testbed(t: &Testbed, replicas: u32) -> Self {
+        RefCosts {
+            net_leg_ps: (2_500.0 * 1_000.0) as u64,
+            pcie_rtt_ps: (2.0 * t.pcie.one_way_ns * 1_000.0) as u64,
+            line_gbs: t.net.line_gbps / 8.0,
+            replicas,
+        }
+    }
+
+    fn wire_ps(&self, bytes: u64) -> u64 {
+        transfer_ps(bytes + 82, self.line_gbs)
+    }
+
+    /// The old one-chain-traversal helper, verbatim.
+    fn chain_round_ps(&self, bytes: u64, nvm: &mut Nvm, now: u64, addr: u64) -> u64 {
+        let mut t = now;
+        for r in 0..self.replicas {
+            t += self.net_leg_ps + self.wire_ps(bytes);
+            t += self.pcie_rtt_ps / 2;
+            let a = addr + r as u64 * (1 << 30);
+            t = nvm.write(t, a, bytes);
+        }
+        for _ in 0..self.replicas {
+            t += self.net_leg_ps + self.wire_ps(16);
+        }
+        t
+    }
+}
+
+/// The pre-cluster HyperLoop model: one shared `Nvm`, analytic hops.
+struct RefHyperLoop {
+    costs: RefCosts,
+    nvm: Nvm,
+    next_addr: u64,
+}
+
+impl RefHyperLoop {
+    fn new(t: &Testbed, replicas: u32) -> Self {
+        RefHyperLoop {
+            costs: RefCosts::from_testbed(t, replicas),
+            nvm: Nvm::new(t.nvm.clone()),
+            next_addr: 0,
+        }
+    }
+
+    fn execute(&mut self, now: u64, shape: TxnShape) -> u64 {
+        let mut t = now;
+        for i in 0..shape.reads {
+            t += self.costs.net_leg_ps + self.costs.wire_ps(16);
+            t += self.costs.pcie_rtt_ps;
+            let addr = self.next_addr + i as u64 * 4096;
+            t = self.nvm.read(t, addr, shape.value_bytes);
+            t += self.costs.net_leg_ps + self.costs.wire_ps(shape.value_bytes);
+        }
+        for _ in 0..shape.writes {
+            let addr = self.next_addr;
+            self.next_addr += shape.value_bytes.max(64);
+            t = self.costs.chain_round_ps(shape.value_bytes, &mut self.nvm, t, addr);
+        }
+        t
+    }
+}
+
+impl ClosedLoop for RefHyperLoop {
+    type Job = TxnShape;
+    fn serve_one(&mut self, now: u64, job: &TxnShape) -> u64 {
+        self.execute(now, *job)
+    }
+}
+
+/// The pre-cluster ORCA Tx model: head-only `MemorySystem`, analytic
+/// forward hops multiplying one `net_leg_ps`.
+struct RefOrcaTx {
+    costs: RefCosts,
+    mem: MemorySystem,
+    apu_op_ps: u64,
+    next_addr: u64,
+}
+
+impl RefOrcaTx {
+    fn new(t: &Testbed, replicas: u32) -> Self {
+        RefOrcaTx {
+            costs: RefCosts::from_testbed(t, replicas),
+            mem: MemorySystem::new(t),
+            apu_op_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
+            next_addr: 0,
+        }
+    }
+
+    fn nvm_read(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        self.mem
+            .access(now, &Access::read(addr, bytes as u32).in_domain(Domain::HostNvm))
+    }
+
+    fn nvm_write(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
+        self.mem
+            .access(now, &Access::write(addr, bytes as u32).in_domain(Domain::HostNvm))
+    }
+
+    fn execute(&mut self, now: u64, shape: TxnShape) -> u64 {
+        let payload: u64 =
+            1 + (shape.writes as u64) * (10 + shape.value_bytes) + (shape.reads as u64) * 10;
+        let mut t = now;
+        t += self.costs.net_leg_ps + self.costs.wire_ps(payload);
+        t += self.costs.pcie_rtt_ps / 2;
+        for i in 0..shape.reads {
+            t += self.apu_op_ps;
+            let addr = self.next_addr + i as u64 * 4096;
+            t = self.nvm_read(t, addr, shape.value_bytes);
+        }
+        let mut log_addr = self.next_addr;
+        for _ in 0..shape.writes {
+            t += self.apu_op_ps;
+            t = self.nvm_write(t, log_addr, shape.value_bytes);
+            log_addr += shape.value_bytes.max(64);
+        }
+        self.next_addr = log_addr;
+        let fwd_payload = 1 + (shape.writes as u64) * (10 + shape.value_bytes);
+        for _ in 1..self.costs.replicas {
+            t += self.costs.net_leg_ps + self.costs.wire_ps(fwd_payload);
+            t += self.costs.pcie_rtt_ps / 2;
+            t = self.nvm_write(t, log_addr + (1 << 30), fwd_payload);
+        }
+        for _ in 0..self.costs.replicas {
+            t += self.costs.net_leg_ps + self.costs.wire_ps(16);
+        }
+        t
+    }
+}
+
+impl ClosedLoop for RefOrcaTx {
+    type Job = TxnShape;
+    fn serve_one(&mut self, now: u64, job: &TxnShape) -> u64 {
+        self.execute(now, *job)
+    }
+}
+
+#[test]
+fn fig11_cells_match_the_precluster_analytic_path_within_1pct() {
+    let t = Testbed::paper();
+    let txns = 20_000u64;
+    let seed = 2u64;
+    for &shape in &SHAPES {
+        for &vb in &VALUE_SIZES {
+            let s = TxnShape::new(shape.0, shape.1, vb);
+            let jobs = vec![s; txns as usize];
+            let mut ref_hl = RefHyperLoop::new(&t, 2);
+            let mut ref_orca = RefOrcaTx::new(&t, 2);
+            let (h_hl, h_orca) =
+                ServingPipeline::lockstep(&mut ref_hl, &mut ref_orca, &jobs, seed);
+
+            let r = fig11::run_cell(&t, shape, vb, txns, seed);
+            let what = format!("cell ({},{}) @ {vb}B", shape.0, shape.1);
+            close(r.hyperloop_avg_us, h_hl.mean() / US as f64, &format!("{what} HL avg"));
+            close(r.orca_avg_us, h_orca.mean() / US as f64, &format!("{what} ORCA avg"));
+            close(
+                r.hyperloop_p99_us,
+                h_hl.p99() as f64 / US as f64,
+                &format!("{what} HL p99"),
+            );
+            close(
+                r.orca_p99_us,
+                h_orca.p99() as f64 / US as f64,
+                &format!("{what} ORCA p99"),
+            );
+        }
+    }
+}
+
+#[test]
+fn single_transactions_match_the_analytic_hop_sum_exactly() {
+    // Stronger than the statistical pin: one uncontended transaction of
+    // each shape lands on the analytic total to the picosecond, because
+    // the machines' component replay is subsumed by the measured Fig-6
+    // hop budget (see `cluster::tests`).
+    let t = Testbed::paper();
+    for &shape in &SHAPES {
+        for &vb in &VALUE_SIZES {
+            let s = TxnShape::new(shape.0, shape.1, vb);
+            let mut ref_orca = RefOrcaTx::new(&t, 2);
+            let mut orca = fig11::OrcaTx::new(&t, 2);
+            assert_eq!(
+                orca.execute(0, s),
+                ref_orca.execute(0, s),
+                "ORCA ({},{}) @ {vb}B",
+                shape.0,
+                shape.1
+            );
+            let mut ref_hl = RefHyperLoop::new(&t, 2);
+            let mut hl = orca::baselines::hyperloop::HyperLoopChain::new(&t, 2);
+            assert_eq!(
+                hl.execute(0, s),
+                ref_hl.execute(0, s),
+                "HyperLoop ({},{}) @ {vb}B",
+                shape.0,
+                shape.1
+            );
+        }
+    }
+}
