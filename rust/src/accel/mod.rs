@@ -19,7 +19,7 @@ pub use scheduler::RoundRobin;
 pub use sq_handler::SqHandler;
 
 use crate::config::{AccelMem, Testbed};
-use crate::mem::{Access, MemTrace, MemorySystem, SharedMemorySystem};
+use crate::mem::{Access, LocalMemory, MemTrace, MemorySystem, SharedMemorySystem};
 use crate::sim::{cycles_ps, transfer_ps, BandwidthLedger, MultiServer, Server, NS};
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -57,12 +57,10 @@ enum MemPath {
         upi_gbs: f64,
         mem: SharedMemorySystem,
     },
-    /// ORCA-LD / ORCA-LH: data in accelerator-attached memory.
-    Local {
-        chan: BandwidthLedger,
-        latency_ps: u64,
-        per_byte: f64, // GB/s of the local memory
-    },
+    /// ORCA-LD / ORCA-LH: data in accelerator-attached memory (the
+    /// shared [`LocalMemory`] model, unrestricted residency — the KVS
+    /// path models anonymous local buffers, not staged tables).
+    Local(LocalMemory),
 }
 
 impl Clone for MemPath {
@@ -86,15 +84,7 @@ impl Clone for MemPath {
                 upi_gbs: *upi_gbs,
                 mem: Rc::new(RefCell::new(mem.borrow().clone())),
             },
-            MemPath::Local {
-                chan,
-                latency_ps,
-                per_byte,
-            } => MemPath::Local {
-                chan: chan.clone(),
-                latency_ps: *latency_ps,
-                per_byte: *per_byte,
-            },
+            MemPath::Local(local) => MemPath::Local(local.clone()),
         }
     }
 }
@@ -129,6 +119,34 @@ pub fn host_access_rtt_ps(t: &Testbed) -> u64 {
     host_interconnect_ps(t) + (t.dram.latency_ns * NS as f64) as u64
 }
 
+/// Service time of one host access from the APU: interconnect hops +
+/// the *measured* memory leg from the shared [`MemorySystem`] + the
+/// data-size extra on the link — the round trip a coherence-controller
+/// slot is held for. Shared by [`CcAccelerator`]'s slotted path and
+/// the DLRM gather FSM ([`crate::serving::dlrm::DlrmOrca`]) so the two
+/// ORCA host models cannot drift apart.
+pub fn host_access_service_ps(
+    now: u64,
+    a: &Access,
+    hop_ps: u64,
+    upi_gbs: f64,
+    mem: &SharedMemorySystem,
+) -> u64 {
+    let mem_ps = mem.borrow_mut().access(now, a).saturating_sub(now);
+    let extra = transfer_ps(u64::from(a.bytes).saturating_sub(64), upi_gbs);
+    hop_ps + mem_ps + extra
+}
+
+/// Serialize a returned line of `bytes` on the (possibly shared) UPI
+/// link; returns the drain time. Uncontended this finishes well inside
+/// the access round trip, but across many consumers it is the
+/// aggregate cap.
+pub fn upi_serialize_ps(now: u64, bytes: u64, upi_gbs: f64, link: &UpiLink) -> u64 {
+    let wire = transfer_ps(bytes.max(64), upi_gbs);
+    let (_s, done) = link.borrow_mut().acquire(now, wire);
+    done
+}
+
 impl CcAccelerator {
     pub fn new(t: &Testbed, mem: AccelMem) -> Self {
         Self::with_upi_link(t, mem, upi_link())
@@ -149,25 +167,15 @@ impl CcAccelerator {
         link: UpiLink,
         memsys: SharedMemorySystem,
     ) -> Self {
-        let mem_path = match mem.bandwidth_gbs() {
-            None => MemPath::Host {
+        let mem_path = match mem {
+            AccelMem::None => MemPath::Host {
                 coh: MultiServer::new(t.accel.coh_outstanding),
                 hop_ps: host_interconnect_ps(t),
                 link,
                 upi_gbs: t.upi.bandwidth_gbs,
                 mem: memsys,
             },
-            Some(gbs) => {
-                let latency_ns = match mem {
-                    AccelMem::LocalHbm => 120.0, // HBM2: higher latency, huge bw
-                    _ => 90.0,                   // DDR4
-                };
-                MemPath::Local {
-                    chan: BandwidthLedger::new(),
-                    latency_ps: (latency_ns * NS as f64) as u64,
-                    per_byte: gbs,
-                }
-            }
+            local => MemPath::Local(LocalMemory::new(local)),
         };
         CcAccelerator {
             slots: MultiServer::new(t.accel.outstanding),
@@ -191,29 +199,14 @@ impl CcAccelerator {
                 upi_gbs,
                 mem,
             } => {
-                // Memory-service leg from the shared memory system (LLC
-                // hit / DRAM / NVM by domain, with bandwidth contention).
-                let mem_ps = mem.borrow_mut().access(now, a).saturating_sub(now);
-                // Larger transfers stretch the data leg of the RTT; the
-                // slot is held for the whole round trip.
-                let extra = transfer_ps(bytes.saturating_sub(64), *upi_gbs);
-                let (_s, done, _lane) = coh.acquire(now, *hop_ps + mem_ps + extra);
-                // The returned line also serializes on the shared UPI
-                // link; uncontended this finishes well inside the RTT,
-                // but with many shards it is the aggregate cap.
-                let wire = transfer_ps(bytes.max(64), *upi_gbs);
-                let (_s, ser_done) = link.borrow_mut().acquire(now, wire);
-                done.max(ser_done)
+                // Hops + measured memory leg + size extra; the slot is
+                // held for the whole round trip, and the returned line
+                // also serializes on the shared UPI link.
+                let service = host_access_service_ps(now, a, *hop_ps, *upi_gbs, mem);
+                let (_s, done, _lane) = coh.acquire(now, service);
+                done.max(upi_serialize_ps(now, bytes, *upi_gbs, link))
             }
-            MemPath::Local {
-                chan,
-                latency_ps,
-                per_byte,
-            } => {
-                let service = transfer_ps(bytes.max(64), *per_byte);
-                let (_s, done) = chan.acquire(now, service);
-                done + *latency_ps
-            }
+            MemPath::Local(local) => local.access(now, a),
         }
     }
 
@@ -298,7 +291,7 @@ impl CcAccelerator {
     pub fn mem_busy_ps(&self) -> u64 {
         match &self.mem_path {
             MemPath::Host { coh, .. } => coh.busy_ps(),
-            MemPath::Local { chan, .. } => chan.busy_ps(),
+            MemPath::Local(local) => local.busy_ps(),
         }
     }
 }

@@ -1,12 +1,13 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
 //! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
-//! sharding, adaptive, chain, all, serve (coordinator demo), info.
+//! sharding, adaptive, chain, dlrm, all, serve (coordinator demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
 //! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points),
 //! --shards LIST (sharding: shard counts to sweep), --replicas LIST|A..B
 //! and --crash-at [N] (chain: replica sweep + timed mid-chain crash),
+//! --batch N (dlrm: group queries through the coordinator batcher),
 //! --json PATH (dump the run's tables as machine-readable JSON).
 
 use crate::config::{Overrides, Testbed};
@@ -25,6 +26,8 @@ pub struct Cli {
     pub replicas: Vec<u32>,
     /// With `chain`: crash the mid replica at this txn of a timed run.
     pub crash_at: Option<u64>,
+    /// With `dlrm`: group queries through the coordinator batcher.
+    pub batch: usize,
     /// Dump every table of the run to this path as JSON.
     pub json: Option<std::path::PathBuf>,
 }
@@ -46,6 +49,7 @@ COMMANDS:
   sharding  multi-APU sharding sweep (throughput vs shard count)
   adaptive  adaptive D2H steering: SET-heavy KVS over DRAM+NVM, end to end
   chain   hop-by-hop chain replication: replica sweep + timed crash/recovery
+  dlrm    DLRM trace-driven serving: saturation vs analytic + latency-vs-load
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
   info    testbed parameters after overrides
@@ -62,6 +66,8 @@ FLAGS:
   --replicas R      chain replica counts: a list `2,4,6` or range `2..6` (default 2..6)
   --crash-at [N]    with chain: crash the mid replica at txn N of the timed
                     run (bare flag: one third in; runs cap at 20000 txns)
+  --batch N         with dlrm: route queries through the coordinator batcher
+                    in groups of N (default 1 = unbatched)
   --json PATH       also write the run's tables to PATH as JSON
 ";
 
@@ -77,6 +83,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut shards: Vec<usize> = experiments::sharding::SHARD_COUNTS.to_vec();
     let mut replicas: Vec<u32> = experiments::chain::REPLICAS.to_vec();
     let mut crash_at = None;
+    let mut batch = 1usize;
     let mut json = None;
     let mut i = 1;
     while i < args.len() {
@@ -100,6 +107,15 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--artifacts" => artifacts = take(&mut i)?.into(),
             "--cdf" => cdf = true,
             "--json" => json = Some(take(&mut i)?.into()),
+            "--batch" => {
+                let v = take(&mut i)?;
+                batch = v
+                    .parse::<usize>()
+                    .with_context(|| format!("bad batch size `{v}`"))?;
+                if batch == 0 {
+                    bail!("--batch needs a positive group size");
+                }
+            }
             "--shards" => {
                 let list = take(&mut i)?;
                 shards = list
@@ -152,6 +168,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         shards,
         replicas,
         crash_at,
+        batch,
         json,
     })
 }
@@ -194,9 +211,13 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
         "fig8" => tables.push(fig8(&cli.opts)),
         "fig9" => tables.push(fig9(&cli.opts)),
         "fig10" => tables.push(fig10(&cli.opts)),
-        "tab3" => tables.push(experiments::tab3::report(&cli.opts)),
+        "tab3" => {
+            tables.push(experiments::tab3::report(&cli.opts));
+            tables.push(experiments::tab3::report_dlrm(&cli.opts));
+        }
         "fig11" => tables.push(experiments::fig11::report(&cli.opts)),
         "fig12" => tables.push(experiments::fig12::report(&cli.opts)),
+        "dlrm" => tables.extend(experiments::dlrm::report(&cli.opts, cli.batch)),
         "sharding" => tables.push(experiments::sharding::report(&cli.opts, &cli.shards)),
         "adaptive" => tables.push(experiments::adaptive::report(&cli.opts)),
         "chain" => {
@@ -237,8 +258,10 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             tables.push(fig9(&cli.opts));
             tables.push(fig10(&cli.opts));
             tables.push(experiments::tab3::report(&cli.opts));
+            tables.push(experiments::tab3::report_dlrm(&cli.opts));
             tables.push(experiments::fig11::report(&cli.opts));
             tables.push(experiments::fig12::report(&cli.opts));
+            tables.extend(experiments::dlrm::report(&cli.opts, cli.batch));
             tables.push(experiments::sharding::report(&cli.opts, &cli.shards));
             tables.push(experiments::adaptive::report(&cli.opts));
             tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
@@ -333,6 +356,7 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
             "avg",
             "p50",
             "p99",
+            "p999",
             "DRAM rd GB/s",
             "DRAM wr GB/s",
             "NVM amp",
@@ -353,16 +377,17 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
         for d in KvDesign::ALL {
             let r = kvs::peak_then_latency(&opts.testbed, d, &stream, 32, opts.seed);
             // The paper's U280 emulation cannot measure LD/LH tails (§V).
-            let tail = match d {
+            let tail = |us: f64| match d {
                 KvDesign::Orca(m) if m != crate::config::AccelMem::None => "n/a".to_string(),
-                _ => format!("{:.1}", r.p99_us),
+                _ => format!("{us:.1}"),
             };
             tb.row(&[
                 d.label().into(),
                 dl.into(),
                 format!("{:.1}", r.avg_us),
                 format!("{:.1}", r.p50_us),
-                tail,
+                tail(r.p99_us),
+                tail(r.p999_us),
                 format!("{:.2}", r.dram_read_gbs),
                 format!("{:.2}", r.dram_write_gbs),
                 format!("{:.2}x", r.nvm_write_amp),
@@ -510,6 +535,15 @@ mod tests {
         let args = s(&["chain", "--replicas", "3", "--crash-at", "--requests", "10"]);
         let cli = parse(&args).unwrap();
         assert!(tables_for(&cli).is_err());
+    }
+
+    #[test]
+    fn parses_batch_flag() {
+        assert_eq!(parse(&s(&["dlrm"])).unwrap().batch, 1);
+        assert_eq!(parse(&s(&["dlrm", "--batch", "8"])).unwrap().batch, 8);
+        assert!(parse(&s(&["dlrm", "--batch", "0"])).is_err());
+        assert!(parse(&s(&["dlrm", "--batch"])).is_err());
+        assert!(parse(&s(&["dlrm", "--batch", "x"])).is_err());
     }
 
     #[test]

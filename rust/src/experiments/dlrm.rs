@@ -1,0 +1,473 @@
+//! Trace-driven DLRM serving (beyond Fig 12's closed forms): the four
+//! §VI-D configurations on the real serving path, over the six
+//! Amazon-review datasets — `orca dlrm`.
+//!
+//! Each job is the concatenated [`MemTrace`] of one query's reduction
+//! over all [`TABLES_PER_QUERY`] embedding tables, emitted by the real
+//! [`crate::apps::dlrm::Merci`] memoizer (memo hits touch memo-table
+//! addresses, misses fall back to raw gathers), with per-table address
+//! offsets so the aggregate working set is honest. Three artifacts:
+//!
+//! * **Saturation cross-check** — the simulated peak throughput per
+//!   design, next to the [`crate::serving::analytic`] closed-form bound
+//!   (the `ChainCosts` pattern: the bound stays as the sanity bracket,
+//!   asserted in-tree within [`SIM_VS_ANALYTIC`]).
+//! * **Latency-vs-offered-load sweep** — open-loop Poisson arrivals at
+//!   [`LOAD_POINTS`] fractions of each design's analytic bound, with
+//!   p50/p99/p999 hockey-stick curves. ORCA-LD/LH sustain far higher
+//!   absolute load before the p99 knee than base ORCA ([`knee_load`]).
+//! * **`--batch`** — queries grouped through the coordinator's
+//!   [`Batcher`] before entering the pipeline (one notification and
+//!   doorbell per group, like the serve-path dynamic batcher).
+
+use super::fig12::{self, TABLES_PER_QUERY};
+use super::{Opts, Table};
+use crate::config::{AccelMem, Testbed};
+use crate::coordinator::{BatchPolicy, Batcher};
+use crate::mem::MemTrace;
+use crate::serving::analytic::{self, GatherProfile};
+use crate::serving::{DlrmCpu, DlrmOrca, DlrmOrcaLocal, Load, RunMetrics, ServingPipeline};
+use crate::workload::{DatasetProfile, AMAZON_PROFILES};
+
+/// Table scale-down factor (matches Fig 12's functional profile).
+pub const SCALE: usize = 10;
+/// Address stride between the per-model embedding tables (64 GB —
+/// tables, index pages and memo regions stay disjoint).
+const TABLE_STRIDE: u64 = 1 << 36;
+/// Offered-load points of the latency sweep, as fractions of each
+/// design's analytic saturation bound.
+pub const LOAD_POINTS: [f64; 4] = [0.3, 0.6, 0.9, 1.1];
+/// Tolerance bracket for simulated-saturation / analytic-bound per
+/// dataset × design. The trace-driven path sees effects the closed
+/// forms fold into class constants (LLC hits on hot memo rows, RoCE
+/// headers on the wire, window-edge effects), so the bracket is a
+/// sanity corridor, not an equality.
+pub const SIM_VS_ANALYTIC: (f64, f64) = (0.5, 1.6);
+/// A sweep point is past the knee once its p99 exceeds this multiple of
+/// the design's lowest-load p99.
+pub const KNEE_P99_X: f64 = 4.0;
+/// Response payload: the reduced f32[64] embedding vector.
+pub const RESP_BYTES: u64 = 256;
+
+/// One dataset's pre-built request stream.
+pub struct DlrmStream {
+    pub dataset: &'static str,
+    pub jobs: Vec<MemTrace>,
+    /// Measured data-movement profile of the jobs (feeds the analytic
+    /// cross-check — both paths see the same movement).
+    pub gp: GatherProfile,
+    pub memo_hit_rate: f64,
+    /// `(base, bytes)` regions ORCA-LD/LH stage into local memory at
+    /// table-load time (index pages + embedding tables + memo tables).
+    pub regions: Vec<(u64, u64)>,
+}
+
+/// Build one dataset's stream: `n` queries, each reducing over
+/// [`TABLES_PER_QUERY`] logical tables (one memoizer + per-table
+/// address offsets; the table/MERCI configuration is
+/// [`fig12::dataset_setup`], shared with the analytic arm).
+pub fn build_stream(profile: &DatasetProfile, n: usize, seed: u64) -> DlrmStream {
+    let (mut gen, table, mut merci) = fig12::dataset_setup(profile, SCALE, seed);
+    let mlp = 64; // the designs re-window at replay (§IV-C default here)
+
+    let mut jobs = Vec::with_capacity(n);
+    let mut bytes = 0u64;
+    let mut accesses = 0u64;
+    for _ in 0..n {
+        let mut job = MemTrace::new();
+        for k in 0..TABLES_PER_QUERY {
+            let q = gen.query();
+            let (_, tr) = merci.reduce(&table, &q, mlp);
+            let off = k as u64 * TABLE_STRIDE;
+            for a in &tr.accesses {
+                let mut a = *a;
+                a.addr += off;
+                job.push(a);
+            }
+        }
+        bytes += job.bytes();
+        accesses += job.len() as u64;
+        jobs.push(job);
+    }
+
+    // Residency map for the local designs: per logical table, the index
+    // page + embedding rows, and the memo region (same layout Merci
+    // addresses by: memo base = table end + 1 GB).
+    let base = table.cfg.base_addr;
+    let memo_base = base + table.table_bytes() + (1 << 30);
+    let memo_bytes = merci.memo_rows() as u64 * table.row_bytes();
+    let mut regions = Vec::with_capacity(2 * TABLES_PER_QUERY);
+    for k in 0..TABLES_PER_QUERY as u64 {
+        let off = k * TABLE_STRIDE;
+        regions.push((base - 4096 + off, 4096 + table.table_bytes()));
+        if memo_bytes > 0 {
+            regions.push((memo_base + off, memo_bytes));
+        }
+    }
+
+    DlrmStream {
+        dataset: profile.name,
+        jobs,
+        gp: GatherProfile {
+            bytes_per_query: bytes as f64 / n as f64,
+            accesses_per_query: accesses as f64 / n as f64,
+            req_bytes: fig12::req_bytes(profile),
+        },
+        memo_hit_rate: merci.hit_rate(),
+        regions,
+    }
+}
+
+/// The four Fig-12 configurations (CPU takes its core count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DlrmDesign {
+    Cpu(usize),
+    Orca,
+    OrcaLocal(AccelMem),
+}
+
+impl DlrmDesign {
+    /// Saturation-table designs (CPU at both ends of its scaling curve).
+    pub const SAT: [DlrmDesign; 5] = [
+        DlrmDesign::Cpu(1),
+        DlrmDesign::Cpu(8),
+        DlrmDesign::Orca,
+        DlrmDesign::OrcaLocal(AccelMem::LocalDdr),
+        DlrmDesign::OrcaLocal(AccelMem::LocalHbm),
+    ];
+    /// Latency-sweep designs.
+    pub const SWEEP: [DlrmDesign; 4] = [
+        DlrmDesign::Cpu(8),
+        DlrmDesign::Orca,
+        DlrmDesign::OrcaLocal(AccelMem::LocalDdr),
+        DlrmDesign::OrcaLocal(AccelMem::LocalHbm),
+    ];
+
+    pub fn label(self) -> String {
+        match self {
+            DlrmDesign::Cpu(n) => format!("CPU-{n}"),
+            DlrmDesign::Orca => "ORCA".into(),
+            DlrmDesign::OrcaLocal(m) => m.label().into(),
+        }
+    }
+
+    /// The closed-form saturation bound for this design (queries/s).
+    pub fn analytic_qps(self, t: &Testbed, gp: &GatherProfile) -> f64 {
+        match self {
+            DlrmDesign::Cpu(n) => analytic::cpu_qps(t, gp, n),
+            DlrmDesign::Orca => analytic::orca_host_qps(t, gp),
+            DlrmDesign::OrcaLocal(m) => analytic::orca_local_qps(t, gp, m),
+        }
+    }
+}
+
+/// Group `jobs` through the coordinator's size-triggered [`Batcher`]
+/// into merged jobs of up to `batch` queries (tail flushed). `batch <=
+/// 1` passes the stream through untouched.
+pub fn batched_jobs(jobs: &[MemTrace], batch: usize) -> Vec<MemTrace> {
+    if batch <= 1 {
+        return jobs.to_vec();
+    }
+    let mut b: Batcher<MemTrace> = Batcher::new(BatchPolicy {
+        max_batch: batch,
+        // Size-triggered only: simulated queries carry their own clock.
+        max_wait: std::time::Duration::from_secs(3600),
+    });
+    let merge = |group: Vec<MemTrace>| {
+        let mut m = MemTrace::new();
+        for g in group {
+            for a in g.accesses {
+                m.push(a);
+            }
+        }
+        m
+    };
+    let mut out = Vec::with_capacity(jobs.len().div_ceil(batch));
+    for j in jobs {
+        if let Some(group) = b.push(j.clone()) {
+            out.push(merge(group));
+        }
+    }
+    if let Some(group) = b.flush() {
+        out.push(merge(group));
+    }
+    out
+}
+
+/// Run one design over one stream. `batch > 1` routes the queries
+/// through [`batched_jobs`] first (requests and responses scale with
+/// the group size). The returned metrics count *pipeline jobs* — at
+/// batch B multiply `mops` by B for the query rate.
+pub fn run_design(
+    t: &Testbed,
+    d: DlrmDesign,
+    stream: &DlrmStream,
+    load: Load,
+    batch: usize,
+    seed: u64,
+) -> RunMetrics {
+    // Only the batched path materializes merged jobs; the common
+    // unbatched runs borrow the stream as-is.
+    let merged;
+    let jobs: &[MemTrace] = if batch <= 1 {
+        &stream.jobs
+    } else {
+        merged = batched_jobs(&stream.jobs, batch);
+        &merged
+    };
+    let b = batch.max(1) as u64;
+    let pipe = ServingPipeline::new(load, stream.gp.req_bytes * b, RESP_BYTES * b, seed);
+    match d {
+        DlrmDesign::Cpu(cores) => pipe.run(&mut DlrmCpu::new(t, cores), jobs),
+        DlrmDesign::Orca => pipe.run(&mut DlrmOrca::new(t), jobs),
+        DlrmDesign::OrcaLocal(m) => pipe.run(&mut DlrmOrcaLocal::new(t, m, &stream.regions), jobs),
+    }
+}
+
+/// Simulated saturation throughput, queries/s.
+pub fn saturation_qps(t: &Testbed, d: DlrmDesign, stream: &DlrmStream, seed: u64) -> f64 {
+    run_design(t, d, stream, Load::Saturation, 1, seed).mops * 1e6
+}
+
+/// One latency-sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub dataset: &'static str,
+    pub design: DlrmDesign,
+    /// Fraction of the design's analytic bound this point offers.
+    pub rel_load: f64,
+    /// Absolute offered load, queries/s.
+    pub offered_qps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+}
+
+/// Open-loop Poisson sweep of one design over [`LOAD_POINTS`] fractions
+/// of its analytic bound.
+pub fn latency_sweep(t: &Testbed, d: DlrmDesign, stream: &DlrmStream, seed: u64) -> Vec<SweepRow> {
+    let bound = d.analytic_qps(t, &stream.gp);
+    LOAD_POINTS
+        .iter()
+        .map(|&rel| {
+            let offered = bound * rel;
+            let m = run_design(t, d, stream, Load::Open { mops: offered / 1e6 }, 1, seed);
+            SweepRow {
+                dataset: stream.dataset,
+                design: d,
+                rel_load: rel,
+                offered_qps: offered,
+                p50_us: m.p50_us,
+                p99_us: m.p99_us,
+                p999_us: m.p999_us,
+            }
+        })
+        .collect()
+}
+
+/// The knee of one design's sweep: the largest offered load whose p99
+/// stays within [`KNEE_P99_X`] of the design's lowest-load p99.
+pub fn knee_load(rows: &[SweepRow]) -> f64 {
+    let floor = rows.iter().map(|r| r.p99_us).fold(f64::INFINITY, f64::min);
+    rows.iter()
+        .filter(|r| r.p99_us <= floor * KNEE_P99_X)
+        .map(|r| r.offered_qps)
+        .fold(0.0, f64::max)
+}
+
+/// Queries per dataset for a run (capped: open-loop tails stabilize
+/// well before the full request budget, and the sweep runs 20+ pipeline
+/// measurements per dataset).
+fn queries_for(opts: &Opts) -> usize {
+    opts.requests.clamp(100, 800) as usize
+}
+
+/// The `orca dlrm` tables: saturation cross-check + latency sweep,
+/// plus a batched-saturation table when `batch > 1`.
+pub fn report(opts: &Opts, batch: usize) -> Vec<Table> {
+    let t = &opts.testbed;
+    let n = queries_for(opts);
+    let mut sat = Table::new(
+        "DLRM trace-driven serving — saturation vs analytic bound (Kq/s)",
+        &["dataset", "design", "sim", "analytic", "sim/analytic", "memo hit"],
+    );
+    let mut sweep = Table::new(
+        "DLRM latency vs offered load (open-loop Poisson)",
+        &["dataset", "design", "load", "offered Kq/s", "p50 µs", "p99 µs", "p999 µs"],
+    );
+    let mut batched = (batch > 1).then(|| {
+        Table::new(
+            format!("DLRM batched saturation (coordinator batcher, groups of {batch}; Kq/s)"),
+            &["dataset", "design", "Kq/s", "jobs"],
+        )
+    });
+    for p in AMAZON_PROFILES.iter() {
+        let stream = build_stream(p, n, opts.seed);
+        for d in DlrmDesign::SAT {
+            let sim = saturation_qps(t, d, &stream, opts.seed);
+            let bound = d.analytic_qps(t, &stream.gp);
+            sat.row(&[
+                p.name.into(),
+                d.label(),
+                format!("{:.0}", sim / 1e3),
+                format!("{:.0}", bound / 1e3),
+                format!("{:.2}", sim / bound),
+                format!("{:.0}%", stream.memo_hit_rate * 100.0),
+            ]);
+        }
+        for d in DlrmDesign::SWEEP {
+            for r in latency_sweep(t, d, &stream, opts.seed) {
+                sweep.row(&[
+                    p.name.into(),
+                    d.label(),
+                    format!("{:.0}%", r.rel_load * 100.0),
+                    format!("{:.0}", r.offered_qps / 1e3),
+                    format!("{:.1}", r.p50_us),
+                    format!("{:.1}", r.p99_us),
+                    format!("{:.1}", r.p999_us),
+                ]);
+            }
+            if let Some(tb) = batched.as_mut() {
+                let m = run_design(t, d, &stream, Load::Saturation, batch, opts.seed);
+                tb.row(&[
+                    p.name.into(),
+                    d.label(),
+                    format!("{:.0}", m.mops * 1e6 * batch as f64 / 1e3),
+                    format!("{}", stream.jobs.len().div_ceil(batch)),
+                ]);
+            }
+        }
+    }
+    let mut out = vec![sat, sweep];
+    out.extend(batched);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(i: usize, n: usize) -> DlrmStream {
+        build_stream(&AMAZON_PROFILES[i], n, 7)
+    }
+
+    #[test]
+    fn streams_cover_sixteen_tables_with_memo_hits() {
+        let s = stream(0, 50);
+        assert_eq!(s.jobs.len(), 50);
+        assert!(s.memo_hit_rate > 0.1, "memo hit {}", s.memo_hit_rate);
+        // Accesses span all 16 table strides.
+        let strides: std::collections::HashSet<u64> = s
+            .jobs
+            .iter()
+            .flat_map(|j| j.accesses.iter())
+            .map(|a| (a.addr + 4096 - 0x2000_0000_0000) / TABLE_STRIDE)
+            .collect();
+        assert_eq!(strides.len(), TABLES_PER_QUERY);
+        // Profile matches the jobs it was measured from.
+        let bytes: u64 = s.jobs.iter().map(|j| j.bytes()).sum();
+        let want = bytes as f64 / 50.0;
+        assert!((s.gp.bytes_per_query - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn simulated_saturation_lands_inside_the_analytic_bracket_per_dataset() {
+        // The ChainCosts-style cross-check: every dataset × design, the
+        // trace-driven saturation stays within the tolerance corridor of
+        // the closed-form bound.
+        let t = Testbed::paper();
+        let (lo, hi) = SIM_VS_ANALYTIC;
+        for (i, p) in AMAZON_PROFILES.iter().enumerate() {
+            let s = stream(i, 250);
+            for d in DlrmDesign::SAT {
+                let sim = saturation_qps(&t, d, &s, 7);
+                let bound = d.analytic_qps(&t, &s.gp);
+                let ratio = sim / bound;
+                assert!(
+                    (lo..hi).contains(&ratio),
+                    "{}/{}: sim {sim:.0} vs analytic {bound:.0} (ratio {ratio:.2})",
+                    p.name,
+                    d.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_memory_designs_serve_only_resident_addresses() {
+        let t = Testbed::paper();
+        let s = stream(5, 100);
+        let mut design = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &s.regions);
+        let pipe = ServingPipeline::new(Load::Saturation, s.gp.req_bytes, RESP_BYTES, 7);
+        pipe.run(&mut design, &s.jobs);
+        assert_eq!(
+            design.local().non_resident,
+            0,
+            "every gather must hit a table-load-time region"
+        );
+        assert!(design.local().resident_bytes() > 0);
+    }
+
+    #[test]
+    fn p99_curves_are_monotone_and_local_memory_moves_the_knee() {
+        let t = Testbed::paper();
+        let s = stream(5, 400);
+        let sweep_of = |d| latency_sweep(&t, d, &s, 7);
+        let cpu = sweep_of(DlrmDesign::Cpu(8));
+        let base = sweep_of(DlrmDesign::Orca);
+        let ld = sweep_of(DlrmDesign::OrcaLocal(AccelMem::LocalDdr));
+        let lh = sweep_of(DlrmDesign::OrcaLocal(AccelMem::LocalHbm));
+        for rows in [&cpu, &base, &ld, &lh] {
+            for w in rows.windows(2) {
+                assert!(
+                    w[1].p99_us >= w[0].p99_us * 0.9,
+                    "{}: p99 must not fall with load: {:?} -> {:?}",
+                    rows[0].design.label(),
+                    w[0],
+                    w[1]
+                );
+            }
+            let (first, last) = (&rows[0], &rows[rows.len() - 1]);
+            assert!(
+                last.p99_us > first.p99_us,
+                "{}: overload must show a hockey stick",
+                rows[0].design.label()
+            );
+        }
+        let (k_base, k_ld, k_lh) = (knee_load(&base), knee_load(&ld), knee_load(&lh));
+        assert!(
+            k_ld > k_base * 3.0,
+            "LD knee {k_ld:.0} must be well past base ORCA's {k_base:.0}"
+        );
+        assert!(k_lh >= k_ld, "LH knee {k_lh:.0} !>= LD knee {k_ld:.0}");
+    }
+
+    #[test]
+    fn batcher_groups_queries_and_preserves_every_access() {
+        let s = stream(0, 30);
+        let grouped = batched_jobs(&s.jobs, 8);
+        assert_eq!(grouped.len(), 4, "30 queries at batch 8 -> 3 full + tail");
+        let before: usize = s.jobs.iter().map(|j| j.len()).sum();
+        let after: usize = grouped.iter().map(|j| j.len()).sum();
+        assert_eq!(before, after, "merging must not drop accesses");
+        assert_eq!(batched_jobs(&s.jobs, 1).len(), 30, "batch 1 is a no-op");
+    }
+
+    #[test]
+    fn report_has_the_expected_geometry() {
+        let opts = Opts {
+            requests: 120,
+            ..Opts::default()
+        };
+        let tables = report(&opts, 4);
+        assert_eq!(tables.len(), 3, "sat + sweep + batched");
+        assert_eq!(tables[0].n_rows(), 6 * DlrmDesign::SAT.len());
+        assert_eq!(
+            tables[1].n_rows(),
+            6 * DlrmDesign::SWEEP.len() * LOAD_POINTS.len()
+        );
+        assert_eq!(tables[2].n_rows(), 6 * DlrmDesign::SWEEP.len());
+        let unbatched = report(&opts, 1);
+        assert_eq!(unbatched.len(), 2, "no batched table at batch 1");
+    }
+}

@@ -2,6 +2,12 @@
 //! Amazon-Review-like datasets — CPU (1–8 cores) vs ORCA / ORCA-LD /
 //! ORCA-LH.
 //!
+//! This module is the **closed-form arm**: its per-design analytic
+//! bounds are pinned by `tests/fig12_golden.rs` and cross-checked
+//! against the trace-driven serving path in [`super::dlrm`] (`orca
+//! dlrm`), which drives the same MERCI traces through real
+//! [`crate::serving::Design`]s.
+//!
 //! Functional side: real embedding tables + real MERCI memoization over
 //! the synthetic query streams generate the *actual* per-query access
 //! traces (bytes moved, access counts, memo hit rates). Timing side:
@@ -33,6 +39,34 @@ pub use crate::serving::analytic::{
 /// MERCI configs cluster them — 16 is the evaluated scale).
 pub const TABLES_PER_QUERY: usize = 16;
 
+/// One dataset's functional configuration — the scaled embedding table
+/// plus a MERCI memoizer trained on 2000 queries at the paper's 0.25
+/// memo ratio. Shared by the analytic profile below and the
+/// trace-driven stream builder ([`super::dlrm::build_stream`]), so
+/// both arms of the cross-check measure the same workload.
+pub fn dataset_setup(
+    profile: &DatasetProfile,
+    scale: usize,
+    seed: u64,
+) -> (QueryGen, EmbeddingTable, Merci) {
+    let mut gen = QueryGen::new(*profile, scale, seed);
+    let table = EmbeddingTable::new(EmbeddingConfig {
+        rows: gen.rows(),
+        dim: 64,
+        base_addr: 0x2000_0000_0000,
+    });
+    let train = gen.training_set(2_000);
+    let merci = Merci::build(&table, &train, 0.25);
+    (gen, table, merci)
+}
+
+/// Request wire bytes for one query of `profile` (feature ids across
+/// all tables + 13 dense f32 features + headers) — shared by the
+/// analytic bound and the trace-driven stream.
+pub fn req_bytes(profile: &DatasetProfile) -> u64 {
+    (profile.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82
+}
+
 #[derive(Clone, Debug)]
 pub struct Fig12Row {
     pub dataset: &'static str,
@@ -54,14 +88,7 @@ fn profile_queries(
     n: usize,
     seed: u64,
 ) -> (f64, f64, f64) {
-    let mut gen = QueryGen::new(*profile, scale, seed);
-    let table = EmbeddingTable::new(EmbeddingConfig {
-        rows: gen.rows(),
-        dim: 64,
-        base_addr: 0x2000_0000_0000,
-    });
-    let train = gen.training_set(2_000);
-    let mut merci = Merci::build(&table, &train, 0.25);
+    let (mut gen, table, mut merci) = dataset_setup(profile, scale, seed);
     let mut bytes = 0u64;
     let mut accesses = 0u64;
     for _ in 0..n {
@@ -86,7 +113,7 @@ pub fn run_dataset(t: &Testbed, profile: &DatasetProfile, opts: &Opts) -> Fig12R
     let gp = GatherProfile {
         bytes_per_query,
         accesses_per_query,
-        req_bytes: (profile.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82,
+        req_bytes: req_bytes(profile),
     };
 
     let mut cpu_qps = [0f64; 4];

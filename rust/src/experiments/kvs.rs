@@ -56,6 +56,7 @@ pub struct KvRun {
     pub avg_us: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    pub p999_us: f64,
     /// Diagnostics.
     pub host_frac: f64,
     pub net_bound_mops: f64,
@@ -154,6 +155,7 @@ pub fn run(
         avg_us: m.avg_us,
         p50_us: m.p50_us,
         p99_us: m.p99_us,
+        p999_us: m.p999_us,
         host_frac: m.host_frac,
         net_bound_mops: m.net_bound_mops,
         dram_read_gbs: m.dram_read_gbs,

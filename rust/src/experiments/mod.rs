@@ -10,10 +10,11 @@
 //! | Fig 10 (batch-size sweep) | [`kvs`] | `orca fig10` |
 //! | Tab III (power efficiency) | [`tab3`] | `orca tab3` |
 //! | Fig 11 (Tx latency) | [`fig11`] | `orca fig11` |
-//! | Fig 12 (DLRM throughput) | [`fig12`] | `orca fig12` |
+//! | Fig 12 (DLRM analytic bounds) | [`fig12`] | `orca fig12` |
 //! | multi-APU sharding sweep (beyond the paper) | [`sharding`] | `orca sharding` |
 //! | adaptive D2H steering, end to end (beyond the paper) | [`adaptive`] | `orca adaptive` |
 //! | hop-by-hop chain sweep + crash/recovery (beyond the paper) | [`chain`] | `orca chain` |
+//! | DLRM trace-driven serving + latency-vs-load (beyond the paper) | [`dlrm`] | `orca dlrm` |
 //!
 //! Absolute numbers are *this testbed's*; the claims under test are the
 //! paper's shapes (who wins, by what factor, where crossovers sit) — see
@@ -22,6 +23,7 @@
 
 pub mod adaptive;
 pub mod chain;
+pub mod dlrm;
 pub mod fig11;
 pub mod fig12;
 pub mod fig4;

@@ -1,14 +1,16 @@
 //! Tab III: overall power efficiency (Kop/W) of the KVS designs on the
 //! uniform-GET workload — throughput from the Fig-8 pipeline, power from
 //! the whole-box model (RAPL package numbers + IPMI box baseline,
-//! §VI-B).
+//! §VI-B) — plus the DLRM extension: Kqueries/W for the four Fig-12
+//! configurations, where ORCA-LD/LH carry their local-memory power
+//! adders ([`crate::power::local_mem_w`]).
 
 use super::kvs::{self, KvDesign, RequestStream};
-use super::{Opts, Table};
+use super::{fig12, Opts, Table};
 use crate::config::AccelMem;
 use crate::power::{Design, PowerModel};
 use crate::serving;
-use crate::workload::{KeyDist, KvMix};
+use crate::workload::{KeyDist, KvMix, AMAZON_PROFILES};
 
 #[derive(Clone, Debug)]
 pub struct Tab3Row {
@@ -31,7 +33,7 @@ pub fn run(opts: &Opts) -> Vec<Tab3Row> {
     [
         (KvDesign::Cpu, Design::Cpu),
         (KvDesign::SmartNic, Design::SmartNic),
-        (KvDesign::Orca(AccelMem::None), Design::Orca),
+        (KvDesign::Orca(AccelMem::None), Design::Orca(AccelMem::None)),
     ]
     .into_iter()
     .map(|(kd, pd)| {
@@ -70,6 +72,56 @@ pub fn report(opts: &Opts) -> Table {
     tb
 }
 
+/// One DLRM power-efficiency row (Tab-III extension).
+#[derive(Clone, Debug)]
+pub struct DlrmPowerRow {
+    pub label: &'static str,
+    pub qps: f64,
+    pub box_w: f64,
+    pub kq_per_w: f64,
+}
+
+/// DLRM Kqueries/W on the first (electronics) dataset's Fig-12 analytic
+/// saturation: the CPU burns the full package across 8 cores; ORCA's
+/// variants add their local-memory power.
+pub fn run_dlrm(opts: &Opts) -> Vec<DlrmPowerRow> {
+    let r = fig12::run_dataset(&opts.testbed, &AMAZON_PROFILES[0], opts);
+    let pm = PowerModel::from_testbed(&opts.testbed);
+    [
+        ("CPU-8", r.cpu_qps[3], Design::Cpu),
+        ("ORCA", r.orca_qps, Design::Orca(AccelMem::None)),
+        ("ORCA-LD", r.ld_qps, Design::Orca(AccelMem::LocalDdr)),
+        ("ORCA-LH", r.lh_qps, Design::Orca(AccelMem::LocalHbm)),
+    ]
+    .into_iter()
+    .map(|(label, qps, pd)| {
+        let box_w = pm.box_power(pd);
+        DlrmPowerRow {
+            label,
+            qps,
+            box_w,
+            kq_per_w: qps / 1e3 / box_w,
+        }
+    })
+    .collect()
+}
+
+pub fn report_dlrm(opts: &Opts) -> Table {
+    let mut tb = Table::new(
+        "Tab III (ext) — DLRM power efficiency (electronics, analytic saturation)",
+        &["design", "KQ/s", "box W", "Kq/W"],
+    );
+    for r in run_dlrm(opts) {
+        tb.row(&[
+            r.label.into(),
+            format!("{:.0}", r.qps / 1e3),
+            format!("{:.1}", r.box_w),
+            format!("{:.2}", r.kq_per_w),
+        ]);
+    }
+    tb
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +145,18 @@ mod tests {
         // ORCA/CPU efficiency ratio ~1.3–1.8× at box level (paper 1.45×).
         let ratio = orca / cpu;
         assert!((1.1..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn dlrm_rows_reward_local_memory() {
+        let rows = run_dlrm(&Opts::default());
+        let find = |l: &str| rows.iter().find(|r| r.label == l).unwrap();
+        let (cpu, base, ld, lh) = (find("CPU-8"), find("ORCA"), find("ORCA-LD"), find("ORCA-LH"));
+        // Local memory costs watts but buys orders of magnitude of
+        // throughput: LD/LH must dominate base ORCA in Kq/W, and LH
+        // must beat the CPU even carrying the HBM adder.
+        assert!(ld.box_w > base.box_w && lh.box_w > ld.box_w, "adders present");
+        assert!(ld.kq_per_w > base.kq_per_w * 3.0, "LD {} base {}", ld.kq_per_w, base.kq_per_w);
+        assert!(lh.kq_per_w > cpu.kq_per_w, "LH {} cpu {}", lh.kq_per_w, cpu.kq_per_w);
     }
 }

@@ -1,0 +1,222 @@
+//! Accelerator-/NIC-attached local memory as a first-class domain
+//! (ORCA-LD / ORCA-LH, §V).
+//!
+//! Before this module existed the local-memory timing lived twice: a
+//! private `LocalMem` struct inside [`super::MemorySystem`] (for
+//! `Domain::AccelLocal` / `Domain::NicLocal` trace replay) and an
+//! anonymous `MemPath::Local { chan, latency_ps, per_byte }` arm inside
+//! [`crate::accel::CcAccelerator`]. [`LocalMemory`] is the one model
+//! both now hold: DDR4- or HBM2-class timing selected by
+//! [`AccelMem`], behind the same `access`/`replay` API the host
+//! [`super::MemorySystem`] exposes.
+//!
+//! The DLRM serving path additionally **populates** a local memory at
+//! table-load time ([`LocalMemory::load`]): the embedding tables and
+//! MERCI memo tables are staged into recorded resident ranges before
+//! serving starts, and every serve-time access is checked against them
+//! (`non_resident` counts strays — a gather that would silently fault
+//! to the host on real hardware).
+
+use crate::config::AccelMem;
+use crate::mem::{Access, MemTrace};
+use crate::sim::{transfer_ps, BandwidthLedger, NS};
+
+/// One accelerator-local memory: a bandwidth ledger plus fixed
+/// load-to-use latency, with DDR4/HBM2 parameters chosen by kind.
+#[derive(Clone, Debug)]
+pub struct LocalMemory {
+    kind: AccelMem,
+    chan: BandwidthLedger,
+    latency_ps: u64,
+    gbs: f64,
+    /// `(base, bytes)` ranges populated at table-load time. Empty means
+    /// unrestricted — consumers that model anonymous local buffers (the
+    /// KVS LD/LH path) skip population entirely.
+    resident: Vec<(u64, u64)>,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// Serve-time accesses that fell outside every resident range.
+    pub non_resident: u64,
+}
+
+impl LocalMemory {
+    /// A local memory of the given kind.
+    ///
+    /// # Panics
+    /// Panics on [`AccelMem::None`] — base ORCA has no local memory;
+    /// its data path is the host [`super::MemorySystem`] over UPI.
+    pub fn new(kind: AccelMem) -> Self {
+        let gbs = kind
+            .bandwidth_gbs()
+            .expect("LocalMemory needs a local-memory variant");
+        let latency_ns = match kind {
+            AccelMem::LocalHbm => 120.0, // HBM2: higher latency, huge bw
+            _ => 90.0,                   // DDR4
+        };
+        LocalMemory {
+            kind,
+            chan: BandwidthLedger::new(),
+            latency_ps: (latency_ns * NS as f64) as u64,
+            gbs,
+            resident: Vec::new(),
+            read_bytes: 0,
+            write_bytes: 0,
+            non_resident: 0,
+        }
+    }
+
+    pub fn kind(&self) -> AccelMem {
+        self.kind
+    }
+
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.gbs
+    }
+
+    pub fn latency_ps(&self) -> u64 {
+        self.latency_ps
+    }
+
+    /// Populate `[base, base + bytes)` at table-load time and return the
+    /// load duration (a sequential stream at peak bandwidth). Loading
+    /// happens before the measured window, so it is *not* charged to the
+    /// serve-time bandwidth ledger.
+    pub fn load(&mut self, base: u64, bytes: u64) -> u64 {
+        self.resident.push((base, bytes));
+        self.write_bytes += bytes;
+        transfer_ps(bytes, self.gbs)
+    }
+
+    /// Total bytes of populated ranges.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.iter().map(|&(_, b)| b).sum()
+    }
+
+    /// Is `addr` inside a populated range? Always true when nothing was
+    /// ever loaded (unrestricted mode).
+    pub fn is_resident(&self, addr: u64) -> bool {
+        self.resident.is_empty()
+            || self
+                .resident
+                .iter()
+                .any(|&(base, bytes)| addr >= base && addr < base + bytes)
+    }
+
+    /// One access; returns completion time. Sub-line transfers still
+    /// move 64 B on the channel.
+    pub fn access(&mut self, now: u64, a: &Access) -> u64 {
+        let bytes = u64::from(a.bytes);
+        if a.write {
+            self.write_bytes += bytes;
+        } else {
+            self.read_bytes += bytes;
+        }
+        if !self.is_resident(a.addr) {
+            self.non_resident += 1;
+        }
+        let service = transfer_ps(bytes.max(64), self.gbs);
+        let (_s, done) = self.chan.acquire(now, service);
+        done + self.latency_ps
+    }
+
+    /// Replay a whole trace: dependency steps serialize, accesses within
+    /// a step overlap — the same stepping contract as
+    /// [`super::MemorySystem::replay`].
+    pub fn replay(&mut self, now: u64, trace: &MemTrace) -> u64 {
+        let mut t = now;
+        let mut step_end = now;
+        for (i, a) in trace.accesses.iter().enumerate() {
+            if i == 0 || a.dep {
+                t = step_end;
+            }
+            step_end = step_end.max(self.access(t, a));
+        }
+        step_end
+    }
+
+    /// Channel busy time (utilization / power accounting).
+    pub fn busy_ps(&self) -> u64 {
+        self.chan.busy_ps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_pick_the_paper_parameters() {
+        let ld = LocalMemory::new(AccelMem::LocalDdr);
+        let lh = LocalMemory::new(AccelMem::LocalHbm);
+        assert_eq!(ld.bandwidth_gbs(), 36.0);
+        assert_eq!(lh.bandwidth_gbs(), 425.0);
+        assert!(lh.latency_ps() > ld.latency_ps(), "HBM trades latency for bw");
+    }
+
+    #[test]
+    #[should_panic(expected = "local-memory variant")]
+    fn base_orca_has_no_local_memory() {
+        LocalMemory::new(AccelMem::None);
+    }
+
+    #[test]
+    fn single_access_is_latency_dominated_and_bursts_are_bandwidth_bound() {
+        let mut ld = LocalMemory::new(AccelMem::LocalDdr);
+        let one = ld.access(0, &Access::read(0, 64));
+        // 90 ns latency + ~1.8 ns serialization at 36 GB/s.
+        assert!((90_000..95_000).contains(&one), "{one}");
+
+        // A 36 MB burst issued at t=0 drains in ~1 ms at 36 GB/s.
+        let mut ld = LocalMemory::new(AccelMem::LocalDdr);
+        let mut last = 0;
+        for i in 0..(36_000_000u64 / 64) {
+            last = last.max(ld.access(0, &Access::read(i * 64, 64)));
+        }
+        let ms = last as f64 / 1e9;
+        assert!((0.95..1.1).contains(&ms), "{ms} ms");
+    }
+
+    #[test]
+    fn hbm_burst_beats_ddr_burst() {
+        let burst = |kind| {
+            let mut m = LocalMemory::new(kind);
+            let mut last = 0;
+            for i in 0..10_000u64 {
+                last = last.max(m.access(0, &Access::read(i * 256, 256)));
+            }
+            last
+        };
+        assert!(burst(AccelMem::LocalHbm) * 4 < burst(AccelMem::LocalDdr));
+    }
+
+    #[test]
+    fn replay_serializes_deps_and_overlaps_parallel() {
+        let mut chain = MemTrace::new();
+        chain.push(Access::read(0, 64));
+        chain.push(Access::read(4096, 64));
+        chain.push(Access::read(8192, 64));
+        let mut fan = MemTrace::new();
+        fan.push(Access::read(0, 64));
+        fan.push(Access::read(4096, 64).parallel());
+        fan.push(Access::read(8192, 64).parallel());
+        let dep = LocalMemory::new(AccelMem::LocalDdr).replay(0, &chain);
+        let par = LocalMemory::new(AccelMem::LocalDdr).replay(0, &fan);
+        assert!(dep > par * 2, "chain {dep} vs fan {par}");
+    }
+
+    #[test]
+    fn residency_is_tracked_after_load_and_open_before() {
+        let mut m = LocalMemory::new(AccelMem::LocalDdr);
+        // Unrestricted before any load.
+        m.access(0, &Access::read(0xDEAD_0000, 64));
+        assert_eq!(m.non_resident, 0);
+
+        let load_ps = m.load(0x1000, 1 << 20);
+        assert!(load_ps > 0);
+        assert_eq!(m.resident_bytes(), 1 << 20);
+        m.access(0, &Access::read(0x1000, 64));
+        assert_eq!(m.non_resident, 0);
+        m.access(0, &Access::read(0xDEAD_0000, 64));
+        assert_eq!(m.non_resident, 1, "stray gather must be counted");
+    }
+}

@@ -8,12 +8,14 @@
 
 pub mod dram;
 pub mod llc;
+pub mod local;
 pub mod nvm;
 pub mod system;
 pub mod trace;
 
 pub use dram::Dram;
 pub use llc::{Llc, LlcLookup};
+pub use local::LocalMemory;
 pub use nvm::Nvm;
 pub use system::{MemStats, MemorySystem, SharedMemorySystem, SteeringPolicy};
 pub use trace::{Access, DmaWrite, Domain, MemTrace};

@@ -26,9 +26,9 @@
 //! so DRAM bandwidth, LLC state and NVM amplification are modeled once,
 //! not once per subsystem.
 
-use super::{Access, Domain, Dram, Llc, LlcLookup, MemTrace, Nvm};
-use crate::config::Testbed;
-use crate::sim::{transfer_ps, BandwidthLedger, NS};
+use super::{Access, Domain, Dram, Llc, LlcLookup, LocalMemory, MemTrace, Nvm};
+use crate::config::{AccelMem, Testbed};
+use crate::sim::NS;
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -70,15 +70,6 @@ impl SteeringPolicy {
 /// [`crate::accel::UpiLink`], sharing is explicit: every consumer that
 /// should contend for the same DRAM/LLC/NVM gets a clone of the handle.
 pub type SharedMemorySystem = Rc<RefCell<MemorySystem>>;
-
-/// Accelerator-/NIC-local memory used for `Domain::AccelLocal` and
-/// `Domain::NicLocal` accesses during trace replay (DDR-class defaults).
-#[derive(Clone, Debug)]
-struct LocalMem {
-    chan: BandwidthLedger,
-    latency_ps: u64,
-    gbs: f64,
-}
 
 /// Cumulative memory-side counters, snapshotted for the serving layer's
 /// `RunMetrics` reporting (see [`crate::serving`]).
@@ -132,7 +123,10 @@ pub struct MemorySystem {
     pub policy: SteeringPolicy,
     /// Addresses at or above this are NVM-backed (`u64::MAX` = no NVM).
     nvm_start: u64,
-    local: LocalMem,
+    /// Accelerator-/NIC-local memory serving `Domain::AccelLocal` and
+    /// `Domain::NicLocal` replays (DDR-class defaults, unrestricted
+    /// residency — see [`LocalMemory`]).
+    local: LocalMemory,
     hit_ps: u64,
 }
 
@@ -165,11 +159,7 @@ impl MemorySystem {
             nvm,
             policy,
             nvm_start,
-            local: LocalMem {
-                chan: BandwidthLedger::new(),
-                latency_ps: (90.0 * NS as f64) as u64,
-                gbs: 36.0,
-            },
+            local: LocalMemory::new(AccelMem::LocalDdr),
             hit_ps,
         }
     }
@@ -207,11 +197,7 @@ impl MemorySystem {
                 a.write,
                 a.domain == Domain::HostNvm,
             ),
-            Domain::AccelLocal | Domain::NicLocal => {
-                let service = transfer_ps(u64::from(a.bytes).max(64), self.local.gbs);
-                let (_s, done) = self.local.chan.acquire(now, service);
-                done + self.local.latency_ps
-            }
+            Domain::AccelLocal | Domain::NicLocal => self.local.access(now, a),
         }
     }
 
@@ -348,6 +334,10 @@ impl MemorySystem {
 
     pub fn llc(&self) -> &Llc {
         &self.llc
+    }
+
+    pub fn local(&self) -> &LocalMemory {
+        &self.local
     }
 }
 

@@ -8,7 +8,7 @@
 //! FPGA ≈ 24–27 W) and an idle/base-box power, and the model converts a
 //! measured throughput into Kop/W and whole-box reduction.
 
-use crate::config::Testbed;
+use crate::config::{AccelMem, Testbed};
 
 /// A processing element's power envelope.
 #[derive(Clone, Copy, Debug)]
@@ -22,6 +22,22 @@ pub struct Element {
 /// Calibrated so Tab III reproduces: CPU design ≈ 165 W box at 21.4 Mops
 /// → ~130 Kop/W (paper: 130.4).
 pub const BOX_BASE_W: f64 = 75.0;
+
+/// Accelerator-local DDR4 at stream load (two U280-class channels,
+/// ≈3 W per DIMM+PHY) — the ORCA-LD adder.
+pub const LOCAL_DDR_W: f64 = 6.0;
+/// Accelerator-local HBM2 at stream load (two stacks ≈ 10.5 W each,
+/// device + PHY) — the ORCA-LH adder.
+pub const LOCAL_HBM_W: f64 = 21.0;
+
+/// Box-power adder for an accelerator-local memory variant.
+pub fn local_mem_w(mem: AccelMem) -> f64 {
+    match mem {
+        AccelMem::None => 0.0,
+        AccelMem::LocalDdr => LOCAL_DDR_W,
+        AccelMem::LocalHbm => LOCAL_HBM_W,
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct PowerModel {
@@ -55,15 +71,16 @@ impl PowerModel {
 
     /// Whole-box power for a design. The CPU design loads the CPU fully;
     /// ORCA idles the CPU (only the CQ-polling core is active) and loads
-    /// the FPGA; the SmartNIC design loads the ARM SoC and still burns
-    /// PCIe/host traffic on the CPU side (partial load).
+    /// the FPGA — plus its local-memory adder for the LD/LH variants;
+    /// the SmartNIC design loads the ARM SoC and still burns PCIe/host
+    /// traffic on the CPU side (partial load).
     pub fn box_power(&self, design: Design) -> f64 {
         match design {
             Design::Cpu => BOX_BASE_W + self.cpu.active_w,
             Design::SmartNic => BOX_BASE_W + self.smartnic.active_w + 0.35 * self.cpu.active_w,
-            Design::Orca => {
+            Design::Orca(mem) => {
                 // One CPU core for CQ polling ≈ 1/20 of package power.
-                BOX_BASE_W + self.accel.active_w + self.cpu.active_w / 20.0
+                BOX_BASE_W + self.accel.active_w + self.cpu.active_w / 20.0 + local_mem_w(mem)
             }
         }
     }
@@ -73,7 +90,8 @@ impl PowerModel {
 pub enum Design {
     Cpu,
     SmartNic,
-    Orca,
+    /// ORCA with its local-memory variant ([`AccelMem::None`] = base).
+    Orca(AccelMem),
 }
 
 #[cfg(test)]
@@ -108,7 +126,7 @@ mod tests {
         // that accounting instead.
         let p = PowerModel::from_testbed(&Testbed::paper());
         let cpu_box = p.box_power(Design::Cpu);
-        let orca_box = p.box_power(Design::Orca);
+        let orca_box = p.box_power(Design::Orca(AccelMem::None));
         assert!(orca_box < cpu_box);
         let dyn_reduction =
             ((cpu_box - BOX_BASE_W) - (orca_box - BOX_BASE_W)) / (cpu_box - BOX_BASE_W);
@@ -119,5 +137,20 @@ mod tests {
     fn smartnic_burns_host_power_too() {
         let p = PowerModel::from_testbed(&Testbed::paper());
         assert!(p.box_power(Design::SmartNic) > BOX_BASE_W + p.smartnic.active_w);
+    }
+
+    #[test]
+    fn local_memory_adders_add_up_exactly() {
+        // The Tab-III-extension arithmetic: LD/LH boxes are base ORCA's
+        // box plus exactly their local-memory adder, and HBM costs more
+        // than DDR4.
+        let p = PowerModel::from_testbed(&Testbed::paper());
+        let base = p.box_power(Design::Orca(AccelMem::None));
+        let ld = p.box_power(Design::Orca(AccelMem::LocalDdr));
+        let lh = p.box_power(Design::Orca(AccelMem::LocalHbm));
+        assert!((ld - base - LOCAL_DDR_W).abs() < 1e-9, "LD {ld} base {base}");
+        assert!((lh - base - LOCAL_HBM_W).abs() < 1e-9, "LH {lh} base {base}");
+        assert!(lh > ld && ld > base);
+        assert_eq!(local_mem_w(AccelMem::None), 0.0);
     }
 }

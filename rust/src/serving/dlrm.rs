@@ -1,0 +1,455 @@
+//! Trace-driven DLRM serving designs (§VI-D promoted onto the unified
+//! serving path).
+//!
+//! Fig 12 used to be served by closed-form bandwidth bounds alone
+//! ([`super::analytic`]); these designs put the same four configurations
+//! on the real ingress → notify → serve → egress datapath, where each
+//! job is the *actual* [`MemTrace`] emitted by
+//! [`crate::apps::dlrm::Merci::reduce`] — memo hits touch the memo
+//! table's addresses, misses fall back to raw gathers — so memo hit
+//! rate, cache behaviour and gather contention all emerge from one
+//! datapath instead of per-design efficiency constants:
+//!
+//! * [`DlrmCpu`] — 1–8 cores gathering through the host
+//!   [`MemorySystem`] with an MSHR-bounded per-core window; two-sided
+//!   RPC ingress like the KVS [`super::Cpu`].
+//! * [`DlrmOrca`] — base ORCA: the APU's gather FSM issues
+//!   near-serially ([`ORCA_GATHER_OUTSTANDING`] rows in flight on one
+//!   context) over UPI from the per-socket shared [`MemorySystem`],
+//!   cpoll-notified at ingress like the KVS [`super::Orca`].
+//! * [`DlrmOrcaLocal`] — ORCA-LD / ORCA-LH: gathers stream from a
+//!   [`LocalMemory`] **populated at table-load time** (embedding +
+//!   memo regions staged before serving; strays are counted), with the
+//!   APU's 64-deep window and `outstanding / mlp` concurrent gather
+//!   contexts.
+//!
+//! [`super::analytic`] stays as the closed-form cross-check — the
+//! `ChainCosts` pattern — asserted against these designs' saturation
+//! throughput in `experiments::dlrm`.
+
+use super::analytic::{CPU_QUERY_CYCLES, ORCA_GATHER_OUTSTANDING};
+use super::{Design, Ingress};
+use crate::accel::{
+    host_access_service_ps, host_interconnect_ps, upi_link, upi_serialize_ps, SqHandler, UpiLink,
+};
+use crate::config::{AccelMem, Testbed};
+use crate::cpoll::ShardedNotify;
+use crate::interconnect::Pcie;
+use crate::mem::{Access, LocalMemory, MemStats, MemTrace, MemorySystem, SharedMemorySystem};
+use crate::net::Network;
+use crate::rnic::Rnic;
+use crate::sim::{cycles_ps, Rng};
+
+/// Gathers one CPU core keeps in flight (MSHR-class window): ~4 × 256 B
+/// rows per ~95 ns memory round trip ≈ the 9.5 GB/s per-core gather
+/// bandwidth the analytic bound uses ([`super::analytic::PER_CORE_GATHER_GBS`]).
+pub const CPU_GATHER_WINDOW: usize = 4;
+
+/// Replay `trace` with a design-imposed issue window, ignoring the
+/// trace's own `dep` flags beyond the leading index read: the first
+/// access is its own step (the gather addresses depend on it), then
+/// windows of `window` accesses issue together and windows serialize —
+/// bounded memory-level parallelism as the issuing engine sees it.
+pub(crate) fn replay_windowed(
+    start: u64,
+    trace: &MemTrace,
+    window: usize,
+    mut access: impl FnMut(u64, &Access) -> u64,
+) -> u64 {
+    let acc = &trace.accesses;
+    if acc.is_empty() {
+        return start;
+    }
+    let mut t = access(start, &acc[0]);
+    let w = window.max(1);
+    let mut i = 1;
+    while i < acc.len() {
+        let end = (i + w).min(acc.len());
+        let issue = t;
+        let mut step_end = issue;
+        for a in &acc[i..end] {
+            step_end = step_end.max(access(issue, a));
+        }
+        t = step_end;
+        i = end;
+    }
+    t
+}
+
+/// Index of the earliest-free lane (first wins ties — deterministic).
+fn earliest(free: &[u64]) -> usize {
+    free.iter()
+        .enumerate()
+        .min_by_key(|&(i, &t)| (t, i))
+        .map(|(i, _)| i)
+        .expect("at least one lane")
+}
+
+/// The DLRM CPU baseline: `cores` cores, each serving one query at a
+/// time, gathering through the host memory system with an MSHR-bounded
+/// window; per-query software cost (parse + MLP) overlaps the gathers.
+pub struct DlrmCpu {
+    net: Network,
+    mem: SharedMemorySystem,
+    cores: Vec<u64>,
+    query_ps: u64,
+    window: usize,
+}
+
+impl DlrmCpu {
+    pub fn new(t: &Testbed, cores: usize) -> Self {
+        DlrmCpu {
+            net: Network::new(t.net.clone()),
+            mem: MemorySystem::shared(t),
+            cores: vec![0; cores.max(1)],
+            query_ps: cycles_ps(CPU_QUERY_CYCLES, t.cpu.freq_mhz),
+            window: CPU_GATHER_WINDOW,
+        }
+    }
+}
+
+impl Design for DlrmCpu {
+    type Job = MemTrace;
+
+    fn label(&self) -> String {
+        format!("CPU-{}", self.cores.len())
+    }
+
+    /// Two-sided RPC: the in-band header rides with the feature ids.
+    fn request_bytes(&self, payload: u64) -> u64 {
+        payload + 16
+    }
+
+    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, _rng: &mut Rng) -> Ingress {
+        Ingress::immediate(self.net.send_to_server(issue, req_bytes))
+    }
+
+    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+        let window = self.window;
+        let query_ps = self.query_ps;
+        let mem = self.mem.clone();
+        let mut done = Vec::with_capacity(jobs.len());
+        for (vis, trace) in jobs {
+            let c = earliest(&self.cores);
+            let start = self.cores[c].max(vis);
+            let gathers = replay_windowed(start, &trace, window, |t, a| {
+                mem.borrow_mut().access(t, a)
+            });
+            let end = gathers.max(start + query_ps);
+            self.cores[c] = end;
+            done.push(end);
+        }
+        done
+    }
+
+    fn egress(&mut self, done: u64, resp_bytes: u64) -> u64 {
+        self.net.send_to_client(done, resp_bytes)
+    }
+
+    fn network(&self) -> Option<&Network> {
+        Some(&self.net)
+    }
+
+    fn mem_stats(&self) -> Option<MemStats> {
+        Some(self.mem.borrow().stats())
+    }
+}
+
+/// Base ORCA for DLRM: RNIC one-sided write → cpoll notification → the
+/// APU's single gather FSM context issuing [`ORCA_GATHER_OUTSTANDING`]
+/// row fetches at a time over UPI into the shared host memory system →
+/// SQ-handler doorbell-batched responses.
+pub struct DlrmOrca {
+    host_mem: SharedMemorySystem,
+    net: Network,
+    rnic_rx: Rnic,
+    pcie_rx: Pcie,
+    notify: ShardedNotify,
+    hop_ps: u64,
+    upi_gbs: f64,
+    link: UpiLink,
+    apu_ps: u64,
+    window: usize,
+    fsm_free: u64,
+    sq: SqHandler,
+    rnic_tx: Rnic,
+    pcie_tx: Pcie,
+}
+
+impl DlrmOrca {
+    pub fn new(t: &Testbed) -> Self {
+        Self::with_memory(t, MemorySystem::shared(t))
+    }
+
+    /// Serve out of an explicit (per-socket, possibly shared) host
+    /// memory system.
+    pub fn with_memory(t: &Testbed, host_mem: SharedMemorySystem) -> Self {
+        DlrmOrca {
+            host_mem,
+            net: Network::new(t.net.clone()),
+            rnic_rx: Rnic::new(t.net.clone()),
+            pcie_rx: Pcie::new(t.pcie.clone()),
+            notify: ShardedNotify::new(t, 1),
+            hop_ps: host_interconnect_ps(t),
+            upi_gbs: t.upi.bandwidth_gbs,
+            link: upi_link(),
+            apu_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
+            window: ORCA_GATHER_OUTSTANDING as usize,
+            fsm_free: 0,
+            sq: SqHandler::new(t, 32),
+            rnic_tx: Rnic::new(t.net.clone()),
+            pcie_tx: Pcie::new(t.pcie.clone()),
+        }
+    }
+}
+
+impl Design for DlrmOrca {
+    type Job = MemTrace;
+
+    fn label(&self) -> String {
+        "ORCA".to_string()
+    }
+
+    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, rng: &mut Rng) -> Ingress {
+        let arrive = self.net.send_to_server(issue, req_bytes);
+        let visible = self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx);
+        Ingress {
+            wire_at: arrive,
+            visible_at: visible + self.notify.sample(0, rng),
+        }
+    }
+
+    /// One FSM context: queries gather strictly one after another
+    /// (§VI-D: "requests issued serially from the FPGA's wimpy
+    /// controller"); each host access pays interconnect hops plus the
+    /// measured memory leg and serializes its return line on the UPI
+    /// link.
+    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+        let window = self.window;
+        let hop = self.hop_ps;
+        let gbs = self.upi_gbs;
+        let mem = self.host_mem.clone();
+        let link = self.link.clone();
+        let mut done = Vec::with_capacity(jobs.len());
+        for (vis, trace) in jobs {
+            let start = self.fsm_free.max(vis) + self.apu_ps;
+            let end = replay_windowed(start, &trace, window, |t, a| {
+                let service = host_access_service_ps(t, a, hop, gbs, &mem);
+                let ser_done = upi_serialize_ps(t, u64::from(a.bytes), gbs, &link);
+                (t + service).max(ser_done)
+            });
+            self.fsm_free = end;
+            done.push(end);
+        }
+        done
+    }
+
+    fn egress(&mut self, done: u64, resp_bytes: u64) -> u64 {
+        self.sq
+            .respond(done, resp_bytes, &mut self.rnic_tx, &mut self.pcie_tx, &mut self.net)
+    }
+
+    fn network(&self) -> Option<&Network> {
+        Some(&self.net)
+    }
+
+    fn mem_stats(&self) -> Option<MemStats> {
+        Some(self.host_mem.borrow().stats())
+    }
+}
+
+/// ORCA-LD / ORCA-LH for DLRM: gathers stream from accelerator-local
+/// memory populated at table-load time. The APU runs
+/// `outstanding / mlp_per_query` concurrent gather contexts, each with
+/// the 64-deep per-query window (§IV-C).
+pub struct DlrmOrcaLocal {
+    kind: AccelMem,
+    local: LocalMemory,
+    net: Network,
+    rnic_rx: Rnic,
+    pcie_rx: Pcie,
+    notify: ShardedNotify,
+    apu_ps: u64,
+    window: usize,
+    contexts: Vec<u64>,
+    sq: SqHandler,
+    rnic_tx: Rnic,
+    pcie_tx: Pcie,
+}
+
+impl DlrmOrcaLocal {
+    /// Build an LD/LH design whose local memory is populated with the
+    /// given `(base, bytes)` regions (embedding tables + memo tables) at
+    /// table-load time. Pass no regions for unrestricted residency.
+    ///
+    /// # Panics
+    /// Panics on [`AccelMem::None`] — use [`DlrmOrca`] for base ORCA.
+    pub fn new(t: &Testbed, kind: AccelMem, regions: &[(u64, u64)]) -> Self {
+        let mut local = LocalMemory::new(kind);
+        for &(base, bytes) in regions {
+            local.load(base, bytes);
+        }
+        let contexts = (t.accel.outstanding / t.accel.mlp_per_query.max(1)).max(1);
+        DlrmOrcaLocal {
+            kind,
+            local,
+            net: Network::new(t.net.clone()),
+            rnic_rx: Rnic::new(t.net.clone()),
+            pcie_rx: Pcie::new(t.pcie.clone()),
+            notify: ShardedNotify::new(t, 1),
+            apu_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
+            window: t.accel.mlp_per_query.max(1),
+            contexts: vec![0; contexts],
+            sq: SqHandler::new(t, 32),
+            rnic_tx: Rnic::new(t.net.clone()),
+            pcie_tx: Pcie::new(t.pcie.clone()),
+        }
+    }
+
+    /// The populated local memory (residency diagnostics for tests).
+    pub fn local(&self) -> &LocalMemory {
+        &self.local
+    }
+}
+
+impl Design for DlrmOrcaLocal {
+    type Job = MemTrace;
+
+    fn label(&self) -> String {
+        self.kind.label().to_string()
+    }
+
+    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, rng: &mut Rng) -> Ingress {
+        let arrive = self.net.send_to_server(issue, req_bytes);
+        let visible = self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx);
+        Ingress {
+            wire_at: arrive,
+            visible_at: visible + self.notify.sample(0, rng),
+        }
+    }
+
+    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+        let window = self.window;
+        let apu_ps = self.apu_ps;
+        let local = &mut self.local;
+        let contexts = &mut self.contexts;
+        let mut done = Vec::with_capacity(jobs.len());
+        for (vis, trace) in jobs {
+            let c = earliest(contexts);
+            let start = contexts[c].max(vis) + apu_ps;
+            let end = replay_windowed(start, &trace, window, |t, a| local.access(t, a));
+            contexts[c] = end;
+            done.push(end);
+        }
+        done
+    }
+
+    fn egress(&mut self, done: u64, resp_bytes: u64) -> u64 {
+        self.sq
+            .respond(done, resp_bytes, &mut self.rnic_tx, &mut self.pcie_tx, &mut self.net)
+    }
+
+    fn network(&self) -> Option<&Network> {
+        Some(&self.net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{Load, ServingPipeline};
+
+    /// A gather-shaped job: one index read, then `n` independent 256 B
+    /// row reads spread over ~4 GB (the host LLC mostly misses).
+    fn gather_job(seed: u64, n: usize) -> MemTrace {
+        let mut t = MemTrace::new();
+        t.push(Access::read(0x1000, 64));
+        let mut h = (seed + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        for _ in 0..n {
+            h = h.rotate_left(17).wrapping_mul(0x2545F4914F6CDD1D);
+            t.push(Access::read(0x10_0000 + (h % (4 << 30)) / 256 * 256, 256).parallel());
+        }
+        t
+    }
+
+    fn jobs(n: u64, gathers: usize) -> Vec<MemTrace> {
+        (0..n).map(|i| gather_job(i, gathers)).collect()
+    }
+
+    #[test]
+    fn windowed_replay_serializes_windows() {
+        // 1 index read + 16 gathers at 100 ns each: window 4 ⇒ 5 steps,
+        // window 16 ⇒ 2 steps.
+        let job = gather_job(0, 16);
+        let w4 = replay_windowed(0, &job, 4, |t, _| t + 100_000);
+        let w16 = replay_windowed(0, &job, 16, |t, _| t + 100_000);
+        assert_eq!(w4, 500_000);
+        assert_eq!(w16, 200_000);
+    }
+
+    #[test]
+    fn labels_match_the_paper_names() {
+        let t = Testbed::paper();
+        assert_eq!(DlrmCpu::new(&t, 8).label(), "CPU-8");
+        assert_eq!(DlrmOrca::new(&t).label(), "ORCA");
+        assert_eq!(DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[]).label(), "ORCA-LD");
+        assert_eq!(DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[]).label(), "ORCA-LH");
+    }
+
+    #[test]
+    fn base_orca_gathers_serially_local_memory_does_not() {
+        // Same stream through base ORCA's single near-serial FSM vs the
+        // HBM local path: the local path must finish far sooner.
+        let t = Testbed::paper();
+        let js: Vec<(u64, MemTrace)> = jobs(200, 32).into_iter().map(|j| (0, j)).collect();
+        let base_last = *DlrmOrca::new(&t).serve(js.clone()).iter().max().unwrap();
+        let lh_last = *DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[])
+            .serve(js)
+            .iter()
+            .max()
+            .unwrap();
+        assert!(
+            lh_last * 5 < base_last,
+            "LH {lh_last} must be ≫ faster than base {base_last}"
+        );
+    }
+
+    #[test]
+    fn cpu_cores_scale_the_gather_pool() {
+        let t = Testbed::paper();
+        let js: Vec<(u64, MemTrace)> = jobs(400, 32).into_iter().map(|j| (0, j)).collect();
+        let one = *DlrmCpu::new(&t, 1).serve(js.clone()).iter().max().unwrap();
+        let four = *DlrmCpu::new(&t, 4).serve(js).iter().max().unwrap();
+        let speedup = one as f64 / four as f64;
+        assert!((2.0..4.5).contains(&speedup), "4-core speedup {speedup}");
+    }
+
+    #[test]
+    fn local_residency_counts_strays() {
+        let t = Testbed::paper();
+        // Regions that do NOT cover the gather addresses.
+        let mut miss = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[(0x0, 0x100)]);
+        miss.serve(vec![(0, gather_job(1, 8))]);
+        assert!(miss.local().non_resident > 0);
+        // Full coverage: no strays.
+        let mut hit = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[(0, 8 << 30)]);
+        hit.serve(vec![(0, gather_job(1, 8))]);
+        assert_eq!(hit.local().non_resident, 0);
+    }
+
+    #[test]
+    fn designs_drive_through_the_pipeline_end_to_end() {
+        let t = Testbed::paper();
+        let js = jobs(1_000, 16);
+        let pipe = ServingPipeline::new(Load::Open { mops: 0.05 }, 640, 256, 9);
+        let cpu = pipe.run(&mut DlrmCpu::new(&t, 8), &js);
+        let orca = pipe.run(&mut DlrmOrca::new(&t), &js);
+        let lh = pipe.run(&mut DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[]), &js);
+        for m in [&cpu, &orca, &lh] {
+            assert!(m.mops > 0.0, "{m:?}");
+            assert!(m.p999_us >= m.p99_us && m.p99_us >= m.p50_us, "{m:?}");
+        }
+        // The two-sided CPU design pays its in-band header on the wire.
+        assert!(cpu.net_bound_mops < orca.net_bound_mops);
+    }
+}

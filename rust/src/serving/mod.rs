@@ -16,15 +16,22 @@
 //! [`ServingPipeline`] drives jobs through those three stages under a
 //! [`Load`] model and returns a unified [`RunMetrics`]. The closed-loop
 //! lockstep driver ([`ServingPipeline::lockstep`]) covers latency
-//! benchmarks that issue one request at a time (Fig 11), and
-//! [`analytic`] holds the bandwidth/compute-bound throughput models
-//! (Fig 12). Concrete designs — [`Cpu`], [`SmartNic`], and the
-//! (optionally sharded) [`Orca`] — live in [`designs`].
+//! benchmarks that issue one request at a time (Fig 11). Concrete
+//! designs — [`Cpu`], [`SmartNic`], and the (optionally sharded)
+//! [`Orca`] — live in [`designs`]; the trace-driven DLRM designs
+//! ([`DlrmCpu`], [`DlrmOrca`], [`DlrmOrcaLocal`]) live in [`dlrm`].
+//! [`analytic`] holds the closed-form gather bounds that *cross-check*
+//! the DLRM designs' saturation throughput (the `ChainCosts` pattern —
+//! since the trace-driven rebuild it is no longer the serving path for
+//! any workload, only the Fig-12 planning numbers and the in-tree
+//! sanity bracket in `experiments::dlrm`).
 
 pub mod analytic;
 pub mod designs;
+pub mod dlrm;
 
 pub use designs::{Cpu, Orca, SmartNic};
+pub use dlrm::{DlrmCpu, DlrmOrca, DlrmOrcaLocal};
 
 use crate::mem::{MemStats, MemTrace};
 use crate::net::Network;
@@ -47,6 +54,9 @@ pub struct RunMetrics {
     pub avg_us: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Tail beyond the tail: the 99.9th percentile (hockey-stick knees
+    /// show up here first).
+    pub p999_us: f64,
     /// Network utilization over the run (max of the two directions).
     pub utilization: f64,
     /// Fraction of data accesses served from host memory (SmartNIC).
@@ -237,6 +247,7 @@ impl ServingPipeline {
             avg_us: latency.mean() / US as f64,
             p50_us: latency.p50() as f64 / US as f64,
             p99_us: latency.p99() as f64 / US as f64,
+            p999_us: latency.p999() as f64 / US as f64,
             utilization: design.network().map_or(0.0, |nw| nw.utilization(last)),
             host_frac: design.host_frac(),
             net_bound_mops: design.network().map_or(f64::INFINITY, |nw| nw.peak_mops(req)),

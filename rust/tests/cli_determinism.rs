@@ -21,6 +21,9 @@ const COMMANDS: &[&[&str]] = &[
     &["sharding", "--shards", "1,2"],
     &["adaptive"],
     &["chain", "--replicas", "2..3", "--crash-at"],
+    // Covers all three dlrm tables (saturation, sweep, batched) in one
+    // registered subcommand — `cli::tables_for` routes it like the rest.
+    &["dlrm", "--batch", "4"],
 ];
 
 fn render(args: &[&str]) -> String {

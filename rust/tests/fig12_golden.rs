@@ -1,0 +1,120 @@
+//! Golden-value tests for the DLRM serving refactor of Fig 12: the
+//! analytic arm (`serving::analytic` driven by `experiments::fig12`)
+//! must keep reproducing the pre-refactor closed-form QPS for all six
+//! datasets × four design families within 1% — so promoting DLRM onto
+//! the trace-driven serving path is provably datapath-neutral at
+//! saturation (the same pattern as `fig4_golden.rs`/`fig11_golden.rs`).
+//!
+//! The reference implementations below are line-for-line ports of the
+//! pre-refactor `serving::analytic` bounds (constants inlined as
+//! literals so a drifting class constant trips the pin too), fed the
+//! measured per-dataset movement profile that `fig12::run_dataset`
+//! reports back.
+
+use orca::config::{AccelMem, Testbed};
+use orca::experiments::fig12::{self, Fig12Row, TABLES_PER_QUERY};
+use orca::experiments::Opts;
+use orca::workload::{DatasetProfile, AMAZON_PROFILES};
+
+fn close(a: f64, b: f64, what: &str) {
+    let rel = (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel < 0.01, "{what}: refactored {a} vs reference {b} ({rel:.4} rel)");
+}
+
+/// The measured movement profile, reconstructed from the row's public
+/// diagnostics exactly as the pre-refactor driver assembled it.
+struct RefProfile {
+    bytes_per_query: f64,
+    accesses_per_query: f64,
+    req_bytes: u64,
+}
+
+fn ref_profile(p: &DatasetProfile, r: &Fig12Row) -> RefProfile {
+    RefProfile {
+        bytes_per_query: r.bytes_per_query,
+        accesses_per_query: r.accesses_per_query,
+        req_bytes: (p.mean_query_len * TABLES_PER_QUERY) as u64 * 4 + 13 * 4 + 82,
+    }
+}
+
+/// Pre-refactor wire bound, verbatim.
+fn reference_net_qps(t: &Testbed, req_bytes: u64) -> f64 {
+    t.net.line_gbps / 8.0 * 1e9 / req_bytes as f64
+}
+
+/// Pre-refactor CPU bound, verbatim (CPU_QUERY_CYCLES = 2600,
+/// CPU_GATHER_EFF = 0.55, PER_CORE_GATHER_GBS = 9.5 inlined).
+fn reference_cpu_qps(t: &Testbed, p: &RefProfile, cores: usize) -> f64 {
+    let query_s_compute = 2_600.0 / (t.cpu.freq_mhz * 1e6);
+    let host_bw = t.dram.bandwidth_gbs * 1e9 * 0.55;
+    let compute = cores as f64 / query_s_compute;
+    let core_bw = cores as f64 * 9.5 * 1e9;
+    let bw = core_bw.min(host_bw) / p.bytes_per_query;
+    compute.min(bw)
+}
+
+/// Pre-refactor base-ORCA bound, verbatim (ORCA_GATHER_OUTSTANDING = 4;
+/// the interconnect RTT inlined: 2 hops + 2 controller occupancies +
+/// idle DRAM load-to-use).
+fn reference_orca_host_qps(t: &Testbed, p: &RefProfile) -> f64 {
+    let row_bytes = p.bytes_per_query / p.accesses_per_query;
+    let hop_ps = (t.upi.hop_latency_ns * 1_000.0) as u64;
+    let cycle_ps = (1_000_000.0 / t.accel.freq_mhz).round() as u64;
+    let ctrl_ps = t.accel.coh_ctrl_cycles * cycle_ps;
+    let rtt_ps = 2 * hop_ps + 2 * ctrl_ps + (t.dram.latency_ns * 1_000.0) as u64;
+    let rtt_s = rtt_ps as f64 / 1e12 + row_bytes / (t.upi.bandwidth_gbs * 1e9);
+    let gather_gbs = 4.0 * row_bytes / rtt_s;
+    (gather_gbs / p.bytes_per_query)
+        .min(t.upi.bandwidth_gbs * 1e9 / p.bytes_per_query)
+        .min(reference_net_qps(t, p.req_bytes))
+}
+
+/// Pre-refactor LD/LH bound, verbatim (APU_STREAM_EFF = 0.95).
+fn reference_orca_local_qps(t: &Testbed, p: &RefProfile, mem: AccelMem) -> f64 {
+    let gbs = mem.bandwidth_gbs().expect("local variant");
+    (gbs * 1e9 * 0.95 / p.bytes_per_query).min(reference_net_qps(t, p.req_bytes))
+}
+
+#[test]
+fn fig12_analytic_qps_matches_the_prerefactor_bounds_within_1pct() {
+    let t = Testbed::paper();
+    let opts = Opts::default();
+    for profile in AMAZON_PROFILES.iter() {
+        let r = fig12::run_dataset(&t, profile, &opts);
+        let p = ref_profile(profile, &r);
+        for (i, cores) in [1usize, 2, 4, 8].iter().enumerate() {
+            close(
+                r.cpu_qps[i],
+                reference_cpu_qps(&t, &p, *cores),
+                &format!("{} CPU-{cores}", profile.name),
+            );
+        }
+        close(
+            r.orca_qps,
+            reference_orca_host_qps(&t, &p),
+            &format!("{} ORCA", profile.name),
+        );
+        close(
+            r.ld_qps,
+            reference_orca_local_qps(&t, &p, AccelMem::LocalDdr),
+            &format!("{} ORCA-LD", profile.name),
+        );
+        close(
+            r.lh_qps,
+            reference_orca_local_qps(&t, &p, AccelMem::LocalHbm),
+            &format!("{} ORCA-LH", profile.name),
+        );
+    }
+}
+
+#[test]
+fn fig12_shape_is_preserved() {
+    // The headline Fig-12 orderings the golden numbers encode, straight
+    // off the rendered rows.
+    for r in fig12::run_all(&Opts::default()) {
+        assert!(r.orca_qps < r.cpu_qps[0], "{}: base ORCA < 1 core", r.dataset);
+        assert!(r.ld_qps > r.orca_qps, "{}: LD recovers bandwidth", r.dataset);
+        assert!(r.lh_qps >= r.ld_qps, "{}: LH >= LD", r.dataset);
+        assert!(r.lh_qps > r.cpu_qps[3], "{}: LH beats 8 cores", r.dataset);
+    }
+}
