@@ -1,13 +1,16 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
 //! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
-//! sharding, adaptive, chain, dlrm, all, serve (coordinator demo), info.
+//! sharding, adaptive, chain, dlrm, scaleout, all, serve (coordinator
+//! demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
 //! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points),
 //! --shards LIST (sharding: shard counts to sweep), --replicas LIST|A..B
 //! and --crash-at [N] (chain: replica sweep + timed mid-chain crash),
 //! --batch N (dlrm: group queries through the coordinator batcher),
+//! --machines LIST|A..B, --theta T and --hot-replicas K (scaleout:
+//! machine sweep, skew point, hot-key replication factor),
 //! --json PATH (dump the run's tables as machine-readable JSON).
 
 use crate::config::{Overrides, Testbed};
@@ -28,6 +31,13 @@ pub struct Cli {
     pub crash_at: Option<u64>,
     /// With `dlrm`: group queries through the coordinator batcher.
     pub batch: usize,
+    /// Machine counts for the `scaleout` sweep.
+    pub machines: Vec<usize>,
+    /// With `scaleout`: narrow the skew axis to {uniform, θ}.
+    pub theta: Option<f64>,
+    /// With `scaleout`: hot-key replication factor for the mitigation
+    /// table (`None`: the default, clamped to the largest fleet).
+    pub hot_replicas: Option<usize>,
     /// Dump every table of the run to this path as JSON.
     pub json: Option<std::path::PathBuf>,
 }
@@ -50,6 +60,7 @@ COMMANDS:
   adaptive  adaptive D2H steering: SET-heavy KVS over DRAM+NVM, end to end
   chain   hop-by-hop chain replication: replica sweep + timed crash/recovery
   dlrm    DLRM trace-driven serving: saturation vs analytic + latency-vs-load
+  scaleout  scale-out KVS across the cluster: machines x skew + hot-key mitigation
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
   info    testbed parameters after overrides
@@ -68,6 +79,12 @@ FLAGS:
                     run (bare flag: one third in; runs cap at 20000 txns)
   --batch N         with dlrm: route queries through the coordinator batcher
                     in groups of N (default 1 = unbatched)
+  --machines M      scaleout machine counts: a list `1,4,8` or range `1..8`
+                    (default 1,2,4,8)
+  --theta T         with scaleout: Zipf skew in [0,1); narrows the sweep to
+                    {uniform, T} (default sweep: 0, 0.9, 0.99)
+  --hot-replicas K  with scaleout: replicate the top-64 hot keys on K
+                    machines in the mitigation table (default 4)
   --json PATH       also write the run's tables to PATH as JSON
 ";
 
@@ -84,6 +101,9 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut replicas: Vec<u32> = experiments::chain::REPLICAS.to_vec();
     let mut crash_at = None;
     let mut batch = 1usize;
+    let mut machines: Vec<usize> = experiments::scaleout::MACHINE_COUNTS.to_vec();
+    let mut theta = None;
+    let mut hot_replicas = None;
     let mut json = None;
     let mut i = 1;
     while i < args.len() {
@@ -134,6 +154,33 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 let list = take(&mut i)?;
                 replicas = parse_replicas(&list)?;
             }
+            "--machines" => {
+                let list = take(&mut i)?;
+                machines = parse_counts(&list)?;
+                if machines.contains(&0) {
+                    bail!("--machines needs counts >= 1, got `{list}`");
+                }
+            }
+            "--theta" => {
+                let v = take(&mut i)?;
+                let t: f64 = v
+                    .parse()
+                    .with_context(|| format!("bad zipf theta `{v}`"))?;
+                if !(0.0..1.0).contains(&t) {
+                    bail!("--theta needs a skew in [0, 1), got `{v}`");
+                }
+                theta = Some(t);
+            }
+            "--hot-replicas" => {
+                let v = take(&mut i)?;
+                let k = v
+                    .parse::<usize>()
+                    .with_context(|| format!("bad replication factor `{v}`"))?;
+                if k == 0 {
+                    bail!("--hot-replicas needs a factor >= 1 (1 = mitigation off)");
+                }
+                hot_replicas = Some(k);
+            }
             "--crash-at" => {
                 // The txn index is optional: a bare `--crash-at` (stored
                 // as the 0 sentinel) crashes at one third of the run.
@@ -169,32 +216,68 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         replicas,
         crash_at,
         batch,
+        machines,
+        theta,
+        hot_replicas,
         json,
     })
 }
 
-/// Replica counts: a comma list (`2,4,6`) or an inclusive range (`2..6`).
-fn parse_replicas(list: &str) -> Result<Vec<u32>> {
-    let counts: Vec<u32> = if let Some((lo, hi)) = list.split_once("..") {
-        let lo: u32 = lo.trim().parse().with_context(|| format!("bad range `{list}`"))?;
-        let hi: u32 = hi.trim().parse().with_context(|| format!("bad range `{list}`"))?;
+/// The scaleout hot-key replication factor: the mitigation table
+/// replicates on the largest requested fleet, so an *explicit*
+/// `--hot-replicas` beyond it cannot be honored and errors; the default
+/// just clamps (the user never asked for 4-way). Shared by `scaleout`
+/// and `all` so the same flag validates the same way.
+fn resolve_hot_replicas(cli: &Cli) -> Result<usize> {
+    let max = *cli.machines.iter().max().expect("validated non-empty");
+    match cli.hot_replicas {
+        Some(k) if k > max => {
+            bail!("--hot-replicas {k} exceeds the largest --machines count {max}")
+        }
+        Some(k) => Ok(k),
+        None => Ok(experiments::scaleout::DEFAULT_HOT_REPLICAS.min(max)),
+    }
+}
+
+/// Counts: a comma list (`1,4,8`) or an inclusive range (`1..8`). One
+/// parser serves `--replicas` and `--machines`; callers layer their own
+/// minimums on top.
+fn parse_u64_list(list: &str) -> Result<Vec<u64>> {
+    let counts: Vec<u64> = if let Some((lo, hi)) = list.split_once("..") {
+        let lo: u64 = lo.trim().parse().with_context(|| format!("bad range `{list}`"))?;
+        let hi: u64 = hi.trim().parse().with_context(|| format!("bad range `{list}`"))?;
         if lo > hi {
-            bail!("--replicas range `{list}` is empty");
+            bail!("range `{list}` is empty");
         }
         (lo..=hi).collect()
     } else {
         list.split(',')
             .map(|s| {
                 s.trim()
-                    .parse::<u32>()
-                    .with_context(|| format!("bad replica count `{s}`"))
+                    .parse::<u64>()
+                    .with_context(|| format!("bad count `{s}`"))
             })
             .collect::<Result<Vec<_>>>()?
     };
-    if counts.is_empty() || counts.iter().any(|&c| c < 2) {
-        bail!("--replicas needs counts >= 2, got `{list}`");
+    if counts.is_empty() {
+        bail!("`{list}` names no counts");
     }
     Ok(counts)
+}
+
+/// Machine counts for `--machines` (any count >= 1; 0 is rejected by
+/// the caller so the error names the flag).
+fn parse_counts(list: &str) -> Result<Vec<usize>> {
+    Ok(parse_u64_list(list)?.into_iter().map(|c| c as usize).collect())
+}
+
+/// Replica counts for `--replicas` (chains need >= 2).
+fn parse_replicas(list: &str) -> Result<Vec<u32>> {
+    let counts = parse_u64_list(list)?;
+    if counts.iter().any(|&c| c < 2 || c > u32::MAX as u64) {
+        bail!("--replicas needs counts >= 2, got `{list}`");
+    }
+    Ok(counts.into_iter().map(|c| c as u32).collect())
 }
 
 /// The tables a command produces (none for `serve`/`info`). Shared by
@@ -219,6 +302,10 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
         "fig12" => tables.push(experiments::fig12::report(&cli.opts)),
         "dlrm" => tables.extend(experiments::dlrm::report(&cli.opts, cli.batch)),
         "sharding" => tables.push(experiments::sharding::report(&cli.opts, &cli.shards)),
+        "scaleout" => {
+            let k = resolve_hot_replicas(cli)?;
+            tables.extend(experiments::scaleout::report(&cli.opts, &cli.machines, cli.theta, k));
+        }
         "adaptive" => tables.push(experiments::adaptive::report(&cli.opts)),
         "chain" => {
             // Validate the crash configuration before the (expensive)
@@ -251,6 +338,9 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             }
         }
         "all" => {
+            // Validate the scaleout flags up front — their tables come
+            // last, after minutes of simulation.
+            let k = resolve_hot_replicas(cli)?;
             tables.push(experiments::fig4::report(&cli.opts));
             tables.push(experiments::fig4::report_nvm(&cli.opts));
             tables.push(experiments::fig7::report(&cli.opts));
@@ -265,6 +355,7 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             tables.push(experiments::sharding::report(&cli.opts, &cli.shards));
             tables.push(experiments::adaptive::report(&cli.opts));
             tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
+            tables.extend(experiments::scaleout::report(&cli.opts, &cli.machines, cli.theta, k));
         }
         "serve" | "info" => {}
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
@@ -544,6 +635,47 @@ mod tests {
         assert!(parse(&s(&["dlrm", "--batch", "0"])).is_err());
         assert!(parse(&s(&["dlrm", "--batch"])).is_err());
         assert!(parse(&s(&["dlrm", "--batch", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_scaleout_flags() {
+        let cli = parse(&s(&["scaleout", "--machines", "1..4", "--theta", "0.99"])).unwrap();
+        assert_eq!(cli.machines, vec![1, 2, 3, 4]);
+        assert_eq!(cli.theta, Some(0.99));
+        assert_eq!(cli.hot_replicas, None);
+        let cli = parse(&s(&["scaleout", "--machines", "2,8", "--hot-replicas", "2"])).unwrap();
+        assert_eq!(cli.machines, vec![2, 8]);
+        assert_eq!(cli.hot_replicas, Some(2));
+        let def = parse(&s(&["scaleout"])).unwrap();
+        assert_eq!(def.machines, experiments::scaleout::MACHINE_COUNTS.to_vec());
+        assert_eq!(def.theta, None);
+        assert_eq!(def.hot_replicas, None);
+        assert!(parse(&s(&["scaleout", "--machines", "0,2"])).is_err());
+        assert!(parse(&s(&["scaleout", "--machines", "4..1"])).is_err());
+        assert!(parse(&s(&["scaleout", "--theta", "1.0"])).is_err());
+        assert!(parse(&s(&["scaleout", "--theta", "-0.1"])).is_err());
+        assert!(parse(&s(&["scaleout", "--hot-replicas", "0"])).is_err());
+    }
+
+    #[test]
+    fn scaleout_explicit_replication_beyond_the_fleet_is_rejected() {
+        // tables_for validates before the (expensive) sweep runs...
+        let cli = parse(&s(&["scaleout", "--machines", "1,2", "--hot-replicas", "4"])).unwrap();
+        assert!(tables_for(&cli).is_err());
+        // ...but the *default* factor clamps instead of erroring — a
+        // small fleet with no --hot-replicas flag must not be rejected
+        // over a flag the user never passed (runs a tiny sweep).
+        let argv = s(&[
+            "scaleout",
+            "--machines",
+            "1,2",
+            "--keys",
+            "5000",
+            "--requests",
+            "500",
+        ]);
+        let cli = parse(&argv).unwrap();
+        assert_eq!(tables_for(&cli).unwrap().len(), 2);
     }
 
     #[test]

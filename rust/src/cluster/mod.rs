@@ -12,6 +12,11 @@
 //! bundle the serving designs own ([`crate::serving::designs`]), and a
 //! transaction traverses the chain hop by hop.
 //!
+//! Chain replication is one deployment of the layer; **scale-out KVS
+//! serving** ([`scaleout`]) is the other — the keyspace consistent-
+//! hashed across N machines each running a full serving design, with
+//! hot-key replication as the skew mitigation (`orca scaleout`).
+//!
 //! ## Hop model
 //!
 //! The paper's Fig-6 testbed emulates the datacenter fabric between
@@ -44,6 +49,10 @@
 //! [`Network::port_ingress`]); [`Cluster::relay`] charges both
 //! endpoints' ledgers cut-through (the switch does not store-and-forward
 //! at message granularity) and adds the leg latency once.
+
+pub mod scaleout;
+
+pub use scaleout::{run_fleet, FleetDesign, FleetMetrics, Router};
 
 use crate::config::Testbed;
 use crate::cpoll::NotifyModel;

@@ -1,0 +1,452 @@
+//! Scale-out KVS serving: the keyspace consistent-hashed across N
+//! [`crate::cluster::Machine`]-class servers, each running its existing
+//! single-machine serving [`Design`], driven by a modeled client fleet
+//! through the shared ToR (DESIGN.md §Scale-out serving).
+//!
+//! Two pieces:
+//!
+//! * [`Router`] — a consistent-hash ring ([`VNODES`] virtual nodes per
+//!   machine) mapping key ids to home machines, plus a **hot-key
+//!   mitigation knob**: a designated hot set (the top-k Zipf key ids,
+//!   [`crate::workload::KeyDist::hot_keys`]) is replicated on K
+//!   successive ring machines with *read-any / write-all* routing —
+//!   GETs go to the least-loaded replica, PUTs fan out to every
+//!   replica and wait for the slowest ack. Consistent hashing gives
+//!   the rebalance bound the invariant tests pin: growing N → N+1
+//!   moves only the keys whose new home *is* the added machine
+//!   (~1/(N+1) of them), everything else stays put.
+//! * [`run_fleet`] — the multi-machine generalization of
+//!   [`crate::serving::ServingPipeline::run`]: one global arrival
+//!   process (the client fleet), per-request ingress on the routed
+//!   machine's own design (charging **that machine's ToR link
+//!   ledgers** — per-link contention is where skew turns into tail
+//!   latency), per-machine stream service, per-machine egress. With
+//!   one machine and one target per request the loop structure, RNG
+//!   consumption and metric formulas are call-for-call identical to
+//!   `ServingPipeline::run`, which is why the N=1 scale-out numbers
+//!   reproduce the single-machine serving goldens bit-for-bit
+//!   (`tests/scaleout_golden.rs`).
+
+use crate::mem::MemTrace;
+use crate::serving::{Design, Load};
+use crate::sim::{mix64, Histogram, Rng, SEC, US};
+
+/// Virtual nodes per machine on the ring. Enough that per-machine
+/// keyspace shares concentrate (share σ ≈ fair/16) without making
+/// lookups measurable (N=8 → a 2048-point binary search).
+pub const VNODES: usize = 256;
+
+/// Keys and ring points live in the same hash space but must not
+/// collide structurally; keys get their own salt.
+const KEY_SALT: u64 = 0xA5A5_5A5A_C0DE_0CA7;
+
+/// Consistent-hash router over N machines with a replicated hot set.
+#[derive(Clone, Debug)]
+pub struct Router {
+    /// (ring point, machine), sorted by point. Machine m's points are
+    /// identical for every N > m, which is what bounds rebalancing.
+    ring: Vec<(u64, usize)>,
+    machines: usize,
+    /// Sorted, deduplicated hot key ids (empty: no replication).
+    hot: Vec<u64>,
+    /// Replication factor for hot keys (clamped to `machines`).
+    hot_replicas: usize,
+}
+
+impl Router {
+    /// A router over `machines` servers. `hot` is the replicated key
+    /// set (ids, not ranks); `hot_replicas` its replication factor —
+    /// 1 (or an empty set) disables mitigation.
+    pub fn new(machines: usize, hot: Vec<u64>, hot_replicas: usize) -> Self {
+        assert!(machines >= 1, "a fleet needs at least one machine");
+        assert!(hot_replicas >= 1, "replication factor must be >= 1");
+        let mut ring = Vec::with_capacity(machines * VNODES);
+        for m in 0..machines {
+            for v in 0..VNODES {
+                ring.push((Self::point(m, v), m));
+            }
+        }
+        ring.sort_unstable();
+        let mut hot = hot;
+        hot.sort_unstable();
+        hot.dedup();
+        Router {
+            ring,
+            machines,
+            hot,
+            hot_replicas: hot_replicas.min(machines),
+        }
+    }
+
+    fn point(machine: usize, vnode: usize) -> u64 {
+        mix64(((machine as u64) << 20) | vnode as u64)
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Effective replication factor (after clamping to the fleet size).
+    pub fn hot_replicas(&self) -> usize {
+        self.hot_replicas
+    }
+
+    /// The key's home machine: the owner of the first ring point at or
+    /// after the key's hash (wrapping).
+    pub fn home(&self, key: u64) -> usize {
+        let h = mix64(key ^ KEY_SALT);
+        let idx = self.ring.partition_point(|&(p, _)| p < h);
+        self.ring[if idx == self.ring.len() { 0 } else { idx }].1
+    }
+
+    pub fn is_hot(&self, key: u64) -> bool {
+        self.hot_replicas > 1 && self.hot.binary_search(&key).is_ok()
+    }
+
+    /// The machines holding `key`: the home plus, for hot keys, the
+    /// next distinct machines along the ring (standard successor
+    /// replication) up to the replication factor. First entry is
+    /// always the home.
+    pub fn replicas(&self, key: u64) -> Vec<usize> {
+        let want = if self.is_hot(key) { self.hot_replicas } else { 1 };
+        let h = mix64(key ^ KEY_SALT);
+        let start = self.ring.partition_point(|&(p, _)| p < h);
+        let mut out = Vec::with_capacity(want);
+        for off in 0..self.ring.len() {
+            let m = self.ring[(start + off) % self.ring.len()].1;
+            if !out.contains(&m) {
+                out.push(m);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Route one request: the machines that must serve it. Cold keys
+    /// (and everything when mitigation is off) go to their one home;
+    /// hot GETs go read-any to the least-loaded replica (`loads` is
+    /// the caller's running per-machine assignment count); hot PUTs go
+    /// write-all to every replica.
+    pub fn targets(&self, key: u64, is_put: bool, loads: &[u64]) -> Vec<usize> {
+        if !self.is_hot(key) {
+            return vec![self.home(key)];
+        }
+        let reps = self.replicas(key);
+        if is_put {
+            reps
+        } else {
+            let pick = reps
+                .iter()
+                .copied()
+                .min_by_key(|&m| (loads[m], m))
+                .expect("replica sets are non-empty");
+            vec![pick]
+        }
+    }
+}
+
+/// A per-machine serving element behind the router — any single-machine
+/// design (Cpu / SmartNic / Orca incl. multi-APU shards) boxed behind
+/// the unified [`Design`] interface.
+pub type FleetDesign = Box<dyn Design<Job = MemTrace>>;
+
+/// One scale-out run's aggregate result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetMetrics {
+    pub label: String,
+    /// Aggregate served throughput, Mops (requests, not replica copies).
+    pub mops: f64,
+    pub avg_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    /// Aggregate wire bound: the sum of the per-machine link bounds.
+    pub net_bound_mops: f64,
+    /// Requests routed to each machine (write-all counts every copy).
+    pub per_machine: Vec<u64>,
+    /// Hottest machine's routed share over the mean share (1 = balanced).
+    pub imbalance: f64,
+}
+
+/// Drive `jobs` through a fleet: `targets[i]` lists the machine(s)
+/// serving request `i` (one for routed singles, K for write-all fans).
+/// A request's latency is its *slowest* copy's response arrival —
+/// write-all waits for every ack.
+///
+/// Structure mirrors [`crate::serving::ServingPipeline::run`] stage for
+/// stage (issue → ingress in issue order → per-machine visibility sort
+/// → serve → egress in completion order); with `designs.len() == 1` and
+/// all-`[0]` targets it consumes the RNG identically and reproduces the
+/// single-machine metrics exactly.
+pub fn run_fleet(
+    designs: &mut [FleetDesign],
+    jobs: &[MemTrace],
+    targets: &[Vec<usize>],
+    load: Load,
+    req_payload: u64,
+    resp_bytes: u64,
+    seed: u64,
+) -> FleetMetrics {
+    let n = jobs.len();
+    let machines = designs.len();
+    assert!(machines >= 1, "a fleet needs at least one machine");
+    assert_eq!(targets.len(), n, "one target set per request");
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+
+    // Issue times (the client fleet's aggregate arrival process).
+    let mut issue = Vec::with_capacity(n);
+    match load {
+        Load::Saturation => issue.resize(n, 0u64),
+        Load::Open { mops } => {
+            let mean_gap_ps = 1e6 / mops;
+            let mut tphys = 0f64;
+            for _ in 0..n {
+                tphys += rng.exp(mean_gap_ps);
+                issue.push(tphys as u64);
+            }
+        }
+    }
+
+    // Ingress in issue order: every copy charges its own machine's ToR
+    // link ledgers and notification path.
+    let mut first = u64::MAX;
+    let mut routed: Vec<Vec<(usize, u64)>> = vec![Vec::new(); machines];
+    let mut per_machine = vec![0u64; machines];
+    for (i, (&t0, job)) in issue.iter().zip(jobs).enumerate() {
+        assert!(!targets[i].is_empty(), "request {i} lost: no target machine");
+        for &m in &targets[i] {
+            assert!(m < machines, "request {i} routed to dead machine {m}");
+            // Per-machine framing: a heterogeneous fleet (e.g. a CPU
+            // machine's in-band RPC header) charges each link its own
+            // wire bytes.
+            let req = designs[m].request_bytes(req_payload);
+            let ing = designs[m].ingress(t0, job, req, &mut rng);
+            first = first.min(ing.wire_at);
+            routed[m].push((i, ing.visible_at));
+            per_machine[m] += 1;
+        }
+    }
+    let first = if n == 0 { 0 } else { first };
+
+    // Serve each machine's substream in its visibility order.
+    let mut done_per_machine: Vec<Vec<(usize, u64)>> = Vec::with_capacity(machines);
+    for (m, mut order) in routed.into_iter().enumerate() {
+        order.sort_by_key(|&(_, t)| t);
+        let ordered: Vec<(u64, MemTrace)> =
+            order.iter().map(|&(i, t)| (t, jobs[i].clone())).collect();
+        let served = if ordered.is_empty() {
+            Vec::new()
+        } else {
+            designs[m].serve(ordered)
+        };
+        let mut done: Vec<(usize, u64)> = order.iter().map(|&(i, _)| i).zip(served).collect();
+        done.sort_by_key(|&(_, d)| d);
+        done_per_machine.push(done);
+    }
+
+    // Egress per machine in its completion order (each machine's SQ
+    // handler sees nondecreasing times); a request is finished when its
+    // slowest copy's response reaches the client.
+    let mut at_client = vec![0u64; n];
+    let mut last = 0u64;
+    for (m, done) in done_per_machine.iter().enumerate() {
+        for &(i, d) in done {
+            let t = designs[m].egress(d, resp_bytes);
+            last = last.max(t);
+            at_client[i] = at_client[i].max(t);
+        }
+    }
+
+    let mut latency = Histogram::new();
+    for (i, &t) in at_client.iter().enumerate() {
+        latency.record(t.saturating_sub(issue[i]).max(1));
+    }
+
+    let span = last.saturating_sub(first).max(1);
+    let total: u64 = per_machine.iter().sum();
+    let imbalance = if total == 0 {
+        1.0
+    } else {
+        let mean = total as f64 / machines as f64;
+        *per_machine.iter().max().unwrap() as f64 / mean
+    };
+    let label = if machines == 1 {
+        designs[0].label()
+    } else {
+        format!("{}x{}", designs[0].label(), machines)
+    };
+    FleetMetrics {
+        label,
+        mops: n as f64 / (span as f64 / SEC as f64) / 1e6,
+        avg_us: latency.mean() / US as f64,
+        p50_us: latency.p50() as f64 / US as f64,
+        p99_us: latency.p99() as f64 / US as f64,
+        p999_us: latency.p999() as f64 / US as f64,
+        net_bound_mops: designs
+            .iter()
+            .map(|d| {
+                let req = d.request_bytes(req_payload);
+                d.network().map_or(f64::INFINITY, |nw| nw.peak_mops(req))
+            })
+            .sum(),
+        per_machine,
+        imbalance,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AccelMem, Testbed};
+    use crate::mem::Access;
+    use crate::serving::{Orca, ServingPipeline};
+
+    fn trace(key: u64) -> MemTrace {
+        let mut t = MemTrace::new();
+        let h = key.wrapping_mul(0x9E3779B97F4A7C15);
+        t.push(Access::read(h % (1 << 30), 64));
+        t.push(Access::read(h.rotate_left(17) % (1 << 30), 64));
+        t.push(Access::read(h.rotate_left(34) % (1 << 30), 64));
+        t
+    }
+
+    #[test]
+    fn home_is_deterministic_and_in_range() {
+        let r = Router::new(5, Vec::new(), 1);
+        for key in 0..2_000u64 {
+            let h = r.home(key);
+            assert!(h < 5);
+            assert_eq!(h, r.home(key), "routing must be stable");
+            assert_eq!(r.replicas(key), vec![h], "cold key has one replica");
+        }
+    }
+
+    #[test]
+    fn all_machines_own_a_keyspace_share() {
+        let r = Router::new(8, Vec::new(), 1);
+        let mut counts = [0u64; 8];
+        for key in 0..80_000u64 {
+            counts[r.home(key)] += 1;
+        }
+        for (m, &c) in counts.iter().enumerate() {
+            // Fair share 10k; VNODES=256 keeps shares within ±~25%.
+            assert!((7_500..12_500).contains(&c), "machine {m} owns {c}");
+        }
+    }
+
+    #[test]
+    fn hot_keys_replicate_on_k_distinct_machines() {
+        let hot: Vec<u64> = (0..32).collect();
+        let r = Router::new(6, hot.clone(), 3);
+        for &k in &hot {
+            assert!(r.is_hot(k));
+            let reps = r.replicas(k);
+            assert_eq!(reps.len(), 3);
+            let mut uniq = reps.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "replicas must be distinct: {reps:?}");
+            assert_eq!(reps[0], r.home(k), "home leads the replica set");
+        }
+        assert!(!r.is_hot(1_000_000), "cold keys stay cold");
+    }
+
+    #[test]
+    fn replication_factor_clamps_to_the_fleet() {
+        let r = Router::new(2, vec![1, 2, 3], 8);
+        assert_eq!(r.hot_replicas(), 2);
+        assert_eq!(r.replicas(1).len(), 2);
+    }
+
+    #[test]
+    fn read_any_picks_least_loaded_and_write_all_fans_out() {
+        let r = Router::new(4, vec![7], 3);
+        let reps = r.replicas(7);
+        let mut loads = vec![0u64; 4];
+        loads[reps[0]] = 100; // home is busy
+        let get = r.targets(7, false, &loads);
+        assert_eq!(get.len(), 1);
+        assert_ne!(get[0], reps[0], "read-any must dodge the loaded home");
+        assert!(reps.contains(&get[0]));
+        let put = r.targets(7, true, &loads);
+        assert_eq!(put, reps, "write-all hits every replica");
+        // Cold keys ignore loads entirely.
+        let cold = r.targets(1_000_000, false, &loads);
+        assert_eq!(cold, vec![r.home(1_000_000)]);
+    }
+
+    #[test]
+    fn one_machine_fleet_matches_the_serving_pipeline_exactly() {
+        // The parity the scale-out goldens rely on: same jobs, same
+        // seed, same design → bit-identical metrics.
+        let t = Testbed::paper();
+        let jobs: Vec<MemTrace> = (0..4_000u64).map(trace).collect();
+        for load in [Load::Saturation, Load::Open { mops: 2.0 }] {
+            let pipe = ServingPipeline::new(load, 64, 64, 11);
+            let want = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+            let mut fleet: Vec<FleetDesign> =
+                vec![Box::new(Orca::new(&t, AccelMem::None, 32))];
+            let targets = vec![vec![0usize]; jobs.len()];
+            let got = run_fleet(&mut fleet, &jobs, &targets, load, 64, 64, 11);
+            assert_eq!(got.mops, want.mops, "{load:?} mops");
+            assert_eq!(got.avg_us, want.avg_us, "{load:?} avg");
+            assert_eq!(got.p50_us, want.p50_us, "{load:?} p50");
+            assert_eq!(got.p99_us, want.p99_us, "{load:?} p99");
+            assert_eq!(got.p999_us, want.p999_us, "{load:?} p999");
+            assert_eq!(got.per_machine, vec![jobs.len() as u64]);
+        }
+    }
+
+    #[test]
+    fn write_all_latency_waits_for_the_slowest_replica() {
+        // The same request fanned to two machines cannot beat its
+        // single-machine latency, and both machines see the copy.
+        let t = Testbed::paper();
+        let jobs: Vec<MemTrace> = (0..500u64).map(trace).collect();
+        let single = {
+            let mut fleet: Vec<FleetDesign> =
+                vec![Box::new(Orca::new(&t, AccelMem::None, 32))];
+            let targets = vec![vec![0usize]; jobs.len()];
+            run_fleet(&mut fleet, &jobs, &targets, Load::Open { mops: 1.0 }, 64, 64, 5)
+        };
+        let fanned = {
+            let mut fleet: Vec<FleetDesign> = vec![
+                Box::new(Orca::new(&t, AccelMem::None, 32)),
+                Box::new(Orca::new(&t, AccelMem::None, 32)),
+            ];
+            let targets = vec![vec![0usize, 1]; jobs.len()];
+            run_fleet(&mut fleet, &jobs, &targets, Load::Open { mops: 1.0 }, 64, 64, 5)
+        };
+        assert_eq!(fanned.per_machine, vec![500, 500]);
+        assert!(
+            fanned.avg_us >= single.avg_us * 0.999,
+            "write-all {} must not beat single {}",
+            fanned.avg_us,
+            single.avg_us
+        );
+    }
+
+    #[test]
+    fn uniform_routing_scales_aggregate_saturation_throughput() {
+        // Four machines, four ToR links: aggregate peak must clearly
+        // exceed one machine's (the acceptance-criteria shape; the
+        // full sweep lives in experiments::scaleout).
+        let t = Testbed::paper();
+        let jobs: Vec<MemTrace> = (0..20_000u64).map(trace).collect();
+        let r1 = Router::new(1, Vec::new(), 1);
+        let r4 = Router::new(4, Vec::new(), 1);
+        let mops = |machines: usize, router: &Router| {
+            let mut fleet: Vec<FleetDesign> = (0..machines)
+                .map(|_| Box::new(Orca::new(&t, AccelMem::None, 32)) as FleetDesign)
+                .collect();
+            let targets: Vec<Vec<usize>> =
+                (0..jobs.len() as u64).map(|k| vec![router.home(k)]).collect();
+            run_fleet(&mut fleet, &jobs, &targets, Load::Saturation, 64, 64, 9).mops
+        };
+        let one = mops(1, &r1);
+        let four = mops(4, &r4);
+        assert!(four > one * 2.5, "4 machines {four} vs 1 machine {one}");
+    }
+}

@@ -71,6 +71,10 @@ pub struct KvRun {
 /// hash table actually performed.
 pub struct RequestStream {
     pub traces: Vec<MemTrace>,
+    /// The key id each request touched (what a scale-out router hashes).
+    pub keys: Vec<u64>,
+    /// Whether each request was a PUT (write-all under hot replication).
+    pub puts: Vec<bool>,
     /// Approximate dataset footprint (buckets + entries + values) so the
     /// SmartNIC cache can be scaled to the paper's 512 MB : 7 GB ratio.
     pub data_bytes: u64,
@@ -103,18 +107,28 @@ impl RequestStream {
         }
         // Sample the measured ops.
         let mut traces = Vec::with_capacity(requests as usize);
+        let mut key_ids = Vec::with_capacity(requests as usize);
+        let mut puts = Vec::with_capacity(requests as usize);
         for _ in 0..requests {
             let key = dist.sample(&mut rng);
-            let op = if mix.next_is_get(&mut rng) {
+            let is_get = mix.next_is_get(&mut rng);
+            let op = if is_get {
                 table.get(&key.to_le_bytes())
             } else {
                 table.put(&key.to_le_bytes(), &val)
             };
             traces.push(op.trace);
+            key_ids.push(key);
+            puts.push(!is_get);
         }
         // Footprint: bucket array + per-key (entry + key‖value slot).
         let data_bytes = (keys / 4).max(64) * 128 + keys * (16 + 64 + value_bytes as u64);
-        RequestStream { traces, data_bytes }
+        RequestStream {
+            traces,
+            keys: key_ids,
+            puts,
+            data_bytes,
+        }
     }
 }
 

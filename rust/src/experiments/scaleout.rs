@@ -1,0 +1,452 @@
+//! `orca scaleout` (beyond the paper): scale-out KVS serving on the
+//! cluster layer — the ROADMAP's "heavy traffic from millions of
+//! users" finally has somewhere to run.
+//!
+//! The keyspace is consistent-hashed across N machines
+//! ([`crate::cluster::Router`]), each running the existing
+//! single-machine ORCA serving design behind its own ToR link, and a
+//! modeled client fleet drives the whole thing through one global
+//! arrival process ([`crate::cluster::run_fleet`]). Two scenarios:
+//!
+//! * **Machines × skew sweep** (saturation): aggregate throughput
+//!   scales with machine count (each machine brings its own 25 Gbps
+//!   link) while Zipf skew concentrates traffic — per-machine load
+//!   imbalance grows with θ and the hottest link becomes the fleet's
+//!   bottleneck.
+//! * **Hot-key mitigation** (open load at [`MITIGATION_LOAD`] of the
+//!   uniform fleet's peak): replicating the top-[`HOT_KEYS`] Zipf keys
+//!   on K machines with read-any/write-all routing spreads the hot
+//!   traffic and recovers most of the imbalance-induced p99 loss —
+//!   the in-tree test pins "at least half" at θ = 0.99.
+//!
+//! N = 1 with mitigation off is *the* single-machine serving path —
+//! `tests/scaleout_golden.rs` pins it to the `serving_golden` numbers.
+
+use super::kvs::RequestStream;
+use super::{Opts, Table};
+use crate::cluster::{run_fleet, FleetDesign, FleetMetrics, Router};
+use crate::config::{AccelMem, Testbed};
+use crate::serving::{Load, Orca};
+use crate::workload::{KeyDist, KvMix};
+
+/// Machine counts the sweep and the CLI default cover.
+pub const MACHINE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Skew points of the default sweep (0 = uniform).
+pub const SWEEP_THETAS: [f64; 3] = [0.0, 0.9, 0.99];
+
+/// Size of the replicated hot set: the top-k Zipf key ids. At θ = 0.99
+/// the top 64 ranks carry ~40% of the traffic on a 50 k-key dataset —
+/// replicating them is what flattens the hottest link.
+pub const HOT_KEYS: usize = 64;
+
+/// Default replication factor for the hot set (`--hot-replicas`).
+pub const DEFAULT_HOT_REPLICAS: usize = 4;
+
+/// The mitigation scenario's operating point: offered load as a
+/// fraction of the *uniform* fleet's aggregate saturation peak. High
+/// enough that a skew-overloaded link queues visibly, low enough that
+/// the balanced fleet is comfortable.
+pub const MITIGATION_LOAD: f64 = 0.7;
+
+/// KVS payload bytes on the wire (the Fig-8 operating point).
+const REQ_BYTES: u64 = 64;
+const RESP_BYTES: u64 = 64;
+const BATCH: usize = 32;
+
+/// One ORCA serving element per machine — the same construction as the
+/// single-machine `kvs::run` golden path.
+fn fleet(t: &Testbed, machines: usize) -> Vec<FleetDesign> {
+    (0..machines)
+        .map(|_| Box::new(Orca::new(t, AccelMem::None, BATCH)) as FleetDesign)
+        .collect()
+}
+
+/// Resolve every request to its target machine(s): cold keys to their
+/// consistent-hash home, hot GETs read-any to the least-loaded replica
+/// (tracking assigned load as we go), hot PUTs write-all. Every request
+/// gets exactly one target set — nothing is lost or duplicated
+/// (`tests/scaleout_props.rs` pins this under mid-run growth too).
+pub fn route(stream: &RequestStream, router: &Router) -> Vec<Vec<usize>> {
+    let mut loads = vec![0u64; router.machines()];
+    stream
+        .keys
+        .iter()
+        .zip(&stream.puts)
+        .map(|(&key, &is_put)| {
+            let t = router.targets(key, is_put, &loads);
+            for &m in &t {
+                loads[m] += 1;
+            }
+            t
+        })
+        .collect()
+}
+
+/// One scale-out run: `machines` ORCA servers, the stream routed with
+/// `hot_replicas`-way hot-key replication (1 = mitigation off).
+pub fn run_point(
+    t: &Testbed,
+    stream: &RequestStream,
+    dist: &KeyDist,
+    machines: usize,
+    hot_replicas: usize,
+    load: Load,
+    seed: u64,
+) -> FleetMetrics {
+    let hot = if hot_replicas > 1 {
+        dist.hot_keys(HOT_KEYS)
+    } else {
+        Vec::new()
+    };
+    let router = Router::new(machines, hot, hot_replicas);
+    let targets = route(stream, &router);
+    let mut designs = fleet(t, machines);
+    run_fleet(&mut designs, &stream.traces, &targets, load, REQ_BYTES, RESP_BYTES, seed)
+}
+
+/// A sweep row: one (machines, distribution) saturation point.
+#[derive(Clone, Debug)]
+pub struct ScaleoutRow {
+    pub machines: usize,
+    pub dist: String,
+    pub metrics: FleetMetrics,
+}
+
+/// Saturation sweep over machine counts × skew points.
+pub fn sweep(opts: &Opts, counts: &[usize], thetas: &[f64]) -> Vec<ScaleoutRow> {
+    let mut rows = Vec::new();
+    for &theta in thetas {
+        let dist = dist_for(opts.keys, theta);
+        let stream = RequestStream::generate(
+            opts.keys,
+            opts.requests,
+            &dist,
+            KvMix::GetOnly,
+            64,
+            opts.seed,
+        );
+        for &n in counts {
+            let m = run_point(
+                &opts.testbed,
+                &stream,
+                &dist,
+                n,
+                1,
+                Load::Saturation,
+                opts.seed,
+            );
+            rows.push(ScaleoutRow {
+                machines: n,
+                dist: dist.label(),
+                metrics: m,
+            });
+        }
+    }
+    rows
+}
+
+fn dist_for(keys: u64, theta: f64) -> KeyDist {
+    if theta == 0.0 {
+        KeyDist::uniform(keys)
+    } else {
+        KeyDist::zipf(keys, theta)
+    }
+}
+
+/// The mitigation scenario's three runs at one open-load operating
+/// point: uniform baseline, skewed without replication, skewed with
+/// K-way hot-key replication.
+#[derive(Clone, Debug)]
+pub struct Mitigation {
+    pub machines: usize,
+    pub theta: f64,
+    pub hot_replicas: usize,
+    /// Offered load of the three runs, Mops.
+    pub offered_mops: f64,
+    pub uniform: FleetMetrics,
+    pub skewed: FleetMetrics,
+    pub replicated: FleetMetrics,
+}
+
+impl Mitigation {
+    /// Skew's p99 cost over the uniform baseline, µs.
+    pub fn p99_loss_us(&self) -> f64 {
+        self.skewed.p99_us - self.uniform.p99_us
+    }
+
+    /// Fraction of the imbalance-induced p99 loss that replication
+    /// recovered (1 = all the way back to the uniform baseline).
+    /// `None` when skew cost nothing — there was nothing to recover
+    /// (e.g. a one-machine fleet, where replication is a no-op).
+    pub fn recovered_frac(&self) -> Option<f64> {
+        let loss = self.p99_loss_us();
+        if loss <= 0.0 {
+            return None;
+        }
+        Some((self.skewed.p99_us - self.replicated.p99_us) / loss)
+    }
+}
+
+/// Run the mitigation scenario on `machines` servers at skew `theta`.
+pub fn mitigation(opts: &Opts, machines: usize, theta: f64, hot_replicas: usize) -> Mitigation {
+    let t = &opts.testbed;
+    let uniform_dist = KeyDist::uniform(opts.keys);
+    let zipf_dist = dist_for(opts.keys, theta);
+    let uni_stream = RequestStream::generate(
+        opts.keys,
+        opts.requests,
+        &uniform_dist,
+        KvMix::GetOnly,
+        64,
+        opts.seed,
+    );
+    let zipf_stream = RequestStream::generate(
+        opts.keys,
+        opts.requests,
+        &zipf_dist,
+        KvMix::GetOnly,
+        64,
+        opts.seed,
+    );
+    // The operating point: a fraction of the *balanced* fleet's peak.
+    let peak = run_point(t, &uni_stream, &uniform_dist, machines, 1, Load::Saturation, opts.seed);
+    let offered = (peak.mops * MITIGATION_LOAD).max(0.05);
+    let load = Load::Open { mops: offered };
+    Mitigation {
+        machines,
+        theta,
+        hot_replicas,
+        offered_mops: offered,
+        uniform: run_point(t, &uni_stream, &uniform_dist, machines, 1, load, opts.seed),
+        skewed: run_point(t, &zipf_stream, &zipf_dist, machines, 1, load, opts.seed),
+        replicated: run_point(
+            t,
+            &zipf_stream,
+            &zipf_dist,
+            machines,
+            hot_replicas,
+            load,
+            opts.seed,
+        ),
+    }
+}
+
+/// The `orca scaleout` tables. `theta` narrows the sweep's skew axis
+/// to {uniform, θ}; the mitigation table runs on the largest requested
+/// machine count. An explicit `--theta 0` means the user asked for a
+/// uniform-only run — there is no skew to mitigate, so only the sweep
+/// table renders.
+pub fn report(
+    opts: &Opts,
+    counts: &[usize],
+    theta: Option<f64>,
+    hot_replicas: usize,
+) -> Vec<Table> {
+    let thetas: Vec<f64> = match theta {
+        Some(t) if t > 0.0 => vec![0.0, t],
+        Some(_) => vec![0.0],
+        None => SWEEP_THETAS.to_vec(),
+    };
+    let mut tb = Table::new(
+        "Scale-out KVS — aggregate saturation throughput vs machines x skew \
+         (ORCA per machine, 100% GET, batch 32)",
+        &[
+            "machines",
+            "workload",
+            "agg Mops",
+            "agg net bound",
+            "p50 µs",
+            "p99 µs",
+            "p999 µs",
+            "imbalance",
+        ],
+    );
+    for r in sweep(opts, counts, &thetas) {
+        tb.row(&[
+            r.machines.to_string(),
+            r.dist.clone(),
+            format!("{:.1}", r.metrics.mops),
+            format!("{:.1}", r.metrics.net_bound_mops),
+            format!("{:.1}", r.metrics.p50_us),
+            format!("{:.1}", r.metrics.p99_us),
+            format!("{:.1}", r.metrics.p999_us),
+            format!("{:.2}", r.metrics.imbalance),
+        ]);
+    }
+
+    // The mitigation table needs actual skew to mitigate: an explicit
+    // θ = 0 opted out of skew entirely, so stop at the sweep.
+    let mit_theta = match theta {
+        Some(t) if t > 0.0 => t,
+        Some(_) => return vec![tb],
+        None => 0.99,
+    };
+    let machines = *counts.iter().max().expect("validated non-empty");
+    let m = mitigation(opts, machines, mit_theta, hot_replicas);
+    let recovered = match m.recovered_frac() {
+        Some(f) => format!("{:.0}%", f * 100.0),
+        None => "n/a (skew cost no p99)".to_string(),
+    };
+    let mut mt = Table::new(
+        format!(
+            "Scale-out KVS — hot-key mitigation ({} machines at {:.1} Mops offered, \
+             top-{} keys x{} replicas, p99 loss recovered {recovered})",
+            m.machines, m.offered_mops, HOT_KEYS, m.hot_replicas
+        ),
+        &[
+            "configuration",
+            "p50 µs",
+            "p99 µs",
+            "p999 µs",
+            "imbalance",
+        ],
+    );
+    let row = |mt: &mut Table, name: String, f: &FleetMetrics| {
+        mt.row(&[
+            name,
+            format!("{:.1}", f.p50_us),
+            format!("{:.1}", f.p99_us),
+            format!("{:.1}", f.p999_us),
+            format!("{:.2}", f.imbalance),
+        ]);
+    };
+    row(&mut mt, "uniform, no replication".into(), &m.uniform);
+    row(&mut mt, format!("zipf-{}, no replication", m.theta), &m.skewed);
+    row(
+        &mut mt,
+        format!("zipf-{}, read-any x{}", m.theta, m.hot_replicas),
+        &m.replicated,
+    );
+    vec![tb, mt]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Opts {
+        Opts {
+            keys: 50_000,
+            requests: 20_000,
+            seed: 7,
+            ..Opts::default()
+        }
+    }
+
+    #[test]
+    fn aggregate_throughput_scales_with_machine_count() {
+        // Acceptance criterion 1: each machine brings its own ToR link,
+        // so uniform saturation throughput grows with N.
+        let o = opts();
+        let rows = sweep(&o, &[1, 2, 4], &[0.0]);
+        for w in rows.windows(2) {
+            assert!(
+                w[1].metrics.mops >= w[0].metrics.mops * 0.98,
+                "{} machines {} < {} machines {}",
+                w[1].machines,
+                w[1].metrics.mops,
+                w[0].machines,
+                w[0].metrics.mops
+            );
+        }
+        assert!(
+            rows[2].metrics.mops > rows[0].metrics.mops * 2.5,
+            "4 machines {} must clearly beat 1 machine {}",
+            rows[2].metrics.mops,
+            rows[0].metrics.mops
+        );
+        // And never beyond the aggregate wire.
+        for r in &rows {
+            assert!(r.metrics.mops <= r.metrics.net_bound_mops * 1.05, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn load_imbalance_grows_with_zipf_skew() {
+        // Acceptance criterion 2: consistent hashing spreads *keys*
+        // evenly, but a zipfian head concentrates *traffic* on whoever
+        // homes the hottest keys.
+        let o = opts();
+        let rows = sweep(&o, &[4], &[0.0, 0.99]);
+        let uniform = &rows[0].metrics;
+        let skewed = &rows[1].metrics;
+        assert!(uniform.imbalance < 1.2, "uniform imbalance {}", uniform.imbalance);
+        assert!(
+            skewed.imbalance > uniform.imbalance + 0.05,
+            "skew must raise imbalance: {} vs {}",
+            skewed.imbalance,
+            uniform.imbalance
+        );
+        assert!(skewed.imbalance > 1.1, "zipf-0.99 imbalance {}", skewed.imbalance);
+    }
+
+    #[test]
+    fn hot_key_replication_recovers_at_least_half_the_p99_loss() {
+        // Acceptance criterion 3, asserted in-tree: at θ = 0.99 the
+        // overloaded hottest link costs p99; read-any over the top-64
+        // keys' replicas must claw back at least half of it.
+        let o = Opts {
+            requests: 30_000,
+            ..opts()
+        };
+        let m = mitigation(&o, 4, 0.99, 4);
+        let loss = m.p99_loss_us();
+        assert!(
+            loss > 0.0,
+            "skew must cost p99: skewed {} vs uniform {}",
+            m.skewed.p99_us,
+            m.uniform.p99_us
+        );
+        let recovered = m.recovered_frac().expect("loss asserted positive above");
+        assert!(
+            recovered >= 0.5,
+            "replication recovered only {:.0}% of the {loss:.1} µs p99 loss \
+             (uniform {:.1}, skewed {:.1}, replicated {:.1})",
+            recovered * 100.0,
+            m.uniform.p99_us,
+            m.skewed.p99_us,
+            m.replicated.p99_us
+        );
+        // Replication also flattens the routed load itself.
+        assert!(
+            m.replicated.imbalance < m.skewed.imbalance,
+            "replicated imbalance {} !< skewed {}",
+            m.replicated.imbalance,
+            m.skewed.imbalance
+        );
+    }
+
+    #[test]
+    fn every_request_is_routed_exactly_once_without_replication() {
+        let o = opts();
+        let dist = KeyDist::zipf(o.keys, 0.9);
+        let stream = RequestStream::generate(o.keys, 5_000, &dist, KvMix::HalfPut, 64, 3);
+        let router = Router::new(5, Vec::new(), 1);
+        let targets = route(&stream, &router);
+        assert_eq!(targets.len(), 5_000);
+        assert!(targets.iter().all(|t| t.len() == 1), "no replication → one home");
+    }
+
+    #[test]
+    fn hot_puts_fan_out_and_hot_gets_stay_single() {
+        let o = opts();
+        let dist = KeyDist::zipf(o.keys, 0.99);
+        let stream = RequestStream::generate(o.keys, 5_000, &dist, KvMix::HalfPut, 64, 3);
+        let hot = dist.hot_keys(HOT_KEYS);
+        let router = Router::new(4, hot.clone(), 3);
+        let targets = route(&stream, &router);
+        let mut saw_fan = false;
+        for ((t, &key), &is_put) in targets.iter().zip(&stream.keys).zip(&stream.puts) {
+            let hot_key = hot.binary_search(&key).is_ok();
+            match (hot_key, is_put) {
+                (true, true) => {
+                    assert_eq!(t.len(), 3, "hot PUT writes all replicas");
+                    saw_fan = true;
+                }
+                _ => assert_eq!(t.len(), 1, "everything else routes once"),
+            }
+        }
+        assert!(saw_fan, "a zipf-0.99 HalfPut stream must hit a hot PUT");
+    }
+}

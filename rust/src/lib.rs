@@ -17,7 +17,8 @@
 //!   serving path** ([`serving`]: one ingress→notify→serve→egress pipeline
 //!   for every design, including the sharded multi-APU configuration), the
 //!   **cluster layer** ([`cluster`]: N full machines behind a ToR, driving
-//!   hop-by-hop chain replication), the experiment harness
+//!   hop-by-hop chain replication and consistent-hashed scale-out KVS
+//!   serving with hot-key replication), the experiment harness
 //!   ([`experiments`]), and the real serving path: PJRT runtime
 //!   ([`runtime`]) + threaded coordinator ([`coordinator`]).
 //!

@@ -14,7 +14,7 @@ pub mod stats;
 pub mod time;
 
 pub use engine::Sim;
-pub use rng::Rng;
+pub use rng::{mix64, Rng};
 pub use server::{BandwidthLedger, MultiServer, Pipeline, Server};
 pub use stats::{Histogram, Summary};
 pub use time::*;

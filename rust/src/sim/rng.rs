@@ -10,8 +10,20 @@ pub struct Rng {
 
 #[inline]
 fn splitmix64(state: &mut u64) -> u64 {
+    // mix64 adds the gamma itself, so mix-then-advance produces the
+    // classic add-then-finalize sequence bit for bit.
+    let out = mix64(*state);
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *state;
+    out
+}
+
+/// The stateless SplitMix64 step: gamma-add + finalizer. The crate's
+/// shared 64-bit mixer — the workload key scatter
+/// ([`crate::workload`]) and the scale-out consistent-hash ring
+/// ([`crate::cluster::scaleout`]) both hash through it.
+#[inline]
+pub fn mix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E3779B97F4A7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)

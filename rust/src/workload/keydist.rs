@@ -1,10 +1,12 @@
 //! Key distributions. The Zipfian sampler is the standard YCSB/Gray et
 //! al. rejection-free construction with precomputed constants — O(1) per
-//! sample for any N (we need N = 100 M), exact for parameter θ ∈ (0, 1).
+//! sample for any N (we need N = 100 M), exact for parameter θ ∈ [0, 1).
+//! θ = 0 degenerates to the uniform distribution (ζ(n,0) = n, η = 1, so
+//! the sampler reduces to `⌊u·n⌋` — pinned by `tests/zipf_props.rs`).
 
 use crate::sim::Rng;
 
-/// Zipfian(θ) over `[0, n)` (θ = 0.9 in §VI-B).
+/// Zipfian(θ) over `[0, n)` (θ = 0.9 in §VI-B; θ = 0 is uniform).
 #[derive(Clone, Debug)]
 pub struct Zipf {
     n: u64,
@@ -17,7 +19,7 @@ pub struct Zipf {
 
 impl Zipf {
     pub fn new(n: u64, theta: f64) -> Self {
-        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        assert!(n > 0 && (0.0..1.0).contains(&theta));
         let zetan = Self::zeta(n, theta);
         let zeta2 = Self::zeta(2, theta);
         let alpha = 1.0 / (1.0 - theta);
@@ -67,9 +69,18 @@ impl Zipf {
         self.n
     }
 
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
     /// Probability mass of the single hottest key (sanity metric).
     pub fn p_top(&self) -> f64 {
         1.0 / self.zetan
+    }
+
+    /// Probability mass of rank `r` (rank 0 is the hottest key).
+    pub fn p_rank(&self, r: u64) -> f64 {
+        1.0 / ((r + 1) as f64).powf(self.theta) / self.zetan
     }
 
     #[allow(dead_code)]
@@ -96,10 +107,10 @@ impl KeyDist {
         KeyDist::Zipf(Zipf::new(n, theta))
     }
 
-    pub fn label(&self) -> &'static str {
+    pub fn label(&self) -> String {
         match self {
-            KeyDist::Uniform { .. } => "uniform",
-            KeyDist::Zipf(_) => "zipf-0.9",
+            KeyDist::Uniform { .. } => "uniform".to_string(),
+            KeyDist::Zipf(z) => format!("zipf-{}", z.theta()),
         }
     }
 
@@ -107,6 +118,33 @@ impl KeyDist {
         match self {
             KeyDist::Uniform { n } => *n,
             KeyDist::Zipf(z) => z.n(),
+        }
+    }
+
+    /// Skew parameter (0 for uniform).
+    pub fn theta(&self) -> f64 {
+        match self {
+            KeyDist::Uniform { .. } => 0.0,
+            KeyDist::Zipf(z) => z.theta(),
+        }
+    }
+
+    /// The key *ids* of the top-`k` ranks — the hot set a scale-out
+    /// deployment replicates ([`crate::cluster::scaleout`]). Sampled
+    /// Zipf ranks are scattered over the id space ([`scatter`]), so the
+    /// hot ids are the scattered images of ranks `0..k`, deduplicated
+    /// (rare scatter collisions merge key identities) and sorted for
+    /// binary search. Uniform has no hot set.
+    pub fn hot_keys(&self, k: usize) -> Vec<u64> {
+        match self {
+            KeyDist::Uniform { .. } => Vec::new(),
+            KeyDist::Zipf(z) => {
+                let k = (k as u64).min(z.n());
+                let mut ids: Vec<u64> = (0..k).map(|r| scatter(r, z.n())).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                ids
+            }
         }
     }
 
@@ -125,10 +163,7 @@ impl KeyDist {
 /// rare collisions merge key identities, which only (negligibly)
 /// sharpens the skew — harmless for cache/popularity behaviour.
 fn scatter(rank: u64, n: u64) -> u64 {
-    let mut z = rank.wrapping_add(0x9E3779B97F4A7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    (z ^ (z >> 31)) % n
+    crate::sim::mix64(rank) % n
 }
 
 #[cfg(test)]
@@ -192,6 +227,26 @@ mod tests {
         }
         assert!(acc > 0);
         assert!(t0.elapsed().as_secs_f64() < 5.0, "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn hot_keys_are_the_scattered_top_ranks() {
+        let n = 1_000_000;
+        let d = KeyDist::zipf(n, 0.9);
+        let hot = d.hot_keys(8);
+        assert!(hot.len() <= 8 && !hot.is_empty());
+        for r in 0..8u64 {
+            assert!(hot.binary_search(&scatter(r, n)).is_ok(), "rank {r} missing");
+        }
+        assert!(hot.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        assert!(KeyDist::uniform(n).hot_keys(8).is_empty());
+    }
+
+    #[test]
+    fn labels_carry_the_actual_theta() {
+        assert_eq!(KeyDist::uniform(10).label(), "uniform");
+        assert_eq!(KeyDist::zipf(10, 0.9).label(), "zipf-0.9");
+        assert_eq!(KeyDist::zipf(10, 0.99).label(), "zipf-0.99");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Workload generators: key distributions (uniform / Zipfian-0.9, §VI-B),
+//! Workload generators: key distributions (uniform / Zipfian with
+//! θ ∈ [0, 1), §VI-B uses 0.9; the scale-out sweeps push to 0.99),
 //! KVS op mixes, transaction shapes (§VI-C), and the synthetic
 //! Amazon-Review-like DLRM query streams (§VI-D substitution — see
 //! DESIGN.md).

@@ -24,6 +24,10 @@ const COMMANDS: &[&[&str]] = &[
     // Covers all three dlrm tables (saturation, sweep, batched) in one
     // registered subcommand — `cli::tables_for` routes it like the rest.
     &["dlrm", "--batch", "4"],
+    // Both scale-out tables: the machines x skew sweep and the hot-key
+    // mitigation run (read-any routing exercises the least-loaded
+    // tie-break, a classic nondeterminism trap).
+    &["scaleout", "--machines", "1,2", "--theta", "0.99", "--hot-replicas", "2"],
 ];
 
 fn render(args: &[&str]) -> String {

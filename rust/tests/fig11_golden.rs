@@ -18,8 +18,8 @@ use orca::serving::{ClosedLoop, ServingPipeline};
 use orca::sim::{cycles_ps, transfer_ps, US};
 
 fn close(a: f64, b: f64, what: &str) {
-    let rel = (a - b).abs() / b.abs().max(1e-12);
-    assert!(rel < 0.01, "{what}: cluster {a} vs reference {b} ({rel:.4} rel)");
+    // The 1%-tolerance arithmetic lives in one place now (testing::).
+    orca::assert_close!(a, b, 1.0, "{what}");
 }
 
 /// The pre-cluster `ChainCosts`, verbatim.

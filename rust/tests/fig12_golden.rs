@@ -17,8 +17,8 @@ use orca::experiments::Opts;
 use orca::workload::{DatasetProfile, AMAZON_PROFILES};
 
 fn close(a: f64, b: f64, what: &str) {
-    let rel = (a - b).abs() / b.abs().max(1e-12);
-    assert!(rel < 0.01, "{what}: refactored {a} vs reference {b} ({rel:.4} rel)");
+    // The 1%-tolerance arithmetic lives in one place now (testing::).
+    orca::assert_close!(a, b, 1.0, "{what}");
 }
 
 /// The measured movement profile, reconstructed from the row's public

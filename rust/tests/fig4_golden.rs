@@ -16,8 +16,8 @@ use orca::mem::{Dram, Llc, LlcLookup, Nvm};
 use orca::sim::{Rng, SEC};
 
 fn close(a: f64, b: f64, what: &str) {
-    let rel = (a - b).abs() / b.abs().max(1e-12);
-    assert!(rel < 0.01, "{what}: refactored {a} vs reference {b} ({rel:.4} rel)");
+    // The 1%-tolerance arithmetic lives in one place now (testing::).
+    orca::assert_close!(a, b, 1.0, "{what}");
 }
 
 /// The pre-refactor steering body, verbatim: policy resolved to a

@@ -1,0 +1,64 @@
+//! Golden parity for scale-out serving: an N=1 fleet with mitigation
+//! off IS the single-machine serving path, so `experiments::scaleout`
+//! must reproduce the `kvs::run` numbers — the same numbers
+//! `serving_golden.rs` pins to the pre-refactor pipeline — within 1%
+//! (in practice the driver is call-for-call identical, so they match
+//! exactly; the 1% tolerance is the contract, exactness the bonus).
+
+use orca::config::AccelMem;
+use orca::experiments::kvs::{self, KvDesign, Load, RequestStream};
+use orca::experiments::{scaleout, Opts};
+use orca::workload::{KeyDist, KvMix};
+
+fn opts() -> Opts {
+    Opts {
+        keys: 50_000,
+        requests: 20_000,
+        seed: 9,
+        ..Opts::default()
+    }
+}
+
+#[test]
+fn n1_scaleout_matches_the_single_machine_serving_path_within_1pct() {
+    let o = opts();
+    for (dist, theta) in [
+        (KeyDist::uniform(o.keys), 0.0),
+        (KeyDist::zipf(o.keys, 0.9), 0.9),
+        (KeyDist::zipf(o.keys, 0.99), 0.99),
+    ] {
+        let stream =
+            RequestStream::generate(o.keys, o.requests, &dist, KvMix::GetOnly, 64, o.seed);
+        for load in [Load::Saturation, Load::Open { mops: 2.0 }] {
+            let want = kvs::run(
+                &o.testbed,
+                KvDesign::Orca(AccelMem::None),
+                &stream,
+                32,
+                load,
+                o.seed,
+            );
+            let got = scaleout::run_point(&o.testbed, &stream, &dist, 1, 1, load, o.seed);
+            let what = format!("theta {theta} {load:?}");
+            orca::assert_close!(got.mops, want.mops, 1.0, "{what} mops");
+            orca::assert_close!(got.avg_us, want.avg_us, 1.0, "{what} avg");
+            orca::assert_close!(got.p50_us, want.p50_us, 1.0, "{what} p50");
+            orca::assert_close!(got.p99_us, want.p99_us, 1.0, "{what} p99");
+            orca::assert_close!(got.p999_us, want.p999_us, 1.0, "{what} p999");
+            assert_eq!(got.per_machine, vec![o.requests]);
+            assert_eq!(got.imbalance, 1.0, "one machine is trivially balanced");
+        }
+    }
+}
+
+#[test]
+fn n1_scaleout_is_deterministic_and_seed_steered() {
+    let o = opts();
+    let dist = KeyDist::zipf(o.keys, 0.99);
+    let stream = RequestStream::generate(o.keys, 5_000, &dist, KvMix::GetOnly, 64, o.seed);
+    let a = scaleout::run_point(&o.testbed, &stream, &dist, 2, 1, Load::Saturation, 1);
+    let b = scaleout::run_point(&o.testbed, &stream, &dist, 2, 1, Load::Saturation, 1);
+    assert_eq!(a, b, "same seed must give bit-identical fleet metrics");
+    let c = scaleout::run_point(&o.testbed, &stream, &dist, 2, 1, Load::Saturation, 2);
+    assert_ne!(a, c, "different seed must actually change the run");
+}

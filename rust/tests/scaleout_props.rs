@@ -1,0 +1,165 @@
+//! Invariant tests for the scale-out router (`cluster::scaleout`),
+//! through the in-repo property harness: exactly-one-home (or exactly
+//! K replicas) routing, the consistent-hashing rebalance bound when the
+//! fleet grows N → N+1, and conservation of requests across a mid-run
+//! machine-count change.
+
+use orca::cluster::{run_fleet, FleetDesign, Router};
+use orca::config::Testbed;
+use orca::mem::{Access, MemTrace};
+use orca::serving::{Cpu, Load};
+use orca::testing::{base_seed, forall, Gen};
+
+#[test]
+fn every_key_routes_to_exactly_one_home_or_k_replicas() {
+    forall(
+        base_seed(),
+        40,
+        |g: &mut Gen| {
+            let machines = g.usize(1..9);
+            let k = g.usize(1..5);
+            let hot = g.vec(0..64, |g| g.u64(0..1_000_000));
+            (machines, k, hot)
+        },
+        |(machines, k, hot)| {
+            let r = Router::new(*machines, hot.clone(), *k);
+            for key in 0..2_000u64 {
+                let home = r.home(key);
+                if home >= *machines {
+                    return Err(format!("key {key} homed on dead machine {home}"));
+                }
+                let reps = r.replicas(key);
+                let want = if r.is_hot(key) { k.min(machines) } else { &1 };
+                if reps.len() != *want {
+                    return Err(format!(
+                        "key {key}: {} replicas, want {want} (hot={})",
+                        reps.len(),
+                        r.is_hot(key)
+                    ));
+                }
+                let mut uniq = reps.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                if uniq.len() != reps.len() {
+                    return Err(format!("key {key}: duplicate replicas {reps:?}"));
+                }
+                if reps[0] != home {
+                    return Err(format!("key {key}: home {home} not first in {reps:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn growing_the_fleet_moves_at_most_the_consistent_hashing_bound() {
+    // Adding machine N to an N-machine ring may only move keys *onto*
+    // the new machine, and only ~1/(N+1) of them.
+    let samples = 20_000u64;
+    for n in 1..8usize {
+        let before = Router::new(n, Vec::new(), 1);
+        let after = Router::new(n + 1, Vec::new(), 1);
+        let mut moved = 0u64;
+        for key in 0..samples {
+            let (a, b) = (before.home(key), after.home(key));
+            if a != b {
+                moved += 1;
+                assert_eq!(
+                    b, n,
+                    "key {key} moved {a} → {b}, but only the new machine {n} may gain keys"
+                );
+            }
+        }
+        let frac = moved as f64 / samples as f64;
+        let fair = 1.0 / (n + 1) as f64;
+        assert!(
+            frac <= 2.5 * fair,
+            "N={n}: moved {frac:.3} of keys, consistent-hashing bound ~{fair:.3}"
+        );
+        assert!(
+            frac >= 0.2 * fair,
+            "N={n}: moved only {frac:.4} — the new machine got (almost) no keyspace"
+        );
+    }
+}
+
+#[test]
+fn no_request_is_lost_or_duplicated_across_a_midrun_growth() {
+    // A stream rerouted mid-run from an N-machine ring to an
+    // (N+1)-machine ring: every request resolves to exactly one target
+    // set on a live machine — nothing dropped, nothing double-routed
+    // (hot PUTs fan to exactly K, by design).
+    forall(
+        base_seed() ^ 0x5CA1E,
+        20,
+        |g: &mut Gen| {
+            let n = g.usize(1..7);
+            let k = g.usize(1..4);
+            let grow_at = g.usize(1_000..9_000);
+            let reqs = g.vec(10_000..10_001, |g| (g.u64(0..100_000), g.bool()));
+            (n, k, grow_at, reqs)
+        },
+        |(n, k, grow_at, reqs)| {
+            let hot: Vec<u64> = (0..256).collect();
+            let small = Router::new(*n, hot.clone(), *k);
+            let grown = Router::new(n + 1, hot, *k);
+            let mut loads = vec![0u64; n + 1];
+            let mut routed = 0usize;
+            for (i, &(key, is_put)) in reqs.iter().enumerate() {
+                let (router, live) = if i < *grow_at { (&small, *n) } else { (&grown, n + 1) };
+                let t = router.targets(key, is_put, &loads);
+                let want = if router.is_hot(key) && is_put {
+                    k.min(&live)
+                } else {
+                    &1
+                };
+                if t.len() != *want {
+                    return Err(format!("request {i}: {} targets, want {want}", t.len()));
+                }
+                let mut uniq = t.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                if uniq.len() != t.len() {
+                    return Err(format!("request {i} duplicated across {t:?}"));
+                }
+                for &m in &t {
+                    if m >= live {
+                        return Err(format!("request {i} routed to dead machine {m}/{live}"));
+                    }
+                    loads[m] += 1;
+                }
+                routed += 1;
+            }
+            if routed != reqs.len() {
+                return Err(format!("{routed}/{} requests routed", reqs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn the_fleet_driver_is_design_agnostic() {
+    // The scale-out layer serves any single-machine Design, not just
+    // ORCA: a two-machine CPU fleet drives end to end.
+    let t = Testbed::paper();
+    let jobs: Vec<MemTrace> = (0..2_000u64)
+        .map(|i| {
+            let mut tr = MemTrace::new();
+            let h = i.wrapping_mul(0x9E3779B97F4A7C15);
+            tr.push(Access::read(h % (1 << 30), 64));
+            tr
+        })
+        .collect();
+    let router = Router::new(2, Vec::new(), 1);
+    let targets: Vec<Vec<usize>> = (0..jobs.len() as u64).map(|k| vec![router.home(k)]).collect();
+    let mut fleet: Vec<FleetDesign> = (0..2)
+        .map(|_| Box::new(Cpu::new(&t, 10, 32, 3)) as FleetDesign)
+        .collect();
+    let m = run_fleet(&mut fleet, &jobs, &targets, Load::Saturation, 64, 64, 3);
+    assert!(m.mops > 0.0);
+    assert_eq!(m.per_machine.iter().sum::<u64>(), 2_000);
+    assert!(m.per_machine.iter().all(|&c| c > 0), "{:?}", m.per_machine);
+    assert!(m.label.starts_with("CPU"));
+}

@@ -26,8 +26,8 @@ use orca::smartnic::SmartNicServer;
 use orca::workload::{KeyDist, KvMix, AMAZON_PROFILES};
 
 fn close(a: f64, b: f64, what: &str) {
-    let rel = (a - b).abs() / b.abs().max(1e-12);
-    assert!(rel < 0.01, "{what}: refactored {a} vs reference {b} ({rel:.4} rel)");
+    // The 1%-tolerance arithmetic lives in one place now (testing::).
+    orca::assert_close!(a, b, 1.0, "{what}");
 }
 
 /// The pre-refactor `kvs::run` datapath, verbatim.

@@ -1,0 +1,128 @@
+//! Property tests for `workload::keydist::Zipf`, run through the
+//! in-repo harness (`testing::for_seeds` / `testing::forall`): head
+//! mass matches the closed form across independent seeds, samples stay
+//! in range for arbitrary (n, θ), θ = 0 degenerates to uniform, and
+//! sampling is deterministic per seed. A failing seed replays with
+//! `ORCA_TEST_SEED=<seed> cargo test --test zipf_props`.
+
+use orca::sim::Rng;
+use orca::testing::{for_seeds, forall};
+use orca::workload::Zipf;
+
+#[test]
+fn empirical_top1_frequency_matches_p_top_across_seeds() {
+    for &theta in &[0.5, 0.9, 0.99] {
+        let z = Zipf::new(100_000, theta);
+        let want = z.p_top();
+        for_seeds(6, |rng| {
+            let draws = 200_000u64;
+            let hits = (0..draws).filter(|_| z.sample(rng) == 0).count();
+            let p = hits as f64 / draws as f64;
+            // Binomial noise at 200k draws: σ ≈ sqrt(p/200k). Allow
+            // 25% relative or 0.005 absolute, whichever is looser.
+            let tol = (want * 0.25).max(0.005);
+            if (p - want).abs() > tol {
+                return Err(format!("theta {theta}: top-1 freq {p} vs p_top {want}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn samples_stay_in_range_for_arbitrary_n_and_theta() {
+    forall(
+        orca::testing::base_seed(),
+        60,
+        |g| {
+            let n = g.u64(1..2_000_000);
+            let theta = g.f64_unit() * 0.999; // [0, 0.999)
+            (n, theta)
+        },
+        |&(n, theta)| {
+            let z = Zipf::new(n, theta);
+            let mut rng = Rng::new(n ^ theta.to_bits());
+            for _ in 0..2_000 {
+                let s = z.sample(&mut rng);
+                if s >= n {
+                    return Err(format!("sample {s} out of [0, {n})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn theta_zero_degenerates_to_uniform() {
+    let n = 10_000u64;
+    let z = Zipf::new(n, 0.0);
+    // Closed form first: every key carries 1/n.
+    orca::assert_close!(z.p_top(), 1.0 / n as f64, 0.01, "p_top at theta 0");
+    for_seeds(4, |rng| {
+        let draws = 500_000u64;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..draws {
+            counts[z.sample(rng) as usize] += 1;
+        }
+        let expected = draws as f64 / n as f64; // 50 per bucket
+        let max = *counts.iter().max().unwrap() as f64;
+        let covered = counts.iter().filter(|&&c| c > 0).count();
+        // Poisson(50): max of 10k buckets lands well under 2x mean,
+        // and essentially every bucket is hit.
+        if max > expected * 2.0 {
+            return Err(format!("hottest bucket {max} vs uniform mean {expected}"));
+        }
+        if covered < (n as usize * 99) / 100 {
+            return Err(format!("only {covered}/{n} buckets covered"));
+        }
+        // And rank 0 is *not* special: its mass is the uniform share.
+        let p0 = counts[0] as f64 / draws as f64;
+        if (p0 - 1.0 / n as f64).abs() > 5.0 / draws as f64 * expected {
+            return Err(format!("rank 0 mass {p0} vs uniform {}", 1.0 / n as f64));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sampling_is_deterministic_per_seed() {
+    let z = Zipf::new(1_000_000, 0.9);
+    for_seeds(5, |rng| {
+        // Reconstruct an identical stream from the same state.
+        let mut twin = rng.clone();
+        for i in 0..1_000 {
+            let a = z.sample(rng);
+            let b = z.sample(&mut twin);
+            if a != b {
+                return Err(format!("draw {i} diverged: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+    // Distinct seeds must actually steer the stream.
+    let mut a = Rng::new(1);
+    let mut b = Rng::new(2);
+    let same = (0..200).filter(|_| z.sample(&mut a) == z.sample(&mut b)).count();
+    assert!(same < 100, "independent seeds produced {same}/200 identical draws");
+}
+
+#[test]
+fn head_mass_decreases_in_rank() {
+    // p_rank must be monotone and sum(head) must match sampled head
+    // mass — a shape check the top-1 test alone can't see.
+    let z = Zipf::new(50_000, 0.99);
+    for r in 0..63u64 {
+        assert!(z.p_rank(r) > z.p_rank(r + 1), "rank {r} not monotone");
+    }
+    let head_form: f64 = (0..64).map(|r| z.p_rank(r)).sum();
+    for_seeds(4, |rng| {
+        let draws = 200_000u64;
+        let hits = (0..draws).filter(|_| z.sample(rng) < 64).count();
+        let p = hits as f64 / draws as f64;
+        if (p - head_form).abs() > 0.02 {
+            return Err(format!("top-64 mass {p} vs closed form {head_form}"));
+        }
+        Ok(())
+    });
+}
