@@ -1,6 +1,6 @@
 //! `cargo bench` harness (hand-rolled; no criterion offline).
 //!
-//! Two kinds of benchmarks:
+//! Three kinds of benchmarks:
 //!
 //! 1. **Paper regeneration** — one bench per table/figure, printing the
 //!    paper-shape rows (same code paths as the `orca` CLI) with wall
@@ -8,30 +8,68 @@
 //!    evaluation.
 //! 2. **Hot-path microbenchmarks** — simulator throughput numbers the
 //!    §Perf pass tracks (ns/op over millions of iterations).
+//! 3. **Engine differential rows** — the same scaleout-shaped event
+//!    schedule driven through the reference `BinaryHeap` engine and the
+//!    timer wheel, with each optimization (engine swap, inline events,
+//!    batched insertion) as its own row so the speedup decomposes.
+//!
+//! Every run also writes `BENCH_perf.json` at the repo root: one row
+//! per bench with wall seconds, executed-event count and events/sec
+//! (CI's `bench-smoke` job diffs it against `BENCH_baseline.json` via
+//! `tools/bench_check.py`). Set `ORCA_BENCH_QUICK=1` to shrink every
+//! workload ~20x for a smoke run.
 
 use orca::cli;
 use orca::experiments::{self, Opts};
+use orca::sim::{mix64, ops_executed, QueueKind, Sim};
 use std::time::Instant;
 
+struct Row {
+    name: String,
+    secs: f64,
+    /// Executed simulator operations (0 when the row has no event loop).
+    events: u64,
+}
+
 struct Bench {
-    runs: Vec<(String, f64)>,
+    rows: Vec<Row>,
+    quick: bool,
 }
 
 impl Bench {
-    fn new() -> Self {
-        Bench { runs: Vec::new() }
+    fn new(quick: bool) -> Self {
+        Bench {
+            rows: Vec::new(),
+            quick,
+        }
     }
 
+    fn record(&mut self, name: &str, secs: f64, events: u64) {
+        if events > 0 {
+            let eps = events as f64 / secs.max(1e-12);
+            println!("[bench] {name}: {secs:.3}s, {events} events, {eps:.0} events/sec");
+        } else {
+            println!("[bench] {name}: {secs:.3}s");
+        }
+        self.rows.push(Row {
+            name: name.to_string(),
+            secs,
+            events,
+        });
+    }
+
+    /// Wall-clock a block, counting the simulator ops it executes.
     fn time(&mut self, name: &str, f: impl FnOnce()) {
+        let ops0 = ops_executed();
         let t0 = Instant::now();
         f();
         let dt = t0.elapsed().as_secs_f64();
-        println!("\n[bench] {name}: {dt:.3}s\n");
-        self.runs.push((name.to_string(), dt));
+        self.record(name, dt, ops_executed().wrapping_sub(ops0));
     }
 
     /// ns/op microbench: warm up, then measure `iters` iterations.
     fn ns_per_op(&mut self, name: &str, iters: u64, mut f: impl FnMut(u64)) {
+        let iters = if self.quick { (iters / 20).max(1) } else { iters };
         for i in 0..(iters / 10).max(1) {
             f(i);
         }
@@ -39,25 +77,156 @@ impl Bench {
         for i in 0..iters {
             f(i);
         }
-        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let dt = t0.elapsed().as_secs_f64();
+        let ns = dt * 1e9 / iters as f64;
         println!("[bench] {name}: {ns:.1} ns/op ({iters} iters)");
-        self.runs.push((name.to_string(), ns / 1e9));
+        self.rows.push(Row {
+            name: name.to_string(),
+            secs: dt / iters as f64,
+            events: 0,
+        });
     }
 
     fn summary(&self) {
         println!("\n== bench summary ==");
-        for (name, secs) in &self.runs {
-            println!("{name:<46} {secs:>10.4}s");
+        for r in &self.rows {
+            println!("{:<46} {:>12.6}s {:>14}", r.name, r.secs, r.events);
         }
+    }
+
+    /// Emit `BENCH_perf.json` at the repo root (hand-rolled JSON — the
+    /// tree has no serde).
+    fn write_json(&self) {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let eps = if r.events > 0 {
+                r.events as f64 / r.secs.max(1e-12)
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"secs\": {:.9}, \"events\": {}, \"events_per_sec\": {:.1}}}{}\n",
+                r.name,
+                r.secs,
+                r.events,
+                eps,
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s).expect("write BENCH_perf.json");
+        println!("[bench] wrote {path}");
     }
 }
 
+// ---- the scaleout-shaped engine microbench ----------------------------
+//
+// The shape `experiments::scaleout`'s sweep stresses: a fleet of
+// machines, one global Poisson arrival process, and per-request
+// follow-up events (network hop, then per-machine FIFO service) — i.e.
+// events scheduling events while a deep backlog of pre-scheduled
+// arrivals sits in the queue. This is the engine's worst case and the
+// acceptance row: the wheel path must clear >= 10x the reference
+// heap's events/sec on it.
+
+const MACHINES: usize = 64;
+const HOP_PS: u64 = 2_500_000; // the Fig-6 2.5 us inter-machine leg
+const SERVICE_PS: u64 = 400_000;
+const MEAN_GAP_PS: f64 = 15_000.0;
+
+struct Fleet {
+    free: Vec<u64>,
+    done: u64,
+}
+
+fn poisson_arrivals(n: usize) -> Vec<u64> {
+    let mut rng = orca::sim::Rng::new(0xBEEF);
+    let mut t = 0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(MEAN_GAP_PS);
+            t as u64
+        })
+        .collect()
+}
+
+fn fin(_s: &mut Sim<Fleet>, w: &mut Fleet, _req: u64, _b: u64) {
+    w.done += 1;
+}
+
+fn hop(s: &mut Sim<Fleet>, w: &mut Fleet, req: u64, _b: u64) {
+    let m = (mix64(req) % w.free.len() as u64) as usize;
+    let done = w.free[m].max(s.now()) + SERVICE_PS;
+    w.free[m] = done;
+    s.at_call(done, fin, req, 0);
+}
+
+fn arrive(s: &mut Sim<Fleet>, _w: &mut Fleet, req: u64, _b: u64) {
+    s.after_call(HOP_PS, hop, req, 0);
+}
+
+/// How the arrivals enter the engine: the pre-change shape (boxed
+/// closures, one `at` per event) or the optimized paths.
+#[derive(Clone, Copy)]
+enum EngineMode {
+    Boxed,
+    Inline,
+    Batched,
+}
+
+/// Drive one scaleout-shaped schedule; returns (executed, secs).
+/// Timing covers scheduling + the run — insertion cost is the point.
+fn engine_bench(kind: QueueKind, mode: EngineMode, arrivals: &[u64]) -> (u64, f64) {
+    let mut sim: Sim<Fleet> = Sim::with_queue(kind);
+    let mut w = Fleet {
+        free: vec![0; MACHINES],
+        done: 0,
+    };
+    let t0 = Instant::now();
+    match mode {
+        EngineMode::Boxed => {
+            for (i, &at) in arrivals.iter().enumerate() {
+                let req = i as u64;
+                sim.at(at, move |s, _w| {
+                    s.after(HOP_PS, move |s, w: &mut Fleet| {
+                        let m = (mix64(req) % w.free.len() as u64) as usize;
+                        let done = w.free[m].max(s.now()) + SERVICE_PS;
+                        w.free[m] = done;
+                        s.at(done, |_s, w: &mut Fleet| w.done += 1);
+                    });
+                });
+            }
+        }
+        EngineMode::Inline => {
+            for (i, &at) in arrivals.iter().enumerate() {
+                sim.at_call(at, arrive, i as u64, 0);
+            }
+        }
+        EngineMode::Batched => {
+            let items: Vec<(u64, u64, u64)> = arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, &at)| (at, i as u64, 0))
+                .collect();
+            sim.schedule_run(arrive, &items);
+        }
+    }
+    sim.run(&mut w);
+    assert_eq!(w.done as usize, arrivals.len(), "every request must finish");
+    (sim.executed(), t0.elapsed().as_secs_f64())
+}
+
 fn main() {
-    let mut b = Bench::new();
+    let quick = std::env::var("ORCA_BENCH_QUICK").map_or(false, |v| !v.is_empty() && v != "0");
+    let mut b = Bench::new(quick);
     let opts = Opts {
         seed: 42,
-        keys: 500_000,
-        requests: 100_000,
+        keys: if quick { 50_000 } else { 500_000 },
+        requests: if quick { 5_000 } else { 100_000 },
         ..Opts::default()
     };
 
@@ -73,6 +242,11 @@ fn main() {
     b.time("tab3_power", || experiments::tab3::report(&opts).print());
     b.time("fig11_txn_latency", || experiments::fig11::report(&opts).print());
     b.time("fig12_dlrm_throughput", || experiments::fig12::report(&opts).print());
+    b.time("scaleout_sweep", || {
+        for t in experiments::scaleout::report(&opts, &[1, 4], Some(0.9), 4) {
+            t.print();
+        }
+    });
 
     // ---- ablations ---------------------------------------------------------
     b.time("ablation_hard_ip_coherence_controller", || {
@@ -89,8 +263,38 @@ fn main() {
         cli::fig8(&fat).print();
     });
 
+    // ---- engine differential rows (the perf-pass acceptance rows) ---------
+    let n = if quick { 50_000 } else { 500_000 };
+    let arrivals = poisson_arrivals(n);
+    for (name, kind, mode) in [
+        (
+            "engine_scaleout_heap_boxed",
+            QueueKind::ReferenceHeap,
+            EngineMode::Boxed,
+        ),
+        ("engine_scaleout_wheel_boxed", QueueKind::Wheel, EngineMode::Boxed),
+        ("engine_scaleout_wheel_inline", QueueKind::Wheel, EngineMode::Inline),
+        (
+            "engine_scaleout_wheel_batched",
+            QueueKind::Wheel,
+            EngineMode::Batched,
+        ),
+    ] {
+        // Best of 3: the differential rows feed a ratio gate, so shave
+        // scheduler/allocator noise off both sides.
+        let (mut ev, mut secs) = (0u64, f64::MAX);
+        for _ in 0..3 {
+            let (e, s) = engine_bench(kind, mode, &arrivals);
+            if s < secs {
+                ev = e;
+                secs = s;
+            }
+        }
+        b.record(name, secs, ev);
+    }
+
     // ---- simulator hot paths (§Perf) -------------------------------------
-    use orca::mem::{Access, MemTrace};
+    use orca::mem::{Access, MemTrace, SocketArena};
     use orca::sim::{BandwidthLedger, Histogram, Rng};
 
     let mut rng = Rng::new(1);
@@ -108,6 +312,18 @@ fn main() {
         std::hint::black_box(ledger.acquire(i * 100, 50));
     });
 
+    // The ledger's sparse-window map with the stdlib SipHash vs the
+    // in-tree mix64 hasher it now uses (same insert/lookup pattern).
+    let mut sip: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    b.ns_per_op("ledger_window_map_siphash", 10_000_000, |i| {
+        *sip.entry(i % 8_192).or_insert(0) += 50;
+    });
+    let mut mx: std::collections::HashMap<u64, u64, orca::sim::Mix64Build> =
+        std::collections::HashMap::default();
+    b.ns_per_op("ledger_window_map_mix64", 10_000_000, |i| {
+        *mx.entry(i % 8_192).or_insert(0) += 50;
+    });
+
     let mut llc = orca::mem::Llc::new(orca::config::LlcParams::default());
     let mut r2 = Rng::new(2);
     b.ns_per_op("llc_access", 5_000_000, |_| {
@@ -120,8 +336,10 @@ fn main() {
         std::hint::black_box(cache.access(r3.below(7 << 30)));
     });
 
+    // The arena-indexed accelerator path (was Rc<RefCell> sharing).
     let tb = orca::config::Testbed::paper();
-    let mut accel = orca::accel::CcAccelerator::new(&tb, orca::config::AccelMem::None);
+    let mut arena = SocketArena::new();
+    let mut accel = orca::accel::CcAccelerator::new(&tb, orca::config::AccelMem::None, &mut arena);
     let trace = {
         let mut t = MemTrace::new();
         t.push(Access::read(0x1000, 64));
@@ -129,9 +347,10 @@ fn main() {
         t.push(Access::read(0x3000, 64));
         t
     };
-    let jobs: Vec<(u64, MemTrace)> = (0..100_000).map(|_| (0u64, trace.clone())).collect();
-    b.time("accel_serve_stream_100k_requests", || {
-        std::hint::black_box(accel.serve_stream(&jobs));
+    let reqs = if quick { 10_000 } else { 100_000 };
+    let jobs: Vec<(u64, MemTrace)> = (0..reqs).map(|_| (0u64, trace.clone())).collect();
+    b.time("accel_serve_stream_arena", || {
+        std::hint::black_box(accel.serve_stream(&jobs, &mut arena));
     });
 
     let zipf = orca::workload::Zipf::new(100_000_000, 0.9);
@@ -154,4 +373,5 @@ fn main() {
     });
 
     b.summary();
+    b.write_json();
 }

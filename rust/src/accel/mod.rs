@@ -9,6 +9,12 @@
 //! * [`CcAccelerator`] — the composed device: local cache in the coherence
 //!   domain, coherence controller with bounded outstanding UPI reads, and
 //!   optional accelerator-local memory (ORCA-LD / ORCA-LH).
+//!
+//! Shared socket state (the UPI link, the host [`MemorySystem`]) lives in
+//! a [`SocketArena`] and is addressed by `Copy` ids: shards that should
+//! contend hold the same [`LinkId`]/[`MemId`] and thread `&mut
+//! SocketArena` through each call, so the per-access path is an array
+//! index rather than an `Rc<RefCell>` borrow.
 
 pub mod apu;
 pub mod scheduler;
@@ -19,23 +25,8 @@ pub use scheduler::RoundRobin;
 pub use sq_handler::SqHandler;
 
 use crate::config::{AccelMem, Testbed};
-use crate::mem::{Access, LocalMemory, MemTrace, MemorySystem, SharedMemorySystem};
+use crate::mem::{Access, LinkId, LocalMemory, MemId, MemTrace, MemorySystem, SocketArena};
 use crate::sim::{cycles_ps, transfer_ps, BandwidthLedger, MultiServer, Server, NS};
-use std::cell::RefCell;
-use std::rc::Rc;
-
-/// The cc-interconnect's data-return path. There is **one** physical
-/// UPI link per socket, so accelerator shards gathering from host
-/// memory must share it — pass one handle to every shard
-/// ([`CcAccelerator::with_upi_link`]) and the link's bandwidth becomes
-/// the aggregate cap that binds when per-shard controller bounds no
-/// longer do.
-pub type UpiLink = Rc<RefCell<BandwidthLedger>>;
-
-/// A fresh (unshared) UPI-link ledger.
-pub fn upi_link() -> UpiLink {
-    Rc::new(RefCell::new(BandwidthLedger::new()))
-}
 
 /// The memory path application data takes from the APU.
 #[derive(Debug)]
@@ -48,14 +39,17 @@ enum MemPath {
     /// the returned lines serialize on the (possibly shared) UPI link.
     /// The memory-service leg of the round trip comes from the (possibly
     /// shared) [`MemorySystem`] — LLC hit, DRAM, or NVM by domain — not
-    /// from a fixed DRAM-latency constant.
+    /// from a fixed DRAM-latency constant. There is **one** physical UPI
+    /// link per socket, so shards gathering from host memory share a
+    /// [`LinkId`]: the link's bandwidth becomes the aggregate cap that
+    /// binds when per-shard controller bounds no longer do.
     Host {
         coh: MultiServer,
         /// Interconnect-only RTT: hops + controller, no memory service.
         hop_ps: u64,
-        link: UpiLink,
+        link: LinkId,
         upi_gbs: f64,
-        mem: SharedMemorySystem,
+        mem: MemId,
     },
     /// ORCA-LD / ORCA-LH: data in accelerator-attached memory (the
     /// shared [`LocalMemory`] model, unrestricted residency — the KVS
@@ -63,34 +57,10 @@ enum MemPath {
     Local(LocalMemory),
 }
 
-impl Clone for MemPath {
-    /// A cloned accelerator is an independent device: it gets a fresh,
-    /// unconsumed UPI-link ledger and a private snapshot of the memory
-    /// system, never a silently shared one. Sharing is only ever
-    /// explicit, via [`CcAccelerator::with_upi_link`] /
-    /// [`CcAccelerator::with_shared`].
-    fn clone(&self) -> Self {
-        match self {
-            MemPath::Host {
-                coh,
-                hop_ps,
-                link: _,
-                upi_gbs,
-                mem,
-            } => MemPath::Host {
-                coh: coh.clone(),
-                hop_ps: *hop_ps,
-                link: upi_link(),
-                upi_gbs: *upi_gbs,
-                mem: Rc::new(RefCell::new(mem.borrow().clone())),
-            },
-            MemPath::Local(local) => MemPath::Local(local.clone()),
-        }
-    }
-}
-
-/// The composed cc-accelerator (timing model).
-#[derive(Clone, Debug)]
+/// The composed cc-accelerator (timing model). Not `Clone`: a copy
+/// would silently alias the same arena ids; build each shard explicitly
+/// and share ids only on purpose.
+#[derive(Debug)]
 pub struct CcAccelerator {
     /// APU request slots (256 outstanding, §V).
     slots: MultiServer,
@@ -130,9 +100,9 @@ pub fn host_access_service_ps(
     a: &Access,
     hop_ps: u64,
     upi_gbs: f64,
-    mem: &SharedMemorySystem,
+    mem: &mut MemorySystem,
 ) -> u64 {
-    let mem_ps = mem.borrow_mut().access(now, a).saturating_sub(now);
+    let mem_ps = mem.access(now, a).saturating_sub(now);
     let extra = transfer_ps(u64::from(a.bytes).saturating_sub(64), upi_gbs);
     hop_ps + mem_ps + extra
 }
@@ -141,32 +111,26 @@ pub fn host_access_service_ps(
 /// link; returns the drain time. Uncontended this finishes well inside
 /// the access round trip, but across many consumers it is the
 /// aggregate cap.
-pub fn upi_serialize_ps(now: u64, bytes: u64, upi_gbs: f64, link: &UpiLink) -> u64 {
+pub fn upi_serialize_ps(now: u64, bytes: u64, upi_gbs: f64, link: &mut BandwidthLedger) -> u64 {
     let wire = transfer_ps(bytes.max(64), upi_gbs);
-    let (_s, done) = link.borrow_mut().acquire(now, wire);
+    let (_s, done) = link.acquire(now, wire);
     done
 }
 
 impl CcAccelerator {
-    pub fn new(t: &Testbed, mem: AccelMem) -> Self {
-        Self::with_upi_link(t, mem, upi_link())
+    /// A standalone device: allocates a private UPI link and host
+    /// memory system in `arena` (sharing is only ever explicit, via
+    /// [`Self::with_shared`]).
+    pub fn new(t: &Testbed, mem: AccelMem, arena: &mut SocketArena) -> Self {
+        let link = arena.add_link(BandwidthLedger::new());
+        let memsys = arena.add_mem(MemorySystem::new(t));
+        Self::with_shared(t, mem, link, memsys)
     }
 
-    /// Build a shard that shares `link` with the other shards on the
-    /// same socket (single-shard callers can just use [`Self::new`]);
-    /// the device gets a private host [`MemorySystem`].
-    pub fn with_upi_link(t: &Testbed, mem: AccelMem, link: UpiLink) -> Self {
-        Self::with_shared(t, mem, link, MemorySystem::shared(t))
-    }
-
-    /// Build a shard that shares both the UPI link and the host memory
-    /// system with the other shards on the same socket.
-    pub fn with_shared(
-        t: &Testbed,
-        mem: AccelMem,
-        link: UpiLink,
-        memsys: SharedMemorySystem,
-    ) -> Self {
+    /// Build a shard that shares the UPI link and/or the host memory
+    /// system with the other shards on the same socket: pass the same
+    /// ids (into the same arena) to every shard that should contend.
+    pub fn with_shared(t: &Testbed, mem: AccelMem, link: LinkId, memsys: MemId) -> Self {
         let mem_path = match mem {
             AccelMem::None => MemPath::Host {
                 coh: MultiServer::new(t.accel.coh_outstanding),
@@ -188,7 +152,7 @@ impl CcAccelerator {
     }
 
     /// One data access; returns completion time.
-    fn access(&mut self, now: u64, a: &Access) -> u64 {
+    fn access(&mut self, now: u64, a: &Access, arena: &mut SocketArena) -> u64 {
         let bytes = a.bytes as u64;
         self.data_bytes += bytes;
         match &mut self.mem_path {
@@ -202,9 +166,10 @@ impl CcAccelerator {
                 // Hops + measured memory leg + size extra; the slot is
                 // held for the whole round trip, and the returned line
                 // also serializes on the shared UPI link.
-                let service = host_access_service_ps(now, a, *hop_ps, *upi_gbs, mem);
+                let (memsys, ledger) = arena.mem_link(*mem, *link);
+                let service = host_access_service_ps(now, a, *hop_ps, *upi_gbs, memsys);
                 let (_s, done, _lane) = coh.acquire(now, service);
-                done.max(upi_serialize_ps(now, bytes, *upi_gbs, link))
+                done.max(upi_serialize_ps(now, bytes, *upi_gbs, ledger))
             }
             MemPath::Local(local) => local.access(now, a),
         }
@@ -215,7 +180,7 @@ impl CcAccelerator {
     /// internal event heap, so the bounded coherence-controller slots see
     /// the same schedule the hardware would. Returns per-job completion
     /// times. Use this (not repeated [`Self::serve`]) for throughput runs.
-    pub fn serve_stream(&mut self, jobs: &[(u64, MemTrace)]) -> Vec<u64> {
+    pub fn serve_stream(&mut self, jobs: &[(u64, MemTrace)], arena: &mut SocketArena) -> Vec<u64> {
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
 
@@ -255,7 +220,7 @@ impl CcAccelerator {
             let (lo, hi) = steps[j][s];
             let mut step_end = t;
             for a in &jobs[j].1.accesses[lo..hi] {
-                let d = self.access(t, a);
+                let d = self.access(t, a, arena);
                 step_end = step_end.max(d);
             }
             heap.push(Reverse((step_end, j, s + 1)));
@@ -269,7 +234,7 @@ impl CcAccelerator {
     ///
     /// Dependency steps serialize; accesses within a step overlap (the
     /// FSM keeps the request parked in its slot between steps, §III-C).
-    pub fn serve(&mut self, now: u64, trace: &MemTrace) -> u64 {
+    pub fn serve(&mut self, now: u64, trace: &MemTrace, arena: &mut SocketArena) -> u64 {
         self.requests += 1;
         // Acquire an APU slot; the slot is occupied for the whole request.
         // Estimate occupancy = pipeline + critical path; refined below.
@@ -281,7 +246,7 @@ impl CcAccelerator {
                 // New dependency step: wait for the previous step to drain.
                 t = step_end;
             }
-            let done = self.access(t, a);
+            let done = self.access(t, a, arena);
             step_end = step_end.max(done);
         }
         step_end
@@ -316,8 +281,9 @@ mod tests {
     #[test]
     fn single_get_latency_is_three_rtts() {
         let tb = Testbed::paper();
-        let mut acc = CcAccelerator::new(&tb, AccelMem::None);
-        let done = acc.serve(0, &get_trace(0));
+        let mut arena = SocketArena::new();
+        let mut acc = CcAccelerator::new(&tb, AccelMem::None, &mut arena);
+        let done = acc.serve(0, &get_trace(0), &mut arena);
         let rtt = host_access_rtt_ps(&tb);
         let want = 3 * rtt;
         let got = done;
@@ -331,10 +297,11 @@ mod tests {
         // 256 APU slots over a 24-outstanding controller: sustained GET
         // rate ≈ coh_outstanding / rtt / 3 accesses.
         let tb = Testbed::paper();
-        let mut acc = CcAccelerator::new(&tb, AccelMem::None);
+        let mut arena = SocketArena::new();
+        let mut acc = CcAccelerator::new(&tb, AccelMem::None, &mut arena);
         let n = 50_000u64;
         let jobs: Vec<(u64, MemTrace)> = (0..n).map(|i| (0u64, get_trace(i))).collect();
-        let done = acc.serve_stream(&jobs);
+        let done = acc.serve_stream(&jobs, &mut arena);
         let last = *done.iter().max().unwrap();
         let rate_mops = n as f64 / (last as f64 / 1e12) / 1e6;
         let rtt_s = host_access_rtt_ps(&tb) as f64 / 1e12;
@@ -358,25 +325,28 @@ mod tests {
         let n = 30_000u64;
         let jobs: Vec<(u64, MemTrace)> = (0..n).map(|i| (0u64, get_trace(i))).collect();
 
-        let link = upi_link();
-        let mut a = CcAccelerator::with_upi_link(&tb, AccelMem::None, link.clone());
-        let mut b = CcAccelerator::with_upi_link(&tb, AccelMem::None, link);
+        let mut arena = SocketArena::new();
+        let wire = arena.add_link(BandwidthLedger::new());
+        let m1 = arena.add_mem(MemorySystem::new(&tb));
+        let m2 = arena.add_mem(MemorySystem::new(&tb));
+        let mut a = CcAccelerator::with_shared(&tb, AccelMem::None, wire, m1);
+        let mut b = CcAccelerator::with_shared(&tb, AccelMem::None, wire, m2);
         let shared = a
-            .serve_stream(&jobs)
+            .serve_stream(&jobs, &mut arena)
             .into_iter()
             .max()
             .unwrap()
-            .max(b.serve_stream(&jobs).into_iter().max().unwrap());
+            .max(b.serve_stream(&jobs, &mut arena).into_iter().max().unwrap());
 
-        let mut c = CcAccelerator::new(&tb, AccelMem::None);
-        // Clone semantics: an independent device with its own link.
-        let mut d = c.clone();
+        // Independent devices: fresh ids each — nothing aliased.
+        let mut c = CcAccelerator::new(&tb, AccelMem::None, &mut arena);
+        let mut d = CcAccelerator::new(&tb, AccelMem::None, &mut arena);
         let independent = c
-            .serve_stream(&jobs)
+            .serve_stream(&jobs, &mut arena)
             .into_iter()
             .max()
             .unwrap()
-            .max(d.serve_stream(&jobs).into_iter().max().unwrap());
+            .max(d.serve_stream(&jobs, &mut arena).into_iter().max().unwrap());
 
         let ratio = shared as f64 / independent as f64;
         assert!((1.7..2.3).contains(&ratio), "shared/independent = {ratio}");
@@ -385,11 +355,12 @@ mod tests {
     #[test]
     fn local_memory_cuts_latency() {
         let tb = Testbed::paper();
-        let mut base = CcAccelerator::new(&tb, AccelMem::None);
-        let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr);
+        let mut arena = SocketArena::new();
+        let mut base = CcAccelerator::new(&tb, AccelMem::None, &mut arena);
+        let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr, &mut arena);
         let t = get_trace(0);
-        let base_done = base.serve(0, &t);
-        let ld_done = ld.serve(0, &t);
+        let base_done = base.serve(0, &t, &mut arena);
+        let ld_done = ld.serve(0, &t, &mut arena);
         assert!(
             ld_done * 2 < base_done,
             "local {ld_done} vs host {base_done}"
@@ -401,10 +372,11 @@ mod tests {
         // §VI-B: "ORCA-LH has a higher average latency than ORCA-LD since
         // the workload is not bounded by memory bandwidth".
         let tb = Testbed::paper();
-        let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr);
-        let mut lh = CcAccelerator::new(&tb, AccelMem::LocalHbm);
+        let mut arena = SocketArena::new();
+        let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr, &mut arena);
+        let mut lh = CcAccelerator::new(&tb, AccelMem::LocalHbm, &mut arena);
         let t = get_trace(0);
-        assert!(lh.serve(0, &t) > ld.serve(0, &t));
+        assert!(lh.serve(0, &t, &mut arena) > ld.serve(0, &t, &mut arena));
 
         // But a bandwidth-bound burst finishes sooner on HBM.
         let mut burst = MemTrace::new();
@@ -412,16 +384,17 @@ mod tests {
         for i in 1..2000u64 {
             burst.push(Access::read(i * 64, 64).parallel());
         }
-        let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr);
-        let mut lh = CcAccelerator::new(&tb, AccelMem::LocalHbm);
-        assert!(lh.serve(0, &burst) < ld.serve(0, &burst));
+        let mut ld = CcAccelerator::new(&tb, AccelMem::LocalDdr, &mut arena);
+        let mut lh = CcAccelerator::new(&tb, AccelMem::LocalHbm, &mut arena);
+        assert!(lh.serve(0, &burst, &mut arena) < ld.serve(0, &burst, &mut arena));
     }
 
     #[test]
     fn data_byte_accounting() {
         let tb = Testbed::paper();
-        let mut acc = CcAccelerator::new(&tb, AccelMem::None);
-        acc.serve(0, &get_trace(0));
+        let mut arena = SocketArena::new();
+        let mut acc = CcAccelerator::new(&tb, AccelMem::None, &mut arena);
+        acc.serve(0, &get_trace(0), &mut arena);
         assert_eq!(acc.data_bytes, 192);
         assert_eq!(acc.requests, 1);
     }

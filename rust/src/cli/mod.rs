@@ -451,6 +451,7 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
             "DRAM rd GB/s",
             "DRAM wr GB/s",
             "NVM amp",
+            "events",
         ],
     );
     for (dist, dl) in [
@@ -482,6 +483,7 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
                 format!("{:.2}", r.dram_read_gbs),
                 format!("{:.2}", r.dram_write_gbs),
                 format!("{:.2}x", r.nvm_write_amp),
+                format!("{}", r.events),
             ]);
         }
     }

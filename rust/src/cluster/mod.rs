@@ -57,7 +57,7 @@ pub use scaleout::{run_fleet, FleetDesign, FleetMetrics, Router};
 use crate::config::Testbed;
 use crate::cpoll::NotifyModel;
 use crate::interconnect::Pcie;
-use crate::mem::{Access, Domain, MemorySystem, SharedMemorySystem};
+use crate::mem::{Access, Domain, MemorySystem};
 use crate::net::Network;
 use crate::rnic::Rnic;
 use crate::sim::{cycles_ps, NS};
@@ -85,9 +85,9 @@ pub struct Machine {
     pub port: Network,
     pub rnic: Rnic,
     pub pcie: Pcie,
-    /// The socket's memory system (shared handle, as in the serving
-    /// designs: every consumer on this socket clones it).
-    pub mem: SharedMemorySystem,
+    /// The socket's memory system (owned: the machine is the single
+    /// consumer on this socket, so no shared handle is needed).
+    pub mem: MemorySystem,
     /// APU occupancy per transaction operation.
     pub apu_op_ps: u64,
     notify_floor_ps: u64,
@@ -101,7 +101,7 @@ impl Machine {
             port: Network::new(t.net.clone()),
             rnic: Rnic::new(t.net.clone()),
             pcie: Pcie::new(t.pcie.clone()),
-            mem: MemorySystem::shared(t),
+            mem: MemorySystem::new(t),
             apu_op_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
             notify_floor_ps: NotifyModel::new(t).floor_ps(),
             pcie_leg_ps: (t.pcie.one_way_ns * NS as f64) as u64,
@@ -130,14 +130,12 @@ impl Machine {
     /// Read `bytes` of transaction state from this machine's NVM.
     pub fn nvm_read(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
         self.mem
-            .borrow_mut()
             .access(now, &Access::read(addr, bytes as u32).in_domain(Domain::HostNvm))
     }
 
     /// Append `bytes` to this machine's NVM redo-log region.
     pub fn nvm_append(&mut self, now: u64, addr: u64, bytes: u64) -> u64 {
         self.mem
-            .borrow_mut()
             .access(now, &Access::write(addr, bytes as u32).in_domain(Domain::HostNvm))
     }
 }
@@ -317,7 +315,7 @@ mod tests {
         let tb = t();
         let mut c = Cluster::chain(&tb, 2);
         c.machines[0].nvm_append(0, 0, 256);
-        assert_eq!(c.machines[0].mem.borrow().stats().nvm_logical_write_bytes, 256);
-        assert_eq!(c.machines[1].mem.borrow().stats().nvm_logical_write_bytes, 0);
+        assert_eq!(c.machines[0].mem.stats().nvm_logical_write_bytes, 256);
+        assert_eq!(c.machines[1].mem.stats().nvm_logical_write_bytes, 0);
     }
 }

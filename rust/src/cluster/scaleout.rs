@@ -168,6 +168,10 @@ pub struct FleetMetrics {
     pub per_machine: Vec<u64>,
     /// Hottest machine's routed share over the mean share (1 = balanced).
     pub imbalance: f64,
+    /// Simulator operations executed during the run (engine events plus
+    /// server/ledger acquires across the whole fleet) — the raw count
+    /// the perf harness normalizes to events/sec.
+    pub events: u64,
 }
 
 /// Drive `jobs` through a fleet: `targets[i]` lists the machine(s)
@@ -193,21 +197,12 @@ pub fn run_fleet(
     let machines = designs.len();
     assert!(machines >= 1, "a fleet needs at least one machine");
     assert_eq!(targets.len(), n, "one target set per request");
+    let ops0 = crate::sim::ops_executed();
     let mut rng = Rng::new(seed ^ 0xD1CE);
 
-    // Issue times (the client fleet's aggregate arrival process).
-    let mut issue = Vec::with_capacity(n);
-    match load {
-        Load::Saturation => issue.resize(n, 0u64),
-        Load::Open { mops } => {
-            let mean_gap_ps = 1e6 / mops;
-            let mut tphys = 0f64;
-            for _ in 0..n {
-                tphys += rng.exp(mean_gap_ps);
-                issue.push(tphys as u64);
-            }
-        }
-    }
+    // Issue times (the client fleet's aggregate arrival process),
+    // pre-generated as one sorted batch.
+    let issue = load.arrival_schedule(n, &mut rng);
 
     // Ingress in issue order: every copy charges its own machine's ToR
     // link ledgers and notification path.
@@ -293,6 +288,7 @@ pub fn run_fleet(
             .sum(),
         per_machine,
         imbalance,
+        events: crate::sim::ops_executed().wrapping_sub(ops0),
     }
 }
 

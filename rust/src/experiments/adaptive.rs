@@ -37,8 +37,6 @@ use crate::mem::{Access, DmaWrite, Domain, MemTrace, MemorySystem, SteeringPolic
 use crate::serving::{Load, Orca, RunMetrics, ServingPipeline};
 use crate::sim::Rng;
 use crate::workload::KeyDist;
-use std::cell::RefCell;
-use std::rc::Rc;
 
 /// Base of the NVM region in the simulated address map (above every
 /// DRAM-backed structure the KVS uses).
@@ -214,11 +212,9 @@ pub fn run_policy(
     policy: SteeringPolicy,
     seed: u64,
 ) -> AdaptiveRow {
-    let mem = Rc::new(RefCell::new(
-        MemorySystem::new(t)
-            .with_policy(policy)
-            .with_nvm_region(NVM_BASE),
-    ));
+    let mem = MemorySystem::new(t)
+        .with_policy(policy)
+        .with_nvm_region(NVM_BASE);
     let mut design = Orca::with_memory(t, AccelMem::None, 32, 1, mem);
     let req_bytes = HDR_BYTES + stream.value_bytes;
     let pipe = ServingPipeline::new(Load::Saturation, req_bytes, 64, seed);

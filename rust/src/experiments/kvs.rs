@@ -65,6 +65,9 @@ pub struct KvRun {
     pub dram_read_gbs: f64,
     pub dram_write_gbs: f64,
     pub nvm_write_amp: f64,
+    /// Simulator operations the run executed (see
+    /// [`crate::serving::RunMetrics::events`]).
+    pub events: u64,
 }
 
 /// Pre-generated request stream: per request, the trace the functional
@@ -175,6 +178,7 @@ pub fn run(
         dram_read_gbs: m.dram_read_gbs,
         dram_write_gbs: m.dram_write_gbs,
         nvm_write_amp: m.nvm_write_amp,
+        events: m.events,
     }
 }
 

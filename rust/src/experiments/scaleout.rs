@@ -260,6 +260,7 @@ pub fn report(
             "p99 µs",
             "p999 µs",
             "imbalance",
+            "events",
         ],
     );
     for r in sweep(opts, counts, &thetas) {
@@ -272,6 +273,7 @@ pub fn report(
             format!("{:.1}", r.metrics.p99_us),
             format!("{:.1}", r.metrics.p999_us),
             format!("{:.2}", r.metrics.imbalance),
+            format!("{}", r.metrics.events),
         ]);
     }
 

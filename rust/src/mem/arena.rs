@@ -1,0 +1,109 @@
+//! Arena-indexed shared socket resources.
+//!
+//! The per-request hot path used to share one socket's memory system and
+//! UPI link between consumers through `Rc<RefCell<...>>` handles, paying
+//! refcount traffic and a borrow-flag check on every access. The arena
+//! replaces those handles with plain indices: a [`SocketArena`] owns the
+//! [`MemorySystem`]s and [`crate::sim::BandwidthLedger`] links of one
+//! socket, and consumers hold `Copy` ids ([`MemId`], [`LinkId`]) plus a
+//! `&mut SocketArena` threaded through the call. Sharing is still
+//! explicit — two shards contend iff they hold the same id — but
+//! resolution is an array index, and aliasing is checked at compile time
+//! instead of at run time.
+
+use super::MemorySystem;
+use crate::sim::BandwidthLedger;
+
+/// Index of a [`MemorySystem`] in a [`SocketArena`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemId(u32);
+
+/// Index of a UPI-link [`BandwidthLedger`] in a [`SocketArena`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkId(u32);
+
+/// Owner of one socket's shared timing state. Consumers that should
+/// contend for the same DRAM/LLC/NVM or the same UPI link hold the same
+/// id into the same arena.
+#[derive(Clone, Debug, Default)]
+pub struct SocketArena {
+    mems: Vec<MemorySystem>,
+    links: Vec<BandwidthLedger>,
+}
+
+impl SocketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_mem(&mut self, mem: MemorySystem) -> MemId {
+        self.mems.push(mem);
+        MemId(self.mems.len() as u32 - 1)
+    }
+
+    pub fn add_link(&mut self, link: BandwidthLedger) -> LinkId {
+        self.links.push(link);
+        LinkId(self.links.len() as u32 - 1)
+    }
+
+    #[inline]
+    pub fn mem(&mut self, id: MemId) -> &mut MemorySystem {
+        &mut self.mems[id.0 as usize]
+    }
+
+    #[inline]
+    pub fn mem_ref(&self, id: MemId) -> &MemorySystem {
+        &self.mems[id.0 as usize]
+    }
+
+    #[inline]
+    pub fn link(&mut self, id: LinkId) -> &mut BandwidthLedger {
+        &mut self.links[id.0 as usize]
+    }
+
+    #[inline]
+    pub fn link_ref(&self, id: LinkId) -> &BandwidthLedger {
+        &self.links[id.0 as usize]
+    }
+
+    /// Split-borrow a memory system and a link together (the
+    /// host-memory-over-UPI access path needs both in one expression).
+    #[inline]
+    pub fn mem_link(&mut self, m: MemId, l: LinkId) -> (&mut MemorySystem, &mut BandwidthLedger) {
+        (&mut self.mems[m.0 as usize], &mut self.links[l.0 as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Testbed;
+
+    #[test]
+    fn same_id_aliases_same_state_distinct_ids_do_not() {
+        let t = Testbed::paper();
+        let mut arena = SocketArena::new();
+        let a = arena.add_mem(MemorySystem::new(&t));
+        let b = arena.add_mem(MemorySystem::new(&t));
+        arena.mem(a).dma_read(0, 0x1000, 64);
+        assert_eq!(arena.mem_ref(a).stats().dram_read_bytes, 64);
+        assert_eq!(arena.mem_ref(b).stats().dram_read_bytes, 0);
+
+        let l = arena.add_link(BandwidthLedger::new());
+        arena.link(l).acquire(0, 500);
+        assert_eq!(arena.link_ref(l).busy_ps(), 500);
+    }
+
+    #[test]
+    fn mem_link_split_borrow_reaches_both() {
+        let t = Testbed::paper();
+        let mut arena = SocketArena::new();
+        let m = arena.add_mem(MemorySystem::new(&t));
+        let l = arena.add_link(BandwidthLedger::new());
+        let (mem, link) = arena.mem_link(m, l);
+        mem.dma_read(0, 0, 64);
+        link.acquire(0, 100);
+        assert_eq!(arena.mem_ref(m).stats().dram_read_bytes, 64);
+        assert_eq!(arena.link_ref(l).busy_ps(), 100);
+    }
+}

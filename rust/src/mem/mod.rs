@@ -6,6 +6,7 @@
 //! composes the three devices behind one Domain-routed replay API and
 //! one steered DMA-ingress API shared by the whole serving path.
 
+pub mod arena;
 pub mod dram;
 pub mod llc;
 pub mod local;
@@ -13,9 +14,10 @@ pub mod nvm;
 pub mod system;
 pub mod trace;
 
+pub use arena::{LinkId, MemId, SocketArena};
 pub use dram::Dram;
 pub use llc::{Llc, LlcLookup};
 pub use local::LocalMemory;
 pub use nvm::Nvm;
-pub use system::{MemStats, MemorySystem, SharedMemorySystem, SteeringPolicy};
+pub use system::{MemStats, MemorySystem, SteeringPolicy};
 pub use trace::{Access, DmaWrite, Domain, MemTrace};

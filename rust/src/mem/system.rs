@@ -22,15 +22,14 @@
 //!   64 B granularity — which is exactly the NVM write-amplification
 //!   pathology the adaptive policy removes.
 //!
-//! One socket's consumers share one instance ([`SharedMemorySystem`]),
+//! One socket's consumers share one instance — held in a
+//! [`crate::mem::SocketArena`] and addressed by [`crate::mem::MemId`] —
 //! so DRAM bandwidth, LLC state and NVM amplification are modeled once,
 //! not once per subsystem.
 
 use super::{Access, Domain, Dram, Llc, LlcLookup, LocalMemory, MemTrace, Nvm};
 use crate::config::{AccelMem, Testbed};
 use crate::sim::NS;
-use std::cell::RefCell;
-use std::rc::Rc;
 
 /// Where device writes should land, per the paper's Fig-5 configurations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,11 +64,6 @@ impl SteeringPolicy {
         }
     }
 }
-
-/// A shared handle to one socket's memory system. Like
-/// [`crate::accel::UpiLink`], sharing is explicit: every consumer that
-/// should contend for the same DRAM/LLC/NVM gets a clone of the handle.
-pub type SharedMemorySystem = Rc<RefCell<MemorySystem>>;
 
 /// Cumulative memory-side counters, snapshotted for the serving layer's
 /// `RunMetrics` reporting (see [`crate::serving`]).
@@ -173,11 +167,6 @@ impl MemorySystem {
     pub fn with_nvm_region(mut self, start: u64) -> Self {
         self.nvm_start = start;
         self
-    }
-
-    /// A fresh shared handle (one per socket; clone it per consumer).
-    pub fn shared(t: &Testbed) -> SharedMemorySystem {
-        Rc::new(RefCell::new(Self::new(t)))
     }
 
     #[inline]

@@ -21,15 +21,15 @@
 //! [`super::ClosedLoop`] designs.
 
 use super::{Design, Ingress};
-use crate::accel::{upi_link, CcAccelerator, SqHandler};
+use crate::accel::{CcAccelerator, SqHandler};
 use crate::config::{AccelMem, Testbed};
 use crate::cpoll::ShardedNotify;
 use crate::cpu::CpuServer;
 use crate::interconnect::{Pcie, Tlp};
-use crate::mem::{MemStats, MemTrace, MemorySystem, SharedMemorySystem};
+use crate::mem::{MemId, MemStats, MemTrace, MemorySystem, SocketArena};
 use crate::net::Network;
 use crate::rnic::Rnic;
-use crate::sim::Rng;
+use crate::sim::{BandwidthLedger, Rng};
 
 /// The CPU baseline (§VI-B "CPU").
 pub struct Cpu {
@@ -140,9 +140,12 @@ impl Design for SmartNic {
 /// SQ handler multiplexing response WQEs into the shared doorbell.
 pub struct Orca {
     mem: AccelMem,
+    /// The socket's shared timing state: the host memory system and the
+    /// one physical UPI link, indexed by id (see [`SocketArena`]).
+    arena: SocketArena,
     /// The socket's host memory system: shared by every shard's host-path
     /// gathers and by the RNIC's steered DMA ingress.
-    host_mem: SharedMemorySystem,
+    host_mem: MemId,
     net: Network,
     rnic_rx: Rnic,
     pcie_rx: Pcie,
@@ -164,7 +167,7 @@ impl Orca {
     /// sharing the socket's one physical UPI link. With `shards == 1`
     /// this is bit-identical to [`Orca::new`].
     pub fn sharded(t: &Testbed, mem: AccelMem, batch: usize, shards: usize) -> Self {
-        Self::with_memory(t, mem, batch, shards, MemorySystem::shared(t))
+        Self::with_memory(t, mem, batch, shards, MemorySystem::new(t))
     }
 
     /// Like [`Orca::sharded`], but serving out of an explicit host
@@ -176,19 +179,22 @@ impl Orca {
         mem: AccelMem,
         batch: usize,
         shards: usize,
-        host_mem: SharedMemorySystem,
+        host_mem: MemorySystem,
     ) -> Self {
         assert!(shards > 0, "need at least one shard");
-        let link = upi_link();
+        let mut arena = SocketArena::new();
+        let link = arena.add_link(BandwidthLedger::new());
+        let host_mem = arena.add_mem(host_mem);
         Orca {
             mem,
-            host_mem: host_mem.clone(),
+            arena,
+            host_mem,
             net: Network::new(t.net.clone()),
             rnic_rx: Rnic::new(t.net.clone()),
             pcie_rx: Pcie::new(t.pcie.clone()),
             notify: ShardedNotify::new(t, shards),
             shards: (0..shards)
-                .map(|_| CcAccelerator::with_shared(t, mem, link.clone(), host_mem.clone()))
+                .map(|_| CcAccelerator::with_shared(t, mem, link, host_mem))
                 .collect(),
             sq: SqHandler::new(t, batch),
             rnic_tx: Rnic::new(t.net.clone()),
@@ -251,11 +257,11 @@ impl Design for Orca {
             // anonymous buffer: NIC processing first, then each steered
             // write serializes on the same PCIe link.
             let base = self.rnic_rx.rx_one_sided(arrive, 0, &mut self.pcie_rx);
-            let mut mem = self.host_mem.borrow_mut();
+            let mem = self.arena.mem(self.host_mem);
             let mut done = base;
             for w in &job.dma {
                 let tlp = Tlp { addr: w.addr, bytes: w.bytes, tph: w.tph };
-                done = done.max(self.pcie_rx.steer_dma_write(base, tlp, &mut mem));
+                done = done.max(self.pcie_rx.steer_dma_write(base, tlp, mem));
             }
             done
         };
@@ -273,7 +279,7 @@ impl Design for Orca {
         if n == 1 {
             // Fast path: no partitioning.
             self.shard_requests[0] += jobs.len() as u64;
-            return self.shards[0].serve_stream(&jobs);
+            return self.shards[0].serve_stream(&jobs, &mut self.arena);
         }
         let mut parts: Vec<Vec<(u64, MemTrace)>> = vec![Vec::new(); n];
         let mut slot: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
@@ -282,12 +288,10 @@ impl Design for Orca {
             slot.push((s, parts[s].len()));
             parts[s].push((t, trace));
         }
-        let served: Vec<Vec<u64>> = self
-            .shards
-            .iter_mut()
-            .zip(&parts)
-            .map(|(acc, part)| acc.serve_stream(part))
-            .collect();
+        let mut served: Vec<Vec<u64>> = Vec::with_capacity(n);
+        for (s, part) in parts.iter().enumerate() {
+            served.push(self.shards[s].serve_stream(part, &mut self.arena));
+        }
         for (s, part) in parts.iter().enumerate() {
             self.shard_requests[s] += part.len() as u64;
         }
@@ -305,7 +309,7 @@ impl Design for Orca {
     }
 
     fn mem_stats(&self) -> Option<MemStats> {
-        Some(self.host_mem.borrow().stats())
+        Some(self.arena.mem_ref(self.host_mem).stats())
     }
 }
 

@@ -29,16 +29,14 @@
 
 use super::analytic::{CPU_QUERY_CYCLES, ORCA_GATHER_OUTSTANDING};
 use super::{Design, Ingress};
-use crate::accel::{
-    host_access_service_ps, host_interconnect_ps, upi_link, upi_serialize_ps, SqHandler, UpiLink,
-};
+use crate::accel::{host_access_service_ps, host_interconnect_ps, upi_serialize_ps, SqHandler};
 use crate::config::{AccelMem, Testbed};
 use crate::cpoll::ShardedNotify;
 use crate::interconnect::Pcie;
-use crate::mem::{Access, LocalMemory, MemStats, MemTrace, MemorySystem, SharedMemorySystem};
+use crate::mem::{Access, LocalMemory, MemStats, MemTrace, MemorySystem};
 use crate::net::Network;
 use crate::rnic::Rnic;
-use crate::sim::{cycles_ps, Rng};
+use crate::sim::{cycles_ps, BandwidthLedger, Rng};
 
 /// Gathers one CPU core keeps in flight (MSHR-class window): ~4 × 256 B
 /// rows per ~95 ns memory round trip ≈ the 9.5 GB/s per-core gather
@@ -90,7 +88,7 @@ fn earliest(free: &[u64]) -> usize {
 /// window; per-query software cost (parse + MLP) overlaps the gathers.
 pub struct DlrmCpu {
     net: Network,
-    mem: SharedMemorySystem,
+    mem: MemorySystem,
     cores: Vec<u64>,
     query_ps: u64,
     window: usize,
@@ -100,7 +98,7 @@ impl DlrmCpu {
     pub fn new(t: &Testbed, cores: usize) -> Self {
         DlrmCpu {
             net: Network::new(t.net.clone()),
-            mem: MemorySystem::shared(t),
+            mem: MemorySystem::new(t),
             cores: vec![0; cores.max(1)],
             query_ps: cycles_ps(CPU_QUERY_CYCLES, t.cpu.freq_mhz),
             window: CPU_GATHER_WINDOW,
@@ -127,16 +125,15 @@ impl Design for DlrmCpu {
     fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
         let window = self.window;
         let query_ps = self.query_ps;
-        let mem = self.mem.clone();
+        let mem = &mut self.mem;
+        let cores = &mut self.cores;
         let mut done = Vec::with_capacity(jobs.len());
         for (vis, trace) in jobs {
-            let c = earliest(&self.cores);
-            let start = self.cores[c].max(vis);
-            let gathers = replay_windowed(start, &trace, window, |t, a| {
-                mem.borrow_mut().access(t, a)
-            });
+            let c = earliest(cores);
+            let start = cores[c].max(vis);
+            let gathers = replay_windowed(start, &trace, window, |t, a| mem.access(t, a));
             let end = gathers.max(start + query_ps);
-            self.cores[c] = end;
+            cores[c] = end;
             done.push(end);
         }
         done
@@ -151,7 +148,7 @@ impl Design for DlrmCpu {
     }
 
     fn mem_stats(&self) -> Option<MemStats> {
-        Some(self.mem.borrow().stats())
+        Some(self.mem.stats())
     }
 }
 
@@ -160,14 +157,14 @@ impl Design for DlrmCpu {
 /// row fetches at a time over UPI into the shared host memory system →
 /// SQ-handler doorbell-batched responses.
 pub struct DlrmOrca {
-    host_mem: SharedMemorySystem,
+    host_mem: MemorySystem,
     net: Network,
     rnic_rx: Rnic,
     pcie_rx: Pcie,
     notify: ShardedNotify,
     hop_ps: u64,
     upi_gbs: f64,
-    link: UpiLink,
+    link: BandwidthLedger,
     apu_ps: u64,
     window: usize,
     fsm_free: u64,
@@ -178,12 +175,12 @@ pub struct DlrmOrca {
 
 impl DlrmOrca {
     pub fn new(t: &Testbed) -> Self {
-        Self::with_memory(t, MemorySystem::shared(t))
+        Self::with_memory(t, MemorySystem::new(t))
     }
 
-    /// Serve out of an explicit (per-socket, possibly shared) host
-    /// memory system.
-    pub fn with_memory(t: &Testbed, host_mem: SharedMemorySystem) -> Self {
+    /// Serve out of an explicit host memory system (the caller picks the
+    /// steering policy / NVM region before handing it over).
+    pub fn with_memory(t: &Testbed, host_mem: MemorySystem) -> Self {
         DlrmOrca {
             host_mem,
             net: Network::new(t.net.clone()),
@@ -192,7 +189,7 @@ impl DlrmOrca {
             notify: ShardedNotify::new(t, 1),
             hop_ps: host_interconnect_ps(t),
             upi_gbs: t.upi.bandwidth_gbs,
-            link: upi_link(),
+            link: BandwidthLedger::new(),
             apu_ps: cycles_ps(t.accel.apu_cycles, t.accel.freq_mhz),
             window: ORCA_GATHER_OUTSTANDING as usize,
             fsm_free: 0,
@@ -228,17 +225,19 @@ impl Design for DlrmOrca {
         let window = self.window;
         let hop = self.hop_ps;
         let gbs = self.upi_gbs;
-        let mem = self.host_mem.clone();
-        let link = self.link.clone();
+        let apu_ps = self.apu_ps;
+        let mem = &mut self.host_mem;
+        let link = &mut self.link;
+        let fsm_free = &mut self.fsm_free;
         let mut done = Vec::with_capacity(jobs.len());
         for (vis, trace) in jobs {
-            let start = self.fsm_free.max(vis) + self.apu_ps;
+            let start = (*fsm_free).max(vis) + apu_ps;
             let end = replay_windowed(start, &trace, window, |t, a| {
-                let service = host_access_service_ps(t, a, hop, gbs, &mem);
-                let ser_done = upi_serialize_ps(t, u64::from(a.bytes), gbs, &link);
+                let service = host_access_service_ps(t, a, hop, gbs, mem);
+                let ser_done = upi_serialize_ps(t, u64::from(a.bytes), gbs, link);
                 (t + service).max(ser_done)
             });
-            self.fsm_free = end;
+            *fsm_free = end;
             done.push(end);
         }
         done
@@ -254,7 +253,7 @@ impl Design for DlrmOrca {
     }
 
     fn mem_stats(&self) -> Option<MemStats> {
-        Some(self.host_mem.borrow().stats())
+        Some(self.host_mem.stats())
     }
 }
 

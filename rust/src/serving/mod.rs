@@ -46,6 +46,29 @@ pub enum Load {
     Open { mops: f64 },
 }
 
+impl Load {
+    /// Pre-generate the whole sorted issue schedule for `n` requests.
+    /// One batch insertion instead of n interleaved draws — and the RNG
+    /// consumption is byte-identical to the old inline loops in
+    /// [`ServingPipeline::run`] / [`crate::cluster::run_fleet`], so
+    /// every golden metric is unchanged.
+    pub fn arrival_schedule(&self, n: usize, rng: &mut Rng) -> Vec<u64> {
+        let mut issue = Vec::with_capacity(n);
+        match *self {
+            Load::Saturation => issue.resize(n, 0u64),
+            Load::Open { mops } => {
+                let mean_gap_ps = 1e6 / mops; // ps between arrivals at `mops`
+                let mut tphys = 0f64;
+                for _ in 0..n {
+                    tphys += rng.exp(mean_gap_ps);
+                    issue.push(tphys as u64);
+                }
+            }
+        }
+        issue
+    }
+}
+
 /// One run's unified result, whatever the design or workload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunMetrics {
@@ -70,6 +93,10 @@ pub struct RunMetrics {
     pub dram_write_gbs: f64,
     /// NVM media write amplification (1.0 when the NVM is untouched).
     pub nvm_write_amp: f64,
+    /// Simulator operations executed during the run (engine events plus
+    /// server/ledger acquires) — the raw count the perf harness
+    /// normalizes to events/sec.
+    pub events: u64,
 }
 
 /// Tab-III power accounting: throughput per watt of box power.
@@ -181,24 +208,12 @@ impl ServingPipeline {
     /// Drive `jobs` through `design` end to end.
     pub fn run<D: Design>(&self, design: &mut D, jobs: &[D::Job]) -> RunMetrics {
         let n = jobs.len();
+        let ops0 = crate::sim::ops_executed();
         let mut rng = Rng::new(self.seed ^ 0xD1CE);
         let req = design.request_bytes(self.req_bytes);
 
-        // Issue times.
-        let mut issue = Vec::with_capacity(n);
-        match self.load {
-            Load::Saturation => {
-                issue.resize(n, 0u64);
-            }
-            Load::Open { mops } => {
-                let mean_gap_ps = 1e6 / mops; // ps between arrivals at `mops`
-                let mut tphys = 0f64;
-                for _ in 0..n {
-                    tphys += rng.exp(mean_gap_ps);
-                    issue.push(tphys as u64);
-                }
-            }
-        }
+        // Issue times, pre-generated as one sorted batch.
+        let issue = self.load.arrival_schedule(n, &mut rng);
 
         // Ingress (in issue order). The throughput span is anchored at
         // the first *wire* arrival; service order follows visibility —
@@ -254,6 +269,7 @@ impl ServingPipeline {
             dram_read_gbs: mem.dram_read_gbs(span),
             dram_write_gbs: mem.dram_write_gbs(span),
             nvm_write_amp: mem.nvm_write_amp(),
+            events: crate::sim::ops_executed().wrapping_sub(ops0),
         }
     }
 

@@ -1,14 +1,76 @@
 //! The discrete-event engine.
 //!
-//! `Sim<W>` owns a time-ordered queue of events; each event is a boxed
-//! closure that receives the engine (to schedule further events) and the
-//! user world `W` (all mutable component state). Ties are broken by
-//! insertion order, which makes runs fully deterministic.
+//! `Sim<W>` owns a time-ordered queue of events; each event receives the
+//! engine (to schedule further events) and the user world `W` (all
+//! mutable component state). Ties are broken by insertion order, which
+//! makes runs fully deterministic.
+//!
+//! Two queue implementations sit behind the same API ([`QueueKind`]):
+//!
+//! * a hierarchical timer wheel — a 64-ary radix heap over picosecond
+//!   timestamps, the fast path and the release-build default;
+//! * the original `BinaryHeap` of `(at, seq)`-ordered entries — kept as
+//!   the reference engine, and in debug builds run in lock-step with
+//!   the wheel as a differential oracle ([`QueueKind::Checked`]) so
+//!   every `cargo test` re-proves the pop order bit for bit.
+//!
+//! Events are either boxed closures ([`Sim::at`]) or, on hot paths, an
+//! inline fn-pointer plus a two-word payload ([`Sim::at_call`],
+//! [`Sim::schedule_run`]) that never touches the allocator.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
-type EventFn<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+/// Wheel resolution: one tick is 2^`TICK_BITS` ps (1024 ps ≈ 1 ns).
+/// Sub-tick order is restored by sorting each drained slot on
+/// `(at, seq)`, so resolution affects speed, never event order.
+const TICK_BITS: u32 = 10;
+/// Slots per level: 64, so each level's occupancy is one `u64` bitmap
+/// and the next occupied slot is a single `trailing_zeros`.
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+const SLOT_MASK: u64 = SLOTS as u64 - 1;
+/// Levels in the hierarchy. 8 levels span 2^48 ticks = 2^58 ps
+/// (~3.3 simulated days); anything further out parks in `overflow`
+/// until a rebase.
+const LEVELS: usize = 8;
+const SPAN_BITS: u32 = SLOT_BITS * LEVELS as u32;
+
+/// Which event-queue implementation a [`Sim`] runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Hierarchical timer wheel (radix heap) — the fast engine.
+    Wheel,
+    /// The original `BinaryHeap` — the reference engine the wheel is
+    /// proven against (kept for differential tests and benches).
+    ReferenceHeap,
+    /// Wheel plus a shadow `(at, seq)` heap asserting every pop — the
+    /// debug-mode differential oracle. Default under
+    /// `cfg(debug_assertions)`, so the whole test suite doubles as an
+    /// engine-equivalence proof.
+    Checked,
+}
+
+/// An event body: boxed closure for the general case, or an inline
+/// fn-pointer + payload for the allocation-free hot path.
+enum EventFn<W> {
+    Boxed(Box<dyn FnOnce(&mut Sim<W>, &mut W)>),
+    Call {
+        f: fn(&mut Sim<W>, &mut W, u64, u64),
+        a: u64,
+        b: u64,
+    },
+}
+
+impl<W> EventFn<W> {
+    #[inline]
+    fn invoke(self, sim: &mut Sim<W>, world: &mut W) {
+        match self {
+            EventFn::Boxed(f) => f(sim, world),
+            EventFn::Call { f, a, b } => f(sim, world, a, b),
+        }
+    }
+}
 
 struct Entry<W> {
     at: u64,
@@ -33,13 +95,156 @@ impl<W> Ord for Entry<W> {
     }
 }
 
+/// Hierarchical timer wheel, structured as a 64-ary radix heap on the
+/// tick (`at >> TICK_BITS`).
+///
+/// Placement invariant: an entry lives at the level of the highest
+/// bit-group in which its tick differs from `cur`, in the slot named by
+/// its tick's group at that level. Because `cur` only advances, every
+/// level-`l` entry agrees with `cur` on all groups above `l` and
+/// exceeds it at group `l`, which yields the two ordering facts the
+/// pop path relies on:
+///
+/// * any level-`l` entry precedes any level-`m` entry for `l < m`;
+/// * within a level, slot number order is tick order.
+///
+/// So the global minimum is always in the lowest occupied slot of the
+/// lowest occupied level. Draining a level-0 slot yields one exact
+/// tick (sorted by `(at, seq)` into `pending`); draining a higher slot
+/// cascades its entries one level down after advancing `cur` to the
+/// slot's region floor.
+struct Wheel<W> {
+    /// `LEVELS * SLOTS` buckets, row-major by level.
+    slots: Vec<Vec<Entry<W>>>,
+    /// One occupancy bitmap per level.
+    occ: [u64; LEVELS],
+    /// The current tick region, sorted by `(at, seq)` and popped from
+    /// the front. Entries whose tick is `<= cur` (including events
+    /// scheduled "now" by running events) merge in here.
+    pending: VecDeque<Entry<W>>,
+    /// Entries beyond the wheel span; redistributed on rebase.
+    overflow: Vec<Entry<W>>,
+    /// Current tick: the wheel has fully drained every tick `< cur`.
+    cur: u64,
+}
+
+impl<W> Wheel<W> {
+    fn new() -> Self {
+        Wheel {
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occ: [0; LEVELS],
+            pending: VecDeque::new(),
+            overflow: Vec::new(),
+            cur: 0,
+        }
+    }
+
+    fn push(&mut self, e: Entry<W>) {
+        let tick = e.at >> TICK_BITS;
+        if tick <= self.cur {
+            // Current (or already-reached) tick region: keep `pending`
+            // sorted by (at, seq). Monotone runs take the O(1)
+            // back-append path; out-of-order inserts binary-search.
+            let key = (e.at, e.seq);
+            match self.pending.back() {
+                Some(last) if (last.at, last.seq) <= key => self.pending.push_back(e),
+                _ => {
+                    let i = self.pending.partition_point(|p| (p.at, p.seq) < key);
+                    self.pending.insert(i, e);
+                }
+            }
+            return;
+        }
+        let diff = tick ^ self.cur;
+        if diff >> SPAN_BITS != 0 {
+            self.overflow.push(e);
+            return;
+        }
+        let level = ((63 - diff.leading_zeros()) / SLOT_BITS) as usize;
+        let slot = ((tick >> (level as u32 * SLOT_BITS)) & SLOT_MASK) as usize;
+        self.slots[level * SLOTS + slot].push(e);
+        self.occ[level] |= 1 << slot;
+    }
+
+    /// Bring the global minimum to `pending.front()`, cascading wheel
+    /// levels (and rebasing from `overflow`) as needed. Purely a queue
+    /// reorganisation: no event runs and no simulated time advances,
+    /// so it is safe to call from a peek.
+    fn refill(&mut self) {
+        while self.pending.is_empty() {
+            let Some(level) = (0..LEVELS).find(|&l| self.occ[l] != 0) else {
+                if self.overflow.is_empty() {
+                    return;
+                }
+                self.rebase();
+                continue;
+            };
+            let slot = self.occ[level].trailing_zeros() as usize;
+            self.occ[level] &= !(1u64 << slot);
+            let mut batch = std::mem::take(&mut self.slots[level * SLOTS + slot]);
+            if level == 0 {
+                // Every entry in a level-0 slot shares one tick — the
+                // global minimum tick. Restore sub-tick order here.
+                self.cur = (self.cur & !SLOT_MASK) | slot as u64;
+                batch.sort_unstable_by_key(|e| (e.at, e.seq));
+                self.pending.extend(batch);
+            } else {
+                // Cascade: advance `cur` to the floor of this slot's
+                // region and redistribute one or more levels down.
+                let shift = level as u32 * SLOT_BITS;
+                let high = self.cur >> (shift + SLOT_BITS);
+                self.cur = ((high << SLOT_BITS) | slot as u64) << shift;
+                for e in batch {
+                    self.push(e);
+                }
+            }
+        }
+    }
+
+    /// Wheel and pending are empty: jump `cur` to the earliest overflow
+    /// tick and redistribute. The minimum tick lands in `pending`;
+    /// anything still beyond the new span returns to `overflow`.
+    fn rebase(&mut self) {
+        let min_tick = self
+            .overflow
+            .iter()
+            .map(|e| e.at >> TICK_BITS)
+            .min()
+            .expect("rebase requires a non-empty overflow");
+        self.cur = min_tick;
+        for e in std::mem::take(&mut self.overflow) {
+            self.push(e);
+        }
+    }
+
+    fn front(&mut self) -> Option<&Entry<W>> {
+        self.refill();
+        self.pending.front()
+    }
+
+    fn pop(&mut self) -> Option<Entry<W>> {
+        self.refill();
+        self.pending.pop_front()
+    }
+}
+
+enum Queue<W> {
+    Wheel(Wheel<W>),
+    Heap(BinaryHeap<Reverse<Entry<W>>>),
+}
+
 /// Discrete-event simulator over a user world `W`.
 pub struct Sim<W> {
     now: u64,
     seq: u64,
-    heap: BinaryHeap<Reverse<Entry<W>>>,
+    queue: Queue<W>,
+    /// `Checked` mode: a shadow (at, seq) heap popped in lock-step with
+    /// the wheel, asserting identical order.
+    mirror: Option<BinaryHeap<Reverse<(u64, u64)>>>,
     executed: u64,
-    /// Hard stop: events scheduled past this instant are dropped.
+    depth: usize,
+    peak_depth: usize,
+    /// Hard stop: events at `t > horizon` are held, not executed.
     horizon: u64,
 }
 
@@ -50,12 +255,34 @@ impl<W> Default for Sim<W> {
 }
 
 impl<W> Sim<W> {
+    /// Engine with the default queue: the timer wheel in release
+    /// builds, [`QueueKind::Checked`] (wheel + reference oracle) in
+    /// debug builds.
     pub fn new() -> Self {
+        let kind = if cfg!(debug_assertions) {
+            QueueKind::Checked
+        } else {
+            QueueKind::Wheel
+        };
+        Self::with_queue(kind)
+    }
+
+    /// Engine on an explicit queue implementation (differential tests
+    /// and benches drive both engines through this).
+    pub fn with_queue(kind: QueueKind) -> Self {
+        let (queue, mirror) = match kind {
+            QueueKind::Wheel => (Queue::Wheel(Wheel::new()), None),
+            QueueKind::ReferenceHeap => (Queue::Heap(BinaryHeap::new()), None),
+            QueueKind::Checked => (Queue::Wheel(Wheel::new()), Some(BinaryHeap::new())),
+        };
         Sim {
             now: 0,
             seq: 0,
-            heap: BinaryHeap::new(),
+            queue,
+            mirror,
             executed: 0,
+            depth: 0,
+            peak_depth: 0,
             horizon: u64::MAX,
         }
     }
@@ -72,10 +299,32 @@ impl<W> Sim<W> {
         self.executed
     }
 
+    /// High-water mark of the event-queue depth (scheduled, not yet
+    /// executed) — surfaced by benches to size the engines honestly.
+    #[inline]
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+
     /// Set a hard time horizon: events at `t > horizon` are held in the
     /// queue and fire only if the horizon is later raised past them.
     pub fn set_horizon(&mut self, horizon: u64) {
         self.horizon = horizon;
+    }
+
+    fn schedule(&mut self, at: u64, f: EventFn<W>) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        if let Some(m) = &mut self.mirror {
+            m.push(Reverse((at, seq)));
+        }
+        match &mut self.queue {
+            Queue::Wheel(w) => w.push(Entry { at, seq, f }),
+            Queue::Heap(h) => h.push(Reverse(Entry { at, seq, f })),
+        }
+        self.depth += 1;
+        self.peak_depth = self.peak_depth.max(self.depth);
     }
 
     /// Schedule `f` at absolute time `at` (clamped to `now` if in the
@@ -84,14 +333,7 @@ impl<W> Sim<W> {
     /// holding semantics apply whether the event was queued before or
     /// after a horizon change.
     pub fn at(&mut self, at: u64, f: impl FnOnce(&mut Sim<W>, &mut W) + 'static) {
-        let at = at.max(self.now);
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Reverse(Entry {
-            at,
-            seq,
-            f: Box::new(f),
-        }));
+        self.schedule(at, EventFn::Boxed(Box::new(f)));
     }
 
     /// Schedule `f` after a delay of `dt` picoseconds.
@@ -99,47 +341,79 @@ impl<W> Sim<W> {
         self.at(self.now.saturating_add(dt), f);
     }
 
-    /// Run until the queue drains (or the horizon passes). Returns the
-    /// final simulated time.
-    ///
-    /// Past-horizon events are never executed: [`Sim::at`] refuses to
-    /// schedule them, and events already queued when the horizon is
-    /// tightened are held (not popped), so raising the horizon later
-    /// resumes them in order.
-    pub fn run(&mut self, world: &mut W) -> u64 {
-        loop {
-            // Peek first: the heap is time-ordered, so the moment the
-            // front is past the horizon everything behind it is too —
-            // leave it all queued (the horizon may be raised later).
-            match self.heap.peek() {
-                None => break,
-                Some(Reverse(e)) if e.at > self.horizon => break,
-                Some(_) => {}
-            }
-            let Reverse(e) = self.heap.pop().expect("peeked");
-            debug_assert!(e.at >= self.now, "time went backwards");
-            self.now = e.at;
-            self.executed += 1;
-            (e.f)(self, world);
-        }
-        self.now
+    /// Allocation-free variant of [`Sim::at`]: a plain fn pointer with
+    /// a two-word payload, for the fixed-shape events that dominate
+    /// serving-path schedules.
+    pub fn at_call(&mut self, at: u64, f: fn(&mut Sim<W>, &mut W, u64, u64), a: u64, b: u64) {
+        self.schedule(at, EventFn::Call { f, a, b });
     }
 
-    /// Run until `world` satisfies `done` (checked after every event) or
-    /// the queue drains. Same monotonicity and horizon contract as
-    /// [`Sim::run`].
-    pub fn run_until(&mut self, world: &mut W, mut done: impl FnMut(&W) -> bool) -> u64 {
+    /// Allocation-free variant of [`Sim::after`].
+    pub fn after_call(&mut self, dt: u64, f: fn(&mut Sim<W>, &mut W, u64, u64), a: u64, b: u64) {
+        self.at_call(self.now.saturating_add(dt), f, a, b);
+    }
+
+    /// Batch-schedule a pre-sorted arrival run through the inline-call
+    /// representation: one monotone pass, no per-event allocation, and
+    /// every insert takes the wheel's O(1) append path. `items` are
+    /// `(at, a, b)` tuples, non-decreasing in `at` (debug-asserted);
+    /// each behaves exactly like `at_call(at, f, a, b)`.
+    pub fn schedule_run(
+        &mut self,
+        f: fn(&mut Sim<W>, &mut W, u64, u64),
+        items: &[(u64, u64, u64)],
+    ) {
+        debug_assert!(
+            items.windows(2).all(|w| w[0].0 <= w[1].0),
+            "schedule_run requires a sorted run"
+        );
+        for &(at, a, b) in items {
+            self.schedule(at, EventFn::Call { f, a, b });
+        }
+    }
+
+    fn front_at(&mut self) -> Option<u64> {
+        match &mut self.queue {
+            Queue::Wheel(w) => w.front().map(|e| e.at),
+            Queue::Heap(h) => h.peek().map(|Reverse(e)| e.at),
+        }
+    }
+
+    fn pop_entry(&mut self) -> Option<Entry<W>> {
+        let e = match &mut self.queue {
+            Queue::Wheel(w) => w.pop(),
+            Queue::Heap(h) => h.pop().map(|Reverse(e)| e),
+        }?;
+        self.depth -= 1;
+        if let Some(m) = &mut self.mirror {
+            let Reverse(expect) = m.pop().expect("oracle heap out of sync with wheel");
+            assert_eq!(
+                (e.at, e.seq),
+                expect,
+                "wheel pop order diverged from the reference heap"
+            );
+        }
+        Some(e)
+    }
+
+    /// The single horizon-gated event loop behind [`Sim::run`] and
+    /// [`Sim::run_until`].
+    fn drive(&mut self, world: &mut W, mut done: impl FnMut(&W) -> bool) -> u64 {
         loop {
-            match self.heap.peek() {
+            // Peek first: the queue is time-ordered, so the moment the
+            // front is past the horizon everything behind it is too —
+            // leave it all queued (the horizon may be raised later).
+            match self.front_at() {
                 None => break,
-                Some(Reverse(e)) if e.at > self.horizon => break,
+                Some(at) if at > self.horizon => break,
                 Some(_) => {}
             }
-            let Reverse(e) = self.heap.pop().expect("peeked");
+            let e = self.pop_entry().expect("peeked");
             debug_assert!(e.at >= self.now, "time went backwards");
             self.now = e.at;
             self.executed += 1;
-            (e.f)(self, world);
+            super::count_op();
+            e.f.invoke(self, world);
             if done(world) {
                 break;
             }
@@ -147,9 +421,26 @@ impl<W> Sim<W> {
         self.now
     }
 
+    /// Run until the queue drains (or the horizon passes). Returns the
+    /// final simulated time.
+    ///
+    /// Past-horizon events are never executed: the front is peeked, not
+    /// popped, so events held by a tightened horizon resume in order if
+    /// the horizon is later raised.
+    pub fn run(&mut self, world: &mut W) -> u64 {
+        self.drive(world, |_| false)
+    }
+
+    /// Run until `world` satisfies `done` (checked after every event) or
+    /// the queue drains. Same monotonicity and horizon contract as
+    /// [`Sim::run`].
+    pub fn run_until(&mut self, world: &mut W, done: impl FnMut(&W) -> bool) -> u64 {
+        self.drive(world, done)
+    }
+
     /// True if no events remain.
     pub fn idle(&self) -> bool {
-        self.heap.is_empty()
+        self.depth == 0
     }
 }
 
@@ -161,6 +452,7 @@ mod tests {
     struct World {
         log: Vec<(u64, &'static str)>,
         count: u32,
+        hits: Vec<(u64, u64, u64)>,
     }
 
     #[test]
@@ -230,7 +522,7 @@ mod tests {
 
     #[test]
     fn both_loops_respect_a_horizon_set_after_scheduling() {
-        // Events already in the heap when the horizon tightens must be
+        // Events already queued when the horizon tightens must be
         // held back by `run` and `run_until` alike.
         let mut sim: Sim<World> = Sim::new();
         let mut w = World::default();
@@ -285,5 +577,87 @@ mod tests {
         sim.run_until(&mut w, |w| w.count == 7);
         assert_eq!(w.count, 7);
         assert!(!sim.idle());
+    }
+
+    /// Drive one schedule through a given queue kind and log the pop
+    /// order (engine-level differential fixture; the cross-crate suite
+    /// in `tests/engine_props.rs` does the randomized version).
+    fn pop_order(kind: QueueKind, ats: &[u64]) -> Vec<(u64, u64)> {
+        struct W2 {
+            log: Vec<(u64, u64)>,
+        }
+        let mut sim: Sim<W2> = Sim::with_queue(kind);
+        let mut w = W2 { log: Vec::new() };
+        for (i, &at) in ats.iter().enumerate() {
+            sim.at_call(at, |s, w, a, _b| w.log.push((s.now(), a)), i as u64, 0);
+        }
+        sim.run(&mut w);
+        w.log
+    }
+
+    #[test]
+    fn wheel_matches_heap_across_tick_slot_and_overflow_boundaries() {
+        // Hits every placement path: same tick (ties), adjacent ticks,
+        // higher wheel levels, the span boundary, and the overflow +
+        // rebase path (beyond 2^58 ps), with duplicates throughout.
+        let ats = [
+            5,
+            5,
+            1 << 12,
+            (1 << 12) + 1,
+            1 << 20,
+            1 << 35,
+            (1 << 35) + 1023,
+            1 << 57,
+            (1 << 59) + 7,
+            (1 << 59) + 7,
+            u64::MAX - 1,
+            3,
+        ];
+        assert_eq!(
+            pop_order(QueueKind::Wheel, &ats),
+            pop_order(QueueKind::ReferenceHeap, &ats)
+        );
+        assert_eq!(
+            pop_order(QueueKind::Checked, &ats),
+            pop_order(QueueKind::ReferenceHeap, &ats)
+        );
+    }
+
+    #[test]
+    fn inline_call_events_fire_like_boxed_ones() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at_call(20, |s, w, a, b| w.hits.push((s.now(), a, b)), 1, 2);
+        sim.at(10, |s, w| w.log.push((s.now(), "boxed")));
+        sim.after_call(15, |s, w, a, b| w.hits.push((s.now(), a, b)), 3, 4);
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(10, "boxed")]);
+        assert_eq!(w.hits, vec![(15, 3, 4), (20, 1, 2)]);
+    }
+
+    #[test]
+    fn schedule_run_feeds_a_sorted_batch_in_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        let items: Vec<(u64, u64, u64)> = (0..100).map(|i| (i * 7, i, i * 2)).collect();
+        sim.schedule_run(|s, w, a, b| w.hits.push((s.now(), a, b)), &items);
+        sim.run(&mut w);
+        let want: Vec<(u64, u64, u64)> = items.iter().map(|&(at, a, b)| (at, a, b)).collect();
+        assert_eq!(w.hits, want);
+    }
+
+    #[test]
+    fn executed_and_peak_depth_count() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 0..10 {
+            sim.at(i, |_s, w| w.count += 1);
+        }
+        assert_eq!(sim.peak_depth(), 10);
+        sim.run(&mut w);
+        assert_eq!(sim.executed(), 10);
+        assert_eq!(sim.peak_depth(), 10, "peak is a high-water mark");
+        assert!(sim.idle());
     }
 }

@@ -7,14 +7,64 @@
 //! identical event orders and identical statistics, which the test suite
 //! asserts.
 
+use std::cell::Cell;
+
 pub mod engine;
 pub mod rng;
 pub mod server;
 pub mod stats;
 pub mod time;
 
-pub use engine::Sim;
-pub use rng::{mix64, Rng};
+pub use engine::{QueueKind, Sim};
+pub use rng::{mix64, Mix64Build, Rng};
 pub use server::{BandwidthLedger, MultiServer, Pipeline, Server};
 pub use stats::{Histogram, Summary};
 pub use time::*;
+
+thread_local! {
+    /// Monotone count of simulated operations executed on this thread:
+    /// engine event pops plus every server/ledger `acquire` on the
+    /// timeline-replay path. Pipelines snapshot it around a run
+    /// ([`ops_executed`]) to surface an `events` column in their
+    /// metrics, so event-count regressions are visible in every table.
+    static OPS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Record one simulated operation (see [`ops_executed`]).
+#[inline]
+pub fn count_op() {
+    OPS.with(|c| c.set(c.get().wrapping_add(1)));
+}
+
+/// Current value of the thread-local operation counter. Only deltas
+/// between two snapshots are meaningful.
+#[inline]
+pub fn ops_executed() -> u64 {
+    OPS.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod op_counter_tests {
+    use super::*;
+
+    #[test]
+    fn count_op_advances_the_snapshot_delta() {
+        let before = ops_executed();
+        count_op();
+        count_op();
+        assert_eq!(ops_executed() - before, 2);
+    }
+
+    #[test]
+    fn server_acquires_are_counted() {
+        let before = ops_executed();
+        let mut s = Server::new();
+        s.acquire(0, 100);
+        s.acquire(0, 100);
+        let mut m = MultiServer::new(2);
+        m.acquire(0, 100);
+        let mut l = BandwidthLedger::new();
+        l.acquire(0, 50);
+        assert_eq!(ops_executed() - before, 4);
+    }
+}

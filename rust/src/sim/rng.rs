@@ -29,6 +29,56 @@ pub fn mix64(z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// `BuildHasher` over [`mix64`] for the repo's `u64`-keyed hash maps
+/// (e.g. [`crate::sim::BandwidthLedger`]'s sparse windows). SipHash's
+/// per-instance random keys are pointless here — keys are internal
+/// window/tag indices, not attacker-controlled — and its setup + round
+/// cost shows up on the per-acquire hot path. One `mix64` round is
+/// deterministic across runs and platforms and measurably cheaper (the
+/// bench harness carries a `ledger_*` row for each hasher).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Mix64Build;
+
+/// Streaming state for [`Mix64Build`]: each written word folds in via
+/// `state = mix64(state ^ word)`.
+pub struct Mix64Hasher(u64);
+
+impl std::hash::Hasher for Mix64Hasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic path (unused by u64 keys): fold 8-byte chunks,
+        // length-tagging the tail so "ab" and "ab\0" differ.
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.0 = mix64(self.0 ^ u64::from_le_bytes(buf) ^ (chunk.len() as u64) << 56);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.0 = mix64(self.0 ^ n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+impl std::hash::BuildHasher for Mix64Build {
+    type Hasher = Mix64Hasher;
+
+    #[inline]
+    fn build_hasher(&self) -> Mix64Hasher {
+        Mix64Hasher(0)
+    }
+}
+
 impl Rng {
     /// Seed the generator. Any seed (including 0) is valid.
     pub fn new(seed: u64) -> Self {
@@ -189,6 +239,26 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn mix64_hasher_is_deterministic_and_usable_as_a_map_hasher() {
+        use std::collections::HashMap;
+        use std::hash::{BuildHasher, Hasher};
+        let h = |n: u64| {
+            let mut s = Mix64Build.build_hasher();
+            s.write_u64(n);
+            s.finish()
+        };
+        assert_eq!(h(42), h(42));
+        assert_ne!(h(42), h(43));
+        let mut m: HashMap<u64, u64, Mix64Build> = HashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, i * 3);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&i), Some(&(i * 3)));
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ impl Server {
     /// Returns `(start, done)`.
     #[inline]
     pub fn acquire(&mut self, now: u64, service_ps: u64) -> (u64, u64) {
+        super::count_op();
         let start = now.max(self.free_at);
         let done = start + service_ps;
         self.free_at = done;
@@ -78,6 +79,7 @@ impl MultiServer {
 
     /// Acquire `service_ps` on the earliest-free lane. Returns `(start, done, lane)`.
     pub fn acquire(&mut self, now: u64, service_ps: u64) -> (u64, u64, usize) {
+        super::count_op();
         let (lane, &earliest) = self
             .free_at
             .iter()
@@ -182,8 +184,11 @@ pub struct BandwidthLedger {
     bucket_ps: u64,
     /// Capacity consumed per touched window, keyed by window index.
     /// Lookups only, never iterated — the map cannot introduce
-    /// iteration-order nondeterminism.
-    fill: std::collections::HashMap<u64, u64>,
+    /// iteration-order nondeterminism. Hashed with the in-tree
+    /// [`crate::sim::Mix64Build`]: the keys are internal window
+    /// indices, so SipHash's DoS resistance buys nothing and its cost
+    /// lands on every acquire.
+    fill: std::collections::HashMap<u64, u64, crate::sim::Mix64Build>,
     busy_ps: u64,
     /// Every window below this index is full — a search hint that makes
     /// saturation streams (millions of acquires at t≈0) O(1) amortized
@@ -200,7 +205,7 @@ impl BandwidthLedger {
         assert!(bucket_ps > 0);
         BandwidthLedger {
             bucket_ps,
-            fill: std::collections::HashMap::new(),
+            fill: std::collections::HashMap::default(),
             busy_ps: 0,
             full_until: 0,
         }
@@ -220,6 +225,7 @@ impl BandwidthLedger {
     /// — idle wall-clock time inside a window is never reserved, which
     /// is what makes the ledger order-insensitive.
     pub fn acquire(&mut self, now: u64, service_ps: u64) -> (u64, u64) {
+        super::count_op();
         self.busy_ps += service_ps;
         let mut b = (now / self.bucket_ps).max(self.full_until);
         while self.filled(b) >= self.bucket_ps {

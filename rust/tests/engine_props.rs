@@ -1,0 +1,199 @@
+//! Differential property suite for the event engine: the timer wheel
+//! must pop the exact `(at, seq)` order of the reference `BinaryHeap`
+//! on randomized schedules — including events that schedule further
+//! events, and horizons that tighten and re-open mid-run. `Checked`
+//! mode (wheel + in-loop oracle) runs the same cases to prove the
+//! shadow-heap assertion machinery itself stays in sync.
+//!
+//! Seeds derive from `ORCA_TEST_SEED` (see `orca::testing`), so a CI
+//! failure names a seed that reproduces locally.
+
+use orca::sim::{mix64, QueueKind, Rng, Sim};
+use orca::testing::for_seeds;
+
+const KINDS: [QueueKind; 3] = [
+    QueueKind::ReferenceHeap,
+    QueueKind::Wheel,
+    QueueKind::Checked,
+];
+
+#[derive(Default)]
+struct W {
+    log: Vec<(u64, u64)>,
+}
+
+fn hit(s: &mut Sim<W>, w: &mut W, id: u64, _b: u64) {
+    w.log.push((s.now(), id));
+}
+
+/// Logs, then fans out: one follow-up chain event at a pseudo-random
+/// offset and one near-now event (same-tick pressure on the wheel's
+/// `pending` merge path).
+fn spawn(s: &mut Sim<W>, w: &mut W, id: u64, depth: u64) {
+    w.log.push((s.now(), id));
+    if depth > 0 {
+        let dt = mix64(id ^ depth) % (1 << 22);
+        s.after_call(dt, spawn, mix64(id).wrapping_add(depth), depth - 1);
+        s.after_call(mix64(id.rotate_left(7)) % 1024, hit, id ^ 0xFACE, 0);
+    }
+}
+
+/// Timestamps spanning every wheel level: uniform over 0..2^k for a
+/// random k per draw, so ties, adjacent ticks, deep levels and the
+/// overflow region all occur.
+fn random_ats(rng: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            let shift = rng.below(64) as u32;
+            rng.next_u64() >> shift
+        })
+        .collect()
+}
+
+fn check_all_kinds(
+    run: impl Fn(QueueKind) -> Vec<(u64, u64)>,
+    what: &str,
+) -> Result<(), String> {
+    let want = run(QueueKind::ReferenceHeap);
+    for kind in [QueueKind::Wheel, QueueKind::Checked] {
+        let got = run(kind);
+        if got != want {
+            let i = got
+                .iter()
+                .zip(&want)
+                .position(|(a, b)| a != b)
+                .unwrap_or(want.len().min(got.len()));
+            return Err(format!(
+                "{what}: {kind:?} diverged from ReferenceHeap at pop {i}: \
+                 got {:?}, want {:?} (lens {} vs {})",
+                got.get(i),
+                want.get(i),
+                got.len(),
+                want.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_schedules_pop_in_identical_order_on_every_engine() {
+    for_seeds(48, |rng| {
+        let ats = random_ats(rng, 300);
+        check_all_kinds(
+            |kind| {
+                let mut sim: Sim<W> = Sim::with_queue(kind);
+                let mut w = W::default();
+                for (i, &at) in ats.iter().enumerate() {
+                    sim.at_call(at, hit, i as u64, 0);
+                }
+                sim.run(&mut w);
+                w.log
+            },
+            "static schedule",
+        )
+    });
+}
+
+#[test]
+fn events_scheduling_events_agree_across_engines() {
+    for_seeds(32, |rng| {
+        let roots = random_ats(rng, 48);
+        check_all_kinds(
+            |kind| {
+                let mut sim: Sim<W> = Sim::with_queue(kind);
+                let mut w = W::default();
+                for (i, &at) in roots.iter().enumerate() {
+                    // Cap roots so the spawned chains stay in u64 range.
+                    sim.at_call(at % (1 << 50), spawn, i as u64, 4);
+                }
+                sim.run(&mut w);
+                w.log
+            },
+            "dynamic schedule",
+        )
+    });
+}
+
+#[test]
+fn horizon_tightening_and_raising_hold_and_release_identically() {
+    for_seeds(32, |rng| {
+        let ats = random_ats(rng, 200);
+        // A horizon that lands inside the schedule, then a tighter one
+        // (which must release nothing new), then fully open.
+        let mut sorted = ats.clone();
+        sorted.sort_unstable();
+        let h1 = sorted[ats.len() / 2];
+        let h2 = h1 / 2;
+        check_all_kinds(
+            |kind| {
+                let mut sim: Sim<W> = Sim::with_queue(kind);
+                let mut w = W::default();
+                for (i, &at) in ats.iter().enumerate() {
+                    sim.at_call(at, hit, i as u64, 0);
+                }
+                sim.set_horizon(h1);
+                sim.run(&mut w);
+                let after_h1 = w.log.len();
+                assert!(w.log.iter().all(|&(t, _)| t <= h1), "event past horizon");
+                // Tightening below what already ran releases nothing.
+                sim.set_horizon(h2);
+                sim.run(&mut w);
+                assert_eq!(w.log.len(), after_h1, "tightened horizon fired events");
+                sim.set_horizon(u64::MAX);
+                sim.run(&mut w);
+                assert!(sim.idle(), "open horizon must drain the queue");
+                w.log
+            },
+            "horizon schedule",
+        )
+    });
+}
+
+#[test]
+fn interleaved_run_until_and_late_inserts_agree_across_engines() {
+    // Pops interleaved with fresh inserts at or before `now` (the
+    // wheel's sorted-`pending` merge path) must still match the heap.
+    for_seeds(32, |rng| {
+        let ats = random_ats(rng, 120);
+        let extra: Vec<u64> = (0..40).map(|_| rng.below(1 << 30)).collect();
+        check_all_kinds(
+            |kind| {
+                let mut sim: Sim<W> = Sim::with_queue(kind);
+                let mut w = W::default();
+                for (i, &at) in ats.iter().enumerate() {
+                    sim.at_call(at, hit, i as u64, 0);
+                }
+                // Stop every ~10 pops and inject more work, some of it
+                // in the past (clamps to now), some ahead.
+                let mut injected = 0;
+                loop {
+                    let before = w.log.len();
+                    sim.run_until(&mut w, |w| w.log.len() >= before + 10);
+                    if sim.idle() {
+                        break;
+                    }
+                    if injected < extra.len() {
+                        let base = sim.now();
+                        sim.at_call(
+                            base.saturating_sub(extra[injected] % 1024),
+                            hit,
+                            1_000 + injected as u64,
+                            0,
+                        );
+                        sim.at_call(
+                            base.saturating_add(extra[injected]),
+                            hit,
+                            2_000 + injected as u64,
+                            0,
+                        );
+                        injected += 1;
+                    }
+                }
+                sim.run(&mut w);
+                w.log
+            },
+            "interleaved inserts",
+        )
+    });
+}

@@ -18,7 +18,7 @@ use orca::experiments::fig12::{self, TABLES_PER_QUERY};
 use orca::experiments::kvs::{self, KvDesign, Load, RequestStream, NIC_CACHE_RATIO};
 use orca::experiments::Opts;
 use orca::interconnect::Pcie;
-use orca::mem::MemTrace;
+use orca::mem::{MemTrace, SocketArena};
 use orca::net::Network;
 use orca::rnic::Rnic;
 use orca::sim::{Histogram, Rng, SEC, US};
@@ -103,7 +103,8 @@ fn reference_kvs_run(
             let mut rnic = Rnic::new(t.net.clone());
             let mut pcie = Pcie::new(t.pcie.clone());
             let notify = NotifyModel::new(t);
-            let mut accel = CcAccelerator::new(t, mem);
+            let mut arena = SocketArena::new();
+            let mut accel = CcAccelerator::new(t, mem, &mut arena);
             let mut jobs: Vec<(usize, u64)> = arrivals
                 .iter()
                 .enumerate()
@@ -117,7 +118,7 @@ fn reference_kvs_run(
                 .iter()
                 .map(|&(i, t0)| (t0, stream.traces[i].clone()))
                 .collect();
-            let served = accel.serve_stream(&ordered);
+            let served = accel.serve_stream(&ordered, &mut arena);
             jobs.iter().zip(served).map(|(&(i, _), d)| (i, d)).collect()
         }
     };

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Gate BENCH_perf.json against a committed baseline.
+
+Usage: bench_check.py CURRENT BASELINE
+
+Checks, in order:
+
+1. Every row the baseline names must exist in the current run.
+2. Absolute regressions: a row whose baseline ``secs`` is a number (not
+   null) must not be more than ``max_slowdown`` (default 2x) slower.
+   Null baselines skip this check — they mark rows that have never been
+   measured on CI hardware; refresh them by copying a CI-produced
+   BENCH_perf.json over BENCH_baseline.json.
+3. Engine ratio floor: the wheel-batched scaleout row must clear
+   ``min_engine_ratio`` x the reference-heap row's events/sec. This is
+   machine-independent (both rows ran on the same box), so it holds even
+   while the absolute baselines are null.
+
+Exit code 0 on pass, 1 on any failure (every failure is printed).
+"""
+
+import json
+import sys
+
+HEAP_ROW = "engine_scaleout_heap_boxed"
+WHEEL_ROW = "engine_scaleout_wheel_batched"
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc["rows"]}, doc
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 1
+    current, _ = load_rows(sys.argv[1])
+    baseline_rows, baseline_doc = load_rows(sys.argv[2])
+    max_slowdown = float(baseline_doc.get("max_slowdown", 2.0))
+    min_ratio = float(baseline_doc.get("min_engine_ratio", 5.0))
+
+    failures = []
+
+    for name, base in baseline_rows.items():
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"row `{name}` is in the baseline but missing from the run")
+            continue
+        base_secs = base.get("secs")
+        if base_secs is None:
+            continue  # unmeasured baseline: absolute check not armed yet
+        if cur["secs"] > max_slowdown * base_secs:
+            failures.append(
+                f"row `{name}` regressed {cur['secs'] / base_secs:.2f}x "
+                f"({cur['secs']:.6f}s vs baseline {base_secs:.6f}s, "
+                f"limit {max_slowdown}x)"
+            )
+
+    heap = current.get(HEAP_ROW)
+    wheel = current.get(WHEEL_ROW)
+    if heap is None or wheel is None:
+        failures.append(f"engine rows `{HEAP_ROW}`/`{WHEEL_ROW}` missing from the run")
+    elif heap["events_per_sec"] <= 0 or wheel["events_per_sec"] <= 0:
+        failures.append("engine rows report no events/sec")
+    else:
+        ratio = wheel["events_per_sec"] / heap["events_per_sec"]
+        print(f"engine speedup: wheel-batched is {ratio:.1f}x the reference heap")
+        if ratio < min_ratio:
+            failures.append(
+                f"engine speedup {ratio:.2f}x is below the {min_ratio}x floor"
+            )
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(f"bench check passed ({len(current)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
