@@ -180,7 +180,13 @@ impl CcAccelerator {
     /// internal event heap, so the bounded coherence-controller slots see
     /// the same schedule the hardware would. Returns per-job completion
     /// times. Use this (not repeated [`Self::serve`]) for throughput runs.
-    pub fn serve_stream(&mut self, jobs: &[(u64, MemTrace)], arena: &mut SocketArena) -> Vec<u64> {
+    /// Generic over the job handle (`MemTrace` or `&MemTrace`) so fleet
+    /// callers can stream borrowed traces without copies.
+    pub fn serve_stream<J: std::borrow::Borrow<MemTrace>>(
+        &mut self,
+        jobs: &[(u64, J)],
+        arena: &mut SocketArena,
+    ) -> Vec<u64> {
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
 
@@ -188,6 +194,7 @@ impl CcAccelerator {
         let steps: Vec<Vec<(usize, usize)>> = jobs
             .iter()
             .map(|(_, t)| {
+                let t = t.borrow();
                 let mut out = Vec::new();
                 let mut start = 0usize;
                 for (i, a) in t.accesses.iter().enumerate() {
@@ -219,7 +226,7 @@ impl CcAccelerator {
             }
             let (lo, hi) = steps[j][s];
             let mut step_end = t;
-            for a in &jobs[j].1.accesses[lo..hi] {
+            for a in &jobs[j].1.borrow().accesses[lo..hi] {
                 let d = self.access(t, a, arena);
                 step_end = step_end.max(d);
             }

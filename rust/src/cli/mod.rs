@@ -405,30 +405,23 @@ pub fn fig8(opts: &Opts) -> experiments::Table {
         &["design", "workload", "uniform", "zipf-0.9"],
     );
     for mix in [KvMix::GetOnly, KvMix::HalfPut] {
-        let uni = RequestStream::generate(
-            opts.keys,
-            opts.requests,
-            &KeyDist::uniform(opts.keys),
-            mix,
-            64,
-            opts.seed,
-        );
-        let zipf = RequestStream::generate(
-            opts.keys,
-            opts.requests,
-            &KeyDist::zipf(opts.keys, 0.9),
-            mix,
-            64,
-            opts.seed,
-        );
-        for d in KvDesign::ALL {
-            let u = kvs::run(&opts.testbed, d, &uni, 32, kvs::Load::Saturation, opts.seed);
-            let z = kvs::run(&opts.testbed, d, &zipf, 32, kvs::Load::Saturation, opts.seed);
+        let dists = [KeyDist::uniform(opts.keys), KeyDist::zipf(opts.keys, 0.9)];
+        let streams: Vec<RequestStream> = crate::sim::par_map(dists.iter().collect(), |_, dist| {
+            RequestStream::generate(opts.keys, opts.requests, dist, mix, 64, opts.seed)
+        });
+        // One (design, distribution) cell per run, uniform/zipf
+        // interleaved so each design's pair is adjacent in the results.
+        let cells: Vec<_> = KvDesign::ALL
+            .iter()
+            .flat_map(|&d| streams.iter().map(move |s| (d, s, 32usize)))
+            .collect();
+        let runs = kvs::saturation_grid(&opts.testbed, cells, opts.seed);
+        for (d, pair) in KvDesign::ALL.iter().zip(runs.chunks(2)) {
             tb.row(&[
                 d.label().into(),
                 mix.label().into(),
-                format!("{:.1}", u.mops),
-                format!("{:.1}", z.mops),
+                format!("{:.1}", pair[0].mops),
+                format!("{:.1}", pair[1].mops),
             ]);
         }
     }
@@ -466,11 +459,12 @@ pub fn fig9(opts: &Opts) -> experiments::Table {
             64,
             opts.seed,
         );
-        for d in KvDesign::ALL {
-            let r = kvs::peak_then_latency(&opts.testbed, d, &stream, 32, opts.seed);
+        let cells: Vec<_> = KvDesign::ALL.iter().map(|&d| (d, &stream, 32usize)).collect();
+        let runs = kvs::peak_then_latency_grid(&opts.testbed, cells, opts.seed);
+        for (d, r) in KvDesign::ALL.iter().zip(&runs) {
             // The paper's U280 emulation cannot measure LD/LH tails (§V).
             let tail = |us: f64| match d {
-                KvDesign::Orca(m) if m != crate::config::AccelMem::None => "n/a".to_string(),
+                KvDesign::Orca(m) if *m != crate::config::AccelMem::None => "n/a".to_string(),
                 _ => format!("{us:.1}"),
             };
             tb.row(&[
@@ -506,13 +500,22 @@ pub fn fig10(opts: &Opts) -> experiments::Table {
         64,
         opts.seed,
     );
-    for d in [
+    let designs = [
         KvDesign::Cpu,
         KvDesign::SmartNic,
         KvDesign::Orca(crate::config::AccelMem::None),
-    ] {
-        for batch in [1usize, 2, 4, 8, 16, 32] {
-            let r = kvs::peak_then_latency(&opts.testbed, d, &stream, batch, opts.seed);
+    ];
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    let stream = &stream;
+    let cells: Vec<_> = designs
+        .iter()
+        .flat_map(|&d| batches.iter().map(move |&b| (d, stream, b)))
+        .collect();
+    let runs = kvs::peak_then_latency_grid(&opts.testbed, cells, opts.seed);
+    let mut it = runs.iter();
+    for d in designs {
+        for batch in batches {
+            let r = it.next().expect("one run per (design, batch) cell");
             tb.row(&[
                 d.label().into(),
                 batch.to_string(),

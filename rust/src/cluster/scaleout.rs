@@ -149,8 +149,11 @@ impl Router {
 
 /// A per-machine serving element behind the router — any single-machine
 /// design (Cpu / SmartNic / Orca incl. multi-APU shards) boxed behind
-/// the unified [`Design`] interface.
-pub type FleetDesign = Box<dyn Design<Job = MemTrace>>;
+/// the unified [`Design`] interface. `Send` so the serve stage can fan
+/// machines out one-per-task ([`crate::sim::par_map`]); every design is
+/// plain owned timing state (PR 6's arena/ID refactor removed the last
+/// `Rc<RefCell<…>>` sharing), so the bound costs nothing.
+pub type FleetDesign = Box<dyn Design<Job = MemTrace> + Send>;
 
 /// One scale-out run's aggregate result.
 #[derive(Clone, Debug, PartialEq)]
@@ -225,17 +228,36 @@ pub fn run_fleet(
     }
     let first = if n == 0 { 0 } else { first };
 
-    // Serve each machine's substream in its visibility order.
-    let mut done_per_machine: Vec<Vec<(usize, u64)>> = Vec::with_capacity(machines);
-    for (m, mut order) in routed.into_iter().enumerate() {
+    // Serve each machine's substream in its visibility order, one
+    // machine per task: between ToR hops the machines share nothing —
+    // ingress already charged every link/notification ledger and
+    // `serve` draws no RNG — so fanning them out over
+    // [`crate::sim::par_map`] is race-free and byte-identical to the
+    // serial loop (DESIGN.md §Parallel execution). Jobs are handed to
+    // each machine by reference: a replica copy costs a pointer, not a
+    // trace clone.
+    let mut orders = routed;
+    for order in orders.iter_mut() {
         order.sort_by_key(|&(_, t)| t);
-        let ordered: Vec<(u64, MemTrace)> =
-            order.iter().map(|&(i, t)| (t, jobs[i].clone())).collect();
-        let served = if ordered.is_empty() {
+    }
+    let tasks: Vec<_> = designs
+        .iter_mut()
+        .zip(orders.iter())
+        .map(|(design, order)| {
+            let ordered: Vec<(u64, &MemTrace)> =
+                order.iter().map(|&(i, t)| (t, &jobs[i])).collect();
+            (design, ordered)
+        })
+        .collect();
+    let served_per_machine: Vec<Vec<u64>> = crate::sim::par_map(tasks, |_, (design, ordered)| {
+        if ordered.is_empty() {
             Vec::new()
         } else {
-            designs[m].serve(ordered)
-        };
+            design.serve(ordered)
+        }
+    });
+    let mut done_per_machine: Vec<Vec<(usize, u64)>> = Vec::with_capacity(machines);
+    for (order, served) in orders.iter().zip(served_per_machine) {
         let mut done: Vec<(usize, u64)> = order.iter().map(|&(i, _)| i).zip(served).collect();
         done.sort_by_key(|&(_, d)| d);
         done_per_machine.push(done);

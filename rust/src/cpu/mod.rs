@@ -101,9 +101,9 @@ impl CpuServer {
     /// `jobs` must be sorted by arrival; `core_of(i)` maps job → core.
     /// (The scheduler itself is shared with the SmartNIC server:
     /// [`crate::serving::run_stream_batched`].)
-    pub fn run_stream(
+    pub fn run_stream<J: std::borrow::Borrow<MemTrace> + Clone>(
         &mut self,
-        jobs: &[(u64, MemTrace)],
+        jobs: &[(u64, J)],
         core_of: impl Fn(usize) -> usize,
     ) -> Vec<u64> {
         let n_cores = self.batches.len();
@@ -115,7 +115,11 @@ impl CpuServer {
 
     /// Execute one batch starting at `ready` (the core is already
     /// secured). Returns per-request completion times.
-    fn exec_batch(&mut self, ready: u64, staged: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn exec_batch<J: std::borrow::Borrow<MemTrace>>(
+        &mut self,
+        ready: u64,
+        staged: Vec<(u64, J)>,
+    ) -> Vec<u64> {
         let b = staged.len();
         self.served += b as u64;
 
@@ -130,13 +134,14 @@ impl CpuServer {
         // together; step latency = slowest access in the step.
         let max_depth = staged
             .iter()
-            .map(|(_, t)| t.depth())
+            .map(|(_, t)| t.borrow().depth())
             .max()
             .unwrap_or(0);
         let mut step_start = cpu_done;
         for step in 0..max_depth {
             let mut step_end = step_start;
             for (_, trace) in &staged {
+                let trace = trace.borrow();
                 // Pick the accesses belonging to this dependency step.
                 let mut s = 0usize;
                 for (i, a) in trace.accesses.iter().enumerate() {

@@ -284,62 +284,88 @@ fn queries_for(opts: &Opts) -> usize {
 
 /// The `orca dlrm` tables: saturation cross-check + latency sweep,
 /// plus a batched-saturation table when `batch > 1`.
+///
+/// Every (dataset, design) cell is an isolated pipeline run, so stream
+/// building and all three grids fan out over [`crate::sim::par_map`];
+/// the rows are then rendered sequentially in the exact dataset-major,
+/// design-minor order the old nested loops produced (pinned by
+/// `report_has_the_expected_geometry`).
 pub fn report(opts: &Opts, batch: usize) -> Vec<Table> {
     let t = &opts.testbed;
     let n = queries_for(opts);
+    let streams: Vec<DlrmStream> = crate::sim::par_map(AMAZON_PROFILES.iter().collect(), |_, p| {
+        build_stream(p, n, opts.seed)
+    });
+    let sat_cells: Vec<(usize, DlrmDesign)> = (0..streams.len())
+        .flat_map(|si| DlrmDesign::SAT.iter().map(move |&d| (si, d)))
+        .collect();
+    let sweep_cells: Vec<(usize, DlrmDesign)> = (0..streams.len())
+        .flat_map(|si| DlrmDesign::SWEEP.iter().map(move |&d| (si, d)))
+        .collect();
+    let sat_results: Vec<f64> = crate::sim::par_map(sat_cells.clone(), |_, (si, d)| {
+        saturation_qps(t, d, &streams[si], opts.seed)
+    });
+    let sweep_results: Vec<Vec<SweepRow>> =
+        crate::sim::par_map(sweep_cells.clone(), |_, (si, d)| {
+            latency_sweep(t, d, &streams[si], opts.seed)
+        });
+    let batched_results: Option<Vec<RunMetrics>> = (batch > 1).then(|| {
+        crate::sim::par_map(sweep_cells.clone(), |_, (si, d)| {
+            run_design(t, d, &streams[si], Load::Saturation, batch, opts.seed)
+        })
+    });
+
     let mut sat = Table::new(
         "DLRM trace-driven serving — saturation vs analytic bound (Kq/s)",
         &["dataset", "design", "sim", "analytic", "sim/analytic", "memo hit"],
     );
+    for (&(si, d), &sim) in sat_cells.iter().zip(&sat_results) {
+        let stream = &streams[si];
+        let bound = d.analytic_qps(t, &stream.gp);
+        sat.row(&[
+            stream.dataset.into(),
+            d.label(),
+            format!("{:.0}", sim / 1e3),
+            format!("{:.0}", bound / 1e3),
+            format!("{:.2}", sim / bound),
+            format!("{:.0}%", stream.memo_hit_rate * 100.0),
+        ]);
+    }
+
     let mut sweep = Table::new(
         "DLRM latency vs offered load (open-loop Poisson)",
         &["dataset", "design", "load", "offered Kq/s", "p50 µs", "p99 µs", "p999 µs"],
     );
-    let mut batched = (batch > 1).then(|| {
-        Table::new(
-            format!("DLRM batched saturation (coordinator batcher, groups of {batch}; Kq/s)"),
-            &["dataset", "design", "Kq/s", "jobs"],
-        )
-    });
-    for p in AMAZON_PROFILES.iter() {
-        let stream = build_stream(p, n, opts.seed);
-        for d in DlrmDesign::SAT {
-            let sim = saturation_qps(t, d, &stream, opts.seed);
-            let bound = d.analytic_qps(t, &stream.gp);
-            sat.row(&[
-                p.name.into(),
+    for (&(si, d), rows) in sweep_cells.iter().zip(&sweep_results) {
+        for r in rows {
+            sweep.row(&[
+                streams[si].dataset.into(),
                 d.label(),
-                format!("{:.0}", sim / 1e3),
-                format!("{:.0}", bound / 1e3),
-                format!("{:.2}", sim / bound),
-                format!("{:.0}%", stream.memo_hit_rate * 100.0),
+                format!("{:.0}%", r.rel_load * 100.0),
+                format!("{:.0}", r.offered_qps / 1e3),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p99_us),
+                format!("{:.1}", r.p999_us),
             ]);
         }
-        for d in DlrmDesign::SWEEP {
-            for r in latency_sweep(t, d, &stream, opts.seed) {
-                sweep.row(&[
-                    p.name.into(),
-                    d.label(),
-                    format!("{:.0}%", r.rel_load * 100.0),
-                    format!("{:.0}", r.offered_qps / 1e3),
-                    format!("{:.1}", r.p50_us),
-                    format!("{:.1}", r.p99_us),
-                    format!("{:.1}", r.p999_us),
-                ]);
-            }
-            if let Some(tb) = batched.as_mut() {
-                let m = run_design(t, d, &stream, Load::Saturation, batch, opts.seed);
-                tb.row(&[
-                    p.name.into(),
-                    d.label(),
-                    format!("{:.0}", m.mops * 1e6 * batch as f64 / 1e3),
-                    format!("{}", stream.jobs.len().div_ceil(batch)),
-                ]);
-            }
-        }
     }
+
     let mut out = vec![sat, sweep];
-    out.extend(batched);
+    if let Some(results) = batched_results {
+        let mut tb = Table::new(
+            format!("DLRM batched saturation (coordinator batcher, groups of {batch}; Kq/s)"),
+            &["dataset", "design", "Kq/s", "jobs"],
+        );
+        for (&(si, d), m) in sweep_cells.iter().zip(&results) {
+            tb.row(&[
+                streams[si].dataset.into(),
+                d.label(),
+                format!("{:.0}", m.mops * 1e6 * batch as f64 / 1e3),
+                format!("{}", streams[si].jobs.len().div_ceil(batch)),
+            ]);
+        }
+        out.push(tb);
+    }
     out
 }
 

@@ -182,6 +182,27 @@ pub fn run(
     }
 }
 
+/// Fan a grid of `(design, stream, batch)` saturation cells out over
+/// [`crate::sim::par_map`] — each cell is an isolated [`run`], so the
+/// results come back in cell order and byte-identical to a serial loop.
+pub fn saturation_grid(
+    t: &Testbed,
+    cells: Vec<(KvDesign, &RequestStream, usize)>,
+    seed: u64,
+) -> Vec<KvRun> {
+    crate::sim::par_map(cells, |_, (d, s, batch)| run(t, d, s, batch, Load::Saturation, seed))
+}
+
+/// Like [`saturation_grid`], but each cell runs the two-phase
+/// [`peak_then_latency`] measurement.
+pub fn peak_then_latency_grid(
+    t: &Testbed,
+    cells: Vec<(KvDesign, &RequestStream, usize)>,
+    seed: u64,
+) -> Vec<KvRun> {
+    crate::sim::par_map(cells, |_, (d, s, batch)| peak_then_latency(t, d, s, batch, seed))
+}
+
 /// Peak throughput (saturation), then latency at 50% of that peak
 /// (a stable operating point; queueing noise does not drown the
 /// data-path differences the paper discusses).

@@ -113,37 +113,35 @@ pub struct ScaleoutRow {
     pub metrics: FleetMetrics,
 }
 
-/// Saturation sweep over machine counts × skew points.
+/// Saturation sweep over machine counts × skew points. Every
+/// (theta, machines) cell is an isolated simulation, so stream
+/// generation and the grid itself fan out over
+/// [`crate::sim::par_map`]; cells are collected theta-major, exactly
+/// the order the old nested loops produced.
 pub fn sweep(opts: &Opts, counts: &[usize], thetas: &[f64]) -> Vec<ScaleoutRow> {
-    let mut rows = Vec::new();
-    for &theta in thetas {
-        let dist = dist_for(opts.keys, theta);
-        let stream = RequestStream::generate(
-            opts.keys,
-            opts.requests,
-            &dist,
-            KvMix::GetOnly,
-            64,
+    let dists: Vec<KeyDist> = thetas.iter().map(|&th| dist_for(opts.keys, th)).collect();
+    let streams: Vec<RequestStream> = crate::sim::par_map(dists.iter().collect(), |_, dist| {
+        RequestStream::generate(opts.keys, opts.requests, dist, KvMix::GetOnly, 64, opts.seed)
+    });
+    let cells: Vec<(usize, usize)> = (0..thetas.len())
+        .flat_map(|ti| counts.iter().map(move |&n| (ti, n)))
+        .collect();
+    crate::sim::par_map(cells, |_, (ti, n)| {
+        let m = run_point(
+            &opts.testbed,
+            &streams[ti],
+            &dists[ti],
+            n,
+            1,
+            Load::Saturation,
             opts.seed,
         );
-        for &n in counts {
-            let m = run_point(
-                &opts.testbed,
-                &stream,
-                &dist,
-                n,
-                1,
-                Load::Saturation,
-                opts.seed,
-            );
-            rows.push(ScaleoutRow {
-                machines: n,
-                dist: dist.label(),
-                metrics: m,
-            });
+        ScaleoutRow {
+            machines: n,
+            dist: dists[ti].label(),
+            metrics: m,
         }
-    }
-    rows
+    })
 }
 
 fn dist_for(keys: u64, theta: f64) -> KeyDist {
@@ -193,42 +191,35 @@ pub fn mitigation(opts: &Opts, machines: usize, theta: f64, hot_replicas: usize)
     let t = &opts.testbed;
     let uniform_dist = KeyDist::uniform(opts.keys);
     let zipf_dist = dist_for(opts.keys, theta);
-    let uni_stream = RequestStream::generate(
-        opts.keys,
-        opts.requests,
-        &uniform_dist,
-        KvMix::GetOnly,
-        64,
-        opts.seed,
-    );
-    let zipf_stream = RequestStream::generate(
-        opts.keys,
-        opts.requests,
-        &zipf_dist,
-        KvMix::GetOnly,
-        64,
-        opts.seed,
-    );
+    let mut streams = crate::sim::par_map(vec![&uniform_dist, &zipf_dist], |_, dist| {
+        RequestStream::generate(opts.keys, opts.requests, dist, KvMix::GetOnly, 64, opts.seed)
+    });
+    let zipf_stream = streams.pop().expect("two streams generated");
+    let uni_stream = streams.pop().expect("two streams generated");
     // The operating point: a fraction of the *balanced* fleet's peak.
+    // The peak run stays up front (the three scenario runs depend on
+    // its offered load); those three are then independent and fan out.
     let peak = run_point(t, &uni_stream, &uniform_dist, machines, 1, Load::Saturation, opts.seed);
     let offered = (peak.mops * MITIGATION_LOAD).max(0.05);
     let load = Load::Open { mops: offered };
+    let runs = crate::sim::par_map(
+        vec![
+            (&uni_stream, &uniform_dist, 1usize),
+            (&zipf_stream, &zipf_dist, 1),
+            (&zipf_stream, &zipf_dist, hot_replicas),
+        ],
+        |_, (stream, dist, reps)| run_point(t, stream, dist, machines, reps, load, opts.seed),
+    );
+    let [uniform, skewed, replicated]: [FleetMetrics; 3] =
+        runs.try_into().expect("three runs in, three out");
     Mitigation {
         machines,
         theta,
         hot_replicas,
         offered_mops: offered,
-        uniform: run_point(t, &uni_stream, &uniform_dist, machines, 1, load, opts.seed),
-        skewed: run_point(t, &zipf_stream, &zipf_dist, machines, 1, load, opts.seed),
-        replicated: run_point(
-            t,
-            &zipf_stream,
-            &zipf_dist,
-            machines,
-            hot_replicas,
-            load,
-            opts.seed,
-        ),
+        uniform,
+        skewed,
+        replicated,
     }
 }
 

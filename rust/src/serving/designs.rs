@@ -65,7 +65,7 @@ impl Design for Cpu {
         Ingress::immediate(self.net.send_to_server(issue, req_bytes))
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
         let cores = self.cores;
         self.srv.run_stream(&jobs, |i| i % cores)
     }
@@ -113,7 +113,7 @@ impl Design for SmartNic {
         Ingress::immediate(self.net.send_to_server(issue, req_bytes))
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
         let cores = self.cores;
         self.srv.run_stream(&jobs, |i| i % cores)
     }
@@ -274,17 +274,17 @@ impl Design for Orca {
 
     /// Partition by key hash (preserving per-shard arrival order) and
     /// serve each shard's stream on its own APU + coherence controller.
-    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
         let n = self.shards.len();
         if n == 1 {
             // Fast path: no partitioning.
             self.shard_requests[0] += jobs.len() as u64;
             return self.shards[0].serve_stream(&jobs, &mut self.arena);
         }
-        let mut parts: Vec<Vec<(u64, MemTrace)>> = vec![Vec::new(); n];
+        let mut parts: Vec<Vec<(u64, &MemTrace)>> = vec![Vec::new(); n];
         let mut slot: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
         for (t, trace) in jobs {
-            let s = self.shard_of(&trace);
+            let s = self.shard_of(trace);
             slot.push((s, parts[s].len()));
             parts[s].push((t, trace));
         }
@@ -347,7 +347,8 @@ mod tests {
         let t = Testbed::paper();
         let mut orca = Orca::sharded(&t, AccelMem::None, 32, 4);
         let jobs: Vec<(u64, MemTrace)> = (0..20_000u64).map(|k| (0, trace(k))).collect();
-        orca.serve(jobs);
+        let refs: Vec<(u64, &MemTrace)> = jobs.iter().map(|(t, j)| (*t, j)).collect();
+        orca.serve(refs);
         assert!(
             orca.imbalance() < 1.1,
             "uniform hash imbalance {}",

@@ -122,7 +122,7 @@ impl Design for DlrmCpu {
         Ingress::immediate(self.net.send_to_server(issue, req_bytes))
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
         let window = self.window;
         let query_ps = self.query_ps;
         let mem = &mut self.mem;
@@ -131,7 +131,7 @@ impl Design for DlrmCpu {
         for (vis, trace) in jobs {
             let c = earliest(cores);
             let start = cores[c].max(vis);
-            let gathers = replay_windowed(start, &trace, window, |t, a| mem.access(t, a));
+            let gathers = replay_windowed(start, trace, window, |t, a| mem.access(t, a));
             let end = gathers.max(start + query_ps);
             cores[c] = end;
             done.push(end);
@@ -221,7 +221,7 @@ impl Design for DlrmOrca {
     /// controller"); each host access pays interconnect hops plus the
     /// measured memory leg and serializes its return line on the UPI
     /// link.
-    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
         let window = self.window;
         let hop = self.hop_ps;
         let gbs = self.upi_gbs;
@@ -232,7 +232,7 @@ impl Design for DlrmOrca {
         let mut done = Vec::with_capacity(jobs.len());
         for (vis, trace) in jobs {
             let start = (*fsm_free).max(vis) + apu_ps;
-            let end = replay_windowed(start, &trace, window, |t, a| {
+            let end = replay_windowed(start, trace, window, |t, a| {
                 let service = host_access_service_ps(t, a, hop, gbs, mem);
                 let ser_done = upi_serialize_ps(t, u64::from(a.bytes), gbs, link);
                 (t + service).max(ser_done)
@@ -327,7 +327,7 @@ impl Design for DlrmOrcaLocal {
         }
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
         let window = self.window;
         let apu_ps = self.apu_ps;
         let local = &mut self.local;
@@ -336,7 +336,7 @@ impl Design for DlrmOrcaLocal {
         for (vis, trace) in jobs {
             let c = earliest(contexts);
             let start = contexts[c].max(vis) + apu_ps;
-            let end = replay_windowed(start, &trace, window, |t, a| local.access(t, a));
+            let end = replay_windowed(start, trace, window, |t, a| local.access(t, a));
             contexts[c] = end;
             done.push(end);
         }
@@ -401,9 +401,10 @@ mod tests {
         // HBM local path: the local path must finish far sooner.
         let t = Testbed::paper();
         let js: Vec<(u64, MemTrace)> = jobs(200, 32).into_iter().map(|j| (0, j)).collect();
-        let base_last = *DlrmOrca::new(&t).serve(js.clone()).iter().max().unwrap();
+        let refs: Vec<(u64, &MemTrace)> = js.iter().map(|(t, j)| (*t, j)).collect();
+        let base_last = *DlrmOrca::new(&t).serve(refs.clone()).iter().max().unwrap();
         let lh_last = *DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[])
-            .serve(js)
+            .serve(refs)
             .iter()
             .max()
             .unwrap();
@@ -417,8 +418,9 @@ mod tests {
     fn cpu_cores_scale_the_gather_pool() {
         let t = Testbed::paper();
         let js: Vec<(u64, MemTrace)> = jobs(400, 32).into_iter().map(|j| (0, j)).collect();
-        let one = *DlrmCpu::new(&t, 1).serve(js.clone()).iter().max().unwrap();
-        let four = *DlrmCpu::new(&t, 4).serve(js).iter().max().unwrap();
+        let refs: Vec<(u64, &MemTrace)> = js.iter().map(|(t, j)| (*t, j)).collect();
+        let one = *DlrmCpu::new(&t, 1).serve(refs.clone()).iter().max().unwrap();
+        let four = *DlrmCpu::new(&t, 4).serve(refs).iter().max().unwrap();
         let speedup = one as f64 / four as f64;
         assert!((2.0..4.5).contains(&speedup), "4-core speedup {speedup}");
     }
@@ -427,12 +429,13 @@ mod tests {
     fn local_residency_counts_strays() {
         let t = Testbed::paper();
         // Regions that do NOT cover the gather addresses.
+        let job = gather_job(1, 8);
         let mut miss = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[(0x0, 0x100)]);
-        miss.serve(vec![(0, gather_job(1, 8))]);
+        miss.serve(vec![(0, &job)]);
         assert!(miss.local().non_resident > 0);
         // Full coverage: no strays.
         let mut hit = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[(0, 8 << 30)]);
-        hit.serve(vec![(0, gather_job(1, 8))]);
+        hit.serve(vec![(0, &job)]);
         assert_eq!(hit.local().non_resident, 0);
     }
 

@@ -145,10 +145,11 @@ pub trait Design {
     fn ingress(&mut self, issue: u64, job: &Self::Job, req_bytes: u64, rng: &mut Rng) -> Ingress;
 
     /// Serve a whole stream of `(visible_time, job)` pairs sorted by
-    /// visibility; returns per-job completion times (same order). Takes
-    /// the jobs by value so sharded designs can partition without
-    /// another deep copy.
-    fn serve(&mut self, jobs: Vec<(u64, Self::Job)>) -> Vec<u64>;
+    /// visibility; returns per-job completion times (same order). Jobs
+    /// are borrowed from the caller — sharded designs partition the
+    /// references, and replicated fleet routing hands the same job to
+    /// several machines without ever deep-copying a trace.
+    fn serve(&mut self, jobs: Vec<(u64, &Self::Job)>) -> Vec<u64>;
 
     /// Response path; calls arrive in nondecreasing `done` order.
     /// Returns the time the response reaches the client.
@@ -231,10 +232,7 @@ impl ServingPipeline {
             .collect();
         let first = if n == 0 { 0 } else { first };
         order.sort_by_key(|&(_, t)| t);
-        let ordered: Vec<(u64, D::Job)> = order
-            .iter()
-            .map(|&(i, t)| (t, jobs[i].clone()))
-            .collect();
+        let ordered: Vec<(u64, &D::Job)> = order.iter().map(|&(i, t)| (t, &jobs[i])).collect();
 
         // Serve.
         let served = design.serve(ordered);
@@ -309,13 +307,15 @@ impl ServingPipeline {
 /// `batch` — whenever it frees up; no waiting to fill a batch. `jobs`
 /// must be sorted by arrival; `core_of(i)` maps job index → core;
 /// `exec(core, start, staged)` runs one batch and returns per-request
-/// completion times.
-pub fn run_stream_batched(
-    jobs: &[(u64, MemTrace)],
+/// completion times. Generic over the job handle so callers can stage
+/// either owned traces or `&MemTrace` borrows (cloning a borrow is a
+/// pointer copy, not a trace copy).
+pub fn run_stream_batched<J: std::borrow::Borrow<MemTrace> + Clone>(
+    jobs: &[(u64, J)],
     n_cores: usize,
     batch: usize,
     core_of: impl Fn(usize) -> usize,
-    mut exec: impl FnMut(usize, u64, Vec<(u64, MemTrace)>) -> Vec<u64>,
+    mut exec: impl FnMut(usize, u64, Vec<(u64, J)>) -> Vec<u64>,
 ) -> Vec<u64> {
     use std::cmp::Reverse;
     use std::collections::{BinaryHeap, VecDeque};
@@ -350,7 +350,7 @@ pub fn run_stream_batched(
             }
             continue;
         }
-        let staged: Vec<(u64, MemTrace)> = batch_idx.iter().map(|&i| jobs[i].clone()).collect();
+        let staged: Vec<(u64, J)> = batch_idx.iter().map(|&i| jobs[i].clone()).collect();
         let ds = exec(c, start, staged);
         core_free[c] = ds.iter().copied().max().unwrap_or(start);
         for (&i, d) in batch_idx.iter().zip(ds) {

@@ -2,20 +2,25 @@
 //!
 //! Everything timing-related in the reproduction runs on this engine: the
 //! cpoll ping-pong (Fig 7), the KVS serving pipelines (Fig 8–10), chain
-//! replication (Fig 11) and the DLRM throughput model (Fig 12). The engine
-//! is single-threaded and fully deterministic: identical seeds produce
-//! identical event orders and identical statistics, which the test suite
-//! asserts.
+//! replication (Fig 11) and the DLRM throughput model (Fig 12). Each engine
+//! instance is single-threaded and fully deterministic: identical seeds
+//! produce identical event orders and identical statistics, which the test
+//! suite asserts. On top of that sits a deterministic fan-out layer
+//! ([`par`]): independent runs (sweep cells, fleet machines between ToR
+//! hops) execute on `ORCA_THREADS` workers with index-ordered results and
+//! merged op counters, so parallel output is byte-identical to serial.
 
 use std::cell::Cell;
 
 pub mod engine;
+pub mod par;
 pub mod rng;
 pub mod server;
 pub mod stats;
 pub mod time;
 
 pub use engine::{QueueKind, Sim};
+pub use par::{par_map, par_map_with, thread_count};
 pub use rng::{mix64, Mix64Build, Rng};
 pub use server::{BandwidthLedger, MultiServer, Pipeline, Server};
 pub use stats::{Histogram, Summary};
@@ -41,6 +46,14 @@ pub fn count_op() {
 #[inline]
 pub fn ops_executed() -> u64 {
     OPS.with(|c| c.get())
+}
+
+/// Merge `n` operations executed elsewhere — a finished [`par`] worker's
+/// delta — into this thread's counter, keeping snapshot deltas taken
+/// around a fan-out exact regardless of worker count.
+#[inline]
+pub fn add_ops(n: u64) {
+    OPS.with(|c| c.set(c.get().wrapping_add(n)));
 }
 
 #[cfg(test)]

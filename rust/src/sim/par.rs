@@ -1,0 +1,188 @@
+//! Deterministic fan-out over scoped threads.
+//!
+//! The simulator's unit of isolation is a *run*: one design (or one
+//! fleet machine) plus the streams it serves, with no shared mutable
+//! state between runs. [`par_map`] exploits that: it executes a batch
+//! of such isolated tasks on `ORCA_THREADS` workers and guarantees the
+//! result is **indistinguishable from the serial loop** —
+//!
+//! * results are collected in item-index order, so output never depends
+//!   on worker count or OS scheduling;
+//! * each worker's thread-local [`crate::sim::ops_executed`] delta is
+//!   merged back into the caller (a commutative wrapping sum), so the
+//!   `events` columns in every table match the serial run exactly;
+//! * a worker panic is re-raised on the caller with its original
+//!   payload (no swallowed failures, no `unwrap` on a `JoinHandle`).
+//!
+//! See DESIGN.md §Parallel execution for the ownership argument (what
+//! makes fleet designs `Send`) and the ToR-hop lookahead argument for
+//! why per-machine serve streams are race-free.
+
+/// Worker count for [`par_map`]: the `ORCA_THREADS` environment
+/// variable when set (a positive integer; `1` forces fully serial
+/// execution), else [`std::thread::available_parallelism`].
+pub fn thread_count() -> usize {
+    match std::env::var("ORCA_THREADS") {
+        Ok(v) => parse_threads(&v),
+        Err(_) => std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1),
+    }
+}
+
+/// Parse an `ORCA_THREADS` value. Panics on malformed input — a typo'd
+/// environment must fail loudly, not silently serialize every sweep.
+fn parse_threads(v: &str) -> usize {
+    match v.trim().parse::<usize>() {
+        Ok(x) if x >= 1 => x,
+        _ => panic!("ORCA_THREADS must be a positive integer, got `{v}`"),
+    }
+}
+
+/// Apply `f` to every item on [`thread_count`] scoped workers and
+/// return the results in item order. `f(i, item)` gets the item's
+/// original index — byte-identical output to
+/// `items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect()`
+/// for any worker count (see the module docs for the contract).
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    par_map_with(thread_count(), items, f)
+}
+
+/// [`par_map`] with an explicit worker count (tests and benches pin
+/// parallelism without touching the process environment).
+pub fn par_map_with<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = workers.clamp(1, n.max(1));
+    if workers == 1 {
+        // Inline on the caller: zero threading overhead, no delta to
+        // merge (ops land on this thread's counter directly).
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    // Striped assignment (stripe w owns items w, w+workers, …): cheap
+    // static balancing when neighboring items have similar cost, e.g. a
+    // sweep grid ordered small-to-large along one axis.
+    let mut stripes: Vec<Vec<(usize, T)>> = (0..workers)
+        .map(|_| Vec::with_capacity(n / workers + 1))
+        .collect();
+    for (i, x) in items.into_iter().enumerate() {
+        stripes[i % workers].push((i, x));
+    }
+    let f = &f;
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let mut merged_ops = 0u64;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = stripes
+            .into_iter()
+            .map(|stripe| {
+                scope.spawn(move || {
+                    let out: Vec<(usize, R)> =
+                        stripe.into_iter().map(|(i, x)| (i, f(i, x))).collect();
+                    // A scope thread starts with a zeroed op counter, so
+                    // its final value IS this worker's delta (including
+                    // anything a nested fan-out merged into it).
+                    (out, crate::sim::ops_executed())
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok((out, ops)) => {
+                    merged_ops = merged_ops.wrapping_add(ops);
+                    for (i, r) in out {
+                        slots[i] = Some(r);
+                    }
+                }
+                // Re-raise a worker panic with its original payload.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    crate::sim::add_ops(merged_ops);
+    slots
+        .into_iter()
+        .map(|r| r.expect("par_map fills every index exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{count_op, ops_executed};
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for workers in [1, 2, 3, 8, 64] {
+            let got = par_map_with(workers, (0..100u64).collect(), |i, x| {
+                assert_eq!(i as u64, x);
+                x * 2
+            });
+            assert_eq!(got, (0..100u64).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn worker_op_counts_merge_into_the_caller() {
+        for workers in [1, 4, 8] {
+            let before = ops_executed();
+            par_map_with(workers, (0..50u64).collect(), |_, x| {
+                for _ in 0..x {
+                    count_op();
+                }
+                x
+            });
+            assert_eq!(
+                ops_executed() - before,
+                (0..50).sum::<u64>(),
+                "delta must match the serial count at {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn nested_fan_outs_merge_transitively() {
+        let before = ops_executed();
+        par_map_with(4, (0..8u64).collect(), |_, x| {
+            par_map_with(2, (0..4u64).collect(), |_, y| {
+                count_op();
+                y
+            });
+            x
+        });
+        assert_eq!(ops_executed() - before, 32);
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_inputs_work() {
+        assert_eq!(par_map_with(8, Vec::<u64>::new(), |_, x| x), Vec::<u64>::new());
+        assert_eq!(par_map_with(64, vec![1u64, 2], |_, x| x + 1), vec![2, 3]);
+    }
+
+    #[test]
+    fn parse_threads_accepts_positive_integers() {
+        assert_eq!(parse_threads("1"), 1);
+        assert_eq!(parse_threads(" 8 "), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "ORCA_THREADS")]
+    fn parse_threads_rejects_garbage() {
+        parse_threads("fast");
+    }
+
+    #[test]
+    #[should_panic(expected = "ORCA_THREADS")]
+    fn parse_threads_rejects_zero() {
+        parse_threads("0");
+    }
+}

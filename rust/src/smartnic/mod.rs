@@ -114,9 +114,9 @@ impl SmartNicServer {
 
     /// Opportunistic streaming execution — same contract (and shared
     /// scheduler) as [`crate::cpu::CpuServer::run_stream`].
-    pub fn run_stream(
+    pub fn run_stream<J: std::borrow::Borrow<MemTrace> + Clone>(
         &mut self,
-        jobs: &[(u64, MemTrace)],
+        jobs: &[(u64, J)],
         core_of: impl Fn(usize) -> usize,
     ) -> Vec<u64> {
         let n_cores = self.batches.len();
@@ -127,7 +127,12 @@ impl SmartNicServer {
     }
 
     /// Execute one batch starting at `ready` on `core`.
-    fn exec_batch(&mut self, core: usize, ready: u64, staged: Vec<(u64, MemTrace)>) -> Vec<u64> {
+    fn exec_batch<J: std::borrow::Borrow<MemTrace>>(
+        &mut self,
+        core: usize,
+        ready: u64,
+        staged: Vec<(u64, J)>,
+    ) -> Vec<u64> {
         let b = staged.len();
         self.served += b as u64;
 
@@ -138,11 +143,12 @@ impl SmartNicServer {
         // Memory walk: within a dependency step the batch's accesses
         // overlap on local memory, but host reads are bounded by the
         // core's synchronous host-read pipeline — the §II-B linearity.
-        let max_depth = staged.iter().map(|(_, t)| t.depth()).max().unwrap_or(0);
+        let max_depth = staged.iter().map(|(_, t)| t.borrow().depth()).max().unwrap_or(0);
         let mut step_start = cpu_done;
         for step in 0..max_depth {
             let mut step_end = step_start;
             for (_, trace) in &staged {
+                let trace = trace.borrow();
                 let mut s = 0usize;
                 for (i, a) in trace.accesses.iter().enumerate() {
                     if i == 0 || a.dep {

@@ -1,0 +1,132 @@
+//! Parallel-execution determinism suite: the fan-out layer
+//! (`sim::par_map`) must be invisible in every observable output.
+//! Rendering the same subcommand under `ORCA_THREADS` 1, 2 and 8 must
+//! produce byte-identical `--json` tables, and the executed-event
+//! counter must merge back to exactly the serial total — otherwise the
+//! worker count has leaked into the simulation.
+//!
+//! All tests in this binary mutate the process-wide `ORCA_THREADS`
+//! variable, so every mutation happens under one mutex held for the
+//! whole render (cargo runs a binary's tests on parallel threads).
+
+use orca::cli;
+use orca::experiments::table;
+use orca::testing::for_seeds;
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `ORCA_THREADS=n`, holding the env lock throughout so
+/// concurrent tests can't observe (or clobber) the pinned value.
+fn with_threads<T>(n: &str, f: impl FnOnce() -> T) -> T {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = std::env::var("ORCA_THREADS").ok();
+    std::env::set_var("ORCA_THREADS", n);
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("ORCA_THREADS", v),
+        None => std::env::remove_var("ORCA_THREADS"),
+    }
+    out
+}
+
+/// Render one CLI subcommand to its canonical JSON (the same path
+/// `cli_determinism.rs` guards), with a workload small enough that
+/// three renders per seed stay cheap.
+fn render(args: &[&str], seed: u64, requests: u64) -> String {
+    let seed_s = seed.to_string();
+    let req_s = requests.to_string();
+    let mut argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    argv.extend(
+        ["--seed", &seed_s, "--keys", "20000", "--requests", &req_s]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    let cli = cli::parse(&argv).expect("args must parse");
+    let tables = cli::tables_for(&cli).expect("command must run");
+    assert!(!tables.is_empty(), "command {args:?} must produce tables");
+    table::to_json(&tables)
+}
+
+/// Assert threads 1, 2 and 8 render `args` byte-identically per seed.
+fn check_thread_invariance(args: &[&str], seeds: u64, requests: u64) {
+    for_seeds(seeds, |rng| {
+        let seed = rng.next_u64();
+        let serial = with_threads("1", || render(args, seed, requests));
+        for n in ["2", "8"] {
+            let par = with_threads(n, || render(args, seed, requests));
+            if par != serial {
+                return Err(format!("command {args:?} diverged between ORCA_THREADS=1 and {n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scaleout_tables_are_byte_identical_across_worker_counts() {
+    // The tentpole path: parallel sweep grid over a parallel fleet serve
+    // stage, including hot-key mitigation's replicated routing. 32 seeds
+    // is the acceptance floor.
+    check_thread_invariance(
+        &["scaleout", "--machines", "1,2", "--theta", "0.99", "--hot-replicas", "2"],
+        32,
+        1_200,
+    );
+}
+
+#[test]
+fn dlrm_tables_are_byte_identical_across_worker_counts() {
+    // All three dlrm tables (saturation, sweep, batched) fan out
+    // dataset-major; the render must not care how the cells were packed
+    // onto workers.
+    check_thread_invariance(&["dlrm", "--batch", "4"], 3, 400);
+}
+
+#[test]
+fn chain_tables_are_byte_identical_across_worker_counts() {
+    // chain runs entirely on the sequential path — pinning it here
+    // guards against a future fan-out accidentally splitting its RNG.
+    check_thread_invariance(&["chain", "--replicas", "2..3", "--crash-at"], 3, 1_200);
+}
+
+#[test]
+fn fleet_events_and_metrics_match_serial_across_worker_counts() {
+    // The executed-op counter is thread-local; par_map merges each
+    // worker's delta back into the caller. A lost or double-counted
+    // worker shows up here as an events mismatch even when the tables
+    // happen to agree.
+    use orca::experiments::kvs::RequestStream;
+    use orca::experiments::scaleout::run_point;
+    use orca::serving::Load;
+    use orca::workload::{KeyDist, KvMix};
+
+    let testbed = orca::config::Testbed::paper();
+    for_seeds(32, |rng| {
+        let seed = rng.next_u64();
+        let dist = KeyDist::zipf(5_000, 0.9);
+        let stream = RequestStream::generate(5_000, 800, &dist, KvMix::GetOnly, 64, seed);
+        let runs: Vec<_> = ["1", "2", "8"]
+            .iter()
+            .map(|n| {
+                with_threads(n, || {
+                    let ops0 = orca::sim::ops_executed();
+                    let m = run_point(&testbed, &stream, &dist, 4, 1, Load::Saturation, seed);
+                    (m, orca::sim::ops_executed().wrapping_sub(ops0))
+                })
+            })
+            .collect();
+        let (serial_metrics, serial_events) = &runs[0];
+        for ((m, ev), n) in runs[1..].iter().zip(["2", "8"]) {
+            if m != serial_metrics {
+                return Err(format!("FleetMetrics diverged at ORCA_THREADS={n}"));
+            }
+            if ev != serial_events {
+                return Err(format!(
+                    "events diverged at ORCA_THREADS={n}: {ev} vs serial {serial_events}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,7 +1,10 @@
 #!/usr/bin/env python3
 """Gate BENCH_perf.json against a committed baseline.
 
-Usage: bench_check.py CURRENT BASELINE
+Usage:
+  bench_check.py CURRENT BASELINE            # run the gate
+  bench_check.py --promote CURRENT BASELINE  # emit a refreshed baseline
+  bench_check.py --help                      # this text
 
 Checks, in order:
 
@@ -9,12 +12,32 @@ Checks, in order:
 2. Absolute regressions: a row whose baseline ``secs`` is a number (not
    null) must not be more than ``max_slowdown`` (default 2x) slower.
    Null baselines skip this check — they mark rows that have never been
-   measured on CI hardware; refresh them by copying a CI-produced
-   BENCH_perf.json over BENCH_baseline.json.
+   measured on CI hardware (see *Promoting a baseline* below).
 3. Engine ratio floor: the wheel-batched scaleout row must clear
    ``min_engine_ratio`` x the reference-heap row's events/sec. This is
    machine-independent (both rows ran on the same box), so it holds even
    while the absolute baselines are null.
+4. Parallel-sweep floor: ``scaleout_sweep`` (pinned to ORCA_THREADS=1)
+   vs ``scaleout_sweep_par`` (min(8, cores) workers) run the identical
+   workload; wall-clock serial/parallel must clear a floor derived from
+   the run's top-level ``par_workers``:
+
+       floor = min(min_par_ratio, max(1.0, 0.4 * par_workers))
+
+   i.e. the full ``min_par_ratio`` (default 3x) on an 8-way box,
+   scaled down proportionally on narrower CI runners, and never failing
+   a single-core machine. Like check 3 it compares two rows from the
+   same run, so it stays armed while absolute baselines are null.
+
+Promoting a baseline:
+
+  CI's ``bench-smoke`` job uploads the measured BENCH_perf.json and a
+  ``BENCH_baseline.refreshed.json`` produced by ``--promote``. To arm
+  (or re-arm) the absolute gate, download that artifact and commit it
+  over BENCH_baseline.json. ``--promote`` keeps the gate knobs
+  (``max_slowdown``, ``min_engine_ratio``, ``min_par_ratio``, comments)
+  from BASELINE and takes every measured row from CURRENT, so the next
+  run is gated against real numbers from CI hardware.
 
 Exit code 0 on pass, 1 on any failure (every failure is printed).
 """
@@ -24,6 +47,8 @@ import sys
 
 HEAP_ROW = "engine_scaleout_heap_boxed"
 WHEEL_ROW = "engine_scaleout_wheel_batched"
+SWEEP_SERIAL = "scaleout_sweep"
+SWEEP_PAR = "scaleout_sweep_par"
 
 
 def load_rows(path):
@@ -32,14 +57,38 @@ def load_rows(path):
     return {row["name"]: row for row in doc["rows"]}, doc
 
 
+def promote(current_path, baseline_path):
+    """Print a refreshed baseline: BASELINE's gate knobs, CURRENT's rows."""
+    current_rows, current_doc = load_rows(current_path)
+    _, baseline_doc = load_rows(baseline_path)
+    out = {k: v for k, v in baseline_doc.items() if k != "rows"}
+    out["quick"] = current_doc.get("quick", False)
+    if "par_workers" in current_doc:
+        out["par_workers"] = current_doc["par_workers"]
+    out["rows"] = [
+        {"name": r["name"], "secs": r["secs"], "events": r.get("events", 0)}
+        for r in current_rows.values()
+    ]
+    json.dump(out, sys.stdout, indent=2)
+    print()
+    return 0
+
+
 def main():
-    if len(sys.argv) != 3:
+    argv = sys.argv[1:]
+    if argv and argv[0] in ("--help", "-h"):
+        print(__doc__)
+        return 0
+    if len(argv) == 3 and argv[0] == "--promote":
+        return promote(argv[1], argv[2])
+    if len(argv) != 2:
         print(__doc__)
         return 1
-    current, _ = load_rows(sys.argv[1])
-    baseline_rows, baseline_doc = load_rows(sys.argv[2])
+    current, current_doc = load_rows(argv[0])
+    baseline_rows, baseline_doc = load_rows(argv[1])
     max_slowdown = float(baseline_doc.get("max_slowdown", 2.0))
     min_ratio = float(baseline_doc.get("min_engine_ratio", 5.0))
+    min_par_ratio = float(baseline_doc.get("min_par_ratio", 3.0))
 
     failures = []
 
@@ -70,6 +119,27 @@ def main():
         if ratio < min_ratio:
             failures.append(
                 f"engine speedup {ratio:.2f}x is below the {min_ratio}x floor"
+            )
+
+    serial = current.get(SWEEP_SERIAL)
+    par = current.get(SWEEP_PAR)
+    if serial is None or par is None:
+        failures.append(f"sweep rows `{SWEEP_SERIAL}`/`{SWEEP_PAR}` missing from the run")
+    elif serial["secs"] <= 0 or par["secs"] <= 0:
+        failures.append("sweep rows report no wall time")
+    else:
+        workers = int(current_doc.get("par_workers", 1))
+        floor = min(min_par_ratio, max(1.0, 0.4 * workers))
+        ratio = serial["secs"] / par["secs"]
+        print(
+            f"parallel sweep: {ratio:.2f}x serial at {workers} workers "
+            f"(floor {floor:.2f}x)"
+        )
+        if ratio < floor:
+            failures.append(
+                f"parallel sweep speedup {ratio:.2f}x is below the "
+                f"{floor:.2f}x floor ({workers} workers, "
+                f"min_par_ratio {min_par_ratio}x)"
             )
 
     if failures:
