@@ -1,17 +1,19 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
 //! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
-//! sharding, adaptive, chain, dlrm, scaleout, all, serve (coordinator
-//! demo), info.
+//! sharding, adaptive, chain, dlrm, scaleout, fleet, all, serve
+//! (coordinator demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
 //! --config FILE, --artifacts DIR, --cdf (fig7: dump CDF points),
 //! --shards LIST (sharding: shard counts to sweep), --replicas LIST|A..B
-//! and --crash-at [N] (chain: replica sweep + timed mid-chain crash),
-//! --batch N (dlrm: group queries through the coordinator batcher),
-//! --machines LIST|A..B, --theta T and --hot-replicas K (scaleout:
-//! machine sweep, skew point, hot-key replication factor),
-//! --json PATH (dump the run's tables as machine-readable JSON).
+//! and --crash-at [N] (chain: replica sweep + timed mid-chain crash;
+//! fleet: crash one machine at hour N), --batch N (dlrm: group queries
+//! through the coordinator batcher), --machines LIST|A..B, --theta T
+//! and --hot-replicas K (scaleout: machine sweep, skew point, hot-key
+//! replication factor), --hours H and --slo-p99-us X (fleet: trace
+//! length, latency SLO), --json PATH (dump the run's tables as
+//! machine-readable JSON).
 
 use crate::config::{Overrides, Testbed};
 use crate::experiments::{self, Opts, Table};
@@ -40,6 +42,10 @@ pub struct Cli {
     pub hot_replicas: Option<usize>,
     /// Dump every table of the run to this path as JSON.
     pub json: Option<std::path::PathBuf>,
+    /// With `fleet`: simulated hours (= autoscaler epochs).
+    pub hours: u32,
+    /// With `fleet`: the p99 latency SLO the autoscaler defends, µs.
+    pub slo_p99_us: f64,
 }
 
 pub const USAGE: &str = "\
@@ -61,6 +67,7 @@ COMMANDS:
   chain   hop-by-hop chain replication: replica sweep + timed crash/recovery
   dlrm    DLRM trace-driven serving: saturation vs analytic + latency-vs-load
   scaleout  scale-out KVS across the cluster: machines x skew + hot-key mitigation
+  fleet   elastic fleet day in the life: diurnal trace, autoscaler, crash re-homing
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
   info    testbed parameters after overrides
@@ -76,7 +83,9 @@ FLAGS:
   --shards LIST     comma-separated shard counts for `sharding` (default 1,2,4,8)
   --replicas R      chain replica counts: a list `2,4,6` or range `2..6` (default 2..6)
   --crash-at [N]    with chain: crash the mid replica at txn N of the timed
-                    run (bare flag: one third in; runs cap at 20000 txns)
+                    run (bare flag: one third in; runs cap at 20000 txns);
+                    with fleet: crash one machine at the start of hour N
+                    (bare flag: one third into the trace)
   --batch N         with dlrm: route queries through the coordinator batcher
                     in groups of N (default 1 = unbatched)
   --machines M      scaleout machine counts: a list `1,4,8` or range `1..8`
@@ -85,6 +94,10 @@ FLAGS:
                     {uniform, T} (default sweep: 0, 0.9, 0.99)
   --hot-replicas K  with scaleout: replicate the top-64 hot keys on K
                     machines in the mitigation table (default 4)
+  --hours H         with fleet: simulated hours, one autoscaler epoch per
+                    hour (default 24)
+  --slo-p99-us X    with fleet: p99 latency SLO the autoscaler defends,
+                    in µs (default 150)
   --json PATH       also write the run's tables to PATH as JSON
 ";
 
@@ -105,6 +118,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut theta = None;
     let mut hot_replicas = None;
     let mut json = None;
+    let mut hours = experiments::fleet::DEFAULT_HOURS;
+    let mut slo_p99_us = experiments::fleet::DEFAULT_SLO_P99_US;
     let mut i = 1;
     while i < args.len() {
         let take = |i: &mut usize| -> Result<String> {
@@ -171,6 +186,24 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 }
                 theta = Some(t);
             }
+            "--hours" => {
+                let v = take(&mut i)?;
+                hours = v
+                    .parse::<u32>()
+                    .with_context(|| format!("bad hour count `{v}`"))?;
+                if hours == 0 {
+                    bail!("--hours needs at least one simulated hour");
+                }
+            }
+            "--slo-p99-us" => {
+                let v = take(&mut i)?;
+                slo_p99_us = v
+                    .parse::<f64>()
+                    .with_context(|| format!("bad SLO `{v}`"))?;
+                if !slo_p99_us.is_finite() || slo_p99_us <= 0.0 {
+                    bail!("--slo-p99-us needs a positive latency in µs, got `{v}`");
+                }
+            }
             "--hot-replicas" => {
                 let v = take(&mut i)?;
                 let k = v
@@ -220,6 +253,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         theta,
         hot_replicas,
         json,
+        hours,
+        slo_p99_us,
     })
 }
 
@@ -236,6 +271,34 @@ fn resolve_hot_replicas(cli: &Cli) -> Result<usize> {
         }
         Some(k) => Ok(k),
         None => Ok(experiments::scaleout::DEFAULT_HOT_REPLICAS.min(max)),
+    }
+}
+
+/// The fleet crash hour: `--crash-at` reuses the chain flag (bare flag
+/// = the 0 sentinel = one third into the trace; an explicit hour must
+/// land inside it). Validated here so a bad flag fails before the run.
+fn fleet_crash_hour(cli: &Cli) -> Result<Option<u32>> {
+    match cli.crash_at {
+        None => Ok(None),
+        Some(0) => {
+            if cli.hours < 3 {
+                bail!(
+                    "--crash-at (bare) needs a run of >= 3 hours to place the \
+                     default crash (got --hours {})",
+                    cli.hours
+                );
+            }
+            Ok(Some(cli.hours / 3))
+        }
+        Some(at) => {
+            if at >= cli.hours as u64 {
+                bail!(
+                    "--crash-at {at} is beyond the {}-hour run (hours are 0-based)",
+                    cli.hours
+                );
+            }
+            Ok(Some(at as u32))
+        }
     }
 }
 
@@ -307,6 +370,15 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             tables.extend(experiments::scaleout::report(&cli.opts, &cli.machines, cli.theta, k));
         }
         "adaptive" => tables.push(experiments::adaptive::report(&cli.opts)),
+        "fleet" => {
+            let crash = fleet_crash_hour(cli)?;
+            tables.extend(experiments::fleet::report(
+                &cli.opts,
+                cli.hours,
+                cli.slo_p99_us,
+                crash,
+            ));
+        }
         "chain" => {
             // Validate the crash configuration before the (expensive)
             // sweep so bad flags fail fast, not after minutes of
@@ -356,6 +428,15 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             tables.push(experiments::adaptive::report(&cli.opts));
             tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
             tables.extend(experiments::scaleout::report(&cli.opts, &cli.machines, cli.theta, k));
+            // The fleet showcase always exercises the crash path at the
+            // default hour (like chain, `all` ignores --crash-at).
+            let fleet_crash = if cli.hours >= 3 { Some(cli.hours / 3) } else { None };
+            tables.extend(experiments::fleet::report(
+                &cli.opts,
+                cli.hours,
+                cli.slo_p99_us,
+                fleet_crash,
+            ));
         }
         "serve" | "info" => {}
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
@@ -681,6 +762,42 @@ mod tests {
         ]);
         let cli = parse(&argv).unwrap();
         assert_eq!(tables_for(&cli).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parses_fleet_flags() {
+        let def = parse(&s(&["fleet"])).unwrap();
+        assert_eq!(def.hours, experiments::fleet::DEFAULT_HOURS);
+        assert_eq!(def.slo_p99_us, experiments::fleet::DEFAULT_SLO_P99_US);
+        let cli = parse(&s(&["fleet", "--hours", "6", "--slo-p99-us", "80.5"])).unwrap();
+        assert_eq!(cli.hours, 6);
+        assert_eq!(cli.slo_p99_us, 80.5);
+        assert!(parse(&s(&["fleet", "--hours", "0"])).is_err());
+        assert!(parse(&s(&["fleet", "--hours", "x"])).is_err());
+        assert!(parse(&s(&["fleet", "--slo-p99-us", "0"])).is_err());
+        assert!(parse(&s(&["fleet", "--slo-p99-us", "-5"])).is_err());
+        assert!(parse(&s(&["fleet", "--slo-p99-us", "inf"])).is_err());
+        assert!(parse(&s(&["fleet", "--slo-p99-us", "x"])).is_err());
+    }
+
+    #[test]
+    fn fleet_crash_hours_are_validated_before_the_run() {
+        // An explicit crash hour must land inside the trace...
+        let cli = parse(&s(&["fleet", "--hours", "4", "--crash-at", "9"])).unwrap();
+        assert!(tables_for(&cli).is_err());
+        // ...hour counts are 0-based, so `--hours H --crash-at H` is out...
+        let cli = parse(&s(&["fleet", "--hours", "4", "--crash-at", "4"])).unwrap();
+        assert!(tables_for(&cli).is_err());
+        // ...and the bare flag needs room for the default placement.
+        let cli = parse(&s(&["fleet", "--hours", "2", "--crash-at"])).unwrap();
+        assert!(tables_for(&cli).is_err());
+        // In-range placements resolve without running anything.
+        let cli = parse(&s(&["fleet", "--hours", "9", "--crash-at", "5"])).unwrap();
+        assert_eq!(fleet_crash_hour(&cli).unwrap(), Some(5));
+        let cli = parse(&s(&["fleet", "--hours", "9", "--crash-at"])).unwrap();
+        assert_eq!(fleet_crash_hour(&cli).unwrap(), Some(3));
+        let cli = parse(&s(&["fleet", "--hours", "9"])).unwrap();
+        assert_eq!(fleet_crash_hour(&cli).unwrap(), None);
     }
 
     #[test]

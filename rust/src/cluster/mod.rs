@@ -13,9 +13,12 @@
 //! transaction traverses the chain hop by hop.
 //!
 //! Chain replication is one deployment of the layer; **scale-out KVS
-//! serving** ([`scaleout`]) is the other — the keyspace consistent-
+//! serving** ([`scaleout`]) is another — the keyspace consistent-
 //! hashed across N machines each running a full serving design, with
-//! hot-key replication as the skew mitigation (`orca scaleout`).
+//! hot-key replication as the skew mitigation (`orca scaleout`); the
+//! **elastic fleet** ([`orchestrator`]) puts a control plane on top —
+//! registration, keep-alive failure detection, and an autoscaling
+//! policy loop driving the member-set router (`orca fleet`).
 //!
 //! ## Hop model
 //!
@@ -50,8 +53,10 @@
 //! endpoints' ledgers cut-through (the switch does not store-and-forward
 //! at message granularity) and adds the leg latency once.
 
+pub mod orchestrator;
 pub mod scaleout;
 
+pub use orchestrator::{run_day, DayReport, Orchestrator, OrchestratorCfg};
 pub use scaleout::{run_fleet, FleetDesign, FleetMetrics, Router};
 
 use crate::config::Testbed;

@@ -1,0 +1,601 @@
+//! The elastic-fleet control plane (DESIGN.md §Elastic fleet): the
+//! simulated orchestrator that turns `orca scaleout`'s static sweeps
+//! into a living service.
+//!
+//! Modeled on the EDGELESS ε-ORC shape (SNIPPETS.md §1–2: node
+//! registration with keep-alive deadlines, failure ⇒ immediate
+//! relocation) and the fleet-scale offload deployments surveyed in
+//! PAPERS.md ("A Comprehensive Study on Optimizing Systems with Data
+//! Processing Units"):
+//!
+//! * **Membership** — machines register with their link capacity and
+//!   get a never-reused id; the consistent-hash ring routes over the
+//!   *member set* ([`Router::with_members`]), so joins and leaves
+//!   re-home only the bounded key ranges the invariant tests pin.
+//! * **Failure detection** — every live machine heartbeats over its
+//!   simulated ToR leg each [`OrchestratorCfg::hb_interval_us`]; a
+//!   machine silent past its keep-alive deadline is declared dead and
+//!   its keyspace re-homed immediately. Heartbeats are latency-only
+//!   control messages (tens of bytes against Gbps links — the leg
+//!   *latency* is what bounds detection, so that is what's modeled).
+//! * **Autoscaling policy** — each epoch the policy loop samples the
+//!   offered load against the fleet's aggregate link capacity
+//!   (feed-forward: size for [`OrchestratorCfg::target_util`]) and the
+//!   previous epoch's windowed p99 (feedback: headroom breach ⇒ grow).
+//!   Hysteresis is asymmetric — grow immediately, drain at most one
+//!   machine per epoch and only after [`OrchestratorCfg::down_epochs`]
+//!   consecutive low epochs — so a flash crowd cannot thrash the ring.
+//!
+//! [`run_day`] is the epoch driver: one [`crate::workload::diurnal`]
+//! epoch per simulated hour, each measured as a [`SLICE_US`] sample run
+//! through the existing [`run_fleet`] engine on the current membership.
+//! Epoch timelines are local (t = 0 at the boundary beat), which keeps
+//! every epoch a deterministic, independently-seeded simulation.
+
+use crate::cluster::{run_fleet, FleetDesign, Router, FIG6_LEG_NS};
+use crate::mem::MemTrace;
+use crate::serving::Load;
+use crate::sim::{Rng, US};
+use crate::workload::diurnal::Epoch;
+
+/// One-way ToR leg in µs (heartbeat receipt lag and the floor of every
+/// detection window).
+pub const LEG_US: f64 = FIG6_LEG_NS / 1_000.0;
+
+/// Measured sample per epoch, µs of simulated wall clock: long enough
+/// to contain the worst-case detection + re-home window, short enough
+/// that a 24-epoch day stays cheap.
+pub const SLICE_US: f64 = 250.0;
+
+/// Grow when the last windowed p99 exceeds this fraction of the SLO —
+/// the feedback half of the policy, a safety net under the
+/// feed-forward capacity sizing.
+pub const P99_HEADROOM: f64 = 0.8;
+
+/// KVS payload bytes on the wire (the Fig-8 operating point, matching
+/// `experiments::scaleout`).
+pub const REQ_BYTES: u64 = 64;
+pub const RESP_BYTES: u64 = 64;
+
+/// Control-plane knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct OrchestratorCfg {
+    /// The p99 latency SLO the autoscaler defends, µs.
+    pub slo_p99_us: f64,
+    /// Feed-forward sizing: keep offered load at this fraction of the
+    /// fleet's aggregate link capacity.
+    pub target_util: f64,
+    pub min_machines: usize,
+    pub max_machines: usize,
+    /// Keep-alive heartbeat period, µs.
+    pub hb_interval_us: f64,
+    /// Missed beats before a machine is declared dead.
+    pub hb_misses: u32,
+    /// Ring recomputation + route propagation after a death, µs.
+    pub rehome_us: f64,
+    /// Consecutive low epochs before the first drain (anti-thrash).
+    pub down_epochs: u32,
+}
+
+impl OrchestratorCfg {
+    /// Default control plane for a given SLO.
+    pub fn with_slo(slo_p99_us: f64) -> Self {
+        OrchestratorCfg {
+            slo_p99_us,
+            target_util: 0.55,
+            min_machines: 1,
+            max_machines: 16,
+            hb_interval_us: 50.0,
+            hb_misses: 2,
+            rehome_us: 10.0,
+            down_epochs: 3,
+        }
+    }
+
+    /// Keep-alive deadline: silence tolerated after the last received
+    /// beat, µs.
+    pub fn deadline_us(&self) -> f64 {
+        self.hb_misses as f64 * self.hb_interval_us
+    }
+
+    /// Worst-case unavailability of a crashed machine's keyspace, µs:
+    /// its last beat's leg lag + the keep-alive deadline + re-homing.
+    pub fn unavail_bound_us(&self) -> f64 {
+        LEG_US + self.deadline_us() + self.rehome_us
+    }
+}
+
+/// Orchestrator's view of one registered machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MachineState {
+    Alive,
+    /// Policy-drained at an epoch boundary (keyspace handed off first).
+    Drained,
+    /// Declared dead by the keep-alive scan.
+    Dead,
+}
+
+/// One registration record. Ids are never reused — a repaired fleet is
+/// `{0, 2, 3}`, not a renumbered `{0, 1, 2}` — so ring points of
+/// survivors never move.
+#[derive(Clone, Debug)]
+pub struct MachineRec {
+    pub id: usize,
+    /// Link capacity the machine registered with, Mops.
+    pub capacity_mops: f64,
+    pub state: MachineState,
+    /// Ground truth: the machine is still emitting beats. A crashed
+    /// machine stops beating *before* the orchestrator knows
+    /// (`state` flips to `Dead` only when the deadline expires).
+    heartbeating: bool,
+    /// Receipt time of the last beat, µs on the current epoch's local
+    /// clock.
+    last_hb_us: f64,
+}
+
+/// The control plane: membership, failure detection, scaling policy.
+#[derive(Clone, Debug)]
+pub struct Orchestrator {
+    pub cfg: OrchestratorCfg,
+    /// Uniform per-machine link capacity, Mops (what each machine
+    /// registers with).
+    capacity_mops: f64,
+    /// All registrations ever, indexed by id.
+    recs: Vec<MachineRec>,
+    /// Consecutive epochs the feed-forward target sat below the fleet.
+    low_streak: u32,
+    /// Machines registered (boot + every scale-up).
+    pub grows: u32,
+    /// Machines drained by the policy.
+    pub drains: u32,
+    /// Machines declared dead by the keep-alive scan.
+    pub crashes: u32,
+    /// Heartbeat messages switched by the ToR.
+    pub hb_msgs: u64,
+}
+
+impl Orchestrator {
+    pub fn new(cfg: OrchestratorCfg, capacity_mops: f64) -> Self {
+        assert!(capacity_mops > 0.0, "machines must register real capacity");
+        assert!(
+            cfg.min_machines >= 1 && cfg.max_machines >= cfg.min_machines,
+            "fleet bounds must admit at least one machine"
+        );
+        assert!(
+            (0.0..=1.0).contains(&cfg.target_util) && cfg.target_util > 0.0,
+            "target utilization must be in (0, 1]"
+        );
+        Orchestrator {
+            cfg,
+            capacity_mops,
+            recs: Vec::new(),
+            low_streak: 0,
+            grows: 0,
+            drains: 0,
+            crashes: 0,
+            hb_msgs: 0,
+        }
+    }
+
+    /// Register a fresh machine: it joins alive, beating, with the
+    /// uniform link capacity. Returns its (never-reused) id.
+    pub fn register(&mut self) -> usize {
+        let id = self.recs.len();
+        self.recs.push(MachineRec {
+            id,
+            capacity_mops: self.capacity_mops,
+            state: MachineState::Alive,
+            heartbeating: true,
+            last_hb_us: LEG_US,
+        });
+        self.grows += 1;
+        id
+    }
+
+    /// Sorted ids of the machines the orchestrator believes alive.
+    pub fn alive(&self) -> Vec<usize> {
+        self.recs
+            .iter()
+            .filter(|r| r.state == MachineState::Alive)
+            .map(|r| r.id)
+            .collect()
+    }
+
+    /// Aggregate link capacity of the live fleet, Mops.
+    pub fn alive_capacity_mops(&self) -> f64 {
+        self.recs
+            .iter()
+            .filter(|r| r.state == MachineState::Alive)
+            .map(|r| r.capacity_mops)
+            .sum()
+    }
+
+    /// Epoch-boundary heartbeats: every live, still-beating machine's
+    /// beat lands after the ToR leg; message accounting covers the
+    /// boundary beat plus the in-slice beats at `hb_interval_us`.
+    pub fn beat_epoch(&mut self, slice_us: f64) {
+        let extra = (slice_us / self.cfg.hb_interval_us).floor() as u64;
+        for rec in self
+            .recs
+            .iter_mut()
+            .filter(|r| r.state == MachineState::Alive && r.heartbeating)
+        {
+            rec.last_hb_us = LEG_US;
+            self.hb_msgs += 1 + extra;
+        }
+    }
+
+    /// The machine dies: it silently stops beating. The orchestrator's
+    /// view does not change until the keep-alive deadline expires.
+    pub fn crash(&mut self, id: usize) {
+        self.recs[id].heartbeating = false;
+    }
+
+    /// Keep-alive scan over the epoch slice: any machine silent past
+    /// its deadline by `by_us` is declared dead (its ring points drop
+    /// with the next router build). Returns `(id, rehomed_at_us)` per
+    /// newly-dead machine — the instant its keyspace is homed again.
+    pub fn sweep(&mut self, by_us: f64) -> Vec<(usize, f64)> {
+        let deadline = self.cfg.deadline_us();
+        let rehome = self.cfg.rehome_us;
+        let mut out = Vec::new();
+        for rec in self.recs.iter_mut() {
+            if rec.state == MachineState::Alive
+                && !rec.heartbeating
+                && rec.last_hb_us + deadline <= by_us
+            {
+                rec.state = MachineState::Dead;
+                out.push((rec.id, rec.last_hb_us + deadline + rehome));
+            }
+        }
+        self.crashes += out.len() as u32;
+        out
+    }
+
+    /// One policy-loop step. Feed-forward: size the fleet so `offered`
+    /// sits at `target_util` of aggregate capacity. Feedback: if the
+    /// last epoch's p99 ate the SLO headroom, add a machine regardless.
+    /// Asymmetric hysteresis: grow to target immediately; drain at most
+    /// one machine per epoch and only after `down_epochs` consecutive
+    /// low epochs. Returns (registered ids, drained ids).
+    pub fn plan(&mut self, offered_mops: f64, last_p99_us: f64) -> (Vec<usize>, Vec<usize>) {
+        let alive = self.alive();
+        let per_machine = self.capacity_mops * self.cfg.target_util;
+        let mut target = (offered_mops / per_machine).ceil() as usize;
+        if last_p99_us > self.cfg.slo_p99_us * P99_HEADROOM {
+            target = target.max(alive.len() + 1);
+        }
+        let target = target.clamp(self.cfg.min_machines, self.cfg.max_machines);
+        let mut grown = Vec::new();
+        let mut drained = Vec::new();
+        if target > alive.len() {
+            for _ in alive.len()..target {
+                grown.push(self.register());
+            }
+            self.low_streak = 0;
+        } else if target < alive.len() {
+            self.low_streak += 1;
+            if self.low_streak >= self.cfg.down_epochs {
+                // Newest registration drains first (LIFO): its keyspace
+                // share is the most recently moved anyway.
+                let id = *alive.last().expect("target >= 1 implies a live fleet");
+                self.recs[id].state = MachineState::Drained;
+                self.drains += 1;
+                drained.push(id);
+            }
+        } else {
+            self.low_streak = 0;
+        }
+        (grown, drained)
+    }
+}
+
+/// One epoch of the day-in-the-life run.
+#[derive(Clone, Debug)]
+pub struct EpochRow {
+    pub hour: u32,
+    pub offered_mops: f64,
+    pub flash: bool,
+    /// Machines serving this epoch (post scale/crash handling).
+    pub machines: usize,
+    /// Requests in this epoch's measured slice.
+    pub requests: u64,
+    /// Machines registered this epoch.
+    pub grew: usize,
+    /// Machines drained this epoch.
+    pub drained: usize,
+    /// Machine declared dead this epoch, if any.
+    pub crashed: Option<usize>,
+    /// Unavailability window of the dead machine's keyspace, µs
+    /// (crash → declared dead → re-homed; 0 without a crash).
+    pub unavail_us: f64,
+    /// Requests that arrived inside the window addressed to the dead
+    /// machine's old keyspace — served by survivors after re-homing.
+    pub rerouted: u64,
+    /// Offered load over the live fleet's aggregate link capacity.
+    pub util: f64,
+    pub avg_us: f64,
+    pub p99_us: f64,
+    /// Simulator ops executed in this epoch's measured slice.
+    pub events: u64,
+}
+
+/// Whole-run rollup. The structural invariants (zero loss, bounded
+/// unavailability, a live fleet every epoch) are asserted inside
+/// [`run_day`]; SLO attainment and the machine-hours budget are
+/// reported here for the caller (and the in-tree scenario tests) to
+/// judge against *their* configuration.
+#[derive(Clone, Debug)]
+pub struct DayReport {
+    pub rows: Vec<EpochRow>,
+    /// Σ machines over epochs (one epoch = one simulated hour).
+    pub machine_hours: u64,
+    /// What a static fleet provisioned for the observed peak would
+    /// have spent: max machines × epochs.
+    pub static_machine_hours: u64,
+    /// Epochs whose measured p99 exceeded the SLO.
+    pub slo_breaches: u32,
+    pub grows: u32,
+    pub drains: u32,
+    pub crashes: u32,
+    /// Requests routed but never served (asserted 0 every epoch).
+    pub lost: u64,
+    pub hb_msgs: u64,
+    pub slo_p99_us: f64,
+    pub unavail_bound_us: f64,
+}
+
+/// Drive a diurnal trace epoch-by-epoch through the orchestrator and
+/// [`run_fleet`]. `pool_traces`/`pool_keys` are the request pool (one
+/// [`crate::experiments::kvs::RequestStream`]-shaped batch, consumed
+/// with a wrapping cursor); `mk_design` builds one serving element per
+/// live machine per epoch; `capacity_mops` is the per-machine link
+/// capacity every machine registers with.
+///
+/// Deterministic: the victim pick, every epoch's arrival process, and
+/// the fan-out over machines are all seeded; the same (trace, pool,
+/// cfg, seed) reproduces the same report byte for byte.
+pub fn run_day(
+    epochs: &[Epoch],
+    pool_traces: &[MemTrace],
+    pool_keys: &[u64],
+    cfg: OrchestratorCfg,
+    capacity_mops: f64,
+    mut mk_design: impl FnMut() -> FleetDesign,
+    seed: u64,
+) -> DayReport {
+    assert!(!epochs.is_empty(), "a day needs at least one epoch");
+    assert_eq!(pool_traces.len(), pool_keys.len(), "pool keys pair with traces");
+    assert!(!pool_traces.is_empty(), "the request pool must not be empty");
+    assert!(
+        SLICE_US > cfg.unavail_bound_us(),
+        "the epoch slice must contain the worst-case detection window"
+    );
+    let mut orch = Orchestrator::new(cfg, capacity_mops);
+    orch.register(); // the fleet boots with one machine; epoch 0's plan grows to fit
+    let mut victim_rng = Rng::new(seed ^ 0xFEE7);
+    let pool = pool_traces.len();
+    let mut cursor = 0usize;
+    let mut last_p99 = 0.0f64;
+    let mut slo_breaches = 0u32;
+    let mut lost = 0u64;
+    let mut rows = Vec::with_capacity(epochs.len());
+    for (e, spec) in epochs.iter().enumerate() {
+        // t = 0 on this epoch's local clock: boundary heartbeats land.
+        orch.beat_epoch(SLICE_US);
+        let pre_members = orch.alive();
+        if spec.crash {
+            // The victim dies right after its boundary beat — the
+            // worst case for the keep-alive scan.
+            let victim = pre_members[victim_rng.below(pre_members.len() as u64) as usize];
+            orch.crash(victim);
+        }
+        let mut crashed = None;
+        let mut unavail_us = 0.0;
+        for (id, rehomed_at) in orch.sweep(SLICE_US) {
+            crashed = Some(id);
+            // Crash at t = 0 ⇒ the window is the re-home instant.
+            unavail_us = rehomed_at;
+            assert!(
+                unavail_us <= orch.cfg.unavail_bound_us() + 1e-9,
+                "machine {id} unavailable {unavail_us} µs, bound {} µs",
+                orch.cfg.unavail_bound_us()
+            );
+        }
+        let (grown, drained) = orch.plan(spec.offered_mops, last_p99);
+        let members = orch.alive();
+        assert!(!members.is_empty(), "the policy must keep the fleet alive");
+
+        // This epoch's measured slice of the offered load.
+        let n = ((spec.offered_mops * SLICE_US) as usize).clamp(1, pool);
+        let idx: Vec<usize> = (0..n).map(|k| (cursor + k) % pool).collect();
+        cursor = (cursor + n) % pool;
+        let jobs: Vec<MemTrace> = idx.iter().map(|&k| pool_traces[k].clone()).collect();
+
+        // Route over the *current* membership: drained and dead ids own
+        // no ring points, so no request can reach a gone machine —
+        // re-homing is instantaneous at the epoch boundary, which is
+        // what makes scale events lossless.
+        let router = Router::with_members(&members, Vec::new(), 1);
+        let max_id = *members.last().expect("non-empty membership");
+        let mut slot = vec![usize::MAX; max_id + 1];
+        for (s, &id) in members.iter().enumerate() {
+            slot[id] = s;
+        }
+        let targets: Vec<Vec<usize>> = idx
+            .iter()
+            .map(|&k| vec![slot[router.home(pool_keys[k])]])
+            .collect();
+        let mut designs: Vec<FleetDesign> = members.iter().map(|_| mk_design()).collect();
+        let eseed = seed.wrapping_add((e as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let load = Load::Open {
+            mops: spec.offered_mops,
+        };
+        let fm = run_fleet(&mut designs, &jobs, &targets, load, REQ_BYTES, RESP_BYTES, eseed);
+
+        // Conservation: every request routed this epoch was served.
+        let served: u64 = fm.per_machine.iter().sum();
+        assert_eq!(served, n as u64, "hour {}: requests lost across a scale event", spec.hour);
+        lost += n as u64 - served;
+
+        // Crash accounting: replay the epoch's arrival schedule (same
+        // seed and draw order as `run_fleet`) and count the requests
+        // that arrived inside the unavailability window addressed to
+        // the dead machine's old keyspace — the traffic the re-homing
+        // actually moved.
+        let mut rerouted = 0u64;
+        if let Some(victim) = crashed {
+            let mut arng = Rng::new(eseed ^ 0xD1CE);
+            let issue = load.arrival_schedule(n, &mut arng);
+            let old = Router::with_members(&pre_members, Vec::new(), 1);
+            let window_ps = (unavail_us * US as f64) as u64;
+            rerouted = idx
+                .iter()
+                .zip(&issue)
+                .filter(|&(&k, &t)| t < window_ps && old.home(pool_keys[k]) == victim)
+                .count() as u64;
+        }
+
+        if fm.p99_us > orch.cfg.slo_p99_us {
+            slo_breaches += 1;
+        }
+        last_p99 = fm.p99_us;
+        rows.push(EpochRow {
+            hour: spec.hour,
+            offered_mops: spec.offered_mops,
+            flash: spec.flash,
+            machines: members.len(),
+            requests: n as u64,
+            grew: grown.len(),
+            drained: drained.len(),
+            crashed,
+            unavail_us,
+            rerouted,
+            util: spec.offered_mops / orch.alive_capacity_mops(),
+            avg_us: fm.avg_us,
+            p99_us: fm.p99_us,
+            events: fm.events,
+        });
+    }
+    let machine_hours: u64 = rows.iter().map(|r| r.machines as u64).sum();
+    let peak = rows.iter().map(|r| r.machines).max().expect("non-empty rows");
+    DayReport {
+        static_machine_hours: peak as u64 * rows.len() as u64,
+        machine_hours,
+        slo_breaches,
+        grows: orch.grows,
+        drains: orch.drains,
+        crashes: orch.crashes,
+        lost,
+        hb_msgs: orch.hb_msgs,
+        slo_p99_us: orch.cfg.slo_p99_us,
+        unavail_bound_us: orch.cfg.unavail_bound_us(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> OrchestratorCfg {
+        OrchestratorCfg::with_slo(150.0)
+    }
+
+    #[test]
+    fn registration_ids_are_never_reused() {
+        let mut o = Orchestrator::new(cfg(), 20.0);
+        let a = o.register();
+        let b = o.register();
+        o.crash(b);
+        o.beat_epoch(SLICE_US); // a beats; b is silent
+        // Pre-deadline: still trusted alive.
+        assert!(o.sweep(cfg().deadline_us() * 0.5).is_empty());
+        let dead = o.sweep(SLICE_US);
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].0, b);
+        assert!(dead[0].1 <= cfg().unavail_bound_us() + 1e-9);
+        let c = o.register();
+        assert_eq!((a, b, c), (0, 1, 2), "ids are registration order");
+        assert_eq!(o.alive(), vec![a, c], "the dead id never comes back");
+        assert_eq!(o.crashes, 1);
+    }
+
+    #[test]
+    fn feed_forward_sizes_for_target_utilization() {
+        let mut o = Orchestrator::new(cfg(), 20.0);
+        o.register();
+        // 44 Mops at 55% of 20 Mops/machine ⇒ ceil(4.0) = 4 machines.
+        let (grown, drained) = o.plan(44.0, 0.0);
+        assert_eq!(grown.len(), 3);
+        assert!(drained.is_empty());
+        assert_eq!(o.alive().len(), 4);
+        // No demand still keeps min_machines.
+        let mut quiet = Orchestrator::new(cfg(), 20.0);
+        quiet.register();
+        quiet.plan(0.0, 0.0);
+        assert_eq!(quiet.alive().len(), cfg().min_machines);
+    }
+
+    #[test]
+    fn p99_headroom_breach_grows_even_when_capacity_says_no() {
+        let mut o = Orchestrator::new(cfg(), 20.0);
+        o.register();
+        let hot_p99 = cfg().slo_p99_us * P99_HEADROOM * 1.1;
+        let (grown, _) = o.plan(5.0, hot_p99);
+        assert_eq!(grown.len(), 1, "feedback must add a machine");
+        let (grown, _) = o.plan(5.0, 0.0);
+        assert!(grown.is_empty(), "healthy p99 stops the feedback");
+    }
+
+    #[test]
+    fn drains_wait_out_the_hysteresis_then_step_one_per_epoch() {
+        let mut o = Orchestrator::new(cfg(), 20.0);
+        o.register();
+        o.plan(55.0, 0.0); // grow to 5
+        assert_eq!(o.alive().len(), 5);
+        // Load collapses to a 1-machine fleet; the first down_epochs-1
+        // low epochs must not drain anything.
+        for i in 1..cfg().down_epochs {
+            let (_, drained) = o.plan(5.0, 0.0);
+            assert!(drained.is_empty(), "epoch {i} drained too early");
+        }
+        // Then exactly one machine per epoch, newest first.
+        for expect in [4usize, 3, 2, 1] {
+            let (_, drained) = o.plan(5.0, 0.0);
+            assert_eq!(drained.len(), 1);
+            assert_eq!(o.alive().len(), expect);
+        }
+        // At target: stable.
+        let (grown, drained) = o.plan(5.0, 0.0);
+        assert!(grown.is_empty() && drained.is_empty());
+        assert_eq!(o.drains, 4);
+    }
+
+    #[test]
+    fn a_grow_resets_the_drain_streak() {
+        let mut o = Orchestrator::new(cfg(), 20.0);
+        o.register();
+        o.plan(44.0, 0.0); // 4 machines
+        o.plan(5.0, 0.0); // low ×1
+        o.plan(5.0, 0.0); // low ×2
+        o.plan(44.0, 0.0); // flash returns — streak must reset
+        let (_, drained) = o.plan(5.0, 0.0);
+        assert!(drained.is_empty(), "one low epoch after a grow must not drain");
+    }
+
+    #[test]
+    fn drained_and_dead_machines_leave_the_ring() {
+        let mut o = Orchestrator::new(cfg(), 20.0);
+        o.register();
+        o.plan(55.0, 0.0); // 5 machines: {0,1,2,3,4}
+        o.crash(2);
+        o.beat_epoch(SLICE_US);
+        o.sweep(SLICE_US);
+        assert_eq!(o.alive(), vec![0, 1, 3, 4]);
+        let r = Router::with_members(&o.alive(), Vec::new(), 1);
+        for key in 0..5_000u64 {
+            assert_ne!(r.home(key), 2, "dead machines own no keys");
+        }
+    }
+}

@@ -40,28 +40,47 @@ pub const VNODES: usize = 256;
 /// collide structurally; keys get their own salt.
 const KEY_SALT: u64 = 0xA5A5_5A5A_C0DE_0CA7;
 
-/// Consistent-hash router over N machines with a replicated hot set.
+/// Consistent-hash router over a member set with a replicated hot set.
 #[derive(Clone, Debug)]
 pub struct Router {
-    /// (ring point, machine), sorted by point. Machine m's points are
-    /// identical for every N > m, which is what bounds rebalancing.
+    /// (ring point, member id), sorted by point. A member's points
+    /// depend only on its own id — identical whatever else is on the
+    /// ring — which is what bounds rebalancing in *both* directions:
+    /// adding a member moves keys only onto it, removing one re-homes
+    /// only the keys it owned.
     ring: Vec<(u64, usize)>,
-    machines: usize,
+    /// Sorted, deduplicated member ids. `Router::new(n, ..)` is the
+    /// contiguous special case `{0, .., n-1}`; an orchestrator fleet
+    /// uses arbitrary (never-reused) registration ids.
+    members: Vec<usize>,
     /// Sorted, deduplicated hot key ids (empty: no replication).
     hot: Vec<u64>,
-    /// Replication factor for hot keys (clamped to `machines`).
+    /// Replication factor for hot keys (clamped to the member count).
     hot_replicas: usize,
 }
 
 impl Router {
-    /// A router over `machines` servers. `hot` is the replicated key
-    /// set (ids, not ranks); `hot_replicas` its replication factor —
-    /// 1 (or an empty set) disables mitigation.
+    /// A router over `machines` servers with contiguous ids `0..machines`.
+    /// `hot` is the replicated key set (ids, not ranks); `hot_replicas`
+    /// its replication factor — 1 (or an empty set) disables mitigation.
     pub fn new(machines: usize, hot: Vec<u64>, hot_replicas: usize) -> Self {
-        assert!(machines >= 1, "a fleet needs at least one machine");
+        let members: Vec<usize> = (0..machines).collect();
+        Self::with_members(&members, hot, hot_replicas)
+    }
+
+    /// A router over an explicit member set (the elastic-fleet case:
+    /// registration ids are never reused, so a fleet that grew to
+    /// {0,1,2}, lost 1, and grew again routes over {0,2,3}). `home` and
+    /// `targets` return member *ids*, so callers indexing per-machine
+    /// arrays by id must size them to `max(id) + 1`.
+    pub fn with_members(members: &[usize], hot: Vec<u64>, hot_replicas: usize) -> Self {
+        assert!(!members.is_empty(), "a fleet needs at least one machine");
         assert!(hot_replicas >= 1, "replication factor must be >= 1");
-        let mut ring = Vec::with_capacity(machines * VNODES);
-        for m in 0..machines {
+        let mut members = members.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        let mut ring = Vec::with_capacity(members.len() * VNODES);
+        for &m in &members {
             for v in 0..VNODES {
                 ring.push((Self::point(m, v), m));
             }
@@ -70,11 +89,12 @@ impl Router {
         let mut hot = hot;
         hot.sort_unstable();
         hot.dedup();
+        let hot_replicas = hot_replicas.min(members.len());
         Router {
             ring,
-            machines,
+            members,
             hot,
-            hot_replicas: hot_replicas.min(machines),
+            hot_replicas,
         }
     }
 
@@ -82,8 +102,14 @@ impl Router {
         mix64(((machine as u64) << 20) | vnode as u64)
     }
 
+    /// Number of members on the ring.
     pub fn machines(&self) -> usize {
-        self.machines
+        self.members.len()
+    }
+
+    /// The sorted member ids on the ring.
+    pub fn members(&self) -> &[usize] {
+        &self.members
     }
 
     /// Effective replication factor (after clamping to the fleet size).
@@ -278,6 +304,13 @@ pub fn run_fleet(
 
     let mut latency = Histogram::new();
     for (i, &t) in at_client.iter().enumerate() {
+        // Egress must not precede issue; the saturating clamp below
+        // would otherwise bury an ordering regression as a 1-ps latency.
+        debug_assert!(
+            t >= issue[i],
+            "request {i} finished at {t} before its issue at {}",
+            issue[i]
+        );
         latency.record(t.saturating_sub(issue[i]).max(1));
     }
 
@@ -352,6 +385,60 @@ mod tests {
             // Fair share 10k; VNODES=256 keeps shares within ±~25%.
             assert!((7_500..12_500).contains(&c), "machine {m} owns {c}");
         }
+    }
+
+    #[test]
+    fn member_router_matches_contiguous_construction() {
+        // `new(n, ..)` is literally `with_members(&[0..n], ..)`.
+        let a = Router::new(4, vec![3, 9], 2);
+        let b = Router::with_members(&[0, 1, 2, 3], vec![9, 3, 3], 2);
+        for key in 0..5_000u64 {
+            assert_eq!(a.home(key), b.home(key));
+            assert_eq!(a.replicas(key), b.replicas(key));
+        }
+        assert_eq!(b.members(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn removing_a_member_rehomes_only_its_keys() {
+        // The N→N−1 rebalance bound (the crash/drain direction): keys
+        // homed on survivors must not move when a member leaves.
+        let full = Router::with_members(&[0, 1, 2, 3, 4], Vec::new(), 1);
+        let without_2 = Router::with_members(&[0, 1, 3, 4], Vec::new(), 1);
+        let mut rehomed = 0u64;
+        for key in 0..20_000u64 {
+            let before = full.home(key);
+            let after = without_2.home(key);
+            if before == 2 {
+                assert_ne!(after, 2, "dead members own nothing");
+                rehomed += 1;
+            } else {
+                assert_eq!(before, after, "survivor keys must not move");
+            }
+        }
+        assert!(rehomed > 0, "member 2 must have owned some keys");
+    }
+
+    #[test]
+    fn adding_a_member_moves_keys_only_onto_it() {
+        // The N→N+1 direction over a non-contiguous set: a fleet that
+        // lost id 1 and registered id 5 only sheds keys to the newcomer.
+        let before = Router::with_members(&[0, 2, 3], Vec::new(), 1);
+        let after = Router::with_members(&[0, 2, 3, 5], Vec::new(), 1);
+        let mut moved = 0u64;
+        for key in 0..20_000u64 {
+            let b = before.home(key);
+            let a = after.home(key);
+            if a != b {
+                assert_eq!(a, 5, "keys may move only onto the new member");
+                moved += 1;
+            }
+        }
+        let frac = moved as f64 / 20_000.0;
+        assert!(
+            (0.1..0.45).contains(&frac),
+            "new member should take ~1/4 of the keyspace, took {frac:.2}"
+        );
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! `orca fleet` (beyond the paper): the elastic-fleet day in the life —
+//! ROADMAP item 1 made runnable.
+//!
+//! A diurnal millions-of-users demand trace
+//! ([`crate::workload::diurnal`]) drives the orchestrator
+//! ([`crate::cluster::orchestrator`]) epoch by epoch: the policy loop
+//! grows the fleet into the evening peak and the seeded flash crowd,
+//! drains it through the night, and a scheduled crash exercises the
+//! keep-alive → re-home path. Each epoch is a [`SLICE_US`]-µs sample
+//! run through [`crate::cluster::run_fleet`] on the current membership
+//! with one ORCA serving element per machine.
+//!
+//! The structural invariants (zero requests lost across scale events,
+//! crash unavailability within the keep-alive bound, a live fleet every
+//! epoch) are asserted inside the driver on every run; the scenario
+//! tests below additionally pin, for the default configuration, that
+//! the SLO holds every epoch *and* the elastic fleet spends well under
+//! a static peak-provisioned fleet's machine-hours.
+
+use super::kvs::RequestStream;
+use super::{Opts, Table};
+use crate::cluster::orchestrator::{run_day, DayReport, OrchestratorCfg, REQ_BYTES, SLICE_US};
+use crate::cluster::FleetDesign;
+use crate::config::AccelMem;
+use crate::serving::{Design, Orca};
+use crate::workload::{diurnal, KeyDist, KvMix};
+
+/// Default trace length: one simulated day, one epoch per hour.
+pub const DEFAULT_HOURS: u32 = 24;
+
+/// Default p99 SLO the autoscaler defends, µs (`--slo-p99-us`).
+pub const DEFAULT_SLO_P99_US: f64 = 150.0;
+
+/// Per-element batch size (the Fig-8 operating point).
+const BATCH: usize = 32;
+
+/// The link capacity one ORCA serving element registers with: its own
+/// wire's peak for the 64 B operating point (~21 Mops on the paper
+/// testbed).
+pub fn capacity_mops(opts: &Opts) -> f64 {
+    let probe = Orca::new(&opts.testbed, AccelMem::None, BATCH);
+    let req = probe.request_bytes(REQ_BYTES);
+    probe
+        .network()
+        .map(|nw| nw.peak_mops(req))
+        .expect("the ORCA serving element owns a NIC")
+}
+
+/// Run the day-in-the-life scenario and return the raw report.
+pub fn run(opts: &Opts, hours: u32, slo_p99_us: f64, crash_at: Option<u32>) -> DayReport {
+    let spec = diurnal::DiurnalSpec::paper_scale(hours, crash_at);
+    let epochs = diurnal::generate(&spec, opts.seed);
+    let pool = RequestStream::generate(
+        opts.keys,
+        opts.requests,
+        &KeyDist::uniform(opts.keys),
+        KvMix::GetOnly,
+        64,
+        opts.seed,
+    );
+    let cfg = OrchestratorCfg::with_slo(slo_p99_us);
+    let t = opts.testbed.clone();
+    run_day(
+        &epochs,
+        &pool.traces,
+        &pool.keys,
+        cfg,
+        capacity_mops(opts),
+        move || Box::new(Orca::new(&t, AccelMem::None, BATCH)) as FleetDesign,
+        opts.seed,
+    )
+}
+
+/// The `orca fleet` tables: the per-epoch timeline and the day rollup.
+pub fn report(opts: &Opts, hours: u32, slo_p99_us: f64, crash_at: Option<u32>) -> Vec<Table> {
+    let day = run(opts, hours, slo_p99_us, crash_at);
+    let mut tb = Table::new(
+        format!(
+            "Elastic fleet — day in the life ({hours} h, SLO p99 {slo_p99_us:.0} µs, \
+             {SLICE_US:.0} µs slice/epoch, ORCA per machine)"
+        ),
+        &[
+            "hour",
+            "Musers",
+            "offered Mops",
+            "machines",
+            "util",
+            "avg µs",
+            "p99 µs",
+            "event",
+            "unavail µs",
+            "rerouted",
+            "requests",
+        ],
+    );
+    for r in &day.rows {
+        let mut ev: Vec<String> = Vec::new();
+        if r.flash {
+            ev.push("flash".into());
+        }
+        if let Some(id) = r.crashed {
+            ev.push(format!("crash m{id}"));
+        }
+        if r.grew > 0 {
+            ev.push(format!("+{}", r.grew));
+        }
+        if r.drained > 0 {
+            ev.push(format!("-{}", r.drained));
+        }
+        let event = if ev.is_empty() { "-".into() } else { ev.join(" ") };
+        tb.row(&[
+            r.hour.to_string(),
+            format!("{:.1}", diurnal::users_m(r.offered_mops)),
+            format!("{:.1}", r.offered_mops),
+            r.machines.to_string(),
+            format!("{:.2}", r.util),
+            format!("{:.1}", r.avg_us),
+            format!("{:.1}", r.p99_us),
+            event,
+            format!("{:.1}", r.unavail_us),
+            r.rerouted.to_string(),
+            r.requests.to_string(),
+        ]);
+    }
+    let served: u64 = day.rows.iter().map(|r| r.requests).sum();
+    let mut sm = Table::new(
+        "Elastic fleet — day rollup (machine-hours vs a static peak fleet)",
+        &["metric", "value"],
+    );
+    let budget = day.machine_hours as f64 / day.static_machine_hours as f64;
+    sm.row(&["machine-hours (elastic)".into(), day.machine_hours.to_string()]);
+    sm.row(&[
+        "machine-hours (static peak)".into(),
+        day.static_machine_hours.to_string(),
+    ]);
+    sm.row(&["budget used".into(), format!("{:.0}%", budget * 100.0)]);
+    sm.row(&["SLO p99 (µs)".into(), format!("{:.0}", day.slo_p99_us)]);
+    sm.row(&["SLO breaches".into(), day.slo_breaches.to_string()]);
+    sm.row(&["machines registered".into(), day.grows.to_string()]);
+    sm.row(&["machines drained".into(), day.drains.to_string()]);
+    sm.row(&["machines crashed".into(), day.crashes.to_string()]);
+    sm.row(&[
+        "unavailability bound (µs)".into(),
+        format!("{:.1}", day.unavail_bound_us),
+    ]);
+    sm.row(&["heartbeats switched".into(), day.hb_msgs.to_string()]);
+    sm.row(&["requests served".into(), served.to_string()]);
+    sm.row(&["requests lost".into(), day.lost.to_string()]);
+    vec![tb, sm]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Opts {
+        Opts {
+            keys: 50_000,
+            requests: 20_000,
+            seed: 7,
+            ..Opts::default()
+        }
+    }
+
+    #[test]
+    fn day_in_the_life_holds_slo_within_budget_without_losing_requests() {
+        // The acceptance run: a full default day with an evening-peak
+        // crash. Every structural invariant is asserted inside
+        // `run_day`; here we pin the *scenario* claims for the default
+        // configuration.
+        let day = run(&opts(), DEFAULT_HOURS, DEFAULT_SLO_P99_US, Some(19));
+        assert_eq!(day.lost, 0, "no request may be lost across scale events");
+        assert_eq!(
+            day.slo_breaches, 0,
+            "default SLO must hold every epoch: {:?}",
+            day.rows.iter().map(|r| r.p99_us).collect::<Vec<_>>()
+        );
+        // The elastic fleet must beat static peak provisioning with
+        // clear margin (typically ~half; 0.9 is the hard ceiling).
+        assert!(
+            (day.machine_hours as f64) < 0.9 * day.static_machine_hours as f64,
+            "machine-hours {} vs static {}",
+            day.machine_hours,
+            day.static_machine_hours
+        );
+        // And it must actually be elastic: the diurnal swing moves the
+        // fleet size.
+        let min = day.rows.iter().map(|r| r.machines).min().unwrap();
+        let max = day.rows.iter().map(|r| r.machines).max().unwrap();
+        assert!(
+            max > min,
+            "the fleet never scaled: {min}..{max} machines all day"
+        );
+        assert!(day.grows >= 2 && day.drains >= 1, "a day has scale events");
+    }
+
+    #[test]
+    fn crash_is_rehomed_within_the_bound_and_traffic_moves() {
+        let day = run(&opts(), DEFAULT_HOURS, DEFAULT_SLO_P99_US, Some(19));
+        assert_eq!(day.crashes, 1);
+        let row = day
+            .rows
+            .iter()
+            .find(|r| r.crashed.is_some())
+            .expect("the scheduled crash must be declared");
+        assert_eq!(row.hour, 19);
+        assert!(
+            row.unavail_us > 0.0 && row.unavail_us <= day.unavail_bound_us,
+            "unavailability {} µs vs bound {} µs",
+            row.unavail_us,
+            day.unavail_bound_us
+        );
+        // At ≥5 Mops offered, the ~100 µs window sees hundreds of
+        // arrivals; some must have been homed on the victim.
+        assert!(
+            row.rerouted > 0,
+            "a crash at the evening peak must re-route live traffic"
+        );
+        assert_eq!(day.lost, 0, "re-homed requests are served, not lost");
+        // Everything the window re-routed was served within the epoch.
+        assert!(row.rerouted <= row.requests);
+    }
+
+    #[test]
+    fn crashing_the_only_machine_repairs_the_fleet() {
+        // A flat 5 Mops trace keeps the fleet at one machine; killing
+        // it forces detection + replacement registration in one epoch,
+        // and the whole keyspace re-homes onto the newcomer.
+        use crate::workload::diurnal::Epoch;
+        let o = opts();
+        let epochs: Vec<Epoch> = (0..3)
+            .map(|hour| Epoch {
+                hour,
+                offered_mops: 5.0,
+                flash: false,
+                crash: hour == 1,
+            })
+            .collect();
+        let pool = RequestStream::generate(
+            o.keys,
+            o.requests,
+            &KeyDist::uniform(o.keys),
+            KvMix::GetOnly,
+            64,
+            o.seed,
+        );
+        let t = o.testbed.clone();
+        let day = run_day(
+            &epochs,
+            &pool.traces,
+            &pool.keys,
+            OrchestratorCfg::with_slo(DEFAULT_SLO_P99_US),
+            capacity_mops(&o),
+            move || Box::new(Orca::new(&t, AccelMem::None, BATCH)) as FleetDesign,
+            o.seed,
+        );
+        assert_eq!(day.crashes, 1);
+        let row = &day.rows[1];
+        assert_eq!(row.crashed, Some(0), "the boot machine was the victim");
+        assert_eq!(row.grew, 1, "the replacement registers the same epoch");
+        assert_eq!(row.machines, 1);
+        assert!(
+            row.rerouted > 0,
+            "the victim owned the whole keyspace; window traffic must move"
+        );
+        assert_eq!(day.lost, 0);
+        // The epochs around the crash are plain 1-machine epochs.
+        assert!(day.rows[0].crashed.is_none() && day.rows[2].crashed.is_none());
+    }
+
+    #[test]
+    fn report_renders_both_tables_with_a_row_per_epoch() {
+        let tables = report(&opts(), 6, DEFAULT_SLO_P99_US, Some(2));
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 6, "one timeline row per epoch");
+        assert!(tables[1].n_rows() >= 10, "rollup lists the day's metrics");
+    }
+}

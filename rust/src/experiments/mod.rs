@@ -16,6 +16,7 @@
 //! | hop-by-hop chain sweep + crash/recovery (beyond the paper) | [`chain`] | `orca chain` |
 //! | DLRM trace-driven serving + latency-vs-load (beyond the paper) | [`dlrm`] | `orca dlrm` |
 //! | scale-out KVS + hot-key mitigation (beyond the paper) | [`scaleout`] | `orca scaleout` |
+//! | elastic fleet day-in-the-life (beyond the paper) | [`fleet`] | `orca fleet` |
 //!
 //! Absolute numbers are *this testbed's*; the claims under test are the
 //! paper's shapes (who wins, by what factor, where crossovers sit) — see
@@ -29,6 +30,7 @@ pub mod fig11;
 pub mod fig12;
 pub mod fig4;
 pub mod fig7;
+pub mod fleet;
 pub mod kvs;
 pub mod scaleout;
 pub mod sharding;

@@ -249,6 +249,13 @@ impl ServingPipeline {
         for &(i, d) in &done {
             let at_client = design.egress(d, self.resp_bytes);
             last = last.max(at_client);
+            // Egress must not precede issue; the saturating clamp below
+            // would otherwise bury an ordering regression as 1 ps.
+            debug_assert!(
+                at_client >= issue[i],
+                "request {i} finished at {at_client} before its issue at {}",
+                issue[i]
+            );
             latency.record(at_client.saturating_sub(issue[i]).max(1));
         }
 

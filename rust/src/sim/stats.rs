@@ -2,6 +2,11 @@
 //! latency distributions (average, p50/p99/p999, CDF export for Fig 7).
 
 /// Streaming mean/min/max/count (Welford variance).
+///
+/// **Empty semantics:** with no samples, `mean()`, `min()` and `max()`
+/// all return 0.0 (never `NaN` or the internal ±∞ fold seeds) — empty
+/// runs flow into tables and JSON, where a sentinel would be garbage.
+/// Check `count() == 0` to distinguish "no samples" from "all zeros".
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     n: u64,
@@ -36,7 +41,7 @@ impl Summary {
     }
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
-            f64::NAN
+            0.0
         } else {
             self.mean
         }
@@ -52,10 +57,18 @@ impl Summary {
         self.variance().sqrt()
     }
     pub fn min(&self) -> f64 {
-        self.min
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
     }
     pub fn max(&self) -> f64 {
-        self.max
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
     }
 }
 
@@ -63,6 +76,13 @@ impl Summary {
 ///
 /// Buckets: 64 logarithmic tiers × `sub` linear sub-buckets each, giving
 /// bounded relative error (~1/sub) at any magnitude — the usual HDR layout.
+///
+/// **Empty semantics:** with no samples recorded, every accessor —
+/// `mean()`, `min()`, `max()`, `quantile()` and friends — returns 0, not
+/// `NaN` or the `u64::MAX` fold seed. An orchestrator drain epoch can
+/// legitimately serve zero requests; its latency columns must render as
+/// zeros, not sentinel garbage. Check `count() == 0` to tell "no
+/// samples" from "all zeros".
 #[derive(Clone, Debug)]
 pub struct Histogram {
     sub_bits: u32,
@@ -137,14 +157,20 @@ impl Histogram {
 
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
-            f64::NAN
+            0.0
         } else {
             self.sum as f64 / self.total as f64
         }
     }
 
     pub fn max(&self) -> u64 {
-        self.max
+        // The fold seed is already 0; spelled out so empty semantics
+        // survive a future re-seeding.
+        if self.total == 0 {
+            0
+        } else {
+            self.max
+        }
     }
 
     pub fn min(&self) -> u64 {
@@ -228,6 +254,35 @@ mod tests {
         assert!((s.stddev() - 2.138089935).abs() < 1e-6);
         assert_eq!(s.min(), 2.0);
         assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn empty_summary_has_explicit_zero_state() {
+        // No samples ⇒ all-zero accessors, never NaN or the ±∞ fold
+        // seeds (they would leak into tables and --json output).
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert!(s.mean().is_finite() && s.min().is_finite() && s.max().is_finite());
+    }
+
+    #[test]
+    fn empty_histogram_has_explicit_zero_state() {
+        // Same contract for the histogram: a drain epoch that served
+        // zero requests renders zeros, not u64::MAX / NaN sentinels.
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.mean().is_finite(), "empty mean must not be NaN");
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile(q), 0, "empty quantile {q}");
+        }
+        assert!(h.cdf().is_empty());
     }
 
     #[test]

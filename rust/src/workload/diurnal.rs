@@ -1,0 +1,190 @@
+//! Diurnal millions-of-users offered-load trace (DESIGN.md §Elastic
+//! fleet): the demand curve the orchestrator's day-in-the-life scenario
+//! serves, one epoch per simulated hour.
+//!
+//! Three components, all deterministic per seed:
+//!
+//! * a **sinusoidal base** — user activity peaks in the evening
+//!   ([`PEAK_HOUR`]) and troughs before dawn, the classic diurnal
+//!   shape of consumer-facing services;
+//! * **seeded flash crowds** — one burst per simulated day at a
+//!   seed-chosen hour, multiplying offered load by the spec's flash
+//!   factor for 1–2 epochs (the "everyone opens the app at once"
+//!   event autoscalers exist for);
+//! * **scheduled crashes** — an epoch flagged so the driver kills one
+//!   machine at its start, exercising the keep-alive → re-homing path.
+//!
+//! Offered load is in Mops; [`users_m`] converts to the headline
+//! "millions of concurrent users" via [`OPS_PER_USER`].
+
+use crate::sim::Rng;
+
+/// Epochs per simulated day (one epoch per hour).
+pub const HOURS_PER_DAY: u32 = 24;
+
+/// Hour of the diurnal peak (19:00 — evening traffic).
+pub const PEAK_HOUR: f64 = 19.0;
+
+/// Modeled per-user demand: requests per second per concurrent user.
+/// 10 ops/s ⇒ 20 Mops of offered load is 2 M concurrent users.
+pub const OPS_PER_USER: f64 = 10.0;
+
+/// Shape parameters of one generated trace.
+#[derive(Clone, Copy, Debug)]
+pub struct DiurnalSpec {
+    /// Simulated hours (= epochs) to generate.
+    pub hours: u32,
+    /// Daily mean offered load, Mops.
+    pub base_mops: f64,
+    /// Sinusoidal amplitude, Mops (must stay below `base_mops` so the
+    /// trough keeps positive load).
+    pub amp_mops: f64,
+    /// Flash-crowd multiplier applied during burst epochs.
+    pub flash_factor: f64,
+    /// Crash one machine at the start of this hour, if set.
+    pub crash_at: Option<u32>,
+}
+
+impl DiurnalSpec {
+    /// The default day-in-the-life shape: 5–35 Mops diurnal swing
+    /// (0.5–3.5 M users at [`OPS_PER_USER`]), 1.8× flash crowds. On
+    /// ~21 Mops/machine links this exercises a 1→6-machine fleet.
+    pub fn paper_scale(hours: u32, crash_at: Option<u32>) -> Self {
+        DiurnalSpec {
+            hours,
+            base_mops: 20.0,
+            amp_mops: 15.0,
+            flash_factor: 1.8,
+            crash_at,
+        }
+    }
+}
+
+/// One generated epoch of demand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Epoch {
+    pub hour: u32,
+    /// Offered load this epoch, Mops (flash factor already applied).
+    pub offered_mops: f64,
+    /// This epoch is inside a flash-crowd burst.
+    pub flash: bool,
+    /// Kill one machine at the start of this epoch.
+    pub crash: bool,
+}
+
+/// Concurrent users (millions) implied by an offered load.
+pub fn users_m(offered_mops: f64) -> f64 {
+    offered_mops / OPS_PER_USER
+}
+
+/// Generate the epoch-by-epoch trace. Deterministic per (spec, seed);
+/// every simulated day gets exactly one flash burst at a seed-chosen
+/// hour, truncated at the end of the trace.
+pub fn generate(spec: &DiurnalSpec, seed: u64) -> Vec<Epoch> {
+    assert!(spec.hours >= 1, "a trace needs at least one epoch");
+    assert!(
+        spec.base_mops > spec.amp_mops && spec.amp_mops >= 0.0,
+        "the diurnal trough must keep positive load ({} amp vs {} base)",
+        spec.amp_mops,
+        spec.base_mops
+    );
+    assert!(spec.flash_factor >= 1.0, "flash crowds only add load");
+    let mut rng = Rng::new(seed ^ 0xD1A1);
+    let mut flash = vec![false; spec.hours as usize];
+    let days = spec.hours.div_ceil(HOURS_PER_DAY);
+    for day in 0..days {
+        let start = day * HOURS_PER_DAY + rng.below(HOURS_PER_DAY as u64) as u32;
+        let len = 1 + rng.below(2) as u32;
+        // Bursts stay inside their own day: per-day counts are exact.
+        let end = (start + len).min((day + 1) * HOURS_PER_DAY).min(spec.hours);
+        for f in &mut flash[start as usize..end as usize] {
+            *f = true;
+        }
+    }
+    (0..spec.hours)
+        .map(|hour| {
+            let phase = (hour % HOURS_PER_DAY) as f64 - (PEAK_HOUR - 6.0);
+            let wave = (2.0 * std::f64::consts::PI * phase / HOURS_PER_DAY as f64).sin();
+            let mut offered = spec.base_mops + spec.amp_mops * wave;
+            let is_flash = flash[hour as usize];
+            if is_flash {
+                offered *= spec.flash_factor;
+            }
+            Epoch {
+                hour,
+                offered_mops: offered,
+                flash: is_flash,
+                crash: spec.crash_at == Some(hour),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DiurnalSpec {
+        DiurnalSpec::paper_scale(24, Some(8))
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed_and_seed_steers_bursts() {
+        let a = generate(&spec(), 7);
+        let b = generate(&spec(), 7);
+        assert_eq!(a, b, "same (spec, seed) must reproduce the trace");
+        // Across many seeds the burst hour must actually move.
+        let burst_hours: Vec<Vec<u32>> = (0..16)
+            .map(|s| {
+                generate(&spec(), s)
+                    .iter()
+                    .filter(|e| e.flash)
+                    .map(|e| e.hour)
+                    .collect()
+            })
+            .collect();
+        assert!(
+            burst_hours.windows(2).any(|w| w[0] != w[1]),
+            "the flash-crowd hour must be seeded, got {burst_hours:?}"
+        );
+    }
+
+    #[test]
+    fn diurnal_shape_peaks_in_the_evening() {
+        let eps = generate(&spec(), 3);
+        assert_eq!(eps.len(), 24);
+        let at = |h: usize| eps[h].offered_mops / if eps[h].flash { 1.8 } else { 1.0 };
+        let peak = at(PEAK_HOUR as usize);
+        let trough = at(7);
+        assert!(
+            (peak - 35.0).abs() < 1e-9 && (trough - 5.0).abs() < 1e-9,
+            "peak {peak} trough {trough}"
+        );
+        for e in &eps {
+            assert!(e.offered_mops > 0.0, "hour {} has no load", e.hour);
+        }
+    }
+
+    #[test]
+    fn every_day_gets_one_flash_burst_and_the_crash_lands() {
+        for seed in 0..8u64 {
+            let two_days = DiurnalSpec::paper_scale(48, Some(30));
+            let eps = generate(&two_days, seed);
+            for day in 0..2 {
+                let n = eps[day * 24..(day + 1) * 24].iter().filter(|e| e.flash).count();
+                assert!(
+                    (1..=2).contains(&n),
+                    "seed {seed} day {day}: {n} flash epochs"
+                );
+            }
+            assert_eq!(eps.iter().filter(|e| e.crash).count(), 1);
+            assert!(eps[30].crash, "crash must land at the scheduled hour");
+        }
+    }
+
+    #[test]
+    fn users_scale_with_offered_load() {
+        assert!((users_m(20.0) - 2.0).abs() < 1e-12);
+        assert!((users_m(35.0) - 3.5).abs() < 1e-12);
+    }
+}

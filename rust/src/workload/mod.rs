@@ -2,12 +2,15 @@
 //! θ ∈ [0, 1), §VI-B uses 0.9; the scale-out sweeps push to 0.99),
 //! KVS op mixes, transaction shapes (§VI-C), and the synthetic
 //! Amazon-Review-like DLRM query streams (§VI-D substitution — see
-//! DESIGN.md).
+//! DESIGN.md), plus the diurnal millions-of-users demand trace that
+//! drives the elastic-fleet scenario ([`diurnal`]).
 
 pub mod amazon;
+pub mod diurnal;
 pub mod keydist;
 
 pub use amazon::{DatasetProfile, QueryGen, AMAZON_PROFILES};
+pub use diurnal::DiurnalSpec;
 pub use keydist::{KeyDist, Zipf};
 
 use crate::sim::Rng;

@@ -1,0 +1,160 @@
+//! Edge-case suite for the serving pipeline and the fleet engine: the
+//! degenerate shapes the sweeps never visit — empty job streams,
+//! single-request fleets, every request funneled onto one machine —
+//! must produce well-defined metrics (explicit zeros, never NaN or a
+//! sentinel) and conserve requests.
+
+use orca::cluster::{run_fleet, FleetDesign, Router};
+use orca::config::{AccelMem, Testbed};
+use orca::experiments::kvs::RequestStream;
+use orca::serving::{Load, Orca, ServingPipeline};
+use orca::testing::for_seeds;
+use orca::workload::{KeyDist, KvMix};
+
+const BATCH: usize = 32;
+
+fn fleet(t: &Testbed, machines: usize) -> Vec<FleetDesign> {
+    (0..machines)
+        .map(|_| Box::new(Orca::new(t, AccelMem::None, BATCH)) as FleetDesign)
+        .collect()
+}
+
+fn stream(keys: u64, requests: u64, seed: u64) -> RequestStream {
+    RequestStream::generate(
+        keys,
+        requests,
+        &KeyDist::uniform(keys),
+        KvMix::GetOnly,
+        64,
+        seed,
+    )
+}
+
+#[test]
+fn empty_job_stream_yields_explicit_zero_metrics() {
+    // n == 0 through both engines: every latency statistic must be the
+    // documented empty-state zero — a NaN here poisons JSON dumps and
+    // every downstream comparison.
+    let t = Testbed::paper();
+    let pipeline = ServingPipeline::new(Load::Open { mops: 5.0 }, 64, 64, 7);
+    let mut orca = Orca::new(&t, AccelMem::None, BATCH);
+    let m = pipeline.run(&mut orca, &[]);
+    assert_eq!(m.mops, 0.0);
+    assert_eq!(
+        (m.avg_us, m.p50_us, m.p99_us, m.p999_us),
+        (0.0, 0.0, 0.0, 0.0),
+        "empty-run latency must be the explicit zero state"
+    );
+    assert!(m.utilization == 0.0 && m.host_frac == 0.0);
+
+    let mut designs = fleet(&t, 3);
+    let fm = run_fleet(&mut designs, &[], &[], Load::Saturation, 64, 64, 7);
+    assert_eq!(fm.mops, 0.0);
+    assert_eq!(
+        (fm.avg_us, fm.p50_us, fm.p99_us, fm.p999_us),
+        (0.0, 0.0, 0.0, 0.0)
+    );
+    assert_eq!(fm.per_machine, vec![0, 0, 0]);
+    assert_eq!(fm.imbalance, 1.0, "an idle fleet is balanced by definition");
+}
+
+#[test]
+fn single_request_fleets_are_well_defined() {
+    // One request through fleets of 1..4 machines, across seeds: the
+    // lone latency must be positive and every quantile must collapse to
+    // it (a 1-sample distribution has one value).
+    let t = Testbed::paper();
+    for_seeds(8, |rng| {
+        let seed = rng.next_u64();
+        let s = stream(1_000, 4, seed);
+        let job = &s.traces[..1];
+        for machines in 1..=4usize {
+            let target = (seed as usize) % machines;
+            let mut designs = fleet(&t, machines);
+            let fm = run_fleet(
+                &mut designs,
+                job,
+                &[vec![target]],
+                Load::Open { mops: 1.0 },
+                64,
+                64,
+                seed,
+            );
+            if fm.avg_us <= 0.0 || !fm.avg_us.is_finite() {
+                return Err(format!("machines {machines}: avg {} µs", fm.avg_us));
+            }
+            if (fm.p50_us - fm.avg_us).abs() > 1e-9 || (fm.p999_us - fm.avg_us).abs() > 1e-9 {
+                return Err(format!(
+                    "machines {machines}: 1-sample quantiles diverged \
+                     (avg {}, p50 {}, p999 {})",
+                    fm.avg_us, fm.p50_us, fm.p999_us
+                ));
+            }
+            let expect: Vec<u64> = (0..machines).map(|m| u64::from(m == target)).collect();
+            if fm.per_machine != expect {
+                return Err(format!("machines {machines}: routing {:?}", fm.per_machine));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_requests_to_one_machine_conserves_and_shows_max_imbalance() {
+    // The pathological routing a broken ring would produce: every
+    // request on one machine of four. The engine must still serve all
+    // of them, report the concentration, and leave the idle machines'
+    // counters at zero.
+    let t = Testbed::paper();
+    for_seeds(8, |rng| {
+        let seed = rng.next_u64();
+        let s = stream(5_000, 400, seed);
+        let n = s.traces.len();
+        let hot = (seed as usize) % 4;
+        let targets: Vec<Vec<usize>> = (0..n).map(|_| vec![hot]).collect();
+        let mut designs = fleet(&t, 4);
+        let fm = run_fleet(
+            &mut designs,
+            &s.traces,
+            &targets,
+            Load::Open { mops: 4.0 },
+            64,
+            64,
+            seed,
+        );
+        let total: u64 = fm.per_machine.iter().sum();
+        if total != n as u64 {
+            return Err(format!("served {total} of {n}"));
+        }
+        if fm.per_machine[hot] != n as u64 {
+            return Err(format!("hot machine {hot} got {:?}", fm.per_machine));
+        }
+        if (fm.imbalance - 4.0).abs() > 1e-9 {
+            return Err(format!("imbalance {} for all-to-one over 4", fm.imbalance));
+        }
+        Ok(())
+    })
+}
+
+#[test]
+fn member_ring_covers_every_key_after_arbitrary_churn() {
+    // Whatever member set survives churn, every key must still home
+    // onto a live member — the property that makes epoch-boundary
+    // re-homing lossless.
+    for_seeds(16, |rng| {
+        let mut members: Vec<usize> = (0..8).collect();
+        // Kill a random half, in random order.
+        for _ in 0..4 {
+            let gone = rng.below(members.len() as u64) as usize;
+            members.remove(gone);
+        }
+        let router = Router::with_members(&members, Vec::new(), 1);
+        for key in 0..2_000u64 {
+            let home = router.home(key);
+            if !members.contains(&home) {
+                return Err(format!("key {key} homed on dead machine {home}"));
+            }
+        }
+        Ok(())
+    })
+}

@@ -91,6 +91,15 @@ fn chain_tables_are_byte_identical_across_worker_counts() {
 }
 
 #[test]
+fn elastic_fleet_day_is_byte_identical_across_worker_counts() {
+    // The orchestrator's epoch loop is sequential, but every epoch's
+    // measured slice fans the live machines out over `par_map`. The
+    // whole day — policy decisions, victim pick, re-homed routing —
+    // must render identically whatever the worker count.
+    check_thread_invariance(&["fleet", "--hours", "4", "--crash-at"], 3, 1_200);
+}
+
+#[test]
 fn fleet_events_and_metrics_match_serial_across_worker_counts() {
     // The executed-op counter is thread-local; par_map merges each
     // worker's delta back into the caller. A lost or double-counted
