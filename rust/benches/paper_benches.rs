@@ -358,7 +358,7 @@ fn main() {
     }
 
     // ---- simulator hot paths (§Perf) -------------------------------------
-    use orca::mem::{Access, MemTrace, SocketArena};
+    use orca::mem::{derive_steps, Access, MemTrace, SocketArena, TraceArena, TraceRef};
     use orca::sim::{BandwidthLedger, Histogram, Rng};
 
     let mut rng = Rng::new(1);
@@ -417,9 +417,11 @@ fn main() {
         std::hint::black_box(accel.serve_stream(&jobs, &mut arena));
     });
 
-    // Routed-replica staging, pre- vs post-change: `run_fleet` used to
-    // clone the MemTrace for every (machine, request) copy; it now hands
-    // each machine `&MemTrace` borrows. Same staging loop, both ways.
+    // Routed-replica staging, three generations of `run_fleet`: cloning
+    // the MemTrace for every (machine, request) copy, handing out
+    // `&MemTrace` borrows, and today's flat-arena spans — each replica
+    // copy is 24 bytes of `TraceRef`. Same staging loop, all three ways;
+    // `tools/bench_check.py` gates clone/arena >= min_arena_ratio.
     {
         let mut rs = Rng::new(7);
         let n_traces = if quick { 2_000 } else { 20_000 };
@@ -448,6 +450,60 @@ fn main() {
                 let staged: Vec<(u64, &MemTrace)> =
                     order.iter().map(|&(i, t)| (t, &traces[i])).collect();
                 std::hint::black_box(staged);
+            }
+        });
+        let (_fleet_arena, refs) = TraceArena::from_traces(&traces);
+        b.time("fleet_serve_arena", || {
+            for _ in 0..reps {
+                let staged: Vec<(u64, TraceRef)> =
+                    order.iter().map(|&(i, t)| (t, refs[i])).collect();
+                std::hint::black_box(staged);
+            }
+        });
+    }
+
+    // ---- flat-arena request datapath (the PR's acceptance rows) -----------
+    // `stream_gen_vec` is the pre-arena representation end to end:
+    // generate owned per-request traces, then — once per measurement
+    // pass, the way every sweep re-serves the same stream — clone-stage
+    // the jobs and re-derive their dependency steps (the rescan the
+    // engines ran before spans carried precomputed boundaries).
+    // `stream_gen_arena` is the identical workload on the arena:
+    // generate spans once, stage 24-byte copies, read the step slices.
+    // `tools/bench_check.py` gates vec/arena >= min_arena_ratio.
+    {
+        use orca::experiments::kvs::RequestStream;
+        use orca::workload::{KeyDist, KvMix};
+        let gk = 2_000u64;
+        let greqs = if quick { 5_000 } else { 40_000 };
+        let gdist = KeyDist::zipf(gk, 0.9);
+        let passes = 8;
+        b.time("stream_gen_vec", || {
+            let traces =
+                RequestStream::generate_traces(gk, greqs, &gdist, KvMix::GetOnly, 64, 13);
+            for _ in 0..passes {
+                let staged: Vec<(u64, MemTrace)> = traces
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| (i as u64, t.clone()))
+                    .collect();
+                let steps: usize =
+                    staged.iter().map(|(_, t)| derive_steps(&t.accesses).len()).sum();
+                std::hint::black_box((staged, steps));
+            }
+        });
+        b.time("stream_gen_arena", || {
+            let stream = RequestStream::generate(gk, greqs, &gdist, KvMix::GetOnly, 64, 13);
+            for _ in 0..passes {
+                let staged: Vec<(u64, TraceRef)> = stream
+                    .spans
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &r)| (i as u64, r))
+                    .collect();
+                let steps: usize =
+                    staged.iter().map(|&(_, r)| stream.arena.step_spans(r).len()).sum();
+                std::hint::black_box((staged, steps));
             }
         });
     }

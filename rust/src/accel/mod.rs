@@ -25,7 +25,10 @@ pub use scheduler::RoundRobin;
 pub use sq_handler::SqHandler;
 
 use crate::config::{AccelMem, Testbed};
-use crate::mem::{Access, LinkId, LocalMemory, MemId, MemTrace, MemorySystem, SocketArena};
+use crate::mem::{
+    derive_steps, Access, LinkId, LocalMemory, MemId, MemTrace, MemorySystem, SocketArena,
+    TraceSource,
+};
 use crate::sim::{cycles_ps, transfer_ps, BandwidthLedger, MultiServer, Server, NS};
 
 /// The memory path application data takes from the APU.
@@ -180,9 +183,10 @@ impl CcAccelerator {
     /// internal event heap, so the bounded coherence-controller slots see
     /// the same schedule the hardware would. Returns per-job completion
     /// times. Use this (not repeated [`Self::serve`]) for throughput runs.
-    /// Generic over the job handle (`MemTrace` or `&MemTrace`) so fleet
-    /// callers can stream borrowed traces without copies.
-    pub fn serve_stream<J: std::borrow::Borrow<MemTrace>>(
+    /// Generic over [`TraceSource`]: arena spans arrive with their
+    /// dependency steps precomputed at generation time; bare traces
+    /// derive them once here.
+    pub fn serve_stream<J: TraceSource>(
         &mut self,
         jobs: &[(u64, J)],
         arena: &mut SocketArena,
@@ -190,25 +194,15 @@ impl CcAccelerator {
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
 
-        // Pre-split each trace into dependency steps (ranges of accesses).
-        let steps: Vec<Vec<(usize, usize)>> = jobs
+        // Dependency-step ranges per job (precomputed or derived once).
+        let derived: Vec<Vec<(u32, u32)>> = jobs
             .iter()
-            .map(|(_, t)| {
-                let t = t.borrow();
-                let mut out = Vec::new();
-                let mut start = 0usize;
-                for (i, a) in t.accesses.iter().enumerate() {
-                    if i > 0 && a.dep {
-                        out.push((start, i));
-                        start = i;
-                    }
-                }
-                if start < t.accesses.len() {
-                    out.push((start, t.accesses.len()));
-                }
-                out
+            .map(|(_, j)| match j.step_spans() {
+                Some(_) => Vec::new(),
+                None => derive_steps(j.accesses()),
             })
             .collect();
+        let spans = |j: usize| -> &[(u32, u32)] { jobs[j].1.step_spans().unwrap_or(&derived[j]) };
 
         let mut done = vec![0u64; jobs.len()];
         // (ready_time, job, step_idx)
@@ -220,13 +214,14 @@ impl CcAccelerator {
             heap.push(Reverse((entry, j, 0)));
         }
         while let Some(Reverse((t, j, s))) = heap.pop() {
-            if s >= steps[j].len() {
+            let sp = spans(j);
+            if s >= sp.len() {
                 done[j] = done[j].max(t);
                 continue;
             }
-            let (lo, hi) = steps[j][s];
+            let (lo, hi) = sp[s];
             let mut step_end = t;
-            for a in &jobs[j].1.borrow().accesses[lo..hi] {
+            for a in &jobs[j].1.accesses()[lo as usize..hi as usize] {
                 let d = self.access(t, a, arena);
                 step_end = step_end.max(d);
             }

@@ -33,7 +33,7 @@
 //! every epoch a deterministic, independently-seeded simulation.
 
 use crate::cluster::{run_fleet, FleetDesign, Router, FIG6_LEG_NS};
-use crate::mem::MemTrace;
+use crate::mem::{TraceArena, TraceRef};
 use crate::serving::Load;
 use crate::sim::{Rng, US};
 use crate::workload::diurnal::Epoch;
@@ -346,18 +346,20 @@ pub struct DayReport {
 }
 
 /// Drive a diurnal trace epoch-by-epoch through the orchestrator and
-/// [`run_fleet`]. `pool_traces`/`pool_keys` are the request pool (one
-/// [`crate::experiments::kvs::RequestStream`]-shaped batch, consumed
-/// with a wrapping cursor); `mk_design` builds one serving element per
-/// live machine per epoch; `capacity_mops` is the per-machine link
-/// capacity every machine registers with.
+/// [`run_fleet`]. `pool`/`pool_keys` are the request pool — arena spans
+/// into `arena` (one [`crate::experiments::kvs::RequestStream`]-shaped
+/// batch, consumed with a wrapping cursor); `mk_design` builds one
+/// serving element per live machine per epoch; `capacity_mops` is the
+/// per-machine link capacity every machine registers with.
 ///
 /// Deterministic: the victim pick, every epoch's arrival process, and
 /// the fan-out over machines are all seeded; the same (trace, pool,
 /// cfg, seed) reproduces the same report byte for byte.
+#[allow(clippy::too_many_arguments)]
 pub fn run_day(
     epochs: &[Epoch],
-    pool_traces: &[MemTrace],
+    arena: &TraceArena,
+    pool: &[TraceRef],
     pool_keys: &[u64],
     cfg: OrchestratorCfg,
     capacity_mops: f64,
@@ -365,8 +367,8 @@ pub fn run_day(
     seed: u64,
 ) -> DayReport {
     assert!(!epochs.is_empty(), "a day needs at least one epoch");
-    assert_eq!(pool_traces.len(), pool_keys.len(), "pool keys pair with traces");
-    assert!(!pool_traces.is_empty(), "the request pool must not be empty");
+    assert_eq!(pool.len(), pool_keys.len(), "pool keys pair with spans");
+    assert!(!pool.is_empty(), "the request pool must not be empty");
     assert!(
         SLICE_US > cfg.unavail_bound_us(),
         "the epoch slice must contain the worst-case detection window"
@@ -374,7 +376,7 @@ pub fn run_day(
     let mut orch = Orchestrator::new(cfg, capacity_mops);
     orch.register(); // the fleet boots with one machine; epoch 0's plan grows to fit
     let mut victim_rng = Rng::new(seed ^ 0xFEE7);
-    let pool = pool_traces.len();
+    let pool_len = pool.len();
     let mut cursor = 0usize;
     let mut last_p99 = 0.0f64;
     let mut slo_breaches = 0u32;
@@ -407,10 +409,12 @@ pub fn run_day(
         assert!(!members.is_empty(), "the policy must keep the fleet alive");
 
         // This epoch's measured slice of the offered load.
-        let n = ((spec.offered_mops * SLICE_US) as usize).clamp(1, pool);
-        let idx: Vec<usize> = (0..n).map(|k| (cursor + k) % pool).collect();
-        cursor = (cursor + n) % pool;
-        let jobs: Vec<MemTrace> = idx.iter().map(|&k| pool_traces[k].clone()).collect();
+        let n = ((spec.offered_mops * SLICE_US) as usize).clamp(1, pool_len);
+        let idx: Vec<usize> = (0..n).map(|k| (cursor + k) % pool_len).collect();
+        cursor = (cursor + n) % pool_len;
+        // Spans are `Copy` — the epoch's job list is n × 24 bytes, not
+        // n cloned traces.
+        let jobs: Vec<TraceRef> = idx.iter().map(|&k| pool[k]).collect();
 
         // Route over the *current* membership: drained and dead ids own
         // no ring points, so no request can reach a gone machine —
@@ -431,7 +435,7 @@ pub fn run_day(
         let load = Load::Open {
             mops: spec.offered_mops,
         };
-        let fm = run_fleet(&mut designs, &jobs, &targets, load, REQ_BYTES, RESP_BYTES, eseed);
+        let fm = run_fleet(&mut designs, arena, &jobs, &targets, load, REQ_BYTES, RESP_BYTES, eseed);
 
         // Conservation: every request routed this epoch was served.
         let served: u64 = fm.per_machine.iter().sum();

@@ -27,7 +27,12 @@
 //!   reproduce the single-machine serving goldens bit-for-bit
 //!   (`tests/scaleout_golden.rs`).
 
-use crate::mem::MemTrace;
+// The replica fan-out is the hottest copy loop in the fleet: a
+// reintroduced per-copy trace clone here is a CI failure, not a review
+// comment (the equivalent attribute guards `serving/mod.rs`).
+#![deny(clippy::redundant_clone)]
+
+use crate::mem::{TraceArena, TraceRef};
 use crate::serving::{Design, Load};
 use crate::sim::{mix64, Histogram, Rng, SEC, US};
 
@@ -179,7 +184,7 @@ impl Router {
 /// machines out one-per-task ([`crate::sim::par_map`]); every design is
 /// plain owned timing state (PR 6's arena/ID refactor removed the last
 /// `Rc<RefCell<…>>` sharing), so the bound costs nothing.
-pub type FleetDesign = Box<dyn Design<Job = MemTrace> + Send>;
+pub type FleetDesign = Box<dyn Design + Send>;
 
 /// One scale-out run's aggregate result.
 #[derive(Clone, Debug, PartialEq)]
@@ -203,19 +208,22 @@ pub struct FleetMetrics {
     pub events: u64,
 }
 
-/// Drive `jobs` through a fleet: `targets[i]` lists the machine(s)
-/// serving request `i` (one for routed singles, K for write-all fans).
-/// A request's latency is its *slowest* copy's response arrival —
-/// write-all waits for every ack.
+/// Drive the spans in `jobs` (resolved against `arena`) through a
+/// fleet: `targets[i]` lists the machine(s) serving request `i` (one
+/// for routed singles, K for write-all fans). A request's latency is
+/// its *slowest* copy's response arrival — write-all waits for every
+/// ack.
 ///
 /// Structure mirrors [`crate::serving::ServingPipeline::run`] stage for
 /// stage (issue → ingress in issue order → per-machine visibility sort
 /// → serve → egress in completion order); with `designs.len() == 1` and
 /// all-`[0]` targets it consumes the RNG identically and reproduces the
 /// single-machine metrics exactly.
+#[allow(clippy::too_many_arguments)]
 pub fn run_fleet(
     designs: &mut [FleetDesign],
-    jobs: &[MemTrace],
+    arena: &TraceArena,
+    jobs: &[TraceRef],
     targets: &[Vec<usize>],
     load: Load,
     req_payload: u64,
@@ -238,7 +246,7 @@ pub fn run_fleet(
     let mut first = u64::MAX;
     let mut routed: Vec<Vec<(usize, u64)>> = vec![Vec::new(); machines];
     let mut per_machine = vec![0u64; machines];
-    for (i, (&t0, job)) in issue.iter().zip(jobs).enumerate() {
+    for (i, (&t0, &job)) in issue.iter().zip(jobs).enumerate() {
         assert!(!targets[i].is_empty(), "request {i} lost: no target machine");
         for &m in &targets[i] {
             assert!(m < machines, "request {i} routed to dead machine {m}");
@@ -246,7 +254,7 @@ pub fn run_fleet(
             // machine's in-band RPC header) charges each link its own
             // wire bytes.
             let req = designs[m].request_bytes(req_payload);
-            let ing = designs[m].ingress(t0, job, req, &mut rng);
+            let ing = designs[m].ingress(t0, arena, job, req, &mut rng);
             first = first.min(ing.wire_at);
             routed[m].push((i, ing.visible_at));
             per_machine[m] += 1;
@@ -259,9 +267,9 @@ pub fn run_fleet(
     // ingress already charged every link/notification ledger and
     // `serve` draws no RNG — so fanning them out over
     // [`crate::sim::par_map`] is race-free and byte-identical to the
-    // serial loop (DESIGN.md §Parallel execution). Jobs are handed to
-    // each machine by reference: a replica copy costs a pointer, not a
-    // trace clone.
+    // serial loop (DESIGN.md §Parallel execution). The arena is `Sync`
+    // and shared read-only by every worker; a K-way replicated request
+    // is K copies of a 24-byte span, never K traces.
     let mut orders = routed;
     for order in orders.iter_mut() {
         order.sort_by_key(|&(_, t)| t);
@@ -270,8 +278,8 @@ pub fn run_fleet(
         .iter_mut()
         .zip(orders.iter())
         .map(|(design, order)| {
-            let ordered: Vec<(u64, &MemTrace)> =
-                order.iter().map(|&(i, t)| (t, &jobs[i])).collect();
+            let ordered: Vec<(u64, TraceRef)> =
+                order.iter().map(|&(i, t)| (t, jobs[i])).collect();
             (design, ordered)
         })
         .collect();
@@ -279,7 +287,7 @@ pub fn run_fleet(
         if ordered.is_empty() {
             Vec::new()
         } else {
-            design.serve(ordered)
+            design.serve(arena, &ordered)
         }
     });
     let mut done_per_machine: Vec<Vec<(usize, u64)>> = Vec::with_capacity(machines);
@@ -351,7 +359,7 @@ pub fn run_fleet(
 mod tests {
     use super::*;
     use crate::config::{AccelMem, Testbed};
-    use crate::mem::Access;
+    use crate::mem::{Access, MemTrace};
     use crate::serving::{Orca, ServingPipeline};
 
     fn trace(key: u64) -> MemTrace {
@@ -487,14 +495,15 @@ mod tests {
         // The parity the scale-out goldens rely on: same jobs, same
         // seed, same design → bit-identical metrics.
         let t = Testbed::paper();
-        let jobs: Vec<MemTrace> = (0..4_000u64).map(trace).collect();
+        let traces: Vec<MemTrace> = (0..4_000u64).map(trace).collect();
+        let (arena, jobs) = TraceArena::from_traces(&traces);
         for load in [Load::Saturation, Load::Open { mops: 2.0 }] {
             let pipe = ServingPipeline::new(load, 64, 64, 11);
-            let want = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+            let want = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &arena, &jobs);
             let mut fleet: Vec<FleetDesign> =
                 vec![Box::new(Orca::new(&t, AccelMem::None, 32))];
             let targets = vec![vec![0usize]; jobs.len()];
-            let got = run_fleet(&mut fleet, &jobs, &targets, load, 64, 64, 11);
+            let got = run_fleet(&mut fleet, &arena, &jobs, &targets, load, 64, 64, 11);
             assert_eq!(got.mops, want.mops, "{load:?} mops");
             assert_eq!(got.avg_us, want.avg_us, "{load:?} avg");
             assert_eq!(got.p50_us, want.p50_us, "{load:?} p50");
@@ -509,12 +518,13 @@ mod tests {
         // The same request fanned to two machines cannot beat its
         // single-machine latency, and both machines see the copy.
         let t = Testbed::paper();
-        let jobs: Vec<MemTrace> = (0..500u64).map(trace).collect();
+        let traces: Vec<MemTrace> = (0..500u64).map(trace).collect();
+        let (arena, jobs) = TraceArena::from_traces(&traces);
         let single = {
             let mut fleet: Vec<FleetDesign> =
                 vec![Box::new(Orca::new(&t, AccelMem::None, 32))];
             let targets = vec![vec![0usize]; jobs.len()];
-            run_fleet(&mut fleet, &jobs, &targets, Load::Open { mops: 1.0 }, 64, 64, 5)
+            run_fleet(&mut fleet, &arena, &jobs, &targets, Load::Open { mops: 1.0 }, 64, 64, 5)
         };
         let fanned = {
             let mut fleet: Vec<FleetDesign> = vec![
@@ -522,7 +532,7 @@ mod tests {
                 Box::new(Orca::new(&t, AccelMem::None, 32)),
             ];
             let targets = vec![vec![0usize, 1]; jobs.len()];
-            run_fleet(&mut fleet, &jobs, &targets, Load::Open { mops: 1.0 }, 64, 64, 5)
+            run_fleet(&mut fleet, &arena, &jobs, &targets, Load::Open { mops: 1.0 }, 64, 64, 5)
         };
         assert_eq!(fanned.per_machine, vec![500, 500]);
         assert!(
@@ -539,7 +549,8 @@ mod tests {
         // exceed one machine's (the acceptance-criteria shape; the
         // full sweep lives in experiments::scaleout).
         let t = Testbed::paper();
-        let jobs: Vec<MemTrace> = (0..20_000u64).map(trace).collect();
+        let traces: Vec<MemTrace> = (0..20_000u64).map(trace).collect();
+        let (arena, jobs) = TraceArena::from_traces(&traces);
         let r1 = Router::new(1, Vec::new(), 1);
         let r4 = Router::new(4, Vec::new(), 1);
         let mops = |machines: usize, router: &Router| {
@@ -548,7 +559,7 @@ mod tests {
                 .collect();
             let targets: Vec<Vec<usize>> =
                 (0..jobs.len() as u64).map(|k| vec![router.home(k)]).collect();
-            run_fleet(&mut fleet, &jobs, &targets, Load::Saturation, 64, 64, 9).mops
+            run_fleet(&mut fleet, &arena, &jobs, &targets, Load::Saturation, 64, 64, 9).mops
         };
         let one = mops(1, &r1);
         let four = mops(4, &r4);

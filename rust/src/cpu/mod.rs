@@ -21,7 +21,7 @@
 //! contention") — an occasional exponential delay.
 
 use crate::config::Testbed;
-use crate::mem::{MemTrace, MemorySystem};
+use crate::mem::{derive_steps, MemTrace, MemorySystem, TraceSource};
 use crate::sim::{cycles_ps, MultiServer, Pipeline, Rng, NS, US};
 
 /// One serving core's batching state.
@@ -92,35 +92,39 @@ impl CpuServer {
         // Secure a core lane from the shared pool, then execute.
         let rpc = cycles_ps(self.t.cpu.rpc_cycles, self.t.cpu.freq_mhz) * staged.len() as u64;
         let (start, _d, _lane) = self.cores.acquire(last_arrival, rpc);
-        self.exec_batch(start, staged)
+        let idx: Vec<usize> = (0..staged.len()).collect();
+        self.exec_batch(start, &staged, &idx)
     }
 
     /// Opportunistic streaming execution (the experiment driver's path):
     /// each core takes whatever is pending — up to `batch` — whenever it
     /// frees up, like MICA's RX-queue batching. No waiting to fill B.
     /// `jobs` must be sorted by arrival; `core_of(i)` maps job → core.
-    /// (The scheduler itself is shared with the SmartNIC server:
-    /// [`crate::serving::run_stream_batched`].)
-    pub fn run_stream<J: std::borrow::Borrow<MemTrace> + Clone>(
+    /// Generic over [`TraceSource`] so arena spans and owned traces
+    /// drive the same engine. (The scheduler itself is shared with the
+    /// SmartNIC server: [`crate::serving::run_stream_batched`].)
+    pub fn run_stream<J: TraceSource>(
         &mut self,
         jobs: &[(u64, J)],
         core_of: impl Fn(usize) -> usize,
     ) -> Vec<u64> {
         let n_cores = self.batches.len();
         let batch = self.batch;
-        crate::serving::run_stream_batched(jobs, n_cores, batch, core_of, |_core, start, staged| {
-            self.exec_batch(start, staged)
+        crate::serving::run_stream_batched(jobs, n_cores, batch, core_of, |_core, start, idx| {
+            self.exec_batch(start, jobs, idx)
         })
     }
 
-    /// Execute one batch starting at `ready` (the core is already
-    /// secured). Returns per-request completion times.
-    fn exec_batch<J: std::borrow::Borrow<MemTrace>>(
+    /// Execute the batch `idx` (indices into `jobs`) starting at `ready`
+    /// (the core is already secured). Returns per-request completion
+    /// times in `idx` order.
+    fn exec_batch<J: TraceSource>(
         &mut self,
         ready: u64,
-        staged: Vec<(u64, J)>,
+        jobs: &[(u64, J)],
+        idx: &[usize],
     ) -> Vec<u64> {
-        let b = staged.len();
+        let b = idx.len();
         self.served += b as u64;
 
         // One recv-WQE replenish + CQE-batch poll per batch.
@@ -131,28 +135,27 @@ impl CpuServer {
         let cpu_done = batch_ready + rpc;
 
         // Batched memory walk: per dependency step, all B requests issue
-        // together; step latency = slowest access in the step.
-        let max_depth = staged
+        // together; step latency = slowest access in the step. Arena jobs
+        // carry step spans precomputed at generation time; bare traces
+        // derive them once per batch (never once per step).
+        let derived: Vec<Vec<(u32, u32)>> = idx
             .iter()
-            .map(|(_, t)| t.borrow().depth())
-            .max()
-            .unwrap_or(0);
+            .map(|&i| match jobs[i].1.step_spans() {
+                Some(_) => Vec::new(),
+                None => derive_steps(jobs[i].1.accesses()),
+            })
+            .collect();
+        let spans_of =
+            |k: usize| -> &[(u32, u32)] { jobs[idx[k]].1.step_spans().unwrap_or(&derived[k]) };
+        let max_depth = (0..b).map(|k| spans_of(k).len()).max().unwrap_or(0);
         let mut step_start = cpu_done;
         for step in 0..max_depth {
             let mut step_end = step_start;
-            for (_, trace) in &staged {
-                let trace = trace.borrow();
-                // Pick the accesses belonging to this dependency step.
-                let mut s = 0usize;
-                for (i, a) in trace.accesses.iter().enumerate() {
-                    if i == 0 || a.dep {
-                        s += 1;
-                    }
-                    if s == step + 1 {
+            for k in 0..b {
+                if let Some(&(lo, hi)) = spans_of(k).get(step) {
+                    for a in &jobs[idx[k]].1.accesses()[lo as usize..hi as usize] {
                         let done = self.mem.access(step_start, a);
                         step_end = step_end.max(done);
-                    } else if s > step + 1 {
-                        break;
                     }
                 }
             }

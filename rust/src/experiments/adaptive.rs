@@ -33,7 +33,7 @@
 use super::{Opts, Table};
 use crate::apps::kvs::{HashTable, KvConfig};
 use crate::config::{AccelMem, Testbed};
-use crate::mem::{Access, DmaWrite, Domain, MemTrace, MemorySystem, SteeringPolicy};
+use crate::mem::{Access, DmaWrite, Domain, MemTrace, MemorySystem, SteeringPolicy, TraceArena, TraceRef};
 use crate::serving::{Load, Orca, RunMetrics, ServingPipeline};
 use crate::sim::Rng;
 use crate::workload::KeyDist;
@@ -56,9 +56,11 @@ const RING_BYTES: u64 = 2 << 20;
 /// Header + key lines every request carries in the ring.
 const HDR_BYTES: u64 = 128;
 
-/// One sweep point's pre-generated request stream.
+/// One sweep point's pre-generated request stream (arena-backed: one
+/// flat [`TraceArena`] plus a span per request).
 pub struct AdaptiveStream {
-    pub traces: Vec<MemTrace>,
+    pub arena: TraceArena,
+    pub spans: Vec<TraceRef>,
     pub value_bytes: u64,
     /// True when this point's values are homed in NVM (out-of-line).
     pub nvm_resident: bool,
@@ -105,7 +107,8 @@ pub fn build_stream(
     // wrap's DMA.
     let requests = requests.min(slots);
 
-    let mut traces = Vec::with_capacity(requests as usize);
+    let mut arena = TraceArena::with_capacity(requests as usize, 16);
+    let mut spans = Vec::with_capacity(requests as usize);
     for i in 0..requests {
         let key = dist.sample(&mut rng);
         let ring = RING_BASE + i * slot_stride;
@@ -177,10 +180,11 @@ pub fn build_stream(
                 tr.push(a);
             }
         }
-        traces.push(tr);
+        spans.push(arena.push(&tr));
     }
     AdaptiveStream {
-        traces,
+        arena,
+        spans,
         value_bytes,
         nvm_resident,
     }
@@ -218,7 +222,7 @@ pub fn run_policy(
     let mut design = Orca::with_memory(t, AccelMem::None, 32, 1, mem);
     let req_bytes = HDR_BYTES + stream.value_bytes;
     let pipe = ServingPipeline::new(Load::Saturation, req_bytes, 64, seed);
-    let metrics = pipe.run(&mut design, &stream.traces);
+    let metrics = pipe.run(&mut design, &stream.arena, &stream.spans);
     AdaptiveRow {
         value_bytes: stream.value_bytes,
         nvm_resident: stream.nvm_resident,
@@ -300,17 +304,18 @@ mod tests {
         let (_t, small) = rig(10_000, 512, 200);
         assert!(!small.nvm_resident);
         // Inline: one DMA write covering header+value, nothing at NVM.
-        assert!(small.traces.iter().all(|tr| tr
-            .dma
+        assert!(small.spans.iter().all(|&r| small
+            .arena
+            .dma(r)
             .iter()
             .all(|w| w.addr < NVM_BASE && w.tph)));
         let (_t, large) = rig(10_000, 4096, 200);
         assert!(large.nvm_resident);
         // Out-of-line SETs carry one NVM-destined, TPH-clear write.
         assert!(large
-            .traces
+            .spans
             .iter()
-            .any(|tr| tr.dma.iter().any(|w| w.addr >= NVM_BASE && !w.tph)));
+            .any(|&r| large.arena.dma(r).iter().any(|w| w.addr >= NVM_BASE && !w.tph)));
     }
 
     #[test]

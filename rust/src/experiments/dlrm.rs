@@ -24,7 +24,7 @@ use super::fig12::{self, TABLES_PER_QUERY};
 use super::{Opts, Table};
 use crate::config::{AccelMem, Testbed};
 use crate::coordinator::{BatchPolicy, Batcher};
-use crate::mem::MemTrace;
+use crate::mem::{MemTrace, TraceArena, TraceRef};
 use crate::serving::analytic::{self, GatherProfile};
 use crate::serving::{DlrmCpu, DlrmOrca, DlrmOrcaLocal, Load, RunMetrics, ServingPipeline};
 use crate::workload::{DatasetProfile, AMAZON_PROFILES};
@@ -49,10 +49,12 @@ pub const KNEE_P99_X: f64 = 4.0;
 /// Response payload: the reduced f32[64] embedding vector.
 pub const RESP_BYTES: u64 = 256;
 
-/// One dataset's pre-built request stream.
+/// One dataset's pre-built request stream (arena-backed: one flat
+/// [`TraceArena`] plus a span per query job).
 pub struct DlrmStream {
     pub dataset: &'static str,
-    pub jobs: Vec<MemTrace>,
+    pub arena: TraceArena,
+    pub spans: Vec<TraceRef>,
     /// Measured data-movement profile of the jobs (feeds the analytic
     /// cross-check — both paths see the same movement).
     pub gp: GatherProfile,
@@ -60,6 +62,14 @@ pub struct DlrmStream {
     /// `(base, bytes)` regions ORCA-LD/LH stage into local memory at
     /// table-load time (index pages + embedding tables + memo tables).
     pub regions: Vec<(u64, u64)>,
+}
+
+impl DlrmStream {
+    /// Materialize every span back into an owned [`MemTrace`] (the
+    /// batched path merges owned jobs; tests compare against it).
+    pub fn to_jobs(&self) -> Vec<MemTrace> {
+        self.spans.iter().map(|&r| self.arena.to_trace(r)).collect()
+    }
 }
 
 /// Build one dataset's stream: `n` queries, each reducing over
@@ -70,7 +80,8 @@ pub fn build_stream(profile: &DatasetProfile, n: usize, seed: u64) -> DlrmStream
     let (mut gen, table, mut merci) = fig12::dataset_setup(profile, SCALE, seed);
     let mlp = 64; // the designs re-window at replay (§IV-C default here)
 
-    let mut jobs = Vec::with_capacity(n);
+    let mut arena = TraceArena::with_capacity(n, 64);
+    let mut spans = Vec::with_capacity(n);
     let mut bytes = 0u64;
     let mut accesses = 0u64;
     for _ in 0..n {
@@ -87,7 +98,7 @@ pub fn build_stream(profile: &DatasetProfile, n: usize, seed: u64) -> DlrmStream
         }
         bytes += job.bytes();
         accesses += job.len() as u64;
-        jobs.push(job);
+        spans.push(arena.push(&job));
     }
 
     // Residency map for the local designs: per logical table, the index
@@ -107,7 +118,8 @@ pub fn build_stream(profile: &DatasetProfile, n: usize, seed: u64) -> DlrmStream
 
     DlrmStream {
         dataset: profile.name,
-        jobs,
+        arena,
+        spans,
         gp: GatherProfile {
             bytes_per_query: bytes as f64 / n as f64,
             accesses_per_query: accesses as f64 / n as f64,
@@ -206,21 +218,28 @@ pub fn run_design(
     batch: usize,
     seed: u64,
 ) -> RunMetrics {
-    // Only the batched path materializes merged jobs; the common
-    // unbatched runs borrow the stream as-is.
-    let merged;
-    let jobs: &[MemTrace] = if batch <= 1 {
-        &stream.jobs
+    // Only the batched path materializes merged jobs (and re-flattens
+    // them into a fresh arena); the common unbatched runs borrow the
+    // stream's arena as-is.
+    let merged_arena;
+    let merged_spans;
+    let (arena, spans): (&TraceArena, &[TraceRef]) = if batch <= 1 {
+        (&stream.arena, &stream.spans)
     } else {
-        merged = batched_jobs(&stream.jobs, batch);
-        &merged
+        let merged = batched_jobs(&stream.to_jobs(), batch);
+        let (a, s) = TraceArena::from_traces(&merged);
+        merged_arena = a;
+        merged_spans = s;
+        (&merged_arena, &merged_spans)
     };
     let b = batch.max(1) as u64;
     let pipe = ServingPipeline::new(load, stream.gp.req_bytes * b, RESP_BYTES * b, seed);
     match d {
-        DlrmDesign::Cpu(cores) => pipe.run(&mut DlrmCpu::new(t, cores), jobs),
-        DlrmDesign::Orca => pipe.run(&mut DlrmOrca::new(t), jobs),
-        DlrmDesign::OrcaLocal(m) => pipe.run(&mut DlrmOrcaLocal::new(t, m, &stream.regions), jobs),
+        DlrmDesign::Cpu(cores) => pipe.run(&mut DlrmCpu::new(t, cores), arena, spans),
+        DlrmDesign::Orca => pipe.run(&mut DlrmOrca::new(t), arena, spans),
+        DlrmDesign::OrcaLocal(m) => {
+            pipe.run(&mut DlrmOrcaLocal::new(t, m, &stream.regions), arena, spans)
+        }
     }
 }
 
@@ -361,7 +380,7 @@ pub fn report(opts: &Opts, batch: usize) -> Vec<Table> {
                 streams[si].dataset.into(),
                 d.label(),
                 format!("{:.0}", m.mops * 1e6 * batch as f64 / 1e3),
-                format!("{}", streams[si].jobs.len().div_ceil(batch)),
+                format!("{}", streams[si].spans.len().div_ceil(batch)),
             ]);
         }
         out.push(tb);
@@ -380,18 +399,18 @@ mod tests {
     #[test]
     fn streams_cover_sixteen_tables_with_memo_hits() {
         let s = stream(0, 50);
-        assert_eq!(s.jobs.len(), 50);
+        assert_eq!(s.spans.len(), 50);
         assert!(s.memo_hit_rate > 0.1, "memo hit {}", s.memo_hit_rate);
         // Accesses span all 16 table strides.
         let strides: std::collections::HashSet<u64> = s
-            .jobs
+            .spans
             .iter()
-            .flat_map(|j| j.accesses.iter())
+            .flat_map(|&r| s.arena.accesses(r).iter())
             .map(|a| (a.addr + 4096 - 0x2000_0000_0000) / TABLE_STRIDE)
             .collect();
         assert_eq!(strides.len(), TABLES_PER_QUERY);
         // Profile matches the jobs it was measured from.
-        let bytes: u64 = s.jobs.iter().map(|j| j.bytes()).sum();
+        let bytes: u64 = s.to_jobs().iter().map(|j| j.bytes()).sum();
         let want = bytes as f64 / 50.0;
         assert!((s.gp.bytes_per_query - want).abs() < 1e-6);
     }
@@ -425,7 +444,7 @@ mod tests {
         let s = stream(5, 100);
         let mut design = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &s.regions);
         let pipe = ServingPipeline::new(Load::Saturation, s.gp.req_bytes, RESP_BYTES, 7);
-        pipe.run(&mut design, &s.jobs);
+        pipe.run(&mut design, &s.arena, &s.spans);
         assert_eq!(
             design.local().non_resident,
             0,
@@ -471,12 +490,13 @@ mod tests {
     #[test]
     fn batcher_groups_queries_and_preserves_every_access() {
         let s = stream(0, 30);
-        let grouped = batched_jobs(&s.jobs, 8);
+        let jobs = s.to_jobs();
+        let grouped = batched_jobs(&jobs, 8);
         assert_eq!(grouped.len(), 4, "30 queries at batch 8 -> 3 full + tail");
-        let before: usize = s.jobs.iter().map(|j| j.len()).sum();
+        let before: usize = jobs.iter().map(|j| j.len()).sum();
         let after: usize = grouped.iter().map(|j| j.len()).sum();
         assert_eq!(before, after, "merging must not drop accesses");
-        assert_eq!(batched_jobs(&s.jobs, 1).len(), 30, "batch 1 is a no-op");
+        assert_eq!(batched_jobs(&jobs, 1).len(), 30, "batch 1 is a no-op");
     }
 
     #[test]

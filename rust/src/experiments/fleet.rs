@@ -62,7 +62,8 @@ pub fn run(opts: &Opts, hours: u32, slo_p99_us: f64, crash_at: Option<u32>) -> D
     let t = opts.testbed.clone();
     run_day(
         &epochs,
-        &pool.traces,
+        &pool.arena,
+        &pool.spans,
         &pool.keys,
         cfg,
         capacity_mops(opts),
@@ -247,7 +248,8 @@ mod tests {
         let t = o.testbed.clone();
         let day = run_day(
             &epochs,
-            &pool.traces,
+            &pool.arena,
+            &pool.spans,
             &pool.keys,
             OrchestratorCfg::with_slo(DEFAULT_SLO_P99_US),
             capacity_mops(&o),

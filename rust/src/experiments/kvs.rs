@@ -15,7 +15,7 @@
 
 use crate::apps::kvs::{HashTable, KvConfig};
 use crate::config::{AccelMem, Testbed};
-use crate::mem::MemTrace;
+use crate::mem::{MemTrace, TraceArena, TraceRef};
 use crate::serving::{self, ServingPipeline};
 use crate::sim::Rng;
 use crate::workload::{KeyDist, KvMix};
@@ -71,9 +71,15 @@ pub struct KvRun {
 }
 
 /// Pre-generated request stream: per request, the trace the functional
-/// hash table actually performed.
+/// hash table actually performed — stored as one flat [`TraceArena`]
+/// plus a `Copy` span handle per request, so serving never clones a
+/// trace and replica fan-out copies 24-byte spans.
 pub struct RequestStream {
-    pub traces: Vec<MemTrace>,
+    /// Flat storage for every request's accesses, DMA writes and
+    /// precomputed dependency-step boundaries.
+    pub arena: TraceArena,
+    /// One span per request, in issue order.
+    pub spans: Vec<TraceRef>,
     /// The key id each request touched (what a scale-out router hashes).
     pub keys: Vec<u64>,
     /// Whether each request was a PUT (write-all under hot replication).
@@ -86,9 +92,50 @@ pub struct RequestStream {
 /// The paper's SmartNIC cache : dataset ratio (512 MB : 7 GB, §VI-B).
 pub const NIC_CACHE_RATIO: f64 = 512.0 / (7.0 * 1024.0);
 
+/// Build the table and sample `requests` ops, handing each op's trace,
+/// key id and PUT flag to `sink` in issue order. Both [`RequestStream`]
+/// constructors funnel through here, so their RNG draw order — and
+/// therefore every sampled trace — is identical by construction.
+/// Returns the approximate dataset footprint.
+fn sample_ops(
+    keys: u64,
+    requests: u64,
+    dist: &KeyDist,
+    mix: KvMix,
+    value_bytes: usize,
+    seed: u64,
+    mut sink: impl FnMut(MemTrace, u64, bool),
+) -> u64 {
+    let mut rng = Rng::new(seed);
+    let mut table = HashTable::new(KvConfig {
+        buckets: (keys / 4).max(64) as usize,
+        materialize: false,
+        ..KvConfig::default()
+    });
+    let val = vec![0xABu8; value_bytes];
+    // Preload all keys (the paper preloads 100 M pairs).
+    for k in 0..keys {
+        table.put(&k.to_le_bytes(), &val);
+    }
+    // Sample the measured ops.
+    for _ in 0..requests {
+        let key = dist.sample(&mut rng);
+        let is_get = mix.next_is_get(&mut rng);
+        let op = if is_get {
+            table.get(&key.to_le_bytes())
+        } else {
+            table.put(&key.to_le_bytes(), &val)
+        };
+        sink(op.trace, key, !is_get);
+    }
+    // Footprint: bucket array + per-key (entry + key‖value slot).
+    (keys / 4).max(64) * 128 + keys * (16 + 64 + value_bytes as u64)
+}
+
 impl RequestStream {
     /// Build the table (tagged mode — values are verified, not stored)
-    /// and sample `requests` ops.
+    /// and sample `requests` ops straight into a flat arena: each op's
+    /// transient trace is appended and dropped; only the span survives.
     pub fn generate(
         keys: u64,
         requests: u64,
@@ -97,41 +144,48 @@ impl RequestStream {
         value_bytes: usize,
         seed: u64,
     ) -> Self {
-        let mut rng = Rng::new(seed);
-        let mut table = HashTable::new(KvConfig {
-            buckets: (keys / 4).max(64) as usize,
-            materialize: false,
-            ..KvConfig::default()
-        });
-        let val = vec![0xABu8; value_bytes];
-        // Preload all keys (the paper preloads 100 M pairs).
-        for k in 0..keys {
-            table.put(&k.to_le_bytes(), &val);
-        }
-        // Sample the measured ops.
-        let mut traces = Vec::with_capacity(requests as usize);
+        let mut arena = TraceArena::with_capacity(requests as usize, 8);
+        let mut spans = Vec::with_capacity(requests as usize);
         let mut key_ids = Vec::with_capacity(requests as usize);
         let mut puts = Vec::with_capacity(requests as usize);
-        for _ in 0..requests {
-            let key = dist.sample(&mut rng);
-            let is_get = mix.next_is_get(&mut rng);
-            let op = if is_get {
-                table.get(&key.to_le_bytes())
-            } else {
-                table.put(&key.to_le_bytes(), &val)
-            };
-            traces.push(op.trace);
-            key_ids.push(key);
-            puts.push(!is_get);
-        }
-        // Footprint: bucket array + per-key (entry + key‖value slot).
-        let data_bytes = (keys / 4).max(64) * 128 + keys * (16 + 64 + value_bytes as u64);
+        let data_bytes =
+            sample_ops(keys, requests, dist, mix, value_bytes, seed, |trace, key, put| {
+                spans.push(arena.push(&trace));
+                key_ids.push(key);
+                puts.push(put);
+            });
         RequestStream {
-            traces,
+            arena,
+            spans,
             keys: key_ids,
             puts,
             data_bytes,
         }
+    }
+
+    /// Reference path: the same sampling as [`RequestStream::generate`]
+    /// (identical RNG draw order), but returning owned per-request
+    /// traces. Differential tests replay these against the arena to pin
+    /// the goldens; the bench ledger uses it as the pre-arena baseline.
+    pub fn generate_traces(
+        keys: u64,
+        requests: u64,
+        dist: &KeyDist,
+        mix: KvMix,
+        value_bytes: usize,
+        seed: u64,
+    ) -> Vec<MemTrace> {
+        let mut traces = Vec::with_capacity(requests as usize);
+        sample_ops(keys, requests, dist, mix, value_bytes, seed, |trace, _, _| {
+            traces.push(trace);
+        });
+        traces
+    }
+
+    /// Materialize every span back into an owned [`MemTrace`] (test and
+    /// golden-comparison helper; the serving path never needs this).
+    pub fn to_traces(&self) -> Vec<MemTrace> {
+        self.spans.iter().map(|&r| self.arena.to_trace(r)).collect()
     }
 }
 
@@ -151,7 +205,7 @@ pub fn run(
     let m = match design {
         KvDesign::Cpu => {
             let cores = 10; // §VI-B: ten threads saturate the network
-            pipe.run(&mut serving::Cpu::new(t, cores, batch, seed), &stream.traces)
+            pipe.run(&mut serving::Cpu::new(t, cores, batch, seed), &stream.arena, &stream.spans)
         }
         KvDesign::SmartNic => {
             // Scale the on-board cache to the dataset so the paper's
@@ -162,9 +216,11 @@ pub fn run(
                 .cache_bytes
                 .min((stream.data_bytes as f64 * NIC_CACHE_RATIO) as u64)
                 .max(1 << 20);
-            pipe.run(&mut serving::SmartNic::new(&tn, batch), &stream.traces)
+            pipe.run(&mut serving::SmartNic::new(&tn, batch), &stream.arena, &stream.spans)
         }
-        KvDesign::Orca(mem) => pipe.run(&mut serving::Orca::new(t, mem, batch), &stream.traces),
+        KvDesign::Orca(mem) => {
+            pipe.run(&mut serving::Orca::new(t, mem, batch), &stream.arena, &stream.spans)
+        }
     };
     KvRun {
         design,

@@ -102,7 +102,7 @@ pub fn run_point(
     let router = Router::new(machines, hot, hot_replicas);
     let targets = route(stream, &router);
     let mut designs = fleet(t, machines);
-    run_fleet(&mut designs, &stream.traces, &targets, load, REQ_BYTES, RESP_BYTES, seed)
+    run_fleet(&mut designs, &stream.arena, &stream.spans, &targets, load, REQ_BYTES, RESP_BYTES, seed)
 }
 
 /// A sweep row: one (machines, distribution) saturation point.

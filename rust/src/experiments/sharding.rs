@@ -44,7 +44,7 @@ pub struct ShardRow {
 pub fn run_shards(t: &Testbed, stream: &RequestStream, shards: usize, seed: u64) -> ShardRow {
     let pipe = ServingPipeline::new(Load::Saturation, 64, 64, seed);
     let mut design = Orca::sharded(t, AccelMem::None, 32, shards);
-    let m = pipe.run(&mut design, &stream.traces);
+    let m = pipe.run(&mut design, &stream.arena, &stream.spans);
     ShardRow {
         line_gbps: t.net.line_gbps,
         shards,

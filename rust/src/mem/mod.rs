@@ -20,4 +20,6 @@ pub use llc::{Llc, LlcLookup};
 pub use local::LocalMemory;
 pub use nvm::Nvm;
 pub use system::{MemStats, MemorySystem, SteeringPolicy};
-pub use trace::{Access, DmaWrite, Domain, MemTrace};
+pub use trace::{
+    derive_steps, Access, ArenaJob, DmaWrite, Domain, MemTrace, TraceArena, TraceRef, TraceSource,
+};

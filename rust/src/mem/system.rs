@@ -246,6 +246,23 @@ impl MemorySystem {
         step_end
     }
 
+    /// [`MemorySystem::replay`] over an arena span: the accesses slice
+    /// plus its precomputed step spans (relative to `accesses` — see
+    /// [`crate::mem::TraceArena::step_spans`]). No per-access boundary
+    /// re-derivation; byte-identical completion times to [`replay`]
+    /// (`MemorySystem::replay`) on the same trace, which
+    /// `tests/arena_golden.rs` pins across seeds.
+    pub fn replay_steps(&mut self, now: u64, accesses: &[Access], steps: &[(u32, u32)]) -> u64 {
+        let mut step_end = now;
+        for &(lo, hi) in steps {
+            let t = step_end;
+            for a in &accesses[lo as usize..hi as usize] {
+                step_end = step_end.max(self.access(t, a));
+            }
+        }
+        step_end
+    }
+
     /// Steered device write ingress (§III-D): the payload arrived at the
     /// host's steering point at `arrive`; land it in the DDIO ways or the
     /// backing store per the owned policy and the TLP's `tph` bit.
@@ -395,6 +412,13 @@ mod tests {
             dep > par * 2,
             "dependent chain {dep} must be ~3x parallel fan {par}"
         );
+
+        // The span-driven fast path must land on the same cycle.
+        for tr in [&chain, &fan] {
+            let whole = sys(SteeringPolicy::DdioOn).replay(7, tr);
+            let spans = sys(SteeringPolicy::DdioOn).replay_steps(7, &tr.accesses, &tr.steps());
+            assert_eq!(whole, spans, "replay vs replay_steps diverged");
+        }
     }
 
     #[test]

@@ -75,7 +75,7 @@ pub struct DmaWrite {
 }
 
 /// A request's access trace plus bookkeeping the timing layer wants.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MemTrace {
     pub accesses: Vec<Access>,
     /// Payload writes the device performs on the request's behalf before
@@ -115,6 +115,231 @@ impl MemTrace {
             }
         }
         d
+    }
+
+    /// The canonical dependency-step partition: half-open `(lo, hi)`
+    /// index spans over `accesses`, one per serialized step. A step
+    /// starts at access `i` iff `i == 0 || accesses[i].dep` — the same
+    /// rule [`MemTrace::depth`] counts and every replay loop walks, so
+    /// `steps().len() == depth()` always.
+    pub fn steps(&self) -> Vec<(u32, u32)> {
+        derive_steps(&self.accesses)
+    }
+}
+
+/// Derive the dependency-step spans of an access slice (see
+/// [`MemTrace::steps`]). This is the one place the `i == 0 || a.dep`
+/// boundary rule is turned into spans; every precomputed span in a
+/// [`TraceArena`] and every engine-side fallback derivation goes
+/// through here.
+pub fn derive_steps(accesses: &[Access]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut start = 0u32;
+    for (i, a) in accesses.iter().enumerate() {
+        if i > 0 && a.dep {
+            out.push((start, i as u32));
+            start = i as u32;
+        }
+    }
+    if (start as usize) < accesses.len() {
+        out.push((start, accesses.len() as u32));
+    }
+    out
+}
+
+/// A `Copy` span handle into a [`TraceArena`]: one request's accesses,
+/// DMA placements and precomputed dependency-step spans, 24 bytes
+/// total. Replicating a request K ways across a fleet copies K of
+/// these, not K traces.
+///
+/// All three ranges are half-open `[start, end)`. `acc` and `dma`
+/// index the arena's flat vectors directly; `steps` indexes the
+/// arena's step vector, whose entries are in turn spans *relative to
+/// this request's access range* (so an engine slices
+/// `accesses[lo as usize..hi as usize]` on the job's own slice).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceRef {
+    pub acc: (u32, u32),
+    pub dma: (u32, u32),
+    pub steps: (u32, u32),
+}
+
+/// A whole stream's traces in three flat vectors. Requests are
+/// [`TraceRef`] spans; the arena is `Sync` (plain `Vec`s of `Copy`
+/// data), so `par_map` workers share it read-only with no clone and no
+/// per-request heap allocation — the layout-level counterpart of the
+/// arena-indexed machines (ROADMAP item 3).
+///
+/// Dependency-step boundaries are computed **once**, at
+/// [`TraceArena::push`] time, instead of being re-derived by every
+/// replay loop.
+#[derive(Clone, Debug, Default)]
+pub struct TraceArena {
+    accesses: Vec<Access>,
+    dma: Vec<DmaWrite>,
+    steps: Vec<(u32, u32)>,
+}
+
+impl TraceArena {
+    pub fn new() -> Self {
+        TraceArena::default()
+    }
+
+    /// Pre-size for a stream of `requests` requests averaging
+    /// `acc_per_req` accesses (generators reserve up front so growth
+    /// never reallocs mid-stream).
+    pub fn with_capacity(requests: usize, acc_per_req: usize) -> Self {
+        TraceArena {
+            accesses: Vec::with_capacity(requests * acc_per_req),
+            dma: Vec::new(),
+            steps: Vec::with_capacity(requests),
+        }
+    }
+
+    /// Append one request's trace; returns its span handle. The trace's
+    /// step partition is derived here, once.
+    pub fn push(&mut self, t: &MemTrace) -> TraceRef {
+        let acc0 = self.accesses.len() as u32;
+        let dma0 = self.dma.len() as u32;
+        let steps0 = self.steps.len() as u32;
+        self.accesses.extend_from_slice(&t.accesses);
+        self.dma.extend_from_slice(&t.dma);
+        self.steps.extend(derive_steps(&t.accesses));
+        TraceRef {
+            acc: (acc0, self.accesses.len() as u32),
+            dma: (dma0, self.dma.len() as u32),
+            steps: (steps0, self.steps.len() as u32),
+        }
+    }
+
+    /// Build an arena from an existing trace vector (tests, benches and
+    /// the differential reference path).
+    pub fn from_traces(traces: &[MemTrace]) -> (Self, Vec<TraceRef>) {
+        let acc: usize = traces.iter().map(|t| t.accesses.len()).sum();
+        let mut arena = TraceArena {
+            accesses: Vec::with_capacity(acc),
+            dma: Vec::new(),
+            steps: Vec::new(),
+        };
+        let spans = traces.iter().map(|t| arena.push(t)).collect();
+        (arena, spans)
+    }
+
+    /// The request's accesses.
+    #[inline]
+    pub fn accesses(&self, r: TraceRef) -> &[Access] {
+        &self.accesses[r.acc.0 as usize..r.acc.1 as usize]
+    }
+
+    /// The request's device-placed payload writes.
+    #[inline]
+    pub fn dma(&self, r: TraceRef) -> &[DmaWrite] {
+        &self.dma[r.dma.0 as usize..r.dma.1 as usize]
+    }
+
+    /// The request's precomputed step spans, relative to
+    /// [`TraceArena::accesses`]`(r)`.
+    #[inline]
+    pub fn step_spans(&self, r: TraceRef) -> &[(u32, u32)] {
+        &self.steps[r.steps.0 as usize..r.steps.1 as usize]
+    }
+
+    /// Borrow one request as a [`TraceSource`] job.
+    #[inline]
+    pub fn job(&self, r: TraceRef) -> ArenaJob<'_> {
+        ArenaJob { arena: self, r }
+    }
+
+    /// Reconstruct the owned-trace representation (differential tests
+    /// and the golden reference harness).
+    pub fn to_trace(&self, r: TraceRef) -> MemTrace {
+        MemTrace {
+            accesses: self.accesses(r).to_vec(),
+            dma: self.dma(r).to_vec(),
+        }
+    }
+
+    /// Total accesses across every request in the arena.
+    pub fn total_accesses(&self) -> usize {
+        self.accesses.len()
+    }
+
+    /// Total DMA placements across every request in the arena.
+    pub fn total_dma(&self) -> usize {
+        self.dma.len()
+    }
+
+    /// Total step spans across every request in the arena.
+    pub fn total_steps(&self) -> usize {
+        self.steps.len()
+    }
+}
+
+/// What the serving engines need from a job: its accesses, its DMA
+/// placements, and — when the producer precomputed them — its
+/// dependency-step spans. [`MemTrace`] answers `None` for the spans
+/// (engines fall back to the `i == 0 || a.dep` scan, the pre-arena
+/// behavior, which keeps the golden reference harnesses compiling
+/// unchanged); [`ArenaJob`] answers `Some` and engines take the
+/// slice-per-step fast path.
+pub trait TraceSource {
+    fn accesses(&self) -> &[Access];
+    fn dma(&self) -> &[DmaWrite];
+    /// Precomputed step spans, relative to [`TraceSource::accesses`],
+    /// or `None` if the engine should derive them.
+    fn step_spans(&self) -> Option<&[(u32, u32)]>;
+}
+
+impl TraceSource for MemTrace {
+    #[inline]
+    fn accesses(&self) -> &[Access] {
+        &self.accesses
+    }
+    #[inline]
+    fn dma(&self) -> &[DmaWrite] {
+        &self.dma
+    }
+    #[inline]
+    fn step_spans(&self) -> Option<&[(u32, u32)]> {
+        None
+    }
+}
+
+/// One arena request as a `Copy` job: a shared arena reference plus the
+/// request's span handle.
+#[derive(Clone, Copy, Debug)]
+pub struct ArenaJob<'a> {
+    pub arena: &'a TraceArena,
+    pub r: TraceRef,
+}
+
+impl TraceSource for ArenaJob<'_> {
+    #[inline]
+    fn accesses(&self) -> &[Access] {
+        self.arena.accesses(self.r)
+    }
+    #[inline]
+    fn dma(&self) -> &[DmaWrite] {
+        self.arena.dma(self.r)
+    }
+    #[inline]
+    fn step_spans(&self) -> Option<&[(u32, u32)]> {
+        Some(self.arena.step_spans(self.r))
+    }
+}
+
+impl<T: TraceSource + ?Sized> TraceSource for &T {
+    #[inline]
+    fn accesses(&self) -> &[Access] {
+        (**self).accesses()
+    }
+    #[inline]
+    fn dma(&self) -> &[DmaWrite] {
+        (**self).dma()
+    }
+    #[inline]
+    fn step_spans(&self) -> Option<&[(u32, u32)]> {
+        (**self).step_spans()
     }
 }
 
@@ -162,5 +387,91 @@ mod tests {
         assert!(t.is_empty());
         assert_eq!(t.depth(), 0);
         assert_eq!(t.bytes(), 0);
+        assert!(t.steps().is_empty());
+    }
+
+    #[test]
+    fn steps_partition_matches_depth_and_the_dep_rule() {
+        // chain of 3: three 1-access steps.
+        let mut t = MemTrace::new();
+        t.push(Access::read(0x0, 64));
+        t.push(Access::read(0x100, 64));
+        t.push(Access::read(0x200, 64));
+        assert_eq!(t.steps(), vec![(0, 1), (1, 2), (2, 3)]);
+
+        // index read + 64-wide gather fan: two steps, second spans 64.
+        let mut t = MemTrace::new();
+        t.push(Access::read(0x0, 64));
+        t.push(Access::read(0x1000, 256));
+        for i in 1..64 {
+            t.push(Access::read(0x1000 + i * 256, 256).parallel());
+        }
+        assert_eq!(t.steps(), vec![(0, 1), (1, 65)]);
+        assert_eq!(t.steps().len(), t.depth());
+
+        // a leading non-dep access still opens step 0 (i == 0 rule).
+        let mut t = MemTrace::new();
+        t.push(Access::read(0x0, 64).parallel());
+        t.push(Access::read(0x100, 64).parallel());
+        t.push(Access::read(0x200, 64));
+        assert_eq!(t.steps(), vec![(0, 2), (2, 3)]);
+    }
+
+    fn gather(k: u64) -> MemTrace {
+        let mut t = MemTrace::new();
+        t.push(Access::read(k * 0x1000, 64));
+        t.push(Access::read(k * 0x1000 + 0x100, 64).parallel());
+        t.push(Access::read(k * 0x1000 + 0x200, 64));
+        t.dma.push(DmaWrite {
+            addr: k * 0x1000,
+            bytes: 64,
+            tph: true,
+        });
+        t
+    }
+
+    #[test]
+    fn arena_spans_round_trip_and_partition_the_arena() {
+        let traces: Vec<MemTrace> = (0..16).map(gather).collect();
+        let (arena, spans) = TraceArena::from_traces(&traces);
+        assert_eq!(spans.len(), traces.len());
+        // Spans tile the flat vectors contiguously, in push order.
+        let (mut acc, mut dma, mut steps) = (0u32, 0u32, 0u32);
+        for (r, t) in spans.iter().zip(&traces) {
+            assert_eq!(r.acc.0, acc);
+            assert_eq!(r.dma.0, dma);
+            assert_eq!(r.steps.0, steps);
+            acc = r.acc.1;
+            dma = r.dma.1;
+            steps = r.steps.1;
+            assert_eq!(arena.accesses(*r), &t.accesses[..]);
+            assert_eq!(arena.dma(*r), &t.dma[..]);
+            assert_eq!(arena.step_spans(*r), &t.steps()[..]);
+            assert_eq!(arena.to_trace(*r), *t);
+        }
+        assert_eq!(acc as usize, arena.total_accesses());
+        assert_eq!(dma as usize, arena.total_dma());
+        assert_eq!(steps as usize, arena.total_steps());
+    }
+
+    #[test]
+    fn arena_job_exposes_precomputed_spans_memtrace_does_not() {
+        let t = gather(3);
+        assert!(TraceSource::step_spans(&t).is_none());
+        let (arena, spans) = TraceArena::from_traces(std::slice::from_ref(&t));
+        let job = arena.job(spans[0]);
+        assert_eq!(job.step_spans().unwrap(), &t.steps()[..]);
+        assert_eq!(job.accesses(), &t.accesses[..]);
+        // &J blanket delegates (what the generic engines see).
+        assert_eq!(TraceSource::accesses(&&job), &t.accesses[..]);
+    }
+
+    #[test]
+    fn the_arena_is_sync_and_refs_are_copy() {
+        fn assert_sync<T: Sync>() {}
+        fn assert_copy<T: Copy>() {}
+        assert_sync::<TraceArena>();
+        assert_copy::<TraceRef>();
+        assert_copy::<ArenaJob<'_>>();
     }
 }

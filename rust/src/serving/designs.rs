@@ -26,7 +26,7 @@ use crate::config::{AccelMem, Testbed};
 use crate::cpoll::ShardedNotify;
 use crate::cpu::CpuServer;
 use crate::interconnect::{Pcie, Tlp};
-use crate::mem::{MemId, MemStats, MemTrace, MemorySystem, SocketArena};
+use crate::mem::{Access, ArenaJob, MemId, MemStats, MemorySystem, SocketArena, TraceArena, TraceRef};
 use crate::net::Network;
 use crate::rnic::Rnic;
 use crate::sim::{BandwidthLedger, Rng};
@@ -49,8 +49,6 @@ impl Cpu {
 }
 
 impl Design for Cpu {
-    type Job = MemTrace;
-
     fn label(&self) -> String {
         "CPU".to_string()
     }
@@ -61,13 +59,21 @@ impl Design for Cpu {
         payload + 16
     }
 
-    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, _rng: &mut Rng) -> Ingress {
+    fn ingress(
+        &mut self,
+        issue: u64,
+        _arena: &TraceArena,
+        _job: TraceRef,
+        req_bytes: u64,
+        _rng: &mut Rng,
+    ) -> Ingress {
         Ingress::immediate(self.net.send_to_server(issue, req_bytes))
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, arena: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64> {
         let cores = self.cores;
-        self.srv.run_stream(&jobs, |i| i % cores)
+        let staged: Vec<(u64, ArenaJob)> = jobs.iter().map(|&(t, r)| (t, arena.job(r))).collect();
+        self.srv.run_stream(&staged, |i| i % cores)
     }
 
     fn egress(&mut self, done: u64, resp_bytes: u64) -> u64 {
@@ -103,19 +109,25 @@ impl SmartNic {
 }
 
 impl Design for SmartNic {
-    type Job = MemTrace;
-
     fn label(&self) -> String {
         "Smart NIC".to_string()
     }
 
-    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, _rng: &mut Rng) -> Ingress {
+    fn ingress(
+        &mut self,
+        issue: u64,
+        _arena: &TraceArena,
+        _job: TraceRef,
+        req_bytes: u64,
+        _rng: &mut Rng,
+    ) -> Ingress {
         Ingress::immediate(self.net.send_to_server(issue, req_bytes))
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, arena: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64> {
         let cores = self.cores;
-        self.srv.run_stream(&jobs, |i| i % cores)
+        let staged: Vec<(u64, ArenaJob)> = jobs.iter().map(|&(t, r)| (t, arena.job(r))).collect();
+        self.srv.run_stream(&staged, |i| i % cores)
     }
 
     fn egress(&mut self, done: u64, resp_bytes: u64) -> u64 {
@@ -205,12 +217,12 @@ impl Orca {
 
     /// Hash-partition on the request's first data address (the KVS
     /// bucket address is key-derived, so this is key partitioning).
-    fn shard_of(&self, trace: &MemTrace) -> usize {
+    fn shard_of(&self, accesses: &[Access]) -> usize {
         let n = self.shards.len();
         if n == 1 {
             return 0;
         }
-        let addr = trace.accesses.first().map_or(0, |a| a.addr);
+        let addr = accesses.first().map_or(0, |a| a.addr);
         ((addr.wrapping_mul(0x9E3779B97F4A7C15) >> 33) % n as u64) as usize
     }
 
@@ -233,8 +245,6 @@ impl Orca {
 }
 
 impl Design for Orca {
-    type Job = MemTrace;
-
     fn label(&self) -> String {
         if self.shards.len() == 1 {
             self.mem.label().to_string()
@@ -245,12 +255,20 @@ impl Design for Orca {
 
     /// RNIC DMA of the one-sided write, then the cpoll notification on
     /// the target shard's ring. Requests carrying device-placed payload
-    /// writes ([`MemTrace::dma`]) are steered into the shared host
+    /// writes (the span's DMA range) are steered into the shared host
     /// memory system TLP by TLP — LLC or DRAM/NVM per the memory
     /// system's policy and each TLP's TPH bit (§III-D).
-    fn ingress(&mut self, issue: u64, job: &MemTrace, req_bytes: u64, rng: &mut Rng) -> Ingress {
+    fn ingress(
+        &mut self,
+        issue: u64,
+        traces: &TraceArena,
+        job: TraceRef,
+        req_bytes: u64,
+        rng: &mut Rng,
+    ) -> Ingress {
         let arrive = self.net.send_to_server(issue, req_bytes);
-        let visible = if job.dma.is_empty() {
+        let dma = traces.dma(job);
+        let visible = if dma.is_empty() {
             self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx)
         } else {
             // The payload lands where the placement says, not in one
@@ -259,13 +277,13 @@ impl Design for Orca {
             let base = self.rnic_rx.rx_one_sided(arrive, 0, &mut self.pcie_rx);
             let mem = self.arena.mem(self.host_mem);
             let mut done = base;
-            for w in &job.dma {
+            for w in dma {
                 let tlp = Tlp { addr: w.addr, bytes: w.bytes, tph: w.tph };
                 done = done.max(self.pcie_rx.steer_dma_write(base, tlp, mem));
             }
             done
         };
-        let shard = self.shard_of(job);
+        let shard = self.shard_of(traces.accesses(job));
         Ingress {
             wire_at: arrive,
             visible_at: visible + self.notify.sample(shard, rng),
@@ -274,19 +292,21 @@ impl Design for Orca {
 
     /// Partition by key hash (preserving per-shard arrival order) and
     /// serve each shard's stream on its own APU + coherence controller.
-    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, traces: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64> {
         let n = self.shards.len();
         if n == 1 {
             // Fast path: no partitioning.
             self.shard_requests[0] += jobs.len() as u64;
-            return self.shards[0].serve_stream(&jobs, &mut self.arena);
+            let staged: Vec<(u64, ArenaJob)> =
+                jobs.iter().map(|&(t, r)| (t, traces.job(r))).collect();
+            return self.shards[0].serve_stream(&staged, &mut self.arena);
         }
-        let mut parts: Vec<Vec<(u64, &MemTrace)>> = vec![Vec::new(); n];
+        let mut parts: Vec<Vec<(u64, ArenaJob)>> = vec![Vec::new(); n];
         let mut slot: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
-        for (t, trace) in jobs {
-            let s = self.shard_of(trace);
+        for &(t, r) in jobs {
+            let s = self.shard_of(traces.accesses(r));
             slot.push((s, parts[s].len()));
-            parts[s].push((t, trace));
+            parts[s].push((t, traces.job(r)));
         }
         let mut served: Vec<Vec<u64>> = Vec::with_capacity(n);
         for (s, part) in parts.iter().enumerate() {
@@ -316,7 +336,7 @@ impl Design for Orca {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::Access;
+    use crate::mem::MemTrace;
 
     fn trace(key: u64) -> MemTrace {
         let mut t = MemTrace::new();
@@ -334,8 +354,8 @@ mod tests {
         let mut seen = [false; 4];
         for k in 0..1_000u64 {
             let tr = trace(k);
-            let a = orca.shard_of(&tr);
-            let b = orca.shard_of(&tr);
+            let a = orca.shard_of(&tr.accesses);
+            let b = orca.shard_of(&tr.accesses);
             assert_eq!(a, b, "partitioning must be deterministic");
             seen[a] = true;
         }
@@ -346,9 +366,10 @@ mod tests {
     fn uniform_keys_balance_across_shards() {
         let t = Testbed::paper();
         let mut orca = Orca::sharded(&t, AccelMem::None, 32, 4);
-        let jobs: Vec<(u64, MemTrace)> = (0..20_000u64).map(|k| (0, trace(k))).collect();
-        let refs: Vec<(u64, &MemTrace)> = jobs.iter().map(|(t, j)| (*t, j)).collect();
-        orca.serve(refs);
+        let traces: Vec<MemTrace> = (0..20_000u64).map(trace).collect();
+        let (arena, spans) = TraceArena::from_traces(&traces);
+        let jobs: Vec<(u64, TraceRef)> = spans.iter().map(|&r| (0, r)).collect();
+        orca.serve(&arena, &jobs);
         assert!(
             orca.imbalance() < 1.1,
             "uniform hash imbalance {}",

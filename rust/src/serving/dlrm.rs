@@ -4,8 +4,9 @@
 //! Fig 12 used to be served by closed-form bandwidth bounds alone
 //! ([`super::analytic`]); these designs put the same four configurations
 //! on the real ingress → notify → serve → egress datapath, where each
-//! job is the *actual* [`MemTrace`] emitted by
-//! [`crate::apps::dlrm::Merci::reduce`] — memo hits touch the memo
+//! job is the *actual* trace emitted by
+//! [`crate::apps::dlrm::Merci::reduce`] (an arena span at serve time) —
+//! memo hits touch the memo
 //! table's addresses, misses fall back to raw gathers — so memo hit
 //! rate, cache behaviour and gather contention all emerge from one
 //! datapath instead of per-design efficiency constants:
@@ -33,7 +34,7 @@ use crate::accel::{host_access_service_ps, host_interconnect_ps, upi_serialize_p
 use crate::config::{AccelMem, Testbed};
 use crate::cpoll::ShardedNotify;
 use crate::interconnect::Pcie;
-use crate::mem::{Access, LocalMemory, MemStats, MemTrace, MemorySystem};
+use crate::mem::{Access, LocalMemory, MemStats, MemorySystem, TraceArena, TraceRef};
 use crate::net::Network;
 use crate::rnic::Rnic;
 use crate::sim::{cycles_ps, BandwidthLedger, Rng};
@@ -43,18 +44,19 @@ use crate::sim::{cycles_ps, BandwidthLedger, Rng};
 /// bandwidth the analytic bound uses ([`super::analytic::PER_CORE_GATHER_GBS`]).
 pub const CPU_GATHER_WINDOW: usize = 4;
 
-/// Replay `trace` with a design-imposed issue window, ignoring the
-/// trace's own `dep` flags beyond the leading index read: the first
-/// access is its own step (the gather addresses depend on it), then
-/// windows of `window` accesses issue together and windows serialize —
-/// bounded memory-level parallelism as the issuing engine sees it.
+/// Replay the accesses `acc` with a design-imposed issue window,
+/// ignoring the trace's own `dep` flags beyond the leading index read:
+/// the first access is its own step (the gather addresses depend on
+/// it), then windows of `window` accesses issue together and windows
+/// serialize — bounded memory-level parallelism as the issuing engine
+/// sees it. Takes a bare slice so arena spans and owned traces replay
+/// identically.
 pub(crate) fn replay_windowed(
     start: u64,
-    trace: &MemTrace,
+    acc: &[Access],
     window: usize,
     mut access: impl FnMut(u64, &Access) -> u64,
 ) -> u64 {
-    let acc = &trace.accesses;
     if acc.is_empty() {
         return start;
     }
@@ -107,8 +109,6 @@ impl DlrmCpu {
 }
 
 impl Design for DlrmCpu {
-    type Job = MemTrace;
-
     fn label(&self) -> String {
         format!("CPU-{}", self.cores.len())
     }
@@ -118,20 +118,28 @@ impl Design for DlrmCpu {
         payload + 16
     }
 
-    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, _rng: &mut Rng) -> Ingress {
+    fn ingress(
+        &mut self,
+        issue: u64,
+        _arena: &TraceArena,
+        _job: TraceRef,
+        req_bytes: u64,
+        _rng: &mut Rng,
+    ) -> Ingress {
         Ingress::immediate(self.net.send_to_server(issue, req_bytes))
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, arena: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64> {
         let window = self.window;
         let query_ps = self.query_ps;
         let mem = &mut self.mem;
         let cores = &mut self.cores;
         let mut done = Vec::with_capacity(jobs.len());
-        for (vis, trace) in jobs {
+        for &(vis, r) in jobs {
             let c = earliest(cores);
             let start = cores[c].max(vis);
-            let gathers = replay_windowed(start, trace, window, |t, a| mem.access(t, a));
+            let gathers =
+                replay_windowed(start, arena.accesses(r), window, |t, a| mem.access(t, a));
             let end = gathers.max(start + query_ps);
             cores[c] = end;
             done.push(end);
@@ -201,13 +209,18 @@ impl DlrmOrca {
 }
 
 impl Design for DlrmOrca {
-    type Job = MemTrace;
-
     fn label(&self) -> String {
         "ORCA".to_string()
     }
 
-    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, rng: &mut Rng) -> Ingress {
+    fn ingress(
+        &mut self,
+        issue: u64,
+        _arena: &TraceArena,
+        _job: TraceRef,
+        req_bytes: u64,
+        rng: &mut Rng,
+    ) -> Ingress {
         let arrive = self.net.send_to_server(issue, req_bytes);
         let visible = self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx);
         Ingress {
@@ -221,7 +234,7 @@ impl Design for DlrmOrca {
     /// controller"); each host access pays interconnect hops plus the
     /// measured memory leg and serializes its return line on the UPI
     /// link.
-    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, arena: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64> {
         let window = self.window;
         let hop = self.hop_ps;
         let gbs = self.upi_gbs;
@@ -230,9 +243,9 @@ impl Design for DlrmOrca {
         let link = &mut self.link;
         let fsm_free = &mut self.fsm_free;
         let mut done = Vec::with_capacity(jobs.len());
-        for (vis, trace) in jobs {
+        for &(vis, r) in jobs {
             let start = (*fsm_free).max(vis) + apu_ps;
-            let end = replay_windowed(start, trace, window, |t, a| {
+            let end = replay_windowed(start, arena.accesses(r), window, |t, a| {
                 let service = host_access_service_ps(t, a, hop, gbs, mem);
                 let ser_done = upi_serialize_ps(t, u64::from(a.bytes), gbs, link);
                 (t + service).max(ser_done)
@@ -312,13 +325,18 @@ impl DlrmOrcaLocal {
 }
 
 impl Design for DlrmOrcaLocal {
-    type Job = MemTrace;
-
     fn label(&self) -> String {
         self.kind.label().to_string()
     }
 
-    fn ingress(&mut self, issue: u64, _job: &MemTrace, req_bytes: u64, rng: &mut Rng) -> Ingress {
+    fn ingress(
+        &mut self,
+        issue: u64,
+        _arena: &TraceArena,
+        _job: TraceRef,
+        req_bytes: u64,
+        rng: &mut Rng,
+    ) -> Ingress {
         let arrive = self.net.send_to_server(issue, req_bytes);
         let visible = self.rnic_rx.rx_one_sided(arrive, req_bytes, &mut self.pcie_rx);
         Ingress {
@@ -327,16 +345,16 @@ impl Design for DlrmOrcaLocal {
         }
     }
 
-    fn serve(&mut self, jobs: Vec<(u64, &MemTrace)>) -> Vec<u64> {
+    fn serve(&mut self, arena: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64> {
         let window = self.window;
         let apu_ps = self.apu_ps;
         let local = &mut self.local;
         let contexts = &mut self.contexts;
         let mut done = Vec::with_capacity(jobs.len());
-        for (vis, trace) in jobs {
+        for &(vis, r) in jobs {
             let c = earliest(contexts);
             let start = contexts[c].max(vis) + apu_ps;
-            let end = replay_windowed(start, trace, window, |t, a| local.access(t, a));
+            let end = replay_windowed(start, arena.accesses(r), window, |t, a| local.access(t, a));
             contexts[c] = end;
             done.push(end);
         }
@@ -356,6 +374,7 @@ impl Design for DlrmOrcaLocal {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemTrace;
     use crate::serving::{Load, ServingPipeline};
 
     /// A gather-shaped job: one index read, then `n` independent 256 B
@@ -371,8 +390,9 @@ mod tests {
         t
     }
 
-    fn jobs(n: u64, gathers: usize) -> Vec<MemTrace> {
-        (0..n).map(|i| gather_job(i, gathers)).collect()
+    fn stream(n: u64, gathers: usize) -> (TraceArena, Vec<TraceRef>) {
+        let traces: Vec<MemTrace> = (0..n).map(|i| gather_job(i, gathers)).collect();
+        TraceArena::from_traces(&traces)
     }
 
     #[test]
@@ -380,8 +400,8 @@ mod tests {
         // 1 index read + 16 gathers at 100 ns each: window 4 ⇒ 5 steps,
         // window 16 ⇒ 2 steps.
         let job = gather_job(0, 16);
-        let w4 = replay_windowed(0, &job, 4, |t, _| t + 100_000);
-        let w16 = replay_windowed(0, &job, 16, |t, _| t + 100_000);
+        let w4 = replay_windowed(0, &job.accesses, 4, |t, _| t + 100_000);
+        let w16 = replay_windowed(0, &job.accesses, 16, |t, _| t + 100_000);
         assert_eq!(w4, 500_000);
         assert_eq!(w16, 200_000);
     }
@@ -400,11 +420,11 @@ mod tests {
         // Same stream through base ORCA's single near-serial FSM vs the
         // HBM local path: the local path must finish far sooner.
         let t = Testbed::paper();
-        let js: Vec<(u64, MemTrace)> = jobs(200, 32).into_iter().map(|j| (0, j)).collect();
-        let refs: Vec<(u64, &MemTrace)> = js.iter().map(|(t, j)| (*t, j)).collect();
-        let base_last = *DlrmOrca::new(&t).serve(refs.clone()).iter().max().unwrap();
+        let (arena, spans) = stream(200, 32);
+        let refs: Vec<(u64, TraceRef)> = spans.iter().map(|&r| (0, r)).collect();
+        let base_last = *DlrmOrca::new(&t).serve(&arena, &refs).iter().max().unwrap();
         let lh_last = *DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[])
-            .serve(refs)
+            .serve(&arena, &refs)
             .iter()
             .max()
             .unwrap();
@@ -417,10 +437,10 @@ mod tests {
     #[test]
     fn cpu_cores_scale_the_gather_pool() {
         let t = Testbed::paper();
-        let js: Vec<(u64, MemTrace)> = jobs(400, 32).into_iter().map(|j| (0, j)).collect();
-        let refs: Vec<(u64, &MemTrace)> = js.iter().map(|(t, j)| (*t, j)).collect();
-        let one = *DlrmCpu::new(&t, 1).serve(refs.clone()).iter().max().unwrap();
-        let four = *DlrmCpu::new(&t, 4).serve(refs).iter().max().unwrap();
+        let (arena, spans) = stream(400, 32);
+        let refs: Vec<(u64, TraceRef)> = spans.iter().map(|&r| (0, r)).collect();
+        let one = *DlrmCpu::new(&t, 1).serve(&arena, &refs).iter().max().unwrap();
+        let four = *DlrmCpu::new(&t, 4).serve(&arena, &refs).iter().max().unwrap();
         let speedup = one as f64 / four as f64;
         assert!((2.0..4.5).contains(&speedup), "4-core speedup {speedup}");
     }
@@ -429,24 +449,24 @@ mod tests {
     fn local_residency_counts_strays() {
         let t = Testbed::paper();
         // Regions that do NOT cover the gather addresses.
-        let job = gather_job(1, 8);
+        let (arena, spans) = TraceArena::from_traces(&[gather_job(1, 8)]);
         let mut miss = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[(0x0, 0x100)]);
-        miss.serve(vec![(0, &job)]);
+        miss.serve(&arena, &[(0, spans[0])]);
         assert!(miss.local().non_resident > 0);
         // Full coverage: no strays.
         let mut hit = DlrmOrcaLocal::new(&t, AccelMem::LocalDdr, &[(0, 8 << 30)]);
-        hit.serve(vec![(0, &job)]);
+        hit.serve(&arena, &[(0, spans[0])]);
         assert_eq!(hit.local().non_resident, 0);
     }
 
     #[test]
     fn designs_drive_through_the_pipeline_end_to_end() {
         let t = Testbed::paper();
-        let js = jobs(1_000, 16);
+        let (arena, spans) = stream(1_000, 16);
         let pipe = ServingPipeline::new(Load::Open { mops: 0.05 }, 640, 256, 9);
-        let cpu = pipe.run(&mut DlrmCpu::new(&t, 8), &js);
-        let orca = pipe.run(&mut DlrmOrca::new(&t), &js);
-        let lh = pipe.run(&mut DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[]), &js);
+        let cpu = pipe.run(&mut DlrmCpu::new(&t, 8), &arena, &spans);
+        let orca = pipe.run(&mut DlrmOrca::new(&t), &arena, &spans);
+        let lh = pipe.run(&mut DlrmOrcaLocal::new(&t, AccelMem::LocalHbm, &[]), &arena, &spans);
         for m in [&cpu, &orca, &lh] {
             assert!(m.mops > 0.0, "{m:?}");
             assert!(m.p999_us >= m.p99_us && m.p99_us >= m.p50_us, "{m:?}");

@@ -8,8 +8,11 @@
 //!
 //! * **ingress** — what it costs for a request to become visible to the
 //!   serving element (wire + RNIC DMA + notification, per design);
-//! * **serve**  — the batch/stream engine over the request's
-//!   [`MemTrace`]s (the existing `run_stream` / `serve_stream` engines);
+//! * **serve**  — the batch/stream engine over the request's accesses,
+//!   resolved as [`crate::mem::TraceRef`] spans against the stream's
+//!   shared [`crate::mem::TraceArena`] (the existing `run_stream` /
+//!   `serve_stream` engines, generic over
+//!   [`crate::mem::TraceSource`]);
 //! * **egress** — the response path back to the client (direct tx, or
 //!   the SQ-handler doorbell path).
 //!
@@ -26,6 +29,11 @@
 //! any workload, only the Fig-12 planning numbers and the in-tree
 //! sanity bracket in `experiments::dlrm`).
 
+// The request hot path must stay clone-free: a reintroduced per-request
+// trace clone in this module is a CI failure, not a review comment
+// (the equivalent attribute guards `cluster/scaleout.rs`).
+#![deny(clippy::redundant_clone)]
+
 pub mod analytic;
 pub mod designs;
 pub mod dlrm;
@@ -33,7 +41,7 @@ pub mod dlrm;
 pub use designs::{Cpu, Orca, SmartNic};
 pub use dlrm::{DlrmCpu, DlrmOrca, DlrmOrcaLocal};
 
-use crate::mem::{MemStats, MemTrace};
+use crate::mem::{MemStats, TraceArena, TraceRef};
 use crate::net::Network;
 use crate::sim::{Histogram, Rng, SEC, US};
 
@@ -126,12 +134,14 @@ impl Ingress {
 
 /// A hardware design's view of the serving path.
 ///
-/// `Job` is whatever the functional layer produced for one request —
-/// a [`MemTrace`] for the KVS/DLRM designs, a transaction shape for the
-/// chain-replication models.
+/// A request is a [`TraceRef`] span — what the functional layer
+/// produced for it, resolved against the stream's shared
+/// [`TraceArena`]. Spans are `Copy` (24 bytes), so sharded designs
+/// partition them and replicated fleet routing hands the same request
+/// to several machines by copying the handle, never a trace. (The
+/// chain-replication models use the separate [`ClosedLoop`] trait,
+/// whose jobs are transaction shapes, not traces.)
 pub trait Design {
-    type Job: Clone;
-
     fn label(&self) -> String;
 
     /// Wire-visible request bytes for a `payload`-byte request.
@@ -141,15 +151,23 @@ pub trait Design {
     }
 
     /// Cost of a request issued at `issue` becoming visible to the
-    /// serving element: wire, receive-side DMA, notification.
-    fn ingress(&mut self, issue: u64, job: &Self::Job, req_bytes: u64, rng: &mut Rng) -> Ingress;
+    /// serving element: wire, receive-side DMA (including any
+    /// device-placed payload writes the span carries), notification.
+    fn ingress(
+        &mut self,
+        issue: u64,
+        arena: &TraceArena,
+        job: TraceRef,
+        req_bytes: u64,
+        rng: &mut Rng,
+    ) -> Ingress;
 
-    /// Serve a whole stream of `(visible_time, job)` pairs sorted by
-    /// visibility; returns per-job completion times (same order). Jobs
-    /// are borrowed from the caller — sharded designs partition the
-    /// references, and replicated fleet routing hands the same job to
-    /// several machines without ever deep-copying a trace.
-    fn serve(&mut self, jobs: Vec<(u64, &Self::Job)>) -> Vec<u64>;
+    /// Serve a whole stream of `(visible_time, span)` pairs sorted by
+    /// visibility; returns per-job completion times (same order). The
+    /// arena is shared read-only — it is `Sync`, so the fleet's
+    /// `par_map` workers resolve spans against one arena with no clone
+    /// and no per-copy indirection.
+    fn serve(&mut self, arena: &TraceArena, jobs: &[(u64, TraceRef)]) -> Vec<u64>;
 
     /// Response path; calls arrive in nondecreasing `done` order.
     /// Returns the time the response reaches the client.
@@ -206,8 +224,14 @@ impl ServingPipeline {
         }
     }
 
-    /// Drive `jobs` through `design` end to end.
-    pub fn run<D: Design>(&self, design: &mut D, jobs: &[D::Job]) -> RunMetrics {
+    /// Drive the spans in `jobs` (resolved against `arena`) through
+    /// `design` end to end.
+    pub fn run<D: Design>(
+        &self,
+        design: &mut D,
+        arena: &TraceArena,
+        jobs: &[TraceRef],
+    ) -> RunMetrics {
         let n = jobs.len();
         let ops0 = crate::sim::ops_executed();
         let mut rng = Rng::new(self.seed ^ 0xD1CE);
@@ -224,18 +248,18 @@ impl ServingPipeline {
             .iter()
             .zip(jobs)
             .enumerate()
-            .map(|(i, (&t0, job))| {
-                let ing = design.ingress(t0, job, req, &mut rng);
+            .map(|(i, (&t0, &job))| {
+                let ing = design.ingress(t0, arena, job, req, &mut rng);
                 first = first.min(ing.wire_at);
                 (i, ing.visible_at)
             })
             .collect();
         let first = if n == 0 { 0 } else { first };
         order.sort_by_key(|&(_, t)| t);
-        let ordered: Vec<(u64, &D::Job)> = order.iter().map(|&(i, t)| (t, &jobs[i])).collect();
+        let ordered: Vec<(u64, TraceRef)> = order.iter().map(|&(i, t)| (t, jobs[i])).collect();
 
         // Serve.
-        let served = design.serve(ordered);
+        let served = design.serve(arena, &ordered);
         let mut done: Vec<(usize, u64)> = order
             .iter()
             .map(|&(i, _)| i)
@@ -313,16 +337,17 @@ impl ServingPipeline {
 /// SmartNIC servers: each core takes whatever is pending — up to
 /// `batch` — whenever it frees up; no waiting to fill a batch. `jobs`
 /// must be sorted by arrival; `core_of(i)` maps job index → core;
-/// `exec(core, start, staged)` runs one batch and returns per-request
-/// completion times. Generic over the job handle so callers can stage
-/// either owned traces or `&MemTrace` borrows (cloning a borrow is a
-/// pointer copy, not a trace copy).
-pub fn run_stream_batched<J: std::borrow::Borrow<MemTrace> + Clone>(
+/// `exec(core, start, batch_idx)` runs one batch — identified by its
+/// indices into `jobs` — and returns per-request completion times in
+/// index order. Staging is index-only: one scratch `Vec<usize>` reused
+/// across batches, so the driver allocates nothing per batch and never
+/// touches the job handles themselves.
+pub fn run_stream_batched<J>(
     jobs: &[(u64, J)],
     n_cores: usize,
     batch: usize,
     core_of: impl Fn(usize) -> usize,
-    mut exec: impl FnMut(usize, u64, Vec<(u64, J)>) -> Vec<u64>,
+    mut exec: impl FnMut(usize, u64, &[usize]) -> Vec<u64>,
 ) -> Vec<u64> {
     use std::cmp::Reverse;
     use std::collections::{BinaryHeap, VecDeque};
@@ -340,8 +365,9 @@ pub fn run_stream_batched<J: std::borrow::Borrow<MemTrace> + Clone>(
             heap.push(Reverse((jobs[first].0, c)));
         }
     }
+    let mut batch_idx: Vec<usize> = Vec::with_capacity(batch);
     while let Some(Reverse((start, c))) = heap.pop() {
-        let mut batch_idx = Vec::with_capacity(batch);
+        batch_idx.clear();
         while let Some(&i) = queues[c].front() {
             if jobs[i].0 <= start && batch_idx.len() < batch {
                 batch_idx.push(i);
@@ -357,8 +383,7 @@ pub fn run_stream_batched<J: std::borrow::Borrow<MemTrace> + Clone>(
             }
             continue;
         }
-        let staged: Vec<(u64, J)> = batch_idx.iter().map(|&i| jobs[i].clone()).collect();
-        let ds = exec(c, start, staged);
+        let ds = exec(c, start, &batch_idx);
         core_free[c] = ds.iter().copied().max().unwrap_or(start);
         for (&i, d) in batch_idx.iter().zip(ds) {
             done[i] = d;
@@ -374,7 +399,7 @@ pub fn run_stream_batched<J: std::borrow::Borrow<MemTrace> + Clone>(
 mod tests {
     use super::*;
     use crate::config::{AccelMem, Testbed};
-    use crate::mem::Access;
+    use crate::mem::{Access, MemTrace};
 
     fn get_trace(i: u64) -> MemTrace {
         let mut t = MemTrace::new();
@@ -385,31 +410,32 @@ mod tests {
         t
     }
 
-    fn traces(n: u64) -> Vec<MemTrace> {
-        (0..n).map(get_trace).collect()
+    fn stream(n: u64) -> (TraceArena, Vec<TraceRef>) {
+        let traces: Vec<MemTrace> = (0..n).map(get_trace).collect();
+        TraceArena::from_traces(&traces)
     }
 
     #[test]
     fn pipeline_is_deterministic_per_seed() {
         let t = Testbed::paper();
-        let jobs = traces(5_000);
+        let (arena, jobs) = stream(5_000);
         let pipe = ServingPipeline::new(Load::Saturation, 64, 64, 7);
-        let a = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
-        let b = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+        let a = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &arena, &jobs);
+        let b = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &arena, &jobs);
         assert_eq!(a, b, "same seed must give bit-identical metrics");
         let c = ServingPipeline::new(Load::Saturation, 64, 64, 8)
-            .run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+            .run(&mut Orca::new(&t, AccelMem::None, 32), &arena, &jobs);
         assert_ne!(a, c, "different seed must actually change the run");
     }
 
     #[test]
     fn all_designs_drive_through_the_same_pipeline() {
         let t = Testbed::paper();
-        let jobs = traces(4_000);
+        let (arena, jobs) = stream(4_000);
         let pipe = ServingPipeline::new(Load::Open { mops: 2.0 }, 64, 64, 3);
-        let cpu = pipe.run(&mut Cpu::new(&t, 10, 32, 3), &jobs);
-        let nic = pipe.run(&mut SmartNic::new(&t, 32), &jobs);
-        let orca = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &jobs);
+        let cpu = pipe.run(&mut Cpu::new(&t, 10, 32, 3), &arena, &jobs);
+        let nic = pipe.run(&mut SmartNic::new(&t, 32), &arena, &jobs);
+        let orca = pipe.run(&mut Orca::new(&t, AccelMem::None, 32), &arena, &jobs);
         for m in [&cpu, &nic, &orca] {
             assert!(m.mops > 0.0 && m.p99_us >= m.p50_us, "{m:?}");
         }
@@ -425,9 +451,9 @@ mod tests {
         // 8 jobs all at t=0 on one core with batch 4: exactly two execs.
         let jobs: Vec<(u64, MemTrace)> = (0..8).map(|_| (0u64, MemTrace::new())).collect();
         let mut calls = Vec::new();
-        let done = run_stream_batched(&jobs, 1, 4, |_| 0, |_c, start, staged| {
-            calls.push(staged.len());
-            staged.iter().map(|_| start + 100).collect()
+        let done = run_stream_batched(&jobs, 1, 4, |_| 0, |_c, start, idx: &[usize]| {
+            calls.push(idx.len());
+            idx.iter().map(|_| start + 100).collect()
         });
         assert_eq!(calls, vec![4, 4]);
         assert_eq!(done.len(), 8);

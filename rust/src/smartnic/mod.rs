@@ -10,7 +10,7 @@ pub mod bigcache;
 pub use bigcache::BigCache;
 
 use crate::config::Testbed;
-use crate::mem::{MemTrace, MemorySystem};
+use crate::mem::{derive_steps, MemTrace, MemorySystem, TraceSource};
 use crate::sim::{cycles_ps, BandwidthLedger, MultiServer, Pipeline, transfer_ps, NS};
 
 /// The SmartNIC server pipeline.
@@ -109,31 +109,34 @@ impl SmartNicServer {
         let rpc = cycles_ps(self.t.smartnic.rpc_cycles, self.t.smartnic.freq_mhz)
             * staged.len() as u64;
         let (start, _d, _lane) = self.cores.acquire(last_arrival, rpc);
-        self.exec_batch(core, start, staged)
+        let idx: Vec<usize> = (0..staged.len()).collect();
+        self.exec_batch(core, start, &staged, &idx)
     }
 
     /// Opportunistic streaming execution — same contract (and shared
     /// scheduler) as [`crate::cpu::CpuServer::run_stream`].
-    pub fn run_stream<J: std::borrow::Borrow<MemTrace> + Clone>(
+    pub fn run_stream<J: TraceSource>(
         &mut self,
         jobs: &[(u64, J)],
         core_of: impl Fn(usize) -> usize,
     ) -> Vec<u64> {
         let n_cores = self.batches.len();
         let batch = self.batch;
-        crate::serving::run_stream_batched(jobs, n_cores, batch, core_of, |core, start, staged| {
-            self.exec_batch(core, start, staged)
+        crate::serving::run_stream_batched(jobs, n_cores, batch, core_of, |core, start, idx| {
+            self.exec_batch(core, start, jobs, idx)
         })
     }
 
-    /// Execute one batch starting at `ready` on `core`.
-    fn exec_batch<J: std::borrow::Borrow<MemTrace>>(
+    /// Execute the batch `idx` (indices into `jobs`) starting at `ready`
+    /// on `core`.
+    fn exec_batch<J: TraceSource>(
         &mut self,
         core: usize,
         ready: u64,
-        staged: Vec<(u64, J)>,
+        jobs: &[(u64, J)],
+        idx: &[usize],
     ) -> Vec<u64> {
-        let b = staged.len();
+        let b = idx.len();
         self.served += b as u64;
 
         // ARM processing for the batch.
@@ -143,22 +146,27 @@ impl SmartNicServer {
         // Memory walk: within a dependency step the batch's accesses
         // overlap on local memory, but host reads are bounded by the
         // core's synchronous host-read pipeline — the §II-B linearity.
-        let max_depth = staged.iter().map(|(_, t)| t.borrow().depth()).max().unwrap_or(0);
+        // Arena jobs carry precomputed step spans; bare traces derive
+        // them once per batch.
+        let derived: Vec<Vec<(u32, u32)>> = idx
+            .iter()
+            .map(|&i| match jobs[i].1.step_spans() {
+                Some(_) => Vec::new(),
+                None => derive_steps(jobs[i].1.accesses()),
+            })
+            .collect();
+        let spans_of =
+            |k: usize| -> &[(u32, u32)] { jobs[idx[k]].1.step_spans().unwrap_or(&derived[k]) };
+        let max_depth = (0..b).map(|k| spans_of(k).len()).max().unwrap_or(0);
         let mut step_start = cpu_done;
         for step in 0..max_depth {
             let mut step_end = step_start;
-            for (_, trace) in &staged {
-                let trace = trace.borrow();
-                let mut s = 0usize;
-                for (i, a) in trace.accesses.iter().enumerate() {
-                    if i == 0 || a.dep {
-                        s += 1;
-                    }
-                    if s == step + 1 {
+            for k in 0..b {
+                if let Some(&(lo, hi)) = spans_of(k).get(step) {
+                    let accs = jobs[idx[k]].1.accesses();
+                    for a in &accs[lo as usize..hi as usize] {
                         let done = self.access(core, step_start, a.addr, a.bytes as u64);
                         step_end = step_end.max(done);
-                    } else if s > step + 1 {
-                        break;
                     }
                 }
             }

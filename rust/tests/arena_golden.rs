@@ -1,0 +1,384 @@
+//! Arena-equivalence suite: the flat `TraceArena` datapath must be a
+//! pure representation change. Every stream generator that now writes
+//! spans into an arena has a `Vec<MemTrace>` reference path pinned by
+//! the goldens; this binary proves the two materialize identically,
+//! that spans partition the arena with precomputed step boundaries
+//! matching the canonical derivation, and that every driver — single
+//! machine, hot-replicated fleet, DLRM, orchestrated day — produces
+//! identical metrics from an arena rebuilt out of the reference traces.
+//!
+//! The thread-invariance test mutates the process-wide `ORCA_THREADS`
+//! variable, so it pins the value under a mutex held for the whole run
+//! (the same discipline as `par_determinism.rs`).
+
+use orca::cluster::{run_day, FleetDesign, OrchestratorCfg};
+use orca::config::{AccelMem, Testbed};
+use orca::experiments::dlrm::{self, DlrmDesign, DlrmStream};
+use orca::experiments::fleet::{capacity_mops, DEFAULT_SLO_P99_US};
+use orca::experiments::kvs::{self, KvDesign, RequestStream};
+use orca::experiments::scaleout::run_point;
+use orca::experiments::Opts;
+use orca::mem::{derive_steps, MemTrace, MemorySystem, TraceArena};
+use orca::serving::{Load, Orca};
+use orca::testing::for_seeds;
+use orca::workload::diurnal::Epoch;
+use orca::workload::{KeyDist, KvMix, AMAZON_PROFILES};
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `ORCA_THREADS=n`, holding the env lock throughout.
+fn with_threads<T>(n: &str, f: impl FnOnce() -> T) -> T {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = std::env::var("ORCA_THREADS").ok();
+    std::env::set_var("ORCA_THREADS", n);
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("ORCA_THREADS", v),
+        None => std::env::remove_var("ORCA_THREADS"),
+    }
+    out
+}
+
+/// A varied-but-small KVS shape derived from the property seed: both
+/// key distributions, both op mixes, a couple of value sizes.
+fn stream_shape(seed: u64) -> (u64, u64, KeyDist, KvMix, usize) {
+    let keys = 1_000 + (seed % 3) * 1_000;
+    let requests = 400 + (seed % 5) * 50;
+    let dist = if seed & 1 == 0 {
+        KeyDist::uniform(keys)
+    } else {
+        KeyDist::zipf(keys, 0.99)
+    };
+    let mix = if seed & 2 == 0 {
+        KvMix::GetOnly
+    } else {
+        KvMix::HalfPut
+    };
+    let value = if seed & 4 == 0 { 64 } else { 1024 };
+    (keys, requests, dist, mix, value)
+}
+
+/// The reference stream: sample the identical op sequence into owned
+/// traces, then rebuild the arena from them. Any divergence between
+/// this and `RequestStream::generate` is a datapath bug, not noise.
+fn reference_stream(seed: u64) -> (RequestStream, RequestStream) {
+    let (keys, requests, dist, mix, value) = stream_shape(seed);
+    let generated = RequestStream::generate(keys, requests, &dist, mix, value, seed);
+    let traces = RequestStream::generate_traces(keys, requests, &dist, mix, value, seed);
+    let (arena, spans) = TraceArena::from_traces(&traces);
+    let rebuilt = RequestStream {
+        arena,
+        spans,
+        keys: generated.keys.clone(),
+        puts: generated.puts.clone(),
+        data_bytes: generated.data_bytes,
+    };
+    (generated, rebuilt)
+}
+
+#[test]
+fn kvs_arena_streams_materialize_the_reference_traces() {
+    // The acceptance floor: across ≥32 seeds, the arena-native
+    // generator and the owned-trace reference draw identical ops and
+    // the arena round-trips every request byte-for-byte.
+    for_seeds(32, |rng| {
+        let seed = rng.next_u64();
+        let (keys, requests, dist, mix, value) = stream_shape(seed);
+        let stream = RequestStream::generate(keys, requests, &dist, mix, value, seed);
+        let traces = RequestStream::generate_traces(keys, requests, &dist, mix, value, seed);
+        if stream.spans.len() != traces.len() {
+            return Err(format!(
+                "{} spans vs {} reference traces",
+                stream.spans.len(),
+                traces.len()
+            ));
+        }
+        if stream.to_traces() != traces {
+            return Err("arena round-trip diverged from the reference traces".into());
+        }
+        if stream.keys.len() != traces.len() || stream.puts.len() != traces.len() {
+            return Err("keys/puts lost sync with the request count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spans_partition_the_arena_with_canonical_step_boundaries() {
+    // Structural invariants the engines rely on: request spans tile the
+    // flat vectors contiguously in push order, and each span's
+    // precomputed steps equal the canonical per-trace derivation and
+    // tile the request's access range.
+    for_seeds(32, |rng| {
+        let seed = rng.next_u64();
+        let (_, rebuilt) = reference_stream(seed);
+        let (arena, spans) = (&rebuilt.arena, &rebuilt.spans);
+        let (mut acc, mut dma, mut steps) = (0u32, 0u32, 0u32);
+        for (i, &r) in spans.iter().enumerate() {
+            if r.acc.0 != acc || r.dma.0 != dma || r.steps.0 != steps {
+                return Err(format!(
+                    "span {i} starts at {:?}/{:?}/{:?}, cursor at {acc}/{dma}/{steps}",
+                    r.acc, r.dma, r.steps
+                ));
+            }
+            if r.acc.1 < r.acc.0 || r.dma.1 < r.dma.0 || r.steps.1 < r.steps.0 {
+                return Err(format!("span {i} has a negative range: {r:?}"));
+            }
+            let tr = arena.to_trace(r);
+            let want = derive_steps(&tr.accesses);
+            if arena.step_spans(r) != want.as_slice() || want != tr.steps() {
+                return Err(format!("span {i}: step boundaries diverged from derive_steps"));
+            }
+            // Steps tile [0, len) of the request's own access range.
+            let mut cursor = 0u32;
+            for &(s, e) in arena.step_spans(r) {
+                if s != cursor || e <= s {
+                    return Err(format!("span {i}: step ({s},{e}) breaks the tiling at {cursor}"));
+                }
+                cursor = e;
+            }
+            if cursor as usize != arena.accesses(r).len() {
+                return Err(format!(
+                    "span {i}: steps cover {cursor} of {} accesses",
+                    arena.accesses(r).len()
+                ));
+            }
+            acc = r.acc.1;
+            dma = r.dma.1;
+            steps = r.steps.1;
+        }
+        if (acc as usize, dma as usize, steps as usize)
+            != (arena.total_accesses(), arena.total_dma(), arena.total_steps())
+        {
+            return Err("spans do not exhaust the arena".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replay_steps_matches_whole_trace_replay() {
+    // The slice fast path (`replay_steps` over a span's precomputed
+    // steps) must charge the memory system identically to the owned
+    // `replay` — same completion times, same counters.
+    let t = Testbed::paper();
+    for_seeds(32, |rng| {
+        let seed = rng.next_u64();
+        let (_, rebuilt) = reference_stream(seed);
+        let mut by_trace = MemorySystem::new(&t);
+        let mut by_steps = MemorySystem::new(&t);
+        let mut now = 0u64;
+        for (i, &r) in rebuilt.spans.iter().enumerate() {
+            let tr: MemTrace = rebuilt.arena.to_trace(r);
+            let a = by_trace.replay(now, &tr);
+            let b = by_steps.replay_steps(
+                now,
+                rebuilt.arena.accesses(r),
+                rebuilt.arena.step_spans(r),
+            );
+            if a != b {
+                return Err(format!("request {i}: replay {a} ns vs replay_steps {b} ns"));
+            }
+            now = now.wrapping_add(a).wrapping_add(17);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kvs_runs_identically_from_a_rebuilt_arena() {
+    // End to end through every serving engine: a stream generated
+    // arena-native and one rebuilt from the reference traces must yield
+    // the same run metrics on all three designs.
+    let t = Testbed::paper();
+    for_seeds(8, |rng| {
+        let seed = rng.next_u64();
+        let (generated, rebuilt) = reference_stream(seed);
+        for design in [KvDesign::Cpu, KvDesign::SmartNic, KvDesign::Orca(AccelMem::None)] {
+            let a = kvs::run(&t, design, &generated, 32, Load::Saturation, seed);
+            let b = kvs::run(&t, design, &rebuilt, 32, Load::Saturation, seed);
+            let lhs = (a.mops, a.avg_us, a.p50_us, a.p99_us, a.p999_us, a.host_frac);
+            let rhs = (b.mops, b.avg_us, b.p50_us, b.p99_us, b.p999_us, b.host_frac);
+            if lhs != rhs {
+                return Err(format!("{}: {lhs:?} vs {rhs:?}", design.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hot_replicated_fleets_serve_identically_from_a_rebuilt_arena() {
+    // Scale-out with K>1 hot replication: every replicated PUT stages
+    // one span copy per target. Metrics must match the owned-trace
+    // reference stream exactly (FleetMetrics derives PartialEq).
+    let t = Testbed::paper();
+    for_seeds(32, |rng| {
+        let seed = rng.next_u64();
+        let (generated, rebuilt) = reference_stream(seed);
+        let (keys, ..) = stream_shape(seed);
+        let dist = KeyDist::zipf(keys, 0.99);
+        let machines = 2 + (seed % 3) as usize;
+        let a = run_point(&t, &generated, &dist, machines, 2, Load::Saturation, seed);
+        let b = run_point(&t, &rebuilt, &dist, machines, 2, Load::Saturation, seed);
+        if a != b {
+            return Err(format!("fleet metrics diverged: {a:?} vs {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dlrm_runs_identically_from_a_rebuilt_arena() {
+    // The gather-heavy stream: rebuild the arena from the jobs the
+    // generator materializes and re-serve. Covers the batched merge
+    // path (batch > 1 re-batches via owned traces on both sides).
+    let t = Testbed::paper();
+    for_seeds(6, |rng| {
+        let seed = rng.next_u64();
+        let profile = &AMAZON_PROFILES[(seed % 6) as usize];
+        let sa = dlrm::build_stream(profile, 48, seed);
+        let jobs = sa.to_jobs();
+        for d in [DlrmDesign::Cpu(8), DlrmDesign::Orca] {
+            for batch in [1usize, 8] {
+                let ma = dlrm::run_design(&t, d, &sa, Load::Saturation, batch, seed);
+                let (arena, spans) = TraceArena::from_traces(&jobs);
+                let sb = DlrmStream {
+                    arena,
+                    spans,
+                    dataset: sa.dataset,
+                    gp: sa.gp,
+                    memo_hit_rate: sa.memo_hit_rate,
+                    regions: sa.regions.clone(),
+                };
+                let mb = dlrm::run_design(&t, d, &sb, Load::Saturation, batch, seed);
+                if ma != mb {
+                    return Err(format!("{d:?} batch {batch}: {ma:?} vs {mb:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fleet_day_is_identical_from_a_rebuilt_arena() {
+    // The orchestrator resolves epoch job lists as span copies into the
+    // shared pool arena. A day driven from a rebuilt arena must render
+    // the identical report (DayReport carries no PartialEq — the Debug
+    // form is the full per-epoch table, which is what the CLI pins).
+    let o = Opts {
+        seed: 0,
+        keys: 20_000,
+        requests: 3_000,
+        testbed: Testbed::paper(),
+    };
+    let epochs: Vec<Epoch> = (0..3)
+        .map(|hour| Epoch {
+            hour,
+            offered_mops: 12.0,
+            flash: hour == 1,
+            crash: hour == 2,
+        })
+        .collect();
+    for_seeds(3, |rng| {
+        let seed = rng.next_u64();
+        let (keys, requests) = (o.keys, o.requests);
+        let dist = KeyDist::uniform(keys);
+        let generated = RequestStream::generate(keys, requests, &dist, KvMix::GetOnly, 64, seed);
+        let traces =
+            RequestStream::generate_traces(keys, requests, &dist, KvMix::GetOnly, 64, seed);
+        let (arena, spans) = TraceArena::from_traces(&traces);
+        let mut reports = Vec::new();
+        for (day_arena, day_spans, day_keys) in [
+            (&generated.arena, &generated.spans, &generated.keys),
+            (&arena, &spans, &generated.keys),
+        ] {
+            let t = o.testbed.clone();
+            let day = run_day(
+                &epochs,
+                day_arena,
+                day_spans,
+                day_keys,
+                OrchestratorCfg::with_slo(DEFAULT_SLO_P99_US),
+                capacity_mops(&o),
+                move || Box::new(Orca::new(&t, AccelMem::None, 32)) as FleetDesign,
+                seed,
+            );
+            reports.push(format!("{day:?}"));
+        }
+        if reports[0] != reports[1] {
+            return Err("DayReport diverged between generated and rebuilt arenas".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dlrm_and_fleet_pool_spans_replay_identically() {
+    // The ≥32-seed replay floor for the remaining stream generators:
+    // a small DLRM gather stream and a fleet request pool, each driven
+    // through both replay paths per request.
+    let t = Testbed::paper();
+    for_seeds(32, |rng| {
+        let seed = rng.next_u64();
+        let profile = &AMAZON_PROFILES[(seed % 6) as usize];
+        let dlrm_stream = dlrm::build_stream(profile, 8, seed);
+        let pool = RequestStream::generate(
+            5_000,
+            256,
+            &KeyDist::uniform(5_000),
+            KvMix::GetOnly,
+            64,
+            seed,
+        );
+        for (label, arena, spans) in [
+            ("dlrm", &dlrm_stream.arena, &dlrm_stream.spans),
+            ("fleet pool", &pool.arena, &pool.spans),
+        ] {
+            let mut by_trace = MemorySystem::new(&t);
+            let mut by_steps = MemorySystem::new(&t);
+            let mut now = 0u64;
+            for (i, &r) in spans.iter().enumerate() {
+                let tr = arena.to_trace(r);
+                if arena.step_spans(r) != tr.steps().as_slice() {
+                    return Err(format!("{label} request {i}: step boundaries diverged"));
+                }
+                let a = by_trace.replay(now, &tr);
+                let b = by_steps.replay_steps(now, arena.accesses(r), arena.step_spans(r));
+                if a != b {
+                    return Err(format!("{label} request {i}: {a} ns vs {b} ns"));
+                }
+                now = now.wrapping_add(a).wrapping_add(31);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_datapath_is_invariant_across_worker_counts() {
+    // Shared-arena reads under par_map: the same hot-replicated fleet
+    // point must produce identical metrics at ORCA_THREADS 1, 2 and 8 —
+    // the span handles make worker count unobservable.
+    let t = Testbed::paper();
+    for_seeds(3, |rng| {
+        let seed = rng.next_u64();
+        let (generated, _) = reference_stream(seed);
+        let (keys, ..) = stream_shape(seed);
+        let dist = KeyDist::zipf(keys, 0.99);
+        let serial = with_threads("1", || {
+            run_point(&t, &generated, &dist, 4, 2, Load::Saturation, seed)
+        });
+        for n in ["2", "8"] {
+            let par = with_threads(n, || {
+                run_point(&t, &generated, &dist, 4, 2, Load::Saturation, seed)
+            });
+            if par != serial {
+                return Err(format!("fleet point diverged at ORCA_THREADS={n}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -7,6 +7,7 @@
 use orca::cluster::{run_fleet, FleetDesign, Router};
 use orca::config::{AccelMem, Testbed};
 use orca::experiments::kvs::RequestStream;
+use orca::mem::TraceArena;
 use orca::serving::{Load, Orca, ServingPipeline};
 use orca::testing::for_seeds;
 use orca::workload::{KeyDist, KvMix};
@@ -38,7 +39,7 @@ fn empty_job_stream_yields_explicit_zero_metrics() {
     let t = Testbed::paper();
     let pipeline = ServingPipeline::new(Load::Open { mops: 5.0 }, 64, 64, 7);
     let mut orca = Orca::new(&t, AccelMem::None, BATCH);
-    let m = pipeline.run(&mut orca, &[]);
+    let m = pipeline.run(&mut orca, &TraceArena::new(), &[]);
     assert_eq!(m.mops, 0.0);
     assert_eq!(
         (m.avg_us, m.p50_us, m.p99_us, m.p999_us),
@@ -48,7 +49,7 @@ fn empty_job_stream_yields_explicit_zero_metrics() {
     assert!(m.utilization == 0.0 && m.host_frac == 0.0);
 
     let mut designs = fleet(&t, 3);
-    let fm = run_fleet(&mut designs, &[], &[], Load::Saturation, 64, 64, 7);
+    let fm = run_fleet(&mut designs, &TraceArena::new(), &[], &[], Load::Saturation, 64, 64, 7);
     assert_eq!(fm.mops, 0.0);
     assert_eq!(
         (fm.avg_us, fm.p50_us, fm.p99_us, fm.p999_us),
@@ -67,12 +68,13 @@ fn single_request_fleets_are_well_defined() {
     for_seeds(8, |rng| {
         let seed = rng.next_u64();
         let s = stream(1_000, 4, seed);
-        let job = &s.traces[..1];
+        let job = &s.spans[..1];
         for machines in 1..=4usize {
             let target = (seed as usize) % machines;
             let mut designs = fleet(&t, machines);
             let fm = run_fleet(
                 &mut designs,
+                &s.arena,
                 job,
                 &[vec![target]],
                 Load::Open { mops: 1.0 },
@@ -109,13 +111,14 @@ fn all_requests_to_one_machine_conserves_and_shows_max_imbalance() {
     for_seeds(8, |rng| {
         let seed = rng.next_u64();
         let s = stream(5_000, 400, seed);
-        let n = s.traces.len();
+        let n = s.spans.len();
         let hot = (seed as usize) % 4;
         let targets: Vec<Vec<usize>> = (0..n).map(|_| vec![hot]).collect();
         let mut designs = fleet(&t, 4);
         let fm = run_fleet(
             &mut designs,
-            &s.traces,
+            &s.arena,
+            &s.spans,
             &targets,
             Load::Open { mops: 4.0 },
             64,

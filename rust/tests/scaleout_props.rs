@@ -6,7 +6,7 @@
 
 use orca::cluster::{run_fleet, FleetDesign, Router};
 use orca::config::Testbed;
-use orca::mem::{Access, MemTrace};
+use orca::mem::{Access, MemTrace, TraceArena};
 use orca::serving::{Cpu, Load};
 use orca::testing::{base_seed, forall, Gen};
 
@@ -144,7 +144,7 @@ fn the_fleet_driver_is_design_agnostic() {
     // The scale-out layer serves any single-machine Design, not just
     // ORCA: a two-machine CPU fleet drives end to end.
     let t = Testbed::paper();
-    let jobs: Vec<MemTrace> = (0..2_000u64)
+    let traces: Vec<MemTrace> = (0..2_000u64)
         .map(|i| {
             let mut tr = MemTrace::new();
             let h = i.wrapping_mul(0x9E3779B97F4A7C15);
@@ -152,12 +152,13 @@ fn the_fleet_driver_is_design_agnostic() {
             tr
         })
         .collect();
+    let (arena, jobs) = TraceArena::from_traces(&traces);
     let router = Router::new(2, Vec::new(), 1);
     let targets: Vec<Vec<usize>> = (0..jobs.len() as u64).map(|k| vec![router.home(k)]).collect();
     let mut fleet: Vec<FleetDesign> = (0..2)
         .map(|_| Box::new(Cpu::new(&t, 10, 32, 3)) as FleetDesign)
         .collect();
-    let m = run_fleet(&mut fleet, &jobs, &targets, Load::Saturation, 64, 64, 3);
+    let m = run_fleet(&mut fleet, &arena, &jobs, &targets, Load::Saturation, 64, 64, 3);
     assert!(m.mops > 0.0);
     assert_eq!(m.per_machine.iter().sum::<u64>(), 2_000);
     assert!(m.per_machine.iter().all(|&c| c > 0), "{:?}", m.per_machine);

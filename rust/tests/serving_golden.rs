@@ -39,7 +39,10 @@ fn reference_kvs_run(
     load: Load,
     seed: u64,
 ) -> (f64, f64, f64) {
-    let n = stream.traces.len();
+    // The reference path predates the arena: materialize owned traces
+    // (golden-pinning means it keeps the old representation).
+    let traces = stream.to_traces();
+    let n = traces.len();
     let mut rng = Rng::new(seed ^ 0xD1CE);
     let mut net = Network::new(t.net.clone());
     let req_bytes: u64 = match design {
@@ -72,7 +75,7 @@ fn reference_kvs_run(
             let mut srv = CpuServer::new(t, cores, batch, seed);
             let jobs: Vec<(u64, MemTrace)> = arrivals
                 .iter()
-                .zip(&stream.traces)
+                .zip(&traces)
                 .map(|(&a, tr)| (a, tr.clone()))
                 .collect();
             srv.run_stream(&jobs, |i| i % cores)
@@ -91,7 +94,7 @@ fn reference_kvs_run(
             let mut srv = SmartNicServer::new(&tn, batch);
             let jobs: Vec<(u64, MemTrace)> = arrivals
                 .iter()
-                .zip(&stream.traces)
+                .zip(&traces)
                 .map(|(&a, tr)| (a, tr.clone()))
                 .collect();
             srv.run_stream(&jobs, |i| i % cores)
@@ -116,7 +119,7 @@ fn reference_kvs_run(
             jobs.sort_by_key(|&(_, t0)| t0);
             let ordered: Vec<(u64, MemTrace)> = jobs
                 .iter()
-                .map(|&(i, t0)| (t0, stream.traces[i].clone()))
+                .map(|&(i, t0)| (t0, traces[i].clone()))
                 .collect();
             let served = accel.serve_stream(&ordered, &mut arena);
             jobs.iter().zip(served).map(|(&(i, _), d)| (i, d)).collect()

@@ -28,6 +28,13 @@ Checks, in order:
    scaled down proportionally on narrower CI runners, and never failing
    a single-core machine. Like check 3 it compares two rows from the
    same run, so it stays armed while absolute baselines are null.
+5. Flat-arena datapath floor: two same-run wall-second ratios must clear
+   ``min_arena_ratio`` (default 1.5x) — ``stream_gen_vec`` (owned
+   per-request traces, clone-staged with steps re-derived per pass) vs
+   ``stream_gen_arena`` (spans into one flat arena, 24-byte staging,
+   precomputed steps), and ``fleet_jobs_clone_per_copy`` vs
+   ``fleet_serve_arena`` (per-replica trace clones vs span copies).
+   Machine-independent like checks 3 and 4.
 
 Promoting a baseline:
 
@@ -35,9 +42,10 @@ Promoting a baseline:
   ``BENCH_baseline.refreshed.json`` produced by ``--promote``. To arm
   (or re-arm) the absolute gate, download that artifact and commit it
   over BENCH_baseline.json. ``--promote`` keeps the gate knobs
-  (``max_slowdown``, ``min_engine_ratio``, ``min_par_ratio``, comments)
-  from BASELINE and takes every measured row from CURRENT, so the next
-  run is gated against real numbers from CI hardware.
+  (``max_slowdown``, ``min_engine_ratio``, ``min_par_ratio``,
+  ``min_arena_ratio``, comments) from BASELINE and takes every measured
+  row from CURRENT, so the next run is gated against real numbers from
+  CI hardware.
 
 Exit code 0 on pass, 1 on any failure (every failure is printed).
 """
@@ -49,6 +57,11 @@ HEAP_ROW = "engine_scaleout_heap_boxed"
 WHEEL_ROW = "engine_scaleout_wheel_batched"
 SWEEP_SERIAL = "scaleout_sweep"
 SWEEP_PAR = "scaleout_sweep_par"
+# (slow row, fast row, label) pairs for the flat-arena datapath floor.
+ARENA_PAIRS = [
+    ("stream_gen_vec", "stream_gen_arena", "stream gen"),
+    ("fleet_jobs_clone_per_copy", "fleet_serve_arena", "fleet staging"),
+]
 
 
 def load_rows(path):
@@ -89,6 +102,7 @@ def main():
     max_slowdown = float(baseline_doc.get("max_slowdown", 2.0))
     min_ratio = float(baseline_doc.get("min_engine_ratio", 5.0))
     min_par_ratio = float(baseline_doc.get("min_par_ratio", 3.0))
+    min_arena_ratio = float(baseline_doc.get("min_arena_ratio", 1.5))
 
     failures = []
 
@@ -141,6 +155,24 @@ def main():
                 f"{floor:.2f}x floor ({workers} workers, "
                 f"min_par_ratio {min_par_ratio}x)"
             )
+
+    for slow_name, fast_name, label in ARENA_PAIRS:
+        slow = current.get(slow_name)
+        fast = current.get(fast_name)
+        if slow is None or fast is None:
+            failures.append(
+                f"arena rows `{slow_name}`/`{fast_name}` missing from the run"
+            )
+        elif slow["secs"] <= 0 or fast["secs"] <= 0:
+            failures.append(f"arena rows `{slow_name}`/`{fast_name}` report no wall time")
+        else:
+            ratio = slow["secs"] / fast["secs"]
+            print(f"arena datapath ({label}): {ratio:.2f}x the pre-arena path")
+            if ratio < min_arena_ratio:
+                failures.append(
+                    f"arena {label} speedup {ratio:.2f}x is below the "
+                    f"{min_arena_ratio}x floor (`{fast_name}` vs `{slow_name}`)"
+                )
 
     if failures:
         for f in failures:
