@@ -300,7 +300,7 @@ fn main() {
             let ops0 = ops_executed();
             let t0 = Instant::now();
             let m = with_threads(workers, || {
-                run_point(&opts.testbed, &fstream, &fdist, 8, 1, Load::Saturation, 11)
+                run_point(&opts.testbed, &fstream, 8, 1, Load::Saturation, 11)
             });
             let dt = t0.elapsed().as_secs_f64();
             b.record(&format!("fleet_serve_par{workers}"), dt, ops_executed().wrapping_sub(ops0));
@@ -311,6 +311,14 @@ fn main() {
             }
         }
     }
+
+    // ---- cache sweep: the capacity x theta x TTL grid behind `orca cache`
+    // (hit/miss through the DRAM cache, evictions flushing to the NVM tier).
+    b.time("cache_sweep", || {
+        for t in experiments::cache::report(&opts, &[1, 4], Some(0.9), &[0, 20]) {
+            t.print();
+        }
+    });
 
     // ---- ablations ---------------------------------------------------------
     b.time("ablation_hard_ip_coherence_controller", || {

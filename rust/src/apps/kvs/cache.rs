@@ -1,0 +1,504 @@
+//! Capacity-bounded DRAM cache with TTL expiry, pluggable eviction and an
+//! online hot-key detector (beyond the paper).
+//!
+//! The paper's KVS (§VI-B) serves every GET from an effectively infinite
+//! store, so hit ratio, eviction and skew detection never interact with
+//! the serving path. This module supplies the missing cache semantics,
+//! modeled on Pelikan-style segment caching:
+//!
+//! * [`KvCache`] tracks *occupancy*, not payloads — the simulator charges
+//!   data movement through [`crate::mem::MemorySystem`], so the cache only
+//!   needs sizes, timestamps and dirty bits to decide hit/miss/evict.
+//! * Entries append into fixed-size **segments**. Under
+//!   [`EvictionPolicy::SegmentFifo`] the oldest segment is dropped whole
+//!   and its dirty bytes leave as **one** batched [`Writeback`]; under
+//!   [`EvictionPolicy::Lru`] the stalest entry is dropped alone and dirty
+//!   data leaves as a per-entry flush. The NVM tier rounds every write
+//!   call to its 256 B media granule, so the policy choice is visible as
+//!   write amplification (see `experiments/cache.rs`).
+//! * TTL is checked lazily on GET: an entry older than `ttl_ps` counts as
+//!   a miss, is removed, and (if dirty) still flushes — TTL bounds read
+//!   freshness, not durability.
+//! * [`HotKeyDetector`] replaces the oracle top-k hot set: it samples each
+//!   observed key with probability [`DETECTOR_SAMPLE`] using a seeded
+//!   [`Rng`], counts the sampled keys exactly, and reports up to `k` keys
+//!   with at least [`DETECTOR_MIN_COUNT`] samples. A key of Zipf rank `r`
+//!   is expected `sample · requests · p(r)` times in the counter, so at
+//!   the scales the experiments run, every key worth replicating clears
+//!   the threshold while the uniform tail almost never does.
+//!
+//! Everything here is deterministic: sampling consumes exactly one RNG
+//! draw per observed key (thread-count invariant), LRU victims are picked
+//! by a monotone stamp held in a `BTreeMap`, and the detector's ranking
+//! breaks count ties by key id — no `HashMap` iteration order leaks out.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::sim::{Mix64Build, Rng};
+
+/// Fraction of observed keys the detector samples into its counter.
+pub const DETECTOR_SAMPLE: f64 = 0.25;
+/// Minimum sampled count for a key to be reported hot.
+pub const DETECTOR_MIN_COUNT: u32 = 2;
+
+/// Which victim the cache picks when it is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Drop the oldest segment whole; dirty bytes flush as one batched
+    /// write (sequential, media-granule friendly).
+    SegmentFifo,
+    /// Drop the least-recently-used entry; dirty bytes flush one small
+    /// write at a time (amplified by the NVM media granule).
+    Lru,
+}
+
+impl EvictionPolicy {
+    /// Short label for report tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionPolicy::SegmentFifo => "seg-fifo",
+            EvictionPolicy::Lru => "lru",
+        }
+    }
+}
+
+/// Sizing and policy knobs for a [`KvCache`].
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Hard bound on live bytes; inserts evict until the newcomer fits.
+    pub capacity_bytes: u64,
+    /// Append-segment size; a full segment is sealed and a new one opened.
+    pub segment_bytes: u64,
+    /// Entry lifetime in picoseconds; 0 means entries never expire.
+    pub ttl_ps: u64,
+    /// Victim selection when the cache is full.
+    pub policy: EvictionPolicy,
+}
+
+/// Result of a [`KvCache::get`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lookup {
+    /// Key present and fresh; `bytes` is the stored entry size.
+    Hit {
+        /// Stored entry size (key + value + metadata).
+        bytes: u32,
+    },
+    /// Key absent (or just expired, when `expired` is set).
+    Miss {
+        /// The key was present but older than the TTL.
+        expired: bool,
+    },
+}
+
+/// Dirty bytes leaving the cache for the NVM tier (eviction or expiry).
+/// Segment eviction batches a whole segment's dirty entries into one
+/// writeback; LRU eviction and TTL expiry emit one per entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Writeback {
+    /// Dirty payload bytes to persist.
+    pub bytes: u64,
+    /// How many cache entries this writeback carries.
+    pub entries: u32,
+}
+
+/// Per-key bookkeeping. `stamp` is the recency key into `order`; `seg`
+/// ties the entry to the segment it was appended into (a superseded copy
+/// keeps its slot in the old segment's key list but is skipped at
+/// eviction because the map points at a newer segment).
+struct Entry {
+    bytes: u32,
+    seg: u32,
+    written_ps: u64,
+    stamp: u64,
+    dirty: bool,
+}
+
+/// An append segment: the keys written into it and how full it is.
+/// `filled` only drives packing; superseded entries are not deducted.
+struct Segment {
+    id: u32,
+    keys: Vec<u64>,
+    filled: u64,
+}
+
+/// Capacity-bounded, TTL-aware cache index (see module docs).
+pub struct KvCache {
+    cfg: CacheConfig,
+    map: HashMap<u64, Entry, Mix64Build>,
+    /// Recency order: monotone stamp → key; smallest stamp is the LRU
+    /// victim. Deterministic by construction (no hash iteration).
+    order: BTreeMap<u64, u64>,
+    segments: VecDeque<Segment>,
+    next_seg: u32,
+    next_stamp: u64,
+    live_bytes: u64,
+    /// Fresh GETs answered from the cache.
+    pub hits: u64,
+    /// GETs that fell through (absent or expired).
+    pub misses: u64,
+    /// Entries dropped by the TTL check (subset of `misses`).
+    pub expired: u64,
+    /// Entries removed by eviction (not expiry, not supersede).
+    pub evicted_entries: u64,
+    /// Whole segments dropped by [`EvictionPolicy::SegmentFifo`].
+    pub evicted_segments: u64,
+    /// Inserts refused because the entry exceeds the whole capacity.
+    pub rejected: u64,
+}
+
+impl KvCache {
+    /// Empty cache with the given sizing and policy.
+    pub fn new(cfg: CacheConfig) -> Self {
+        KvCache {
+            cfg,
+            map: HashMap::default(),
+            order: BTreeMap::new(),
+            segments: VecDeque::new(),
+            next_seg: 0,
+            next_stamp: 0,
+            live_bytes: 0,
+            hits: 0,
+            misses: 0,
+            expired: 0,
+            evicted_entries: 0,
+            evicted_segments: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Live bytes currently held (always ≤ `capacity_bytes`).
+    pub fn occupancy(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entries are live.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up `key` at simulated time `now`. An entry older than the TTL
+    /// is removed and counts as a miss; if it was dirty, its flush is
+    /// appended to `flushes` for the caller to charge to the NVM tier.
+    pub fn get(&mut self, now: u64, key: u64, flushes: &mut Vec<Writeback>) -> Lookup {
+        let expired = match self.map.get(&key) {
+            None => {
+                self.misses += 1;
+                return Lookup::Miss { expired: false };
+            }
+            Some(e) => self.cfg.ttl_ps > 0 && now.saturating_sub(e.written_ps) > self.cfg.ttl_ps,
+        };
+        if expired {
+            let e = self.remove_key(key).expect("checked present");
+            self.expired += 1;
+            self.misses += 1;
+            if e.dirty {
+                flushes.push(Writeback { bytes: e.bytes as u64, entries: 1 });
+            }
+            return Lookup::Miss { expired: true };
+        }
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        let e = self.map.get_mut(&key).expect("checked present");
+        let old = std::mem::replace(&mut e.stamp, stamp);
+        let bytes = e.bytes;
+        self.order.remove(&old);
+        self.order.insert(stamp, key);
+        self.hits += 1;
+        Lookup::Hit { bytes }
+    }
+
+    /// Insert (or overwrite) `key` with an entry of `bytes` bytes. A PUT
+    /// inserts dirty; a miss-path fill inserts clean (the backing tier
+    /// already holds the value). Evicts until the newcomer fits; dirty
+    /// victims land in `flushes`. Returns false when the entry is larger
+    /// than the whole cache (nothing is evicted in that case).
+    pub fn insert(
+        &mut self,
+        now: u64,
+        key: u64,
+        bytes: u32,
+        dirty: bool,
+        flushes: &mut Vec<Writeback>,
+    ) -> bool {
+        if bytes as u64 > self.cfg.capacity_bytes {
+            self.rejected += 1;
+            return false;
+        }
+        // A superseded copy is dropped without a flush: either the new
+        // version is dirty and will flush later, or the fill proves the
+        // backing tier already has the data.
+        self.remove_key(key);
+        while self.live_bytes + bytes as u64 > self.cfg.capacity_bytes {
+            if !self.evict_one(flushes) {
+                break;
+            }
+        }
+        let need_new = match self.segments.back() {
+            None => true,
+            Some(seg) => seg.filled + bytes as u64 > self.cfg.segment_bytes,
+        };
+        if need_new {
+            self.segments.push_back(Segment { id: self.next_seg, keys: Vec::new(), filled: 0 });
+            self.next_seg += 1;
+        }
+        let seg = self.segments.back_mut().expect("segment just ensured");
+        seg.keys.push(key);
+        seg.filled += bytes as u64;
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.order.insert(stamp, key);
+        self.map.insert(key, Entry { bytes, seg: seg.id, written_ps: now, stamp, dirty });
+        self.live_bytes += bytes as u64;
+        true
+    }
+
+    /// Evict one victim (an entry under LRU, a whole segment under
+    /// segment-FIFO). Returns false when the cache is already empty.
+    fn evict_one(&mut self, flushes: &mut Vec<Writeback>) -> bool {
+        match self.cfg.policy {
+            EvictionPolicy::Lru => {
+                let Some((_, key)) = self.order.pop_first() else {
+                    return false;
+                };
+                let e = self.remove_key(key).expect("order and map agree");
+                self.evicted_entries += 1;
+                if e.dirty {
+                    flushes.push(Writeback { bytes: e.bytes as u64, entries: 1 });
+                }
+                true
+            }
+            EvictionPolicy::SegmentFifo => {
+                let Some(seg) = self.segments.pop_front() else {
+                    return false;
+                };
+                let mut dirty_bytes = 0u64;
+                let mut dirty_entries = 0u32;
+                for key in seg.keys {
+                    let current = matches!(self.map.get(&key), Some(e) if e.seg == seg.id);
+                    if !current {
+                        continue; // superseded or expired since appended
+                    }
+                    let e = self.remove_key(key).expect("checked current");
+                    self.evicted_entries += 1;
+                    if e.dirty {
+                        dirty_bytes += e.bytes as u64;
+                        dirty_entries += 1;
+                    }
+                }
+                self.evicted_segments += 1;
+                if dirty_bytes > 0 {
+                    flushes.push(Writeback { bytes: dirty_bytes, entries: dirty_entries });
+                }
+                true
+            }
+        }
+    }
+
+    /// Unlink `key` from the map, recency order and live-byte count. The
+    /// segment key list keeps its (now stale) slot; segment eviction
+    /// skips it via the `seg` id check.
+    fn remove_key(&mut self, key: u64) -> Option<Entry> {
+        let e = self.map.remove(&key)?;
+        self.order.remove(&e.stamp);
+        self.live_bytes -= e.bytes as u64;
+        Some(e)
+    }
+}
+
+/// Online hot-key detector: sampled frequency counting with a threshold
+/// (see module docs for the sampling math). Deterministic for a given
+/// seed and observation sequence.
+pub struct HotKeyDetector {
+    rng: Rng,
+    sample: f64,
+    counts: HashMap<u64, u32, Mix64Build>,
+    /// Keys observed (sampled or not).
+    pub observed: u64,
+    /// Keys that made it into the counter.
+    pub sampled: u64,
+}
+
+impl HotKeyDetector {
+    /// Detector sampling each key with probability `sample`, seeded so
+    /// runs are reproducible. The seed is salted so a detector sharing a
+    /// workload's seed does not replay the workload's draw sequence.
+    pub fn new(sample: f64, seed: u64) -> Self {
+        HotKeyDetector {
+            rng: Rng::new(seed ^ 0x5A17_D7EC),
+            sample,
+            counts: HashMap::default(),
+            observed: 0,
+            sampled: 0,
+        }
+    }
+
+    /// Feed one key. Consumes exactly one RNG draw regardless of the
+    /// sampling outcome, so the detector state after N observations is a
+    /// pure function of (seed, key sequence).
+    pub fn observe(&mut self, key: u64) {
+        self.observed += 1;
+        if self.rng.chance(self.sample) {
+            self.sampled += 1;
+            *self.counts.entry(key).or_insert(0) += 1;
+        }
+    }
+
+    /// Up to `k` keys with at least `min_count` samples, ranked by count
+    /// (ties broken by key id), returned sorted ascending by key id —
+    /// the same contract as [`crate::workload::KeyDist::hot_keys`].
+    pub fn hot(&self, k: usize, min_count: u32) -> Vec<u64> {
+        let mut ranked: Vec<(u64, u32)> = self
+            .counts
+            .iter()
+            .filter(|&(_, &c)| c >= min_count)
+            .map(|(&key, &c)| (key, c))
+            .collect();
+        ranked.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(k);
+        let mut ids: Vec<u64> = ranked.into_iter().map(|(key, _)| key).collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+/// One-shot detection over a request key sequence with the default
+/// sampling knobs: what `orca scaleout` feeds `--hot-replicas` routing.
+pub fn detect_hot_keys(keys: &[u64], k: usize, seed: u64) -> Vec<u64> {
+    let mut det = HotKeyDetector::new(DETECTOR_SAMPLE, seed);
+    for &key in keys {
+        det.observe(key);
+    }
+    det.hot(k, DETECTOR_MIN_COUNT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: u64, policy: EvictionPolicy) -> CacheConfig {
+        CacheConfig { capacity_bytes: capacity, segment_bytes: 256, ttl_ps: 0, policy }
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_segment_and_bounds_occupancy() {
+        let mut c = KvCache::new(cfg(400, EvictionPolicy::SegmentFifo));
+        let mut fl = Vec::new();
+        for key in 0..5u64 {
+            assert!(c.insert(key, key, 100, false, &mut fl));
+            assert!(c.occupancy() <= 400, "occupancy {} over capacity", c.occupancy());
+        }
+        // 256-byte segments hold two 100-byte entries, so the fifth
+        // insert overflows the 400-byte capacity and must drop the
+        // oldest segment whole (keys 0 and 1).
+        assert_eq!(c.get(10, 0, &mut fl), Lookup::Miss { expired: false });
+        assert_eq!(c.get(10, 1, &mut fl), Lookup::Miss { expired: false });
+        assert_eq!(c.get(10, 4, &mut fl), Lookup::Hit { bytes: 100 });
+        assert!(c.evicted_segments >= 1);
+        assert!(fl.is_empty(), "clean entries must not flush");
+    }
+
+    #[test]
+    fn lru_evicts_stalest_entry_deterministically() {
+        let mut c = KvCache::new(cfg(300, EvictionPolicy::Lru));
+        let mut fl = Vec::new();
+        for key in 0..3u64 {
+            c.insert(key, key, 100, false, &mut fl);
+        }
+        // Touch 0 so 1 becomes the LRU victim.
+        assert_eq!(c.get(5, 0, &mut fl), Lookup::Hit { bytes: 100 });
+        c.insert(6, 9, 100, false, &mut fl);
+        assert_eq!(c.get(7, 1, &mut fl), Lookup::Miss { expired: false });
+        assert_eq!(c.get(7, 0, &mut fl), Lookup::Hit { bytes: 100 });
+        assert_eq!(c.get(7, 2, &mut fl), Lookup::Hit { bytes: 100 });
+        assert_eq!(c.evicted_entries, 1);
+    }
+
+    #[test]
+    fn ttl_expiry_misses_and_flushes_dirty() {
+        let mut c = KvCache::new(CacheConfig {
+            capacity_bytes: 1000,
+            segment_bytes: 256,
+            ttl_ps: 100,
+            policy: EvictionPolicy::Lru,
+        });
+        let mut fl = Vec::new();
+        c.insert(0, 7, 64, true, &mut fl);
+        assert_eq!(c.get(100, 7, &mut fl), Lookup::Hit { bytes: 64 }, "at ttl is fresh");
+        assert_eq!(c.get(201, 7, &mut fl), Lookup::Miss { expired: true });
+        assert_eq!(fl, vec![Writeback { bytes: 64, entries: 1 }]);
+        assert_eq!(c.expired, 1);
+        assert_eq!(c.occupancy(), 0);
+    }
+
+    #[test]
+    fn segment_flush_batches_where_lru_flushes_per_entry() {
+        let mut fifo = KvCache::new(cfg(400, EvictionPolicy::SegmentFifo));
+        let mut lru = KvCache::new(cfg(400, EvictionPolicy::Lru));
+        let mut fifo_fl = Vec::new();
+        let mut lru_fl = Vec::new();
+        for key in 0..6u64 {
+            fifo.insert(key, key, 100, true, &mut fifo_fl);
+            lru.insert(key, key, 100, true, &mut lru_fl);
+        }
+        // FIFO dropped one 2-entry segment as a single 200-byte flush;
+        // LRU dropped two entries as two 100-byte flushes.
+        assert_eq!(fifo_fl, vec![Writeback { bytes: 200, entries: 2 }]);
+        assert_eq!(
+            lru_fl,
+            vec![Writeback { bytes: 100, entries: 1 }, Writeback { bytes: 100, entries: 1 }]
+        );
+    }
+
+    #[test]
+    fn reinsert_supersedes_without_flush_or_double_count() {
+        let mut c = KvCache::new(cfg(400, EvictionPolicy::SegmentFifo));
+        let mut fl = Vec::new();
+        c.insert(0, 3, 100, true, &mut fl);
+        c.insert(1, 3, 120, true, &mut fl);
+        assert!(fl.is_empty(), "supersede must not flush the stale copy");
+        assert_eq!(c.occupancy(), 120);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(2, 3, &mut fl), Lookup::Hit { bytes: 120 });
+    }
+
+    #[test]
+    fn oversized_insert_is_rejected_without_evicting() {
+        let mut c = KvCache::new(cfg(300, EvictionPolicy::Lru));
+        let mut fl = Vec::new();
+        c.insert(0, 1, 100, false, &mut fl);
+        assert!(!c.insert(1, 2, 400, false, &mut fl));
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.get(2, 1, &mut fl), Lookup::Hit { bytes: 100 }, "resident keys survive");
+    }
+
+    #[test]
+    fn detector_finds_planted_hot_keys_and_is_seed_deterministic() {
+        // 4 hot keys with 500 hits each over a 2000-key uniform tail.
+        let mut keys = Vec::new();
+        let mut rng = Rng::new(42);
+        for i in 0..2000u64 {
+            keys.push(1_000_000 + (i % 4));
+            keys.push(rng.below(2000));
+        }
+        let hot = detect_hot_keys(&keys, 8, 7);
+        for h in 1_000_000..1_000_004u64 {
+            assert!(hot.binary_search(&h).is_ok(), "hot key {h} not detected in {hot:?}");
+        }
+        assert_eq!(hot, detect_hot_keys(&keys, 8, 7), "same seed, same answer");
+        assert!(hot.windows(2).all(|w| w[0] < w[1]), "sorted ascending");
+    }
+
+    #[test]
+    fn detector_threshold_suppresses_the_uniform_tail() {
+        // Uniform keys over a huge space: nothing repeats, so nothing
+        // reaches DETECTOR_MIN_COUNT.
+        let mut rng = Rng::new(9);
+        let keys: Vec<u64> = (0..4000).map(|_| rng.next_u64()).collect();
+        assert!(detect_hot_keys(&keys, 64, 11).is_empty());
+    }
+}

@@ -431,6 +431,30 @@ mod tests {
     }
 
     #[test]
+    fn key_plus_value_at_the_top_slab_cap_roundtrips() {
+        // key‖value share one slab slot, so the u16 entry lengths are
+        // exercised hardest at the 32 KB top class: a total length
+        // exactly at the cap must round-trip through put + get (the
+        // GET-side `key_len + val_len` sum also stays within u16 here).
+        let mut t = small();
+        let key = [7u8; 16];
+        let val: Vec<u8> = (0..32768 - 16).map(|i| (i % 253) as u8).collect();
+        assert!(!t.put(&key, &val).found);
+        let got = t.get(&key);
+        assert!(got.found);
+        assert_eq!(got.value.unwrap(), val);
+    }
+
+    #[test]
+    #[should_panic(expected = "value too large")]
+    fn key_plus_value_one_byte_over_the_cap_panics_cleanly() {
+        let mut t = small();
+        let key = [7u8; 16];
+        let val = vec![0u8; 32768 - 16 + 1];
+        t.put(&key, &val);
+    }
+
+    #[test]
     fn chaining_on_bucket_overflow() {
         // Force >8 keys into one bucket by brute-force search.
         let mut t = HashTable::new(KvConfig {

@@ -4,8 +4,10 @@
 //! request requires three memory accesses and each PUT request requires
 //! four" — the tests verify exactly that property on our structure.
 
+pub mod cache;
 pub mod hash_table;
 pub mod slab;
 
+pub use cache::{CacheConfig, EvictionPolicy, HotKeyDetector, KvCache, Lookup, Writeback};
 pub use hash_table::{HashTable, KvConfig, KvOp};
 pub use slab::Slab;

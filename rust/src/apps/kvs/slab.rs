@@ -204,6 +204,43 @@ mod tests {
     }
 
     #[test]
+    fn every_class_boundary_roundtrips_at_cap_and_promotes_one_over() {
+        // The hash table's u16 entry lengths rely on the top class
+        // staying ≤ 32 KB. Pin every class edge: a value exactly at the
+        // cap lands in that class and round-trips; one byte over
+        // promotes to the next class (or fails cleanly at the top).
+        let mut s = Slab::new(0x1_0000_0000, true);
+        for (ci, &cap) in CLASS_SIZES.iter().enumerate() {
+            let v: Vec<u8> = (0..cap as usize).map(|i| (i % 251) as u8).collect();
+            let slot = s.put(&v).expect("at-cap value must allocate");
+            assert_eq!(slot.class as usize, ci, "cap {cap} landed in the wrong class");
+            assert_eq!(s.get(slot, v.len()).unwrap(), &v[..], "cap {cap} round-trip");
+            assert!(s.verify(slot, &v));
+            let over = vec![0xEEu8; cap as usize + 1];
+            match s.put(&over) {
+                Some(promoted) => assert_eq!(
+                    promoted.class as usize,
+                    ci + 1,
+                    "cap {cap} + 1 byte must promote one class"
+                ),
+                None => assert_eq!(ci, CLASS_SIZES.len() - 1, "only the top class rejects"),
+            }
+        }
+    }
+
+    #[test]
+    fn top_class_cap_roundtrips_in_tagged_mode_too() {
+        let mut s = Slab::new(0, false);
+        let v = vec![3u8; 32768];
+        let slot = s.put(&v).unwrap();
+        assert_eq!(slot.class as usize, CLASS_SIZES.len() - 1);
+        assert!(s.verify(slot, &v));
+        let mut w = v.clone();
+        w[32767] = 4;
+        assert!(!s.verify(slot, &w));
+    }
+
+    #[test]
     fn free_list_reuses_slots() {
         let mut s = Slab::new(0, true);
         let a = s.put(b"a").unwrap();

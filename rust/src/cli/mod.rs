@@ -1,7 +1,7 @@
 //! Hand-rolled CLI (no clap offline): `orca <command> [flags]`.
 //!
 //! Commands: fig4, fig7, fig8, fig9, fig10, fig11, fig12, tab3,
-//! sharding, adaptive, chain, dlrm, scaleout, fleet, all, serve
+//! sharding, adaptive, chain, dlrm, scaleout, cache, fleet, all, serve
 //! (coordinator demo), info.
 //!
 //! Flags: --seed N, --keys N, --requests N, --set key=value (repeatable),
@@ -11,7 +11,9 @@
 //! fleet: crash one machine at hour N), --batch N (dlrm: group queries
 //! through the coordinator batcher), --machines LIST|A..B, --theta T
 //! and --hot-replicas K (scaleout: machine sweep, skew point, hot-key
-//! replication factor), --hours H and --slo-p99-us X (fleet: trace
+//! replication factor), --capacity-mb LIST and --ttl-ms LIST (cache:
+//! DRAM capacities and expiry points; --theta narrows its skew axis
+//! too), --hours H and --slo-p99-us X (fleet: trace
 //! length, latency SLO), --json PATH (dump the run's tables as
 //! machine-readable JSON).
 
@@ -35,8 +37,12 @@ pub struct Cli {
     pub batch: usize,
     /// Machine counts for the `scaleout` sweep.
     pub machines: Vec<usize>,
-    /// With `scaleout`: narrow the skew axis to {uniform, θ}.
+    /// With `scaleout`/`cache`: narrow the skew axis to {uniform, θ}.
     pub theta: Option<f64>,
+    /// Cache capacities for the `cache` sweep (MB).
+    pub capacities_mb: Vec<u64>,
+    /// TTL points for the `cache` sweep (ms; 0 = never expire).
+    pub ttls_ms: Vec<u64>,
     /// With `scaleout`: hot-key replication factor for the mitigation
     /// table (`None`: the default, clamped to the largest fleet).
     pub hot_replicas: Option<usize>,
@@ -67,6 +73,7 @@ COMMANDS:
   chain   hop-by-hop chain replication: replica sweep + timed crash/recovery
   dlrm    DLRM trace-driven serving: saturation vs analytic + latency-vs-load
   scaleout  scale-out KVS across the cluster: machines x skew + hot-key mitigation
+  cache   KVS DRAM cache: capacity x skew x TTL x eviction, with a measured miss path
   fleet   elastic fleet day in the life: diurnal trace, autoscaler, crash re-homing
   all     run everything above
   serve   run the DLRM serving coordinator on a synthetic stream
@@ -90,10 +97,16 @@ FLAGS:
                     in groups of N (default 1 = unbatched)
   --machines M      scaleout machine counts: a list `1,4,8` or range `1..8`
                     (default 1,2,4,8)
-  --theta T         with scaleout: Zipf skew in [0,1); narrows the sweep to
-                    {uniform, T} (default sweep: 0, 0.9, 0.99)
-  --hot-replicas K  with scaleout: replicate the top-64 hot keys on K
-                    machines in the mitigation table (default 4)
+  --theta T         with scaleout/cache: Zipf skew in [0,1); narrows the
+                    sweep to {uniform, T} (scaleout default: 0, 0.9, 0.99;
+                    cache default: 0, 0.99)
+  --hot-replicas K  with scaleout: replicate the detector's measured hot
+                    set (up to 64 keys) on K machines in the mitigation
+                    table (default 4)
+  --capacity-mb C   with cache: DRAM cache capacities in MB, a list `1,4`
+                    or range `1..4` (default 1,4,16)
+  --ttl-ms T        with cache: entry TTLs in ms, a list or range; 0 =
+                    never expire (default 0,20)
   --hours H         with fleet: simulated hours, one autoscaler epoch per
                     hour (default 24)
   --slo-p99-us X    with fleet: p99 latency SLO the autoscaler defends,
@@ -115,6 +128,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut crash_at = None;
     let mut batch = 1usize;
     let mut machines: Vec<usize> = experiments::scaleout::MACHINE_COUNTS.to_vec();
+    let mut capacities_mb: Vec<u64> = experiments::cache::CAPACITIES_MB.to_vec();
+    let mut ttls_ms: Vec<u64> = experiments::cache::TTLS_MS.to_vec();
     let mut theta = None;
     let mut hot_replicas = None;
     let mut json = None;
@@ -175,6 +190,17 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 if machines.contains(&0) {
                     bail!("--machines needs counts >= 1, got `{list}`");
                 }
+            }
+            "--capacity-mb" => {
+                let list = take(&mut i)?;
+                capacities_mb = parse_u64_list(&list)?;
+                if capacities_mb.contains(&0) {
+                    bail!("--capacity-mb needs sizes >= 1 MB, got `{list}`");
+                }
+            }
+            "--ttl-ms" => {
+                // 0 is a legal point: entries never expire.
+                ttls_ms = parse_u64_list(&take(&mut i)?)?;
             }
             "--theta" => {
                 let v = take(&mut i)?;
@@ -251,6 +277,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         batch,
         machines,
         theta,
+        capacities_mb,
+        ttls_ms,
         hot_replicas,
         json,
         hours,
@@ -369,6 +397,12 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             let k = resolve_hot_replicas(cli)?;
             tables.extend(experiments::scaleout::report(&cli.opts, &cli.machines, cli.theta, k));
         }
+        "cache" => tables.extend(experiments::cache::report(
+            &cli.opts,
+            &cli.capacities_mb,
+            cli.theta,
+            &cli.ttls_ms,
+        )),
         "adaptive" => tables.push(experiments::adaptive::report(&cli.opts)),
         "fleet" => {
             let crash = fleet_crash_hour(cli)?;
@@ -428,6 +462,12 @@ pub fn tables_for(cli: &Cli) -> Result<Vec<Table>> {
             tables.push(experiments::adaptive::report(&cli.opts));
             tables.push(experiments::chain::report(&cli.opts, &cli.replicas));
             tables.extend(experiments::scaleout::report(&cli.opts, &cli.machines, cli.theta, k));
+            tables.extend(experiments::cache::report(
+                &cli.opts,
+                &cli.capacities_mb,
+                cli.theta,
+                &cli.ttls_ms,
+            ));
             // The fleet showcase always exercises the crash path at the
             // default hour (like chain, `all` ignores --crash-at).
             let fleet_crash = if cli.hours >= 3 { Some(cli.hours / 3) } else { None };
@@ -741,6 +781,24 @@ mod tests {
         assert!(parse(&s(&["scaleout", "--theta", "1.0"])).is_err());
         assert!(parse(&s(&["scaleout", "--theta", "-0.1"])).is_err());
         assert!(parse(&s(&["scaleout", "--hot-replicas", "0"])).is_err());
+    }
+
+    #[test]
+    fn parses_cache_flags() {
+        let cli = parse(&s(&["cache", "--capacity-mb", "1,8", "--ttl-ms", "0,5"])).unwrap();
+        assert_eq!(cli.capacities_mb, vec![1, 8]);
+        assert_eq!(cli.ttls_ms, vec![0, 5]);
+        let cli = parse(&s(&["cache", "--capacity-mb", "2..4"])).unwrap();
+        assert_eq!(cli.capacities_mb, vec![2, 3, 4]);
+        let def = parse(&s(&["cache"])).unwrap();
+        assert_eq!(def.capacities_mb, experiments::cache::CAPACITIES_MB.to_vec());
+        assert_eq!(def.ttls_ms, experiments::cache::TTLS_MS.to_vec());
+        // A zero capacity holds nothing; zero TTL is legal (= never
+        // expire), but garbage and empty lists are not.
+        assert!(parse(&s(&["cache", "--capacity-mb", "0,2"])).is_err());
+        assert!(parse(&s(&["cache", "--capacity-mb", "x"])).is_err());
+        assert!(parse(&s(&["cache", "--ttl-ms", "x"])).is_err());
+        assert!(parse(&s(&["cache", "--ttl-ms"])).is_err());
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //!
 //! * [`Router`] — a consistent-hash ring ([`VNODES`] virtual nodes per
 //!   machine) mapping key ids to home machines, plus a **hot-key
-//!   mitigation knob**: a designated hot set (the top-k Zipf key ids,
-//!   [`crate::workload::KeyDist::hot_keys`]) is replicated on K
+//!   mitigation knob**: a designated hot set — in the serving path the
+//!   keys the online sampling detector reports
+//!   ([`crate::apps::kvs::cache::detect_hot_keys`]); the oracle top
+//!   ranks ([`crate::workload::KeyDist::hot_keys`]) survive as its
+//!   test yardstick — is replicated on K
 //!   successive ring machines with *read-any / write-all* routing —
 //!   GETs go to the least-loaded replica, PUTs fan out to every
 //!   replica and wait for the slowest ack. Consistent hashing gives

@@ -66,9 +66,16 @@ pub struct AdaptiveStream {
     pub nvm_resident: bool,
 }
 
-/// Remap a slab address into the NVM log region.
+/// Remap a slab address into the NVM log region. Total over all inputs:
+/// the callers pre-filter `addr >= slab_base`, but a future caller that
+/// forgets must not underflow in release — debug builds assert, release
+/// clamps to the base of the log instead of wrapping to a bogus offset.
 fn nvm_home(addr: u64, slab_base: u64) -> u64 {
-    NVM_BASE + (addr - slab_base)
+    debug_assert!(
+        addr >= slab_base,
+        "nvm_home: addr {addr:#x} below slab base {slab_base:#x}"
+    );
+    NVM_BASE + addr.saturating_sub(slab_base)
 }
 
 /// Build one sweep point: a SET-heavy op stream over a real
@@ -366,6 +373,20 @@ mod tests {
             ad.metrics.mops,
             off.metrics.mops
         );
+    }
+
+    #[test]
+    fn nvm_home_preserves_slab_offsets() {
+        let base = KvConfig::default().slab_base;
+        assert_eq!(nvm_home(base, base), NVM_BASE);
+        assert_eq!(nvm_home(base + 12_345, base), NVM_BASE + 12_345);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "below slab base")]
+    fn nvm_home_rejects_addresses_below_the_slab_base_in_debug() {
+        nvm_home(0x1000, 0x2000);
     }
 
     #[test]

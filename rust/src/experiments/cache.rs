@@ -1,0 +1,407 @@
+//! `orca cache` (beyond the paper): real cache semantics for the KVS —
+//! a capacity-bounded DRAM cache ([`crate::apps::kvs::cache::KvCache`])
+//! in front of a measured miss path, swept over capacity × skew × TTL ×
+//! eviction policy.
+//!
+//! Each point simulates one machine's cache under an open arrival
+//! process. A GET that hits is a DRAM read; a miss falls through to the
+//! backing tier — this machine's own NVM region when the consistent-hash
+//! ring ([`crate::cluster::Router`]) homes the key locally, or a remote
+//! backing machine over two ToR legs otherwise. Dirty data evicted or
+//! expired out of the cache drains to an NVM log *off* the response
+//! path, so eviction policy shows up where it really costs: LRU retires
+//! entries one 96 B append at a time (each write call rounds to the
+//! media's 256 B granule → write amplification ≈ 3.3×), while
+//! segment-FIFO retires whole segments in one multi-KB flush (≈ 1×).
+//!
+//! The sweep's in-tree assertions: hit ratio is monotone in capacity at
+//! fixed skew/TTL (exact for LRU — see the test's inclusion argument),
+//! eviction policy moves the NVM tier's write amplification, TTL expiry
+//! costs hits, and the online hot-key detector recovers ≥ 75% of the
+//! oracle hot set's p99 gain in the scale-out mitigation scenario.
+
+use super::adaptive::NVM_BASE;
+use super::{Opts, Table};
+use crate::apps::kvs::cache::{
+    detect_hot_keys, CacheConfig, EvictionPolicy, KvCache, Lookup, Writeback,
+};
+use crate::cluster::Router;
+use crate::mem::{Access, Domain, MemorySystem, SteeringPolicy};
+use crate::sim::{mix64, Histogram, Rng, MS, US};
+use crate::workload::KeyDist;
+
+/// Cache capacities the default sweep and the CLI cover (MB).
+pub const CAPACITIES_MB: [u64; 3] = [1, 4, 16];
+
+/// TTL points of the default sweep (ms; 0 = entries never expire).
+pub const TTLS_MS: [u64; 2] = [0, 20];
+
+/// Both eviction policies, swept at every point.
+pub const POLICIES: [EvictionPolicy; 2] = [EvictionPolicy::SegmentFifo, EvictionPolicy::Lru];
+
+/// Modeled entry footprint: 8 B key + 64 B value + index overhead.
+pub const ENTRY_BYTES: u32 = 96;
+
+/// Fraction of requests that are PUTs (write-back: dirty in DRAM).
+pub const PUT_FRACTION: f64 = 0.3;
+
+/// Cache segment size (the FIFO eviction/flush unit).
+pub const SEGMENT_BYTES: u64 = 64 << 10;
+
+/// Machines on the backing ring; keys not homed here are remote.
+pub const BACKING_MACHINES: usize = 4;
+
+/// One ToR traversal (client-side leg of a remote miss), ps.
+const TOR_HOP_PS: u64 = 2_500_000;
+
+/// Remote machine's storage read on a remote miss, ps.
+const REMOTE_READ_PS: u64 = 600_000;
+
+/// Mean arrival gap (open process, ~2 Mops offered), ps.
+const MEAN_GAP_PS: f64 = 500_000.0;
+
+/// DRAM-resident cache slot array base address.
+const CACHE_BASE: u64 = 0x2000_0000;
+const CACHE_SLOTS: u64 = 1 << 21;
+
+/// Backing-store slots in the NVM region (256 B apart).
+const NVM_SLOTS: u64 = 1 << 24;
+
+/// Write-back log head: above the backing slots, still NVM.
+const LOG_BASE: u64 = NVM_BASE + (64 << 30);
+
+fn cache_addr(key: u64) -> u64 {
+    CACHE_BASE + (mix64(key) % CACHE_SLOTS) * ENTRY_BYTES as u64
+}
+
+fn nvm_addr(key: u64) -> u64 {
+    NVM_BASE + (mix64(key ^ 0x5EED_F00D) % NVM_SLOTS) * 256
+}
+
+/// One swept point's measurements.
+#[derive(Clone, Debug)]
+pub struct CacheRow {
+    pub workload: String,
+    pub capacity_bytes: u64,
+    pub ttl_ms: u64,
+    pub policy: EvictionPolicy,
+    /// GET hits / GETs.
+    pub hit_ratio: f64,
+    pub expired: u64,
+    pub evicted_entries: u64,
+    pub evicted_segments: u64,
+    /// Fraction of GETs served by a remote backing machine.
+    pub remote_frac: f64,
+    /// Media bytes per logical byte on the NVM write channel.
+    pub nvm_write_amp: f64,
+    pub avg_us: f64,
+    pub p99_us: f64,
+    /// Hot keys the online detector reported over this point's stream.
+    pub detected_hot: usize,
+}
+
+/// Simulate one cache configuration under `opts.requests` arrivals.
+///
+/// Exactly three RNG draws per request (gap, key, op), independent of
+/// cache state — so two capacities see byte-identical request sequences
+/// and hit counts compare apples to apples.
+pub fn run_cache_point(
+    opts: &Opts,
+    dist: &KeyDist,
+    capacity_bytes: u64,
+    ttl_ms: u64,
+    policy: EvictionPolicy,
+) -> CacheRow {
+    let mut rng = Rng::new(opts.seed ^ 0x00CA_C4E5);
+    let mut mem = MemorySystem::new(&opts.testbed)
+        .with_policy(SteeringPolicy::Adaptive)
+        .with_nvm_region(NVM_BASE);
+    let router = Router::new(BACKING_MACHINES, Vec::new(), 1);
+    let mut cache = KvCache::new(CacheConfig {
+        capacity_bytes,
+        segment_bytes: SEGMENT_BYTES,
+        ttl_ps: ttl_ms * MS,
+        policy,
+    });
+    let mut flushes: Vec<Writeback> = Vec::new();
+    let mut lat = Histogram::new();
+    let mut keys_seen: Vec<u64> = Vec::with_capacity(opts.requests as usize);
+    let mut log_head = LOG_BASE;
+    let mut remote = 0u64;
+    let mut now = 0u64;
+    for _ in 0..opts.requests {
+        now += rng.exp(MEAN_GAP_PS) as u64;
+        let key = dist.sample(&mut rng);
+        let is_put = rng.chance(PUT_FRACTION);
+        keys_seen.push(key);
+        flushes.clear();
+        let done = if is_put {
+            // Write-back PUT: the entry goes dirty in DRAM; its bytes
+            // reach NVM only when eviction or expiry flushes them.
+            cache.insert(now, key, ENTRY_BYTES, true, &mut flushes);
+            mem.access(now, &Access::write(cache_addr(key), ENTRY_BYTES))
+        } else {
+            match cache.get(now, key, &mut flushes) {
+                Lookup::Hit { bytes } => mem.access(now, &Access::read(cache_addr(key), bytes)),
+                Lookup::Miss { .. } => {
+                    let fetched = if router.home(key) == 0 {
+                        // Homed here: this machine's own NVM tier,
+                        // through the memory system's domain routing.
+                        let a = Access::read(nvm_addr(key), ENTRY_BYTES).in_domain(Domain::HostNvm);
+                        mem.access(now, &a)
+                    } else {
+                        // Homed elsewhere: two ToR legs plus the remote
+                        // read (that machine's media, not this one's).
+                        remote += 1;
+                        now + 2 * TOR_HOP_PS + REMOTE_READ_PS
+                    };
+                    cache.insert(fetched, key, ENTRY_BYTES, false, &mut flushes);
+                    fetched
+                }
+            }
+        };
+        // Evicted/expired dirty bytes drain to the NVM log off the
+        // response path: they cost the tier's write channel (and show
+        // up in its write amplification), not this request's latency.
+        for wb in &flushes {
+            let w = Access::write(log_head, wb.bytes as u32).in_domain(Domain::HostNvm);
+            mem.access(now, &w);
+            log_head += wb.bytes;
+        }
+        lat.record(done.saturating_sub(now));
+    }
+    let gets = (cache.hits + cache.misses).max(1);
+    CacheRow {
+        workload: dist.label(),
+        capacity_bytes,
+        ttl_ms,
+        policy,
+        hit_ratio: cache.hits as f64 / gets as f64,
+        expired: cache.expired,
+        evicted_entries: cache.evicted_entries,
+        evicted_segments: cache.evicted_segments,
+        remote_frac: remote as f64 / gets as f64,
+        nvm_write_amp: mem.nvm_write_amp(),
+        avg_us: lat.mean() / US as f64,
+        p99_us: lat.p99() as f64 / US as f64,
+        detected_hot: detect_hot_keys(&keys_seen, super::scaleout::HOT_KEYS, opts.seed).len(),
+    }
+}
+
+/// Capacity × skew × TTL × policy sweep; every cell is an isolated
+/// simulation, so the grid fans out over [`crate::sim::par_map`].
+/// Cells are collected theta-major, then capacity, TTL, policy — the
+/// order a nested loop would produce.
+pub fn sweep(opts: &Opts, capacities_mb: &[u64], thetas: &[f64], ttls_ms: &[u64]) -> Vec<CacheRow> {
+    let dists: Vec<KeyDist> = thetas.iter().map(|&th| dist_for(opts.keys, th)).collect();
+    let cells: Vec<(usize, u64, u64, EvictionPolicy)> = (0..thetas.len())
+        .flat_map(|ti| {
+            capacities_mb.iter().flat_map(move |&cap| {
+                ttls_ms
+                    .iter()
+                    .flat_map(move |&ttl| POLICIES.iter().map(move |&p| (ti, cap, ttl, p)))
+            })
+        })
+        .collect();
+    crate::sim::par_map(cells, |_, (ti, cap, ttl, policy)| {
+        run_cache_point(opts, &dists[ti], cap << 20, ttl, policy)
+    })
+}
+
+fn dist_for(keys: u64, theta: f64) -> KeyDist {
+    if theta == 0.0 {
+        KeyDist::uniform(keys)
+    } else {
+        KeyDist::zipf(keys, theta)
+    }
+}
+
+/// Build the `orca cache` table. `theta: None` sweeps uniform + the
+/// default zipf-0.99 point; `Some(t)` narrows to {uniform, zipf-t}.
+pub fn report(
+    opts: &Opts,
+    capacities_mb: &[u64],
+    theta: Option<f64>,
+    ttls_ms: &[u64],
+) -> Vec<Table> {
+    let thetas: Vec<f64> = match theta {
+        Some(t) if t > 0.0 => vec![0.0, t],
+        Some(_) => vec![0.0],
+        None => vec![0.0, 0.99],
+    };
+    let mut tb = Table::new(
+        format!(
+            "KVS cache — hit ratio and miss path vs capacity x skew x TTL \
+             ({} B entries, {:.0}% PUT write-back, {} backing machines)",
+            ENTRY_BYTES,
+            PUT_FRACTION * 100.0,
+            BACKING_MACHINES
+        ),
+        &[
+            "workload",
+            "cap MB",
+            "ttl ms",
+            "policy",
+            "hit %",
+            "expired",
+            "evict ent/seg",
+            "remote %",
+            "NVM amp",
+            "avg µs",
+            "p99 µs",
+            "hot det",
+        ],
+    );
+    for r in sweep(opts, capacities_mb, &thetas, ttls_ms) {
+        tb.row(&[
+            r.workload.clone(),
+            format!("{}", r.capacity_bytes >> 20),
+            format!("{}", r.ttl_ms),
+            r.policy.label().to_string(),
+            format!("{:.1}", r.hit_ratio * 100.0),
+            format!("{}", r.expired),
+            format!("{}/{}", r.evicted_entries, r.evicted_segments),
+            format!("{:.1}", r.remote_frac * 100.0),
+            format!("{:.2}", r.nvm_write_amp),
+            format!("{:.2}", r.avg_us),
+            format!("{:.1}", r.p99_us),
+            format!("{}", r.detected_hot),
+        ]);
+    }
+    vec![tb]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scaleout;
+    use super::*;
+
+    fn topts(requests: u64) -> Opts {
+        Opts {
+            seed: 7,
+            keys: 50_000,
+            requests,
+            ..Opts::default()
+        }
+    }
+
+    #[test]
+    fn hit_ratio_is_monotone_in_capacity() {
+        // Acceptance criterion: more DRAM never hurts. For LRU this is
+        // exact, not statistical — every request inserts its key (PUT
+        // dirty, GET-miss fill), all entries are the same size, and the
+        // RNG draws per request don't depend on cache state, so a
+        // C-entry cache holds exactly the C most recently requested
+        // distinct keys: a subset of any larger cache's contents.
+        let o = topts(20_000);
+        let dist = KeyDist::zipf(o.keys, 0.9);
+        let lru: Vec<CacheRow> = CAPACITIES_MB
+            .iter()
+            .map(|&mb| run_cache_point(&o, &dist, mb << 20, 0, EvictionPolicy::Lru))
+            .collect();
+        for w in lru.windows(2) {
+            assert!(
+                w[1].hit_ratio >= w[0].hit_ratio,
+                "LRU hit ratio fell with capacity: {} MB {:.4} -> {} MB {:.4}",
+                w[0].capacity_bytes >> 20,
+                w[0].hit_ratio,
+                w[1].capacity_bytes >> 20,
+                w[1].hit_ratio
+            );
+        }
+        assert!(
+            lru.last().unwrap().hit_ratio > lru[0].hit_ratio + 0.05,
+            "capacity must matter at zipf-0.9: {:.4} vs {:.4}",
+            lru[0].hit_ratio,
+            lru.last().unwrap().hit_ratio
+        );
+        // Segment-FIFO ignores recency, so only the coarse shape holds.
+        let fifo_small = run_cache_point(&o, &dist, 1 << 20, 0, EvictionPolicy::SegmentFifo);
+        let fifo_big = run_cache_point(&o, &dist, 16 << 20, 0, EvictionPolicy::SegmentFifo);
+        assert!(
+            fifo_big.hit_ratio > fifo_small.hit_ratio,
+            "FIFO: {:.4} !> {:.4}",
+            fifo_big.hit_ratio,
+            fifo_small.hit_ratio
+        );
+    }
+
+    #[test]
+    fn eviction_policy_moves_nvm_write_amplification() {
+        // A capacity small enough to churn: LRU flushes dirty entries
+        // one 96 B append at a time (each rounds to 256 B media
+        // granules → amp ≈ 3.3x), segment-FIFO flushes ~0.3 x 64 KB per
+        // segment in one call (amp ≈ 1x).
+        let o = topts(20_000);
+        let dist = KeyDist::zipf(o.keys, 0.9);
+        let lru = run_cache_point(&o, &dist, 256 << 10, 0, EvictionPolicy::Lru);
+        let fifo = run_cache_point(&o, &dist, 256 << 10, 0, EvictionPolicy::SegmentFifo);
+        assert!(lru.evicted_entries > 0, "LRU must churn at 256 KB");
+        assert!(fifo.evicted_segments > 0, "FIFO must churn at 256 KB");
+        assert!(lru.nvm_write_amp > 2.0, "per-entry flushes amp {:.2}", lru.nvm_write_amp);
+        assert!(fifo.nvm_write_amp < 1.3, "batched flushes amp {:.2}", fifo.nvm_write_amp);
+        assert!(lru.nvm_write_amp > fifo.nvm_write_amp);
+    }
+
+    #[test]
+    fn ttl_expiry_costs_hits() {
+        // 20k requests at ~2 Mops span ~10 ms; a 2 ms TTL expires
+        // everything the tail doesn't retouch. 16 MB holds the whole
+        // 50k-key working set, so expiry is the only miss source
+        // beyond cold fills — every expired GET is a lost hit.
+        let o = topts(20_000);
+        let dist = KeyDist::zipf(o.keys, 0.9);
+        let no_ttl = run_cache_point(&o, &dist, 16 << 20, 0, EvictionPolicy::Lru);
+        let ttl = run_cache_point(&o, &dist, 16 << 20, 2, EvictionPolicy::Lru);
+        assert_eq!(no_ttl.expired, 0);
+        assert!(ttl.expired > 0, "a 2 ms TTL over a ~10 ms run must expire entries");
+        assert!(
+            ttl.hit_ratio < no_ttl.hit_ratio,
+            "expiry must cost hits: {:.4} !< {:.4}",
+            ttl.hit_ratio,
+            no_ttl.hit_ratio
+        );
+    }
+
+    #[test]
+    fn detector_recovers_most_of_the_oracle_p99_gain() {
+        // Acceptance criterion: in PR 5's mitigation scenario at
+        // θ = 0.99, replicating the *detected* hot set recovers ≥ 75%
+        // of the p99 improvement the oracle top-rank hot set buys.
+        let o = topts(30_000);
+        let oracle_hot = KeyDist::zipf(o.keys, 0.99).hot_keys(scaleout::HOT_KEYS);
+        let oracle = scaleout::mitigation_with_hot(&o, 4, 0.99, 4, &oracle_hot);
+        let detected = scaleout::mitigation(&o, 4, 0.99, 4);
+        let oracle_gain = oracle.skewed.p99_us - oracle.replicated.p99_us;
+        let detected_gain = detected.skewed.p99_us - detected.replicated.p99_us;
+        assert!(oracle_gain > 0.0, "oracle replication must buy p99: {oracle_gain:.2}");
+        assert!(detected.hot_used > 0, "detector found no hot keys");
+        assert!(
+            detected_gain >= 0.75 * oracle_gain,
+            "detector recovered {detected_gain:.2} µs of the oracle's {oracle_gain:.2} µs"
+        );
+    }
+
+    #[test]
+    fn report_covers_the_grid_theta_major() {
+        let o = Opts {
+            seed: 3,
+            keys: 2_000,
+            requests: 2_000,
+            ..Opts::default()
+        };
+        let tables = report(&o, &[1], Some(0.9), &[0, 20]);
+        assert_eq!(tables.len(), 1);
+        // {uniform, zipf-0.9} x 1 capacity x 2 TTLs x 2 policies.
+        assert_eq!(tables[0].n_rows(), 8);
+        assert_eq!(tables[0].cell(0, 0), "uniform");
+        assert_eq!(tables[0].cell(0, 3), "seg-fifo");
+        assert_eq!(tables[0].cell(1, 3), "lru");
+        assert_eq!(tables[0].cell(4, 0), "zipf-0.9");
+        // Uniform over 2k keys still concentrates enough sampled mass
+        // for the detector column to parse as a number.
+        for r in 0..8 {
+            tables[0].cell(r, 11).parse::<usize>().expect("hot det column is a count");
+        }
+    }
+}

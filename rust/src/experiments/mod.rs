@@ -16,6 +16,7 @@
 //! | hop-by-hop chain sweep + crash/recovery (beyond the paper) | [`chain`] | `orca chain` |
 //! | DLRM trace-driven serving + latency-vs-load (beyond the paper) | [`dlrm`] | `orca dlrm` |
 //! | scale-out KVS + hot-key mitigation (beyond the paper) | [`scaleout`] | `orca scaleout` |
+//! | KVS cache: TTL/eviction + hot-key detector (beyond the paper) | [`cache`] | `orca cache` |
 //! | elastic fleet day-in-the-life (beyond the paper) | [`fleet`] | `orca fleet` |
 //!
 //! Absolute numbers are *this testbed's*; the claims under test are the
@@ -24,6 +25,7 @@
 //! dispatch through [`crate::serving::ServingPipeline`].
 
 pub mod adaptive;
+pub mod cache;
 pub mod chain;
 pub mod dlrm;
 pub mod fig11;

@@ -131,18 +131,27 @@ impl KeyDist {
 
     /// The key *ids* of the top-`k` ranks — the hot set a scale-out
     /// deployment replicates ([`crate::cluster::scaleout`]). Sampled
-    /// Zipf ranks are scattered over the id space ([`scatter`]), so the
-    /// hot ids are the scattered images of ranks `0..k`, deduplicated
-    /// (rare scatter collisions merge key identities) and sorted for
-    /// binary search. Uniform has no hot set.
+    /// Zipf ranks are scattered over the id space ([`scatter`]), and the
+    /// scatter is not injective: when two of the top ranks collide the
+    /// set is backfilled with the next-hottest ranks, so the result
+    /// always holds `k` distinct ids (or every distinct id a tiny key
+    /// space can produce). Sorted ascending for binary search. Uniform
+    /// has no hot set.
     pub fn hot_keys(&self, k: usize) -> Vec<u64> {
         match self {
             KeyDist::Uniform { .. } => Vec::new(),
             KeyDist::Zipf(z) => {
-                let k = (k as u64).min(z.n());
-                let mut ids: Vec<u64> = (0..k).map(|r| scatter(r, z.n())).collect();
+                let want = (k as u64).min(z.n()) as usize;
+                let mut ids: Vec<u64> = Vec::with_capacity(want);
+                let mut rank = 0u64;
+                while ids.len() < want && rank < z.n() {
+                    let id = scatter(rank, z.n());
+                    if !ids.contains(&id) {
+                        ids.push(id);
+                    }
+                    rank += 1;
+                }
                 ids.sort_unstable();
-                ids.dedup();
                 ids
             }
         }
@@ -161,7 +170,9 @@ impl KeyDist {
 
 /// Hash-scatter of ranks over [0, n). Not a bijection after the modulo;
 /// rare collisions merge key identities, which only (negligibly)
-/// sharpens the skew — harmless for cache/popularity behaviour.
+/// sharpens the skew for *sampling* — but a replicated hot set must not
+/// silently shrink, so [`KeyDist::hot_keys`] backfills collisions with
+/// the next ranks.
 fn scatter(rank: u64, n: u64) -> u64 {
     crate::sim::mix64(rank) % n
 }
@@ -234,12 +245,52 @@ mod tests {
         let n = 1_000_000;
         let d = KeyDist::zipf(n, 0.9);
         let hot = d.hot_keys(8);
-        assert!(hot.len() <= 8 && !hot.is_empty());
+        assert_eq!(hot.len(), 8, "top-8 request must yield 8 distinct ids");
         for r in 0..8u64 {
             assert!(hot.binary_search(&scatter(r, n)).is_ok(), "rank {r} missing");
         }
         assert!(hot.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
         assert!(KeyDist::uniform(n).hot_keys(8).is_empty());
+    }
+
+    #[test]
+    fn hot_keys_backfill_scatter_collisions() {
+        // Probe small power-of-two spaces for the first scatter collision,
+        // then check hot_keys over the colliding prefix still returns the
+        // full requested count (the pre-fix dedup silently dropped one).
+        let mut found = false;
+        'outer: for n in [64u64, 128, 256, 512, 1024] {
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..n {
+                if seen.insert(scatter(r, n)) {
+                    continue;
+                }
+                // Ranks 0..=r contain a collision, so a naive dedup of
+                // their images would return only r ids for a top-(r+1)
+                // request.
+                let k = (r + 1) as usize;
+                let hot = KeyDist::zipf(n, 0.9).hot_keys(k);
+                assert_eq!(hot.len(), k, "n={n}: collision at rank {r} not backfilled");
+                assert!(hot.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+                for rr in 0..=r {
+                    assert!(hot.binary_search(&scatter(rr, n)).is_ok(), "rank {rr} missing");
+                }
+                found = true;
+                break 'outer;
+            }
+        }
+        assert!(found, "no scatter collision in the probed sizes — widen the probe");
+    }
+
+    #[test]
+    fn hot_keys_clamp_to_the_distinct_ids_of_tiny_spaces() {
+        // Ask for far more hot keys than the space holds: the result is
+        // every distinct scatter image, never more.
+        let n = 4u64;
+        let distinct: std::collections::HashSet<u64> = (0..n).map(|r| scatter(r, n)).collect();
+        let hot = KeyDist::zipf(n, 0.5).hot_keys(64);
+        assert_eq!(hot.len(), distinct.len());
+        assert!(hot.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

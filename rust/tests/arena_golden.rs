@@ -217,11 +217,9 @@ fn hot_replicated_fleets_serve_identically_from_a_rebuilt_arena() {
     for_seeds(32, |rng| {
         let seed = rng.next_u64();
         let (generated, rebuilt) = reference_stream(seed);
-        let (keys, ..) = stream_shape(seed);
-        let dist = KeyDist::zipf(keys, 0.99);
         let machines = 2 + (seed % 3) as usize;
-        let a = run_point(&t, &generated, &dist, machines, 2, Load::Saturation, seed);
-        let b = run_point(&t, &rebuilt, &dist, machines, 2, Load::Saturation, seed);
+        let a = run_point(&t, &generated, machines, 2, Load::Saturation, seed);
+        let b = run_point(&t, &rebuilt, machines, 2, Load::Saturation, seed);
         if a != b {
             return Err(format!("fleet metrics diverged: {a:?} vs {b:?}"));
         }
@@ -366,15 +364,9 @@ fn arena_datapath_is_invariant_across_worker_counts() {
     for_seeds(3, |rng| {
         let seed = rng.next_u64();
         let (generated, _) = reference_stream(seed);
-        let (keys, ..) = stream_shape(seed);
-        let dist = KeyDist::zipf(keys, 0.99);
-        let serial = with_threads("1", || {
-            run_point(&t, &generated, &dist, 4, 2, Load::Saturation, seed)
-        });
+        let serial = with_threads("1", || run_point(&t, &generated, 4, 2, Load::Saturation, seed));
         for n in ["2", "8"] {
-            let par = with_threads(n, || {
-                run_point(&t, &generated, &dist, 4, 2, Load::Saturation, seed)
-            });
+            let par = with_threads(n, || run_point(&t, &generated, 4, 2, Load::Saturation, seed));
             if par != serial {
                 return Err(format!("fleet point diverged at ORCA_THREADS={n}"));
             }

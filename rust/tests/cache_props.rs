@@ -1,0 +1,166 @@
+//! Property suite for the KVS DRAM cache (`apps::kvs::cache`): seeded
+//! random workloads pin the semantics the `orca cache` sweep relies on —
+//! an expired entry never serves a hit, occupancy never exceeds the
+//! configured capacity (oversized inserts are rejected, not squeezed),
+//! and the hot-key detector reports the same set whatever `ORCA_THREADS`
+//! says.
+//!
+//! The thread-invariance tests mutate the process-wide `ORCA_THREADS`
+//! variable, so every mutation happens under one mutex held for the
+//! whole run (cargo runs a binary's tests on parallel threads).
+
+use orca::apps::kvs::cache::detect_hot_keys;
+use orca::apps::kvs::{CacheConfig, EvictionPolicy, KvCache, Lookup, Writeback};
+use orca::testing::for_seeds;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `ORCA_THREADS=n`, holding the env lock throughout so
+/// concurrent tests can't observe (or clobber) the pinned value.
+fn with_threads<T>(n: &str, f: impl FnOnce() -> T) -> T {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = std::env::var("ORCA_THREADS").ok();
+    std::env::set_var("ORCA_THREADS", n);
+    let out = f();
+    match prev {
+        Some(v) => std::env::set_var("ORCA_THREADS", v),
+        None => std::env::remove_var("ORCA_THREADS"),
+    }
+    out
+}
+
+fn random_policy(rng: &mut orca::sim::Rng) -> EvictionPolicy {
+    if rng.chance(0.5) {
+        EvictionPolicy::Lru
+    } else {
+        EvictionPolicy::SegmentFifo
+    }
+}
+
+#[test]
+fn expired_entries_never_serve_hits() {
+    // Shadow the last write time of every key; a GET that hits after
+    // more than the TTL has passed since that write is a stale read.
+    for_seeds(24, |rng| {
+        let ttl_ps = rng.range(1, 5_000);
+        let mut cache = KvCache::new(CacheConfig {
+            capacity_bytes: rng.range(1, 64) * 1024,
+            segment_bytes: 1024,
+            ttl_ps,
+            policy: random_policy(rng),
+        });
+        let mut written: HashMap<u64, u64> = HashMap::new();
+        let mut flushes: Vec<Writeback> = Vec::new();
+        let mut now = 0u64;
+        for _ in 0..4_000 {
+            now += rng.range(0, 200);
+            let key = rng.range(0, 64);
+            flushes.clear();
+            if rng.chance(0.5) {
+                let bytes = rng.range(1, 128) as u32;
+                cache.insert(now, key, bytes, rng.chance(0.3), &mut flushes);
+                written.insert(key, now);
+            } else if let Lookup::Hit { .. } = cache.get(now, key, &mut flushes) {
+                let w = written
+                    .get(&key)
+                    .copied()
+                    .ok_or_else(|| format!("hit on never-written key {key}"))?;
+                if now - w > ttl_ps {
+                    return Err(format!(
+                        "stale hit on key {key}: written {w}, now {now}, ttl {ttl_ps}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn occupancy_never_exceeds_capacity() {
+    // Mixed random ops with entry sizes that sometimes exceed the whole
+    // cache: eviction must make room, rejection must refuse — and the
+    // byte ledger must never read over the configured capacity.
+    for_seeds(24, |rng| {
+        let capacity = rng.range(256, 8_192);
+        let mut cache = KvCache::new(CacheConfig {
+            capacity_bytes: capacity,
+            segment_bytes: rng.range(128, 1_024),
+            ttl_ps: if rng.chance(0.5) { rng.range(1, 2_000) } else { 0 },
+            policy: random_policy(rng),
+        });
+        let mut flushes: Vec<Writeback> = Vec::new();
+        let mut now = 0u64;
+        for _ in 0..4_000 {
+            now += rng.range(0, 100);
+            let key = rng.range(0, 256);
+            flushes.clear();
+            if rng.chance(0.6) {
+                let bytes = rng.range(1, 512) as u32;
+                cache.insert(now, key, bytes, rng.chance(0.5), &mut flushes);
+            } else {
+                cache.get(now, key, &mut flushes);
+            }
+            if cache.occupancy() > capacity {
+                return Err(format!(
+                    "occupancy {} over capacity {capacity} with {} entries",
+                    cache.occupancy(),
+                    cache.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn detector_report_is_invariant_across_worker_counts() {
+    // The detector is part of the deterministic datapath (its output
+    // routes hot-key replicas), so its report must not care how many
+    // workers the surrounding sweep uses.
+    for_seeds(16, |rng| {
+        let n_keys = rng.range(100, 2_000);
+        let len = rng.range(1_000, 8_000) as usize;
+        let seed = rng.next_u64();
+        let keys: Vec<u64> = (0..len).map(|_| rng.range(0, n_keys)).collect();
+        let serial = with_threads("1", || detect_hot_keys(&keys, 64, seed));
+        for n in ["2", "8"] {
+            let par = with_threads(n, || detect_hot_keys(&keys, 64, seed));
+            if par != serial {
+                return Err(format!("detector diverged between ORCA_THREADS=1 and {n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_tables_are_byte_identical_across_worker_counts() {
+    // The full `orca cache` sweep fans its grid out over `par_map`; the
+    // rendered JSON must not care how cells were packed onto workers.
+    use orca::cli;
+    use orca::experiments::table;
+    for_seeds(3, |rng| {
+        let seed = rng.next_u64().to_string();
+        let argv: Vec<String> = [
+            "cache", "--capacity-mb", "1,2", "--ttl-ms", "0,5", "--theta", "0.9", "--seed",
+            &seed, "--keys", "20000", "--requests", "1500",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let render = || {
+            let cli = cli::parse(&argv).expect("args must parse");
+            table::to_json(&cli::tables_for(&cli).expect("cache command must run"))
+        };
+        let serial = with_threads("1", render);
+        for n in ["2", "8"] {
+            if with_threads(n, render) != serial {
+                return Err(format!("cache tables diverged between ORCA_THREADS=1 and {n}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -28,6 +28,9 @@ const COMMANDS: &[&[&str]] = &[
     // mitigation run (read-any routing exercises the least-loaded
     // tie-break, a classic nondeterminism trap).
     &["scaleout", "--machines", "1,2", "--theta", "0.99", "--hot-replicas", "2"],
+    // The cache sweep: capacity x skew x TTL x eviction grid over
+    // par_map, plus the online hot-key detector's sampled counts.
+    &["cache", "--capacity-mb", "1,4", "--ttl-ms", "0,10", "--theta", "0.99"],
     // The elastic-fleet day: orchestrator policy loop, seeded victim
     // pick, and per-epoch re-seeded fleet runs — a crash mid-trace
     // exercises the sweep/re-home path under the determinism guard.

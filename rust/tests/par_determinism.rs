@@ -120,7 +120,7 @@ fn fleet_events_and_metrics_match_serial_across_worker_counts() {
             .map(|n| {
                 with_threads(n, || {
                     let ops0 = orca::sim::ops_executed();
-                    let m = run_point(&testbed, &stream, &dist, 4, 1, Load::Saturation, seed);
+                    let m = run_point(&testbed, &stream, 4, 1, Load::Saturation, seed);
                     (m, orca::sim::ops_executed().wrapping_sub(ops0))
                 })
             })

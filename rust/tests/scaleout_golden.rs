@@ -38,7 +38,7 @@ fn n1_scaleout_matches_the_single_machine_serving_path_within_1pct() {
                 load,
                 o.seed,
             );
-            let got = scaleout::run_point(&o.testbed, &stream, &dist, 1, 1, load, o.seed);
+            let got = scaleout::run_point(&o.testbed, &stream, 1, 1, load, o.seed);
             let what = format!("theta {theta} {load:?}");
             orca::assert_close!(got.mops, want.mops, 1.0, "{what} mops");
             orca::assert_close!(got.avg_us, want.avg_us, 1.0, "{what} avg");
@@ -56,9 +56,9 @@ fn n1_scaleout_is_deterministic_and_seed_steered() {
     let o = opts();
     let dist = KeyDist::zipf(o.keys, 0.99);
     let stream = RequestStream::generate(o.keys, 5_000, &dist, KvMix::GetOnly, 64, o.seed);
-    let a = scaleout::run_point(&o.testbed, &stream, &dist, 2, 1, Load::Saturation, 1);
-    let b = scaleout::run_point(&o.testbed, &stream, &dist, 2, 1, Load::Saturation, 1);
+    let a = scaleout::run_point(&o.testbed, &stream, 2, 1, Load::Saturation, 1);
+    let b = scaleout::run_point(&o.testbed, &stream, 2, 1, Load::Saturation, 1);
     assert_eq!(a, b, "same seed must give bit-identical fleet metrics");
-    let c = scaleout::run_point(&o.testbed, &stream, &dist, 2, 1, Load::Saturation, 2);
+    let c = scaleout::run_point(&o.testbed, &stream, 2, 1, Load::Saturation, 2);
     assert_ne!(a, c, "different seed must actually change the run");
 }
